@@ -1,0 +1,64 @@
+//! Ablation: the linear-algebra design choices behind the echo mechanism
+//! (DESIGN.md §6).
+//!
+//! 1. Incremental Gram/Cholesky (`SpanProjector::try_push`, O(s·d + s²)
+//!    per column) vs re-factorizing from scratch (O(s²·d + s³)).
+//! 2. Projection cost vs dimension d and span size s — the per-slot cost
+//!    every worker pays, which must stay ≪ the O(d) transmit cost it saves.
+//! 3. BLAS-1 kernel throughput (dot/axpy) — the roofline of everything.
+
+use echo_cgc::bench_utils::{bb, Bencher};
+use echo_cgc::linalg::{dot, gram, Cholesky, SpanProjector};
+use echo_cgc::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(7);
+
+    // 1. incremental vs scratch factorization while growing a span.
+    for &(d, s) in &[(10_000usize, 10usize), (50_000, 20)] {
+        let cols: Vec<Vec<f64>> = (0..s).map(|_| rng.normal_vec(d)).collect();
+        b.bench(&format!("grow_span/incremental/d{d}_s{s}"), || {
+            let mut p = SpanProjector::new(d, 1e-9);
+            for (i, c) in cols.iter().enumerate() {
+                bb(p.try_push(i, c));
+            }
+            p.rank()
+        });
+        b.bench(&format!("grow_span/scratch_refactor/d{d}_s{s}"), || {
+            // Re-compute the full Gram + factorization after every column —
+            // what a naive implementation of Algorithm 1 line 28 does.
+            let mut stored: Vec<Vec<f64>> = Vec::new();
+            for c in cols.iter() {
+                stored.push(c.clone());
+                let g = gram(&stored);
+                bb(Cholesky::factorize(&g, stored.len()));
+            }
+            stored.len()
+        });
+    }
+
+    // 2. projection cost scaling.
+    for &(d, s) in &[(1000usize, 5usize), (10_000, 10), (100_000, 10), (100_000, 30)] {
+        let mut p = SpanProjector::new(d, 1e-9);
+        let mut stored = 0usize;
+        while stored < s {
+            if p.try_push(stored, &rng.normal_vec(d)) {
+                stored += 1;
+            }
+        }
+        let g = rng.normal_vec(d);
+        b.bench(&format!("project/d{d}_s{s}"), || p.project(&g));
+    }
+
+    // 3. BLAS-1 roofline.
+    for &d in &[1_000usize, 100_000, 1_000_000] {
+        let x = rng.normal_vec(d);
+        let y = rng.normal_vec(d);
+        let s = b.bench(&format!("dot/d{d}"), || dot(&x, &y));
+        let gflops = 2.0 * d as f64 / s.mean_secs() / 1e9;
+        println!("    ≈ {gflops:.2} GFLOP/s");
+    }
+
+    b.write_csv("results/bench_ablation_linalg.csv").unwrap();
+}

@@ -1,0 +1,58 @@
+//! Backend comparison: native rust gradient vs the XLA/PJRT artifact
+//! (JAX/Pallas AOT) — the cost of the production-shaped compute path, plus
+//! the LM step throughput that gates the e2e driver.
+//!
+//! Requires `make artifacts`; exits 0 with a notice when missing so
+//! `cargo bench` stays runnable pre-build.
+
+use echo_cgc::bench_utils::Bencher;
+use echo_cgc::grad::{GradientBackend, NativeBackend};
+use echo_cgc::model::{CostModel, GaussianQuadratic};
+use echo_cgc::rng::Rng;
+use echo_cgc::runtime::{PjrtRuntime, XlaLmStep, XlaQuadraticBackend};
+use std::rc::Rc;
+use std::sync::Arc;
+
+fn main() {
+    let rt = PjrtRuntime::cpu("artifacts").expect("PJRT CPU client");
+    if !rt.has_artifact("quadratic_grad_d100.hlo.txt") {
+        println!("artifacts/ missing — run `make artifacts` first; skipping backend bench");
+        return;
+    }
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(5);
+
+    let d = 100;
+    let model = Arc::new(GaussianQuadratic::new(d, 1.0, 2.0, 0.05, &mut rng));
+    let w = rng.normal_vec(d);
+
+    let mut native = NativeBackend::new(model.clone());
+    b.bench("grad/native_quadratic_d100", || native.gradient(&w, &mut rng));
+
+    let exe = Rc::new(rt.load("quadratic_grad_d100.hlo.txt").unwrap());
+    let mut xla = XlaQuadraticBackend::new(
+        exe,
+        model.eigenvalues(),
+        &model.optimum().unwrap(),
+        0.05,
+    );
+    b.bench("grad/xla_quadratic_d100", || xla.gradient(&w, &mut rng));
+
+    // LM step (the e2e driver's inner loop).
+    let lm_name = XlaLmStep::artifact_name(64, 32, 2, 64, 8);
+    if rt.has_artifact(&lm_name) {
+        let lm = XlaLmStep::new(Rc::new(rt.load(&lm_name).unwrap()), 105_728, 8, 32);
+        let params = vec![0.01f32; 105_728];
+        let tokens: Vec<i32> = (0..8 * 33).map(|i| (i % 64) as i32).collect();
+        let s = b.bench("lm_step/v64_t32_l2_e64_b8", || {
+            lm.loss_and_grad(&params, &tokens).unwrap()
+        });
+        println!(
+            "    ≈ {:.1} LM steps/s single-worker → {:.1} rounds/s at n=8",
+            1.0 / s.mean_secs(),
+            1.0 / (s.mean_secs() * 7.0)
+        );
+    }
+
+    b.write_csv("results/bench_backend.csv").unwrap();
+}

@@ -1,0 +1,99 @@
+//! Bench T-comm (§4.3 headline): measured worker→server bits of Echo-CGC
+//! vs the all-raw baseline (what CGC/Krum/prior algorithms transmit) on the
+//! bit-exact radio, across σ and n, plus wall-clock per round.
+//!
+//! Paper claims to check: ≥75 % savings at σ=0.1-class noise with x=0.1;
+//! ~80 % for large n under standard assumptions.
+
+use echo_cgc::bench_utils::Bencher;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::metrics::CsvTable;
+use echo_cgc::sim::Simulation;
+use echo_cgc::wire::raw_gradient_bits;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut table =
+        CsvTable::new(&["n", "f", "sigma", "d", "savings", "echo_rate", "bits_per_round"]);
+
+    println!("measured communication savings (40 rounds each):\n");
+    println!(
+        "{:>5} {:>4} {:>7} {:>6} {:>9} {:>9} {:>13}",
+        "n", "f", "σ", "d", "saved%", "echo%", "bits/round"
+    );
+    for &(n, f, sigma, d) in &[
+        (20usize, 2usize, 0.05, 200usize),
+        (20, 2, 0.10, 200),
+        (50, 5, 0.05, 200),
+        (50, 5, 0.10, 200),
+        (100, 10, 0.05, 200),
+        (100, 10, 0.10, 200),
+    ] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = n;
+        cfg.f = f;
+        cfg.b = f;
+        cfg.sigma = sigma;
+        cfg.d = d;
+        cfg.rounds = 40;
+        let mut sim = Simulation::build(&cfg).expect("valid config");
+        sim.run();
+        let rounds = sim.records().len() as u64;
+        let bits = sim.radio().meter.total_uplink() / rounds;
+        println!(
+            "{:>5} {:>4} {:>7.2} {:>6} {:>8.1}% {:>8.1}% {:>13}",
+            n,
+            f,
+            sigma,
+            d,
+            100.0 * sim.comm_savings(),
+            100.0 * sim.echo_rate(),
+            bits
+        );
+        table.push_row(&[
+            n as f64,
+            f as f64,
+            sigma,
+            d as f64,
+            sim.comm_savings(),
+            sim.echo_rate(),
+            bits as f64,
+        ]);
+        // Paper shape check: at σ=0.05, x=0.1 the savings clear 75%.
+        if sigma <= 0.05 {
+            assert!(
+                sim.comm_savings() > 0.75,
+                "expected ≥75% savings at σ={sigma}, n={n}"
+            );
+        }
+    }
+    table.write_file("results/bench_comm_savings.csv").unwrap();
+
+    // Wall-clock per phase of the round loop (the L3 §Perf numbers).
+    println!();
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 50;
+    cfg.f = 5;
+    cfg.b = 5;
+    cfg.d = 1000;
+    cfg.rounds = 1;
+    let mut sim = Simulation::build(&cfg).expect("valid config");
+    b.bench("round_step/n50_f5_d1000", || sim.step());
+    let t = sim.timings;
+    let total = (t.grad_ns + t.comm_ns + t.agg_ns).max(1) as f64;
+    println!(
+        "phase split: grad {:.1}%  comm {:.1}%  agg {:.1}%",
+        100.0 * t.grad_ns as f64 / total,
+        100.0 * t.comm_ns as f64 / total,
+        100.0 * t.agg_ns as f64 / total
+    );
+
+    let enc = ExperimentConfig::default().encoding();
+    let d = 100_000;
+    println!(
+        "\nscale reference: raw gradient at d={d} is {} bits ≈ {:.2} MB per worker per round",
+        raw_gradient_bits(d, enc),
+        raw_gradient_bits(d, enc) as f64 / 8e6
+    );
+    b.write_csv("results/bench_comm_timing.csv").unwrap();
+}

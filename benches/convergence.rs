@@ -1,0 +1,89 @@
+//! Bench T-conv (Theorem 9): the measured per-round contraction of
+//! ‖wᵗ − w*‖² never exceeds the theoretical rate ρ = 1 − 2βη + γη²
+//! (computed with the *realized* h, b of the execution), across network
+//! sizes, noise levels and attacks.
+
+use echo_cgc::bench_utils::Bencher;
+use echo_cgc::byzantine::AttackKind;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::metrics::CsvTable;
+use echo_cgc::sim::Simulation;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut table =
+        CsvTable::new(&["n", "f", "sigma", "attack", "empirical_rho", "theory_rho"]);
+
+    println!("contraction: empirical ρ vs theoretical ρ (300 rounds each)\n");
+    println!(
+        "{:>5} {:>4} {:>7} {:>12} {:>12} {:>12}",
+        "n", "f", "σ", "attack", "emp ρ", "theory ρ"
+    );
+    for &(n, f) in &[(12usize, 1usize), (24, 2), (48, 4)] {
+        for &sigma in &[0.02, 0.08] {
+            for attack in [AttackKind::Omniscient, AttackKind::LargeNorm, AttackKind::SignFlip] {
+                let mut cfg = ExperimentConfig::default();
+                cfg.n = n;
+                cfg.f = f;
+                cfg.b = f;
+                cfg.sigma = sigma;
+                cfg.d = 60;
+                cfg.rounds = 300;
+                cfg.attack = attack;
+                let mut sim = Simulation::build(&cfg).expect("valid config");
+                let recs = sim.run();
+                let d0 = recs.first().unwrap().dist_sq.unwrap();
+                // Contraction stalls at the f32 wire-quantization floor
+                // (~1e-14); measure ρ only over the contracting prefix.
+                let floor = 1e-10 * d0.max(1.0);
+                let t_eff = recs
+                    .iter()
+                    .position(|r| r.dist_sq.unwrap() < floor)
+                    .unwrap_or(recs.len());
+                let dt = recs[t_eff.saturating_sub(1)].dist_sq.unwrap().max(1e-300);
+                let emp = (dt / d0).powf(1.0 / t_eff.max(1) as f64);
+                let rho = sim.realized_theory().rho(sim.eta());
+                println!(
+                    "{:>5} {:>4} {:>7.2} {:>12} {:>12.6} {:>12.6}",
+                    n,
+                    f,
+                    sigma,
+                    attack.name(),
+                    emp,
+                    rho
+                );
+                // The theorem bounds the *expected* contraction; allow a
+                // small sampling slack but never a gross violation.
+                assert!(
+                    emp <= rho + 0.02,
+                    "empirical ρ {emp} grossly exceeds theory {rho}"
+                );
+                table.push_row_mixed(vec![
+                    format!("{n}"),
+                    format!("{f}"),
+                    format!("{sigma}"),
+                    attack.name().to_string(),
+                    format!("{emp}"),
+                    format!("{rho}"),
+                ]);
+            }
+        }
+    }
+    table.write_file("results/bench_convergence.csv").unwrap();
+
+    // Wall-clock: full 100-round training runs at two scales.
+    for &(n, d) in &[(20usize, 100usize), (50, 500)] {
+        b.bench(&format!("train_100rounds/n{n}_d{d}"), || {
+            let mut cfg = ExperimentConfig::default();
+            cfg.n = n;
+            cfg.f = n / 10;
+            cfg.b = cfg.f;
+            cfg.d = d;
+            cfg.rounds = 100;
+            let mut sim = Simulation::build(&cfg).expect("valid config");
+            sim.run();
+            sim.final_dist_sq()
+        });
+    }
+    b.write_csv("results/bench_convergence_timing.csv").unwrap();
+}

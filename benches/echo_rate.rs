@@ -1,0 +1,62 @@
+//! Bench T-echo-rate: measured echoes per round vs the analytic lower
+//! bound `E n* ≥ np − 1`, `p = 1 − (1+2/r)²σ²` (§4.3). The bound must hold
+//! wherever it is non-vacuous; the measurement is usually far above it
+//! (the bound only counts gradients inside the ball B).
+
+use echo_cgc::analysis;
+use echo_cgc::bench_utils::Bencher;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::metrics::CsvTable;
+use echo_cgc::sim::Simulation;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut table = CsvTable::new(&["n", "sigma", "r", "measured", "bound"]);
+
+    println!("echoes per round: measured vs analytic lower bound np−1\n");
+    println!("{:>5} {:>7} {:>8} {:>10} {:>10}", "n", "σ", "r", "measured", "bound");
+    for &n in &[15usize, 30, 60] {
+        for &sigma in &[0.02, 0.05, 0.1] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.n = n;
+            cfg.f = n / 10;
+            cfg.b = cfg.f;
+            cfg.sigma = sigma;
+            cfg.d = 150;
+            cfg.rounds = 60;
+            let mut sim = Simulation::build(&cfg).expect("valid config");
+            sim.run();
+            let honest = (cfg.n - cfg.b) as f64;
+            let measured = sim.echo_rate() * honest;
+            let bound = (n as f64 * analysis::p_echo_lower(sim.r(), sigma) - 1.0).max(0.0);
+            println!(
+                "{:>5} {:>7.2} {:>8.4} {:>10.2} {:>10.2}",
+                n, sigma, sim.r(), measured, bound
+            );
+            assert!(
+                measured + 1e-9 >= bound.min(honest),
+                "measured {measured} below analytic bound {bound}"
+            );
+            table.push_row(&[n as f64, sigma, sim.r(), measured, bound]);
+        }
+    }
+    table.write_file("results/bench_echo_rate.csv").unwrap();
+
+    // Time the worker-side echo decision (project + test) — the per-slot
+    // hot path that the echo mechanism adds over plain CGC.
+    use echo_cgc::linalg::SpanProjector;
+    use echo_cgc::rng::Rng;
+    let mut rng = Rng::new(1);
+    for &(d, s) in &[(1000usize, 5usize), (10_000, 10), (100_000, 20)] {
+        let mut p = SpanProjector::new(d, 1e-9);
+        let mut stored = 0usize;
+        while stored < s {
+            if p.try_push(stored, &rng.normal_vec(d)) {
+                stored += 1;
+            }
+        }
+        let g = rng.normal_vec(d);
+        b.bench(&format!("echo_decision/d{d}_s{s}"), || p.project(&g));
+    }
+    b.write_csv("results/bench_echo_rate_timing.csv").unwrap();
+}

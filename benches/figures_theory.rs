@@ -1,0 +1,47 @@
+//! Bench F1a–F1d: regenerate the paper's Figure 1 series (communication
+//! ratio bound C of Eq. 29) and time the closed-form theory evaluation.
+//!
+//! Output: results/figure_1{a,b,c,d}.csv + criterion-style timing lines.
+
+use echo_cgc::analysis;
+use echo_cgc::bench_utils::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Timing: the full figure sweeps (these feed plotting scripts and the
+    // CLI; they must stay trivially cheap).
+    b.bench("figure_1a/100pts", || analysis::figure_1a(100));
+    b.bench("figure_1b/100pts", || analysis::figure_1b(100));
+    b.bench("figure_1c/100pts", || analysis::figure_1c(100));
+    b.bench("figure_1d/100pts", || analysis::figure_1d(100));
+    b.bench("k_star/golden_section", analysis::k_star);
+    b.bench("comm_ratio_c/point", || analysis::comm_ratio_c(0.1, 1.0, 0.1, 100));
+
+    // Regenerate the actual figure data (the deliverable).
+    for (name, pts, xlab) in [
+        ("1a", analysis::figure_1a(100), "sigma"),
+        ("1b", analysis::figure_1b(100), "mu_over_l"),
+        ("1c", analysis::figure_1c(100), "x"),
+        ("1d", analysis::figure_1d(100), "n"),
+    ] {
+        analysis::figure_csv(&pts, xlab)
+            .write_file(format!("results/figure_{name}.csv"))
+            .expect("write figure csv");
+    }
+
+    // Paper checkpoints (assert the shape, print the values).
+    let c_headline = analysis::comm_ratio_c(0.1, 1.0, 0.1, 100).unwrap();
+    println!("\npaper checkpoints:");
+    println!("  k* = {:.4} (paper: ≈1.12)", analysis::k_star());
+    println!(
+        "  C(σ=0.1, µ/L=1, x=0.1, n=100) = {c_headline:.4} → ≥{:.0}% savings (paper: ≥75%)",
+        100.0 * (1.0 - c_headline)
+    );
+    assert!(c_headline < 0.25);
+    println!(
+        "  x_max(σ=0.1, µ/L=1, n=100) = {:.4} (Fig. 1c asymptote)",
+        analysis::x_max(0.1, 1.0, 100)
+    );
+    b.write_csv("results/bench_figures_theory.csv").unwrap();
+}

@@ -1,0 +1,63 @@
+//! Attack-zoo demo: every Byzantine behaviour against Echo-CGC and against
+//! the fault-*intolerant* mean aggregator, on the same radio substrate.
+//!
+//! Shows (i) Echo-CGC converging under all attacks, (ii) plain averaging
+//! collapsing under the aggressive ones, (iii) echo-forgery attacks being
+//! exposed by the server's reliable-broadcast check.
+//!
+//! Run: `cargo run --release --example byzantine_attacks`
+
+use echo_cgc::byzantine::AttackKind;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::coordinator::Aggregator;
+use echo_cgc::sim::Simulation;
+
+fn run(cfg: &ExperimentConfig) -> (f64, usize) {
+    let mut sim = Simulation::build(cfg).expect("valid config");
+    sim.run();
+    (sim.final_dist_sq().unwrap(), sim.server().exposed().len())
+}
+
+fn main() {
+    let mut base = ExperimentConfig::default();
+    base.n = 15;
+    base.f = 1;
+    base.b = 1;
+    base.d = 60;
+    base.sigma = 0.05;
+    base.rounds = 400;
+
+    println!(
+        "final ‖w−w*‖² after {} rounds (n={}, f={}, quadratic d={}):\n",
+        base.rounds, base.n, base.f, base.d
+    );
+    println!(
+        "{:>16} | {:>13} | {:>13} | {:>8}",
+        "attack", "echo-cgc", "plain mean", "exposed"
+    );
+    println!("{}", "-".repeat(62));
+    for attack in AttackKind::all() {
+        let mut cgc = base.clone();
+        cgc.attack = attack;
+        cgc.aggregator = Aggregator::CgcSum;
+        let (d_cgc, exposed) = run(&cgc);
+
+        let mut mean = base.clone();
+        mean.attack = attack;
+        mean.aggregator = Aggregator::Mean;
+        let (d_mean, _) = run(&mean);
+
+        println!(
+            "{:>16} | {:>13.4e} | {:>13.4e} | {:>8}",
+            attack.name(),
+            d_cgc,
+            d_mean,
+            exposed
+        );
+    }
+    println!(
+        "\nreading: echo-cgc stays ≪1 under every attack; the mean aggregator is\n\
+         dragged away by large-norm/omniscient attackers; `exposed` counts byzantine\n\
+         workers *proven* faulty via the reliable-broadcast echo check."
+    );
+}

@@ -1,0 +1,63 @@
+//! Quickstart: Echo-CGC training on the theory workload.
+//!
+//! 20 workers (2 Byzantine, omniscient attack), a 100-dimensional strongly
+//! convex quadratic with σ = 0.05, r and η derived from the paper's theory.
+//! Prints the loss curve, the echo rate, and the measured communication
+//! savings vs the all-raw baseline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use echo_cgc::analysis;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::sim::Simulation;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 20;
+    cfg.f = 2;
+    cfg.b = 2;
+    cfg.d = 100;
+    cfg.sigma = 0.05;
+    cfg.rounds = 300;
+
+    let mut sim = Simulation::build(&cfg).expect("valid config");
+    println!(
+        "Echo-CGC quickstart: n={} f={} d={} σ={}  →  r={:.4}, η={:.3e}",
+        cfg.n, cfg.f, cfg.d, cfg.sigma, sim.r(), sim.eta()
+    );
+    println!(
+        "theory: ρ(η*)={:.4}, echo-probability bound p≥{:.3}\n",
+        sim.realized_theory().rho_min(),
+        analysis::p_echo_lower(sim.r(), cfg.sigma),
+    );
+
+    for t in 0..cfg.rounds {
+        let rec = sim.step();
+        if t % 30 == 0 || t + 1 == cfg.rounds {
+            println!(
+                "round {:>4}  loss {:>11.4e}  ‖w−w*‖² {:>11.4e}  echoes {:>2}/{:<2}  bits {:>8}",
+                rec.round,
+                rec.loss,
+                rec.dist_sq.unwrap(),
+                rec.echo_count,
+                rec.echo_count + rec.raw_count,
+                rec.uplink_bits
+            );
+        }
+    }
+
+    println!(
+        "\nresult: echo rate {:.1}%  |  communication saved {:.1}% vs raw-gradient baseline",
+        100.0 * sim.echo_rate(),
+        100.0 * sim.comm_savings()
+    );
+    let c = analysis::comm_ratio_c(cfg.sigma, cfg.mu / cfg.l, cfg.f as f64 / cfg.n as f64, cfg.n)
+        .unwrap_or(f64::NAN);
+    println!(
+        "paper's bound at this operating point: ≥ {:.1}% savings among echo-capable workers \
+         (C = {c:.3});\nmeasured savings sit below it only because the {} byzantine worker(s) \
+         transmit raw\nand the first slot has an empty span — costs outside the bound's scope.",
+        100.0 * (1.0 - c),
+        cfg.b
+    );
+}

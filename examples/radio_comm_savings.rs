@@ -1,0 +1,87 @@
+//! The paper's headline experiment (§4.3): measured uplink bits of
+//! Echo-CGC vs the raw-gradient baseline across the gradient-noise level σ
+//! and the network size n — plus the radio energy model that motivates the
+//! whole design (power ∝ bits).
+//!
+//! Run: `cargo run --release --example radio_comm_savings`
+
+use echo_cgc::analysis;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::sim::Simulation;
+use echo_cgc::wire::raw_gradient_bits;
+
+/// 50 nJ/bit — a typical low-power radio transmit energy (order of
+/// magnitude of 802.15.4-class transceivers).
+const JOULES_PER_BIT: f64 = 50e-9;
+
+fn main() {
+    let mut base = ExperimentConfig::default();
+    base.n = 25;
+    base.f = 2;
+    base.b = 2;
+    base.d = 500;
+    base.rounds = 40;
+
+    println!("== savings vs σ (n={}, f={}, d={}) ==", base.n, base.f, base.d);
+    println!(
+        "{:>7} {:>9} {:>10} {:>12} {:>12} {:>10}",
+        "σ", "echo%", "p bound", "saved%", "C bound", "energy(J)"
+    );
+    for &sigma in &[0.01, 0.05, 0.12, 0.3, 0.5, 0.8] {
+        let mut cfg = base.clone();
+        cfg.sigma = sigma;
+        // Past the resilience bound the theory offers no (r, η); train with
+        // a fixed conservative pair instead so the measurement continues.
+        let mut sim = match Simulation::build(&cfg) {
+            Ok(s) => s,
+            Err(_) => {
+                cfg.r = Some(0.4);
+                cfg.eta = Some(1e-3);
+                Simulation::build(&cfg).expect("fallback config")
+            }
+        };
+        sim.run();
+        let c = analysis::comm_ratio_c(sigma, 1.0, cfg.f as f64 / cfg.n as f64, cfg.n);
+        println!(
+            "{:>7.3} {:>8.1}% {:>10.3} {:>11.1}% {:>12} {:>10.4}",
+            sigma,
+            100.0 * sim.echo_rate(),
+            analysis::p_echo_lower(sim.r(), sigma),
+            100.0 * sim.comm_savings(),
+            c.map(|v| format!("{:.3}", v)).unwrap_or_else(|| "∞".into()),
+            sim.radio().meter.tx_energy_joules(JOULES_PER_BIT),
+        );
+    }
+
+    println!("\n== savings vs n (σ=0.05, x=f/n=0.1, d={}) ==", base.d);
+    println!(
+        "{:>5} {:>4} {:>9} {:>12} {:>14} {:>14}",
+        "n", "f", "echo%", "saved%", "bits/round", "baseline"
+    );
+    for &n in &[10usize, 20, 40, 60, 80] {
+        let mut cfg = base.clone();
+        cfg.n = n;
+        cfg.f = (n / 10).max(1);
+        cfg.b = cfg.f;
+        cfg.sigma = 0.05;
+        let mut sim = Simulation::build(&cfg).expect("valid config");
+        sim.run();
+        let rounds = sim.records().len() as u64;
+        let bits = sim.radio().meter.total_uplink() / rounds;
+        let baseline = raw_gradient_bits(cfg.d, cfg.encoding()) * n as u64;
+        println!(
+            "{:>5} {:>4} {:>8.1}% {:>11.1}% {:>14} {:>14}",
+            n,
+            cfg.f,
+            100.0 * sim.echo_rate(),
+            100.0 * sim.comm_savings(),
+            bits,
+            baseline
+        );
+    }
+    println!(
+        "\nreading: savings grow with n (more prior gradients to echo against)\n\
+         and shrink with σ — the paper's Figure 1a/1d trends, here *measured*\n\
+         on the bit-exact radio rather than bounded analytically."
+    );
+}

@@ -1,0 +1,129 @@
+"""AOT exporter: lower every L2 graph to HLO **text** under artifacts/.
+
+HLO text — not `.serialize()` protos — is the interchange format: jax >=
+0.5 emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact names encode the export shapes so the rust side can resolve them
+without a manifest (rust/src/runtime/mod.rs `artifact_name` helpers must
+stay in sync):
+
+    quadratic_grad_d{d}.hlo.txt
+    ridge_grad_d{d}_b{b}.hlo.txt
+    logistic_grad_d{d}_b{b}.hlo.txt
+    lm_grad_v{V}_t{T}_l{L}_e{D}_b{B}.hlo.txt
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--skip-lm]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as fh:
+        fh.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def export_quadratic(out_dir: str, d: int) -> None:
+    lowered = jax.jit(model.quadratic_grad_fn).lower(
+        f32(d), f32(d), f32(d), f32(d), f32()
+    )
+    write(os.path.join(out_dir, f"quadratic_grad_d{d}.hlo.txt"), to_hlo_text(lowered))
+
+
+def export_ridge(out_dir: str, d: int, b: int) -> None:
+    lowered = jax.jit(model.ridge_grad_fn).lower(f32(d), f32(b, d), f32(b), f32())
+    write(os.path.join(out_dir, f"ridge_grad_d{d}_b{b}.hlo.txt"), to_hlo_text(lowered))
+
+
+def export_logistic(out_dir: str, d: int, b: int) -> None:
+    lowered = jax.jit(model.logistic_grad_fn).lower(f32(d), f32(b, d), f32(b), f32())
+    write(
+        os.path.join(out_dir, f"logistic_grad_d{d}_b{b}.hlo.txt"), to_hlo_text(lowered)
+    )
+
+
+def export_softmax(out_dir: str, c: int, d: int, b: int) -> None:
+    lowered = jax.jit(model.softmax_grad_fn).lower(
+        f32(c, d), f32(b, d), f32(b, c), f32()
+    )
+    write(
+        os.path.join(out_dir, f"softmax_grad_c{c}_d{d}_b{b}.hlo.txt"),
+        to_hlo_text(lowered),
+    )
+
+
+def export_lm(out_dir: str, cfg: model.LmConfig, batch: int) -> None:
+    n_params = model.lm_num_params(cfg)
+    fn = model.lm_loss_and_grad_fn(cfg)
+    lowered = jax.jit(fn).lower(f32(n_params), i32(batch, cfg.seq + 1))
+    name = (
+        f"lm_grad_v{cfg.vocab}_t{cfg.seq}_l{cfg.layers}"
+        f"_e{cfg.d_model}_b{batch}.hlo.txt"
+    )
+    write(os.path.join(out_dir, name), to_hlo_text(lowered))
+    print(f"  lm params: {n_params}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--quad-d", type=int, nargs="*", default=[100])
+    ap.add_argument("--ridge", type=str, nargs="*", default=["50x32"],
+                    help="list of DxB shapes, e.g. 50x32 100x64")
+    ap.add_argument("--logistic", type=str, nargs="*", default=["50x32"])
+    ap.add_argument("--softmax", type=str, nargs="*", default=["3x6x16"],
+                    help="list of CxDxB shapes")
+    ap.add_argument("--lm", type=str, default="64,32,2,64,8",
+                    help="vocab,seq,layers,d_model,batch")
+    ap.add_argument("--skip-lm", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    for d in args.quad_d:
+        export_quadratic(out_dir, d)
+    for spec in args.ridge:
+        d, b = (int(v) for v in spec.split("x"))
+        export_ridge(out_dir, d, b)
+    for spec in args.logistic:
+        d, b = (int(v) for v in spec.split("x"))
+        export_logistic(out_dir, d, b)
+    for spec in args.softmax:
+        c, d, b = (int(v) for v in spec.split("x"))
+        export_softmax(out_dir, c, d, b)
+    if not args.skip_lm:
+        v, t, l, e, b = (int(x) for x in args.lm.split(","))
+        export_lm(out_dir, model.LmConfig(vocab=v, seq=t, layers=l, d_model=e), b)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""L1 — Pallas kernels for the paper's compute hot-spots.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls; see DESIGN.md §Hardware-Adaptation for the real-TPU block
+mapping). Each has a pure-jnp oracle in ref.py; pytest sweeps shapes and
+dtypes with hypothesis and asserts allclose.
+"""
+
+from .matmul import matmul
+from .projection import echo_decision, projection_products
+from .quadratic_grad import quadratic_grad
+from .regression_grad import logistic_grad, ridge_grad
+from .softmax_grad import softmax_grad
+
+__all__ = [
+    "matmul",
+    "projection_products",
+    "echo_decision",
+    "quadratic_grad",
+    "ridge_grad",
+    "logistic_grad",
+    "softmax_grad",
+]

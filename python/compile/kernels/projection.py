@@ -1,0 +1,87 @@
+"""L1 Pallas kernel for the echo-projection inner products.
+
+The worker-side echo test needs the normal-equation inputs
+
+    Gram = A^T A   (s x s)      atg = A^T g   (s,)
+
+where A is the d x s matrix of overheard gradients (s <= n << d). The
+kernel fuses both products in one pass over A's row-blocks: each (BD, s)
+tile of A is loaded once and contributes to both accumulators. (The tiny
+s x s solve happens outside — in rust it is the incremental Cholesky of
+linalg::SpanProjector; this kernel is the build-time cross-check of that
+code path and the TPU-shaped version of the worker's per-slot work.)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(d: int) -> int:
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if d % cand == 0:
+            return cand
+    return 1
+
+
+def _proj_kernel(a_ref, g_ref, gram_ref, atg_ref):
+    i = pl.program_id(0)
+    a = a_ref[...]  # (BD, s)
+    g = g_ref[...]  # (BD,)
+    gram_part = jnp.dot(a.T, a, preferred_element_type=jnp.float32)
+    atg_part = jnp.dot(g, a, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        gram_ref[...] = gram_part
+        atg_ref[...] = atg_part
+
+    @pl.when(i > 0)
+    def _acc():
+        gram_ref[...] += gram_part
+        atg_ref[...] += atg_part
+
+
+def projection_products(a_cols, g):
+    """(A^T A, A^T g) fused in one pass over A (Pallas).
+
+    Args:
+      a_cols: (d, s) stored gradients as columns.
+      g: (d,) local gradient.
+    """
+    d, s = a_cols.shape
+    bd = _pick_block(d)
+    grid = (d // bd,)
+    return pl.pallas_call(
+        _proj_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, s), lambda i: (i, 0)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, s), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=True,
+    )(a_cols, g)
+
+
+def echo_decision(a_cols, g, r):
+    """Full worker-side echo test in jax (uses the Pallas products):
+    returns (accept, coeffs, echo_norm, residual)."""
+    gram, atg = projection_products(a_cols, g)
+    s = gram.shape[0]
+    # Tikhonov-free solve; columns are linearly independent by construction.
+    coeffs = jnp.linalg.solve(gram, atg)
+    echo_sq = coeffs @ gram @ coeffs
+    g_sq = g @ g
+    resid_sq = jnp.maximum(g_sq - echo_sq, 0.0)
+    accept = resid_sq <= (r * r) * g_sq
+    return accept, coeffs, jnp.sqrt(echo_sq), jnp.sqrt(resid_sq)

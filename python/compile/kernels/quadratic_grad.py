@@ -1,0 +1,33 @@
+"""L1 Pallas kernel for the Gaussian-quadratic stochastic gradient — the
+theory-validation workload (mirrors rust/src/model/quadratic.rs exactly):
+
+    g0 = eigs * (w - w_star)
+    g  = g0 + sigma * ||g0|| * z / sqrt(d)
+
+A single fused elementwise+reduction kernel: one pass computes g0 and its
+squared norm; the noise injection reuses g0 from VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(eigs_ref, wstar_ref, w_ref, z_ref, sigma_ref, o_ref):
+    g0 = eigs_ref[...] * (w_ref[...] - wstar_ref[...])
+    d = g0.shape[0]
+    nrm = jnp.sqrt(jnp.sum(g0 * g0))
+    o_ref[...] = g0 + sigma_ref[0] * nrm * z_ref[...] / jnp.sqrt(d * 1.0)
+
+
+def quadratic_grad(eigs, w_star, w, z, sigma):
+    """Fused quadratic stochastic gradient (Pallas, single block — d is the
+    parameter dimension; for the simulator's d <= ~1e4 a single VMEM block
+    suffices and keeps the norm reduction fused)."""
+    d = w.shape[0]
+    sigma_arr = jnp.reshape(jnp.asarray(sigma, dtype=w.dtype), (1,))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), w.dtype),
+        interpret=True,
+    )(eigs, w_star, w, z, sigma_arr)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness ground
+truth — pytest asserts allclose between each kernel and its oracle across a
+hypothesis-driven sweep of shapes and dtypes)."""
+
+import jax.numpy as jnp
+
+
+def ridge_grad_ref(w, xb, yb, lam):
+    """Batch ridge-regression gradient: g = X^T (X w - y) / b + lam * w."""
+    r = xb @ w - yb
+    return xb.T @ r / xb.shape[0] + lam * w
+
+
+def logistic_grad_ref(w, xb, yb, lam):
+    """Batch logistic-regression gradient:
+    g = X^T (sigmoid(X w) - y) / b + lam * w."""
+    p = 1.0 / (1.0 + jnp.exp(-(xb @ w)))
+    return xb.T @ (p - yb) / xb.shape[0] + lam * w
+
+
+def quadratic_grad_ref(eigs, w_star, w, z, sigma):
+    """Gaussian-quadratic stochastic gradient (mirrors
+    rust/src/model/quadratic.rs): g = H(w - w*) + sigma * ||H(w-w*)|| z/sqrt(d)."""
+    g = eigs * (w - w_star)
+    d = w.shape[0]
+    return g + sigma * jnp.linalg.norm(g) * z / jnp.sqrt(d * 1.0)
+
+
+def matmul_ref(a, b):
+    """Plain matmul oracle."""
+    return a @ b
+
+
+def projection_ref(a_cols, g):
+    """Echo-projection pieces: Gram = A^T A, atg = A^T g (the worker-side
+    normal-equation inputs; the s x s solve happens outside the kernel)."""
+    return a_cols.T @ a_cols, a_cols.T @ g
+
+
+def softmax_grad_ref(w, xb, onehot, lam):
+    """Softmax-regression gradient oracle: (c, d)."""
+    logits = xb @ w.T
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return (p - onehot).T @ xb / xb.shape[0] + lam * w

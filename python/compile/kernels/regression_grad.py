@@ -1,0 +1,123 @@
+"""L1 Pallas kernels for the workers' compute hot-spot: fused batch
+gradients for ridge and logistic regression.
+
+The paper's workers spend their computation phase evaluating a stochastic
+gradient over a data batch. The naive jnp implementation makes two passes
+over the batch matrix X (`X @ w`, then `X.T @ r`); these kernels fuse the
+residual computation with the back-projection so X streams through VMEM
+once per row-block.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over
+row-blocks of X; each step loads an (BM, d) tile into VMEM, computes the
+residual for those rows and accumulates the partial X_blk^T r_blk into the
+output block, which stays resident across the whole grid (same output
+block for every step — the canonical Pallas accumulator pattern). Both
+matmuls hit the MXU via jnp.dot with preferred_element_type=float32.
+
+All pallas_call sites use interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls; interpret mode lowers to plain HLO (while-loop +
+dynamic slices) that both the python tests and the rust runtime execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(b: int) -> int:
+    """Row-block size: cap VMEM tile height, divide the batch reasonably."""
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if b % cand == 0:
+            return cand
+    return 1
+
+
+def _ridge_kernel(w_ref, x_ref, y_ref, lam_ref, o_ref, *, nblocks):
+    i = pl.program_id(0)
+    w = w_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    # residual for this row-block: (BM,)
+    r = jnp.dot(x, w, preferred_element_type=jnp.float32) - y
+    # partial back-projection: (d,)
+    part = jnp.dot(r, x, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        # Fold the ridge term into the first block's contribution.
+        o_ref[...] = part + lam_ref[0] * w * (x.shape[0] * nblocks)
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def ridge_grad(w, xb, yb, lam):
+    """Fused ridge gradient g = X^T(Xw - y)/b + lam*w  (Pallas).
+
+    Args:
+      w: (d,) parameter.
+      xb: (b, d) batch rows.
+      yb: (b,) targets.
+      lam: scalar ridge coefficient (rank-0 or rank-1 array).
+    """
+    b, d = xb.shape
+    bm = _pick_block(b)
+    nblocks = b // bm
+    lam_arr = jnp.reshape(jnp.asarray(lam, dtype=w.dtype), (1,))
+    out = pl.pallas_call(
+        functools.partial(_ridge_kernel, nblocks=nblocks),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),        # w: resident
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),   # X row-block
+            pl.BlockSpec((bm,), lambda i: (i,)),       # y row-block
+            pl.BlockSpec((1,), lambda i: (0,)),        # lam
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((d,), w.dtype),
+        interpret=True,
+    )(w, xb, yb, lam_arr)
+    return out / b
+
+
+def _logistic_kernel(w_ref, x_ref, y_ref, lam_ref, o_ref, *, nblocks):
+    i = pl.program_id(0)
+    w = w_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    p = 1.0 / (1.0 + jnp.exp(-logits))
+    part = jnp.dot(p - y, x, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part + lam_ref[0] * w * (x.shape[0] * nblocks)
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def logistic_grad(w, xb, yb, lam):
+    """Fused logistic gradient g = X^T(sigmoid(Xw) - y)/b + lam*w (Pallas)."""
+    b, d = xb.shape
+    bm = _pick_block(b)
+    nblocks = b // bm
+    lam_arr = jnp.reshape(jnp.asarray(lam, dtype=w.dtype), (1,))
+    out = pl.pallas_call(
+        functools.partial(_logistic_kernel, nblocks=nblocks),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), w.dtype),
+        interpret=True,
+    )(w, xb, yb, lam_arr)
+    return out / b

@@ -1,0 +1,194 @@
+"""L2 — the JAX compute graphs the rust coordinator executes via PJRT.
+
+Build-time only: `aot.py` lowers each function at fixed example shapes to
+HLO text under artifacts/; the rust runtime (rust/src/runtime/) loads and
+runs them. Every gradient path calls the L1 Pallas kernels so the kernels
+lower into the same artifact.
+
+Contents:
+  * quadratic / ridge / logistic stochastic-gradient graphs mirroring the
+    native rust models (equivalence-tested from rust);
+  * a tiny GPT-style causal LM over flattened parameters with
+    loss-and-grad, the workload of the end-to-end driver
+    (examples/train_lm.rs). The MLP and attention projection matmuls run
+    through the Pallas blocked matmul (custom VJP, so the backward pass is
+    Pallas too).
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import logistic_grad, matmul, quadratic_grad, ridge_grad, softmax_grad
+
+
+# ---------------------------------------------------------------------------
+# Regression-style gradient graphs (direct kernel wrappers).
+# ---------------------------------------------------------------------------
+
+def quadratic_grad_fn(eigs, w_star, w, z, sigma):
+    """Stochastic quadratic gradient (tuple-returning for AOT)."""
+    return (quadratic_grad(eigs, w_star, w, z, sigma),)
+
+
+def ridge_grad_fn(w, xb, yb, lam):
+    return (ridge_grad(w, xb, yb, lam),)
+
+
+def logistic_grad_fn(w, xb, yb, lam):
+    return (logistic_grad(w, xb, yb, lam),)
+
+
+def softmax_grad_fn(w, xb, onehot, lam):
+    """(c,d) softmax gradient, flattened to (c*d,) for the rust side."""
+    g = softmax_grad(w, xb, onehot, lam)
+    return (g.reshape(-1),)
+
+
+# ---------------------------------------------------------------------------
+# Tiny GPT-style causal LM over a flat parameter vector.
+# ---------------------------------------------------------------------------
+
+class LmConfig(NamedTuple):
+    vocab: int = 64
+    seq: int = 32
+    layers: int = 2
+    d_model: int = 64
+    heads: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+def lm_param_spec(cfg: LmConfig):
+    """Ordered (name, shape) list; the flat vector is their concatenation."""
+    d = cfg.d_model
+    spec = [
+        ("embed", (cfg.vocab, d)),
+        ("pos", (cfg.seq, d)),
+    ]
+    for layer in range(cfg.layers):
+        spec += [
+            (f"l{layer}.ln1_scale", (d,)),
+            (f"l{layer}.ln1_bias", (d,)),
+            (f"l{layer}.w_qkv", (d, 3 * d)),
+            (f"l{layer}.w_proj", (d, d)),
+            (f"l{layer}.ln2_scale", (d,)),
+            (f"l{layer}.ln2_bias", (d,)),
+            (f"l{layer}.w_mlp1", (d, 4 * d)),
+            (f"l{layer}.b_mlp1", (4 * d,)),
+            (f"l{layer}.w_mlp2", (4 * d, d)),
+            (f"l{layer}.b_mlp2", (d,)),
+        ]
+    spec += [("lnf_scale", (d,)), ("lnf_bias", (d,))]
+    # Unembedding is tied to the embedding matrix.
+    return spec
+
+
+def lm_num_params(cfg: LmConfig) -> int:
+    total = 0
+    for _, shape in lm_param_spec(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        total += size
+    return total
+
+
+def lm_unflatten(flat, cfg: LmConfig):
+    params = {}
+    off = 0
+    for name, shape in lm_param_spec(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return params
+
+
+def lm_init_params(cfg: LmConfig, key) -> jnp.ndarray:
+    """Flat initial parameter vector (scaled-gaussian init, ones/zeros for
+    layer norms)."""
+    chunks = []
+    for name, shape in lm_param_spec(cfg):
+        key, sub = jax.random.split(key)
+        size = 1
+        for s in shape:
+            size *= s
+        if name.endswith("scale"):
+            chunks.append(jnp.ones(size, jnp.float32))
+        elif name.endswith("bias") or name.startswith("b_") or ".b_" in name:
+            chunks.append(jnp.zeros(size, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else size
+            std = 0.02 if name in ("embed", "pos") else 1.0 / jnp.sqrt(fan_in * 1.0)
+            chunks.append(std * jax.random.normal(sub, (size,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _pallas_2d(x2d, w):
+    """Route a (rows, d) x (d, k) product through the Pallas matmul."""
+    return matmul(x2d, w)
+
+
+def lm_loss(flat, tokens, cfg: LmConfig):
+    """Mean next-token cross-entropy.
+
+    tokens: (B, seq+1) int32 — inputs tokens[:, :-1], targets tokens[:, 1:].
+    """
+    p = lm_unflatten(flat, cfg)
+    x_tok = tokens[:, :-1]
+    y_tok = tokens[:, 1:]
+    bsz, t = x_tok.shape
+    d = cfg.d_model
+
+    h = p["embed"][x_tok] + p["pos"][None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    for layer in range(cfg.layers):
+        pre = f"l{layer}."
+        a_in = _layer_norm(h, p[pre + "ln1_scale"], p[pre + "ln1_bias"])
+        qkv = _pallas_2d(a_in.reshape(bsz * t, d), p[pre + "w_qkv"]).reshape(
+            bsz, t, 3, cfg.heads, cfg.d_head
+        )
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bthe,bshe->bhts", q, k) / jnp.sqrt(cfg.d_head * 1.0)
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhts,bshe->bthe", att, v).reshape(bsz * t, d)
+        h = h + _pallas_2d(o, p[pre + "w_proj"]).reshape(bsz, t, d)
+
+        m_in = _layer_norm(h, p[pre + "ln2_scale"], p[pre + "ln2_bias"])
+        m1 = _pallas_2d(m_in.reshape(bsz * t, d), p[pre + "w_mlp1"]) + p[pre + "b_mlp1"]
+        m1 = jax.nn.gelu(m1)
+        m2 = _pallas_2d(m1, p[pre + "w_mlp2"]) + p[pre + "b_mlp2"]
+        h = h + m2.reshape(bsz, t, d)
+
+    h = _layer_norm(h, p["lnf_scale"], p["lnf_bias"])
+    logits = _pallas_2d(h.reshape(bsz * t, d), p["embed"].T).reshape(
+        bsz, t, cfg.vocab
+    )
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y_tok[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def lm_loss_and_grad_fn(cfg: LmConfig):
+    """(loss, grad) over the flat parameter vector — the AOT export."""
+
+    def f(flat, tokens):
+        loss, grad = jax.value_and_grad(lm_loss)(flat, tokens, cfg)
+        return (loss, grad)
+
+    return f

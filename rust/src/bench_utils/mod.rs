@@ -1,0 +1,166 @@
+//! Micro-benchmark harness (criterion is not in the vendored crate set).
+//!
+//! `cargo bench` targets use [`Bencher`]: warmup, adaptive iteration count,
+//! mean/std/min reporting, and a global `--quick` mode (env
+//! `ECHO_CGC_BENCH_QUICK=1`) used by CI-style smoke runs. Results can also
+//! be appended to a CSV for the §Perf iteration log.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+/// Timing statistics of a benchmark case.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Throughput given a per-iteration element count.
+    pub fn per_sec(&self, elems_per_iter: f64) -> f64 {
+        elems_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+fn humanize(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// The harness: measures wall time of repeated closure calls.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+    pub results: Vec<(String, BenchStats)>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let quick = std::env::var("ECHO_CGC_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        if quick {
+            Self {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(100),
+                min_samples: 3,
+                results: Vec::new(),
+            }
+        } else {
+            Self {
+                warmup: Duration::from_millis(200),
+                measure: Duration::from_millis(900),
+                min_samples: 10,
+                results: Vec::new(),
+            }
+        }
+    }
+
+    /// Benchmark `f`, printing a criterion-style line.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warmup + estimate per-iter cost.
+        let wstart = Instant::now();
+        let mut wit = 0u64;
+        while wstart.elapsed() < self.warmup || wit == 0 {
+            black_box(f());
+            wit += 1;
+        }
+        let per_iter = wstart.elapsed().as_nanos() as f64 / wit as f64;
+        // Choose a batch size so each sample is ~1/20 of the budget.
+        let sample_target_ns = self.measure.as_nanos() as f64 / 20.0;
+        let batch = ((sample_target_ns / per_iter).ceil() as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / (n - 1.0).max(1.0);
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let stats = BenchStats {
+            iters: batch * samples.len() as u64,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: min,
+        };
+        println!(
+            "bench {name:<52} {:>12}/iter (±{}, min {}, {} iters)",
+            humanize(stats.mean_ns),
+            humanize(stats.std_ns),
+            humanize(stats.min_ns),
+            stats.iters
+        );
+        self.results.push((name.to_string(), stats));
+        stats
+    }
+
+    /// Write accumulated results as CSV (for the §Perf log).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut t = crate::metrics::CsvTable::new(&["name", "mean_ns", "std_ns", "min_ns"]);
+        for (name, s) in &self.results {
+            t.push_row_mixed(vec![
+                name.clone(),
+                format!("{}", s.mean_ns),
+                format!("{}", s.std_ns),
+                format!("{}", s.min_ns),
+            ]);
+        }
+        t.write_file(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("ECHO_CGC_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let s = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.mean_ns * 1.5);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn humanize_ranges() {
+        assert!(humanize(5.0).ends_with("ns"));
+        assert!(humanize(5e4).ends_with("µs"));
+        assert!(humanize(5e7).ends_with("ms"));
+        assert!(humanize(5e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,500 @@
+//! The Byzantine attack zoo.
+//!
+//! The paper's adversary is **omniscient**: it knows the current parameter
+//! and every fault-free worker's local gradient before choosing its frames
+//! (§2.1). It *cannot* send inconsistent frames to different receivers
+//! (reliable local broadcast) and *cannot* spoof identities — both are
+//! structural in [`crate::radio`]. Everything else is fair game, including
+//! forged echo messages, which are unique to Echo-CGC's message format and
+//! exercised by the `EchoForge*` attacks.
+
+use crate::linalg::{self, norm};
+use crate::rng::Rng;
+use crate::wire::Payload;
+use std::collections::BTreeMap;
+
+/// Everything the omniscient adversary knows when worker `id`'s slot opens.
+pub struct AttackCtx<'a> {
+    /// The Byzantine worker transmitting now.
+    pub id: usize,
+    /// Current parameter `w^t`.
+    pub w: &'a [f64],
+    /// True gradient `∇Q(w^t)` (omniscience).
+    pub true_grad: &'a [f64],
+    /// All fault-free workers' local gradients this round (omniscience).
+    pub honest_grads: &'a BTreeMap<usize, Vec<f64>>,
+    /// Frames already broadcast this round, in slot order.
+    pub overheard: &'a [(usize, Payload)],
+    pub n: usize,
+    pub f: usize,
+    pub round: usize,
+}
+
+/// A Byzantine behaviour: produce the frame for this worker's slot
+/// (`None` = stay silent / crash).
+pub trait Attack: Send {
+    fn name(&self) -> &'static str;
+    fn frame(&mut self, ctx: &AttackCtx, rng: &mut Rng) -> Option<Payload>;
+}
+
+/// Named attack kinds (CLI / config selection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttackKind {
+    None,
+    SignFlip,
+    LargeNorm,
+    Zero,
+    Gaussian,
+    Omniscient,
+    Mimic,
+    Silent,
+    EchoForgeDangling,
+    EchoForgeBadK,
+    EchoForgeRandomX,
+    /// "A Little Is Enough" (Baruch et al. 2019): colluders shift the mean
+    /// by z standard deviations per coordinate — small enough to hide
+    /// inside honest variance, large enough to bias the aggregate.
+    Alie,
+    /// Inner-product manipulation (Xie et al. 2020): a modest reversed
+    /// multiple of the honest mean, keeping ⟨g_byz, ∇Q⟩ < 0 at low norm.
+    Ipm,
+}
+
+impl AttackKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AttackKind::None => "none",
+            AttackKind::SignFlip => "sign-flip",
+            AttackKind::LargeNorm => "large-norm",
+            AttackKind::Zero => "zero",
+            AttackKind::Gaussian => "gaussian",
+            AttackKind::Omniscient => "omniscient",
+            AttackKind::Mimic => "mimic",
+            AttackKind::Silent => "silent",
+            AttackKind::EchoForgeDangling => "echo-dangling",
+            AttackKind::EchoForgeBadK => "echo-bad-k",
+            AttackKind::EchoForgeRandomX => "echo-random-x",
+            AttackKind::Alie => "alie",
+            AttackKind::Ipm => "ipm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AttackKind> {
+        Some(match s {
+            "none" => AttackKind::None,
+            "sign-flip" | "signflip" => AttackKind::SignFlip,
+            "large-norm" | "scale" => AttackKind::LargeNorm,
+            "zero" => AttackKind::Zero,
+            "gaussian" | "noise" => AttackKind::Gaussian,
+            "omniscient" | "inner-product" => AttackKind::Omniscient,
+            "mimic" => AttackKind::Mimic,
+            "silent" | "crash" => AttackKind::Silent,
+            "echo-dangling" => AttackKind::EchoForgeDangling,
+            "echo-bad-k" => AttackKind::EchoForgeBadK,
+            "echo-random-x" => AttackKind::EchoForgeRandomX,
+            "alie" => AttackKind::Alie,
+            "ipm" | "inner-product-manipulation" => AttackKind::Ipm,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [AttackKind; 13] {
+        [
+            AttackKind::None,
+            AttackKind::SignFlip,
+            AttackKind::LargeNorm,
+            AttackKind::Zero,
+            AttackKind::Gaussian,
+            AttackKind::Omniscient,
+            AttackKind::Mimic,
+            AttackKind::Silent,
+            AttackKind::EchoForgeDangling,
+            AttackKind::EchoForgeBadK,
+            AttackKind::EchoForgeRandomX,
+            AttackKind::Alie,
+            AttackKind::Ipm,
+        ]
+    }
+
+    /// Instantiate the attack behaviour.
+    pub fn build(self) -> Box<dyn Attack> {
+        match self {
+            AttackKind::None => Box::new(NoAttack),
+            AttackKind::SignFlip => Box::new(SignFlip { scale: 1.0 }),
+            AttackKind::LargeNorm => Box::new(LargeNorm { factor: 100.0 }),
+            AttackKind::Zero => Box::new(ZeroGradient),
+            AttackKind::Gaussian => Box::new(GaussianNoise { std: 10.0 }),
+            AttackKind::Omniscient => Box::new(Omniscient),
+            AttackKind::Mimic => Box::new(Mimic),
+            AttackKind::Silent => Box::new(Silent),
+            AttackKind::EchoForgeDangling => Box::new(EchoForgeDangling),
+            AttackKind::EchoForgeBadK => Box::new(EchoForgeBadK { k: 1e9 }),
+            AttackKind::EchoForgeRandomX => Box::new(EchoForgeRandomX),
+            AttackKind::Alie => Box::new(Alie { z: 1.5 }),
+            AttackKind::Ipm => Box::new(InnerProductManipulation { epsilon: 0.5 }),
+        }
+    }
+}
+
+fn mean_honest(ctx: &AttackCtx) -> Vec<f64> {
+    let d = ctx.w.len();
+    let mut m = vec![0.0; d];
+    if ctx.honest_grads.is_empty() {
+        return m;
+    }
+    for g in ctx.honest_grads.values() {
+        linalg::axpy(1.0, g, &mut m);
+    }
+    linalg::scale_mut(1.0 / ctx.honest_grads.len() as f64, &mut m);
+    m
+}
+
+/// Behave exactly like an honest worker that computed the true gradient —
+/// a "Byzantine" worker indistinguishable from fault-free (control case).
+pub struct NoAttack;
+
+impl Attack for NoAttack {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        Some(Payload::Raw(ctx.true_grad.to_vec()))
+    }
+}
+
+/// Send `−scale · mean(honest gradients)` — the classic reversal attack.
+pub struct SignFlip {
+    pub scale: f64,
+}
+
+impl Attack for SignFlip {
+    fn name(&self) -> &'static str {
+        "sign-flip"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        let m = mean_honest(ctx);
+        Some(Payload::Raw(linalg::scale(-self.scale, &m)))
+    }
+}
+
+/// Send an absurdly large gradient in a harmful direction (tests that the
+/// CGC filter clips magnitude).
+pub struct LargeNorm {
+    pub factor: f64,
+}
+
+impl Attack for LargeNorm {
+    fn name(&self) -> &'static str {
+        "large-norm"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        let m = mean_honest(ctx);
+        Some(Payload::Raw(linalg::scale(-self.factor, &m)))
+    }
+}
+
+/// Send the zero vector (silent sabotage — slows convergence).
+pub struct ZeroGradient;
+
+impl Attack for ZeroGradient {
+    fn name(&self) -> &'static str {
+        "zero"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        Some(Payload::Raw(vec![0.0; ctx.w.len()]))
+    }
+}
+
+/// Send pure noise of a given scale.
+pub struct GaussianNoise {
+    pub std: f64,
+}
+
+impl Attack for GaussianNoise {
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, rng: &mut Rng) -> Option<Payload> {
+        let tg = norm(ctx.true_grad).max(1e-12);
+        let g: Vec<f64> = (0..ctx.w.len()).map(|_| rng.normal() * self.std * tg).collect();
+        Some(Payload::Raw(g))
+    }
+}
+
+/// The strongest raw-gradient attack against norm-filters: send the
+/// *reversed* mean honest gradient scaled to sit just **below** the CGC
+/// clip threshold, so the filter passes it unclipped while it pulls the
+/// aggregate backwards. Requires omniscience (it computes the exact
+/// (n−f)-th norm among honest gradients).
+pub struct Omniscient;
+
+impl Attack for Omniscient {
+    fn name(&self) -> &'static str {
+        "omniscient"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        let m = mean_honest(ctx);
+        let mut norms: Vec<f64> = ctx.honest_grads.values().map(|g| norm(g)).collect();
+        norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // All b Byzantine workers will rank below the honest max, so the
+        // (n−f)-th overall norm is at least the honest median-ish value;
+        // staying below the *smallest* honest norm guarantees no clipping.
+        let target = norms.first().copied().unwrap_or(1.0) * 0.999;
+        let mn = norm(&m).max(1e-300);
+        Some(Payload::Raw(linalg::scale(-target / mn, &m)))
+    }
+}
+
+/// Copy the first overheard raw gradient (plausible-looking, creates
+/// correlated duplicates that bias mean-style rules).
+pub struct Mimic;
+
+impl Attack for Mimic {
+    fn name(&self) -> &'static str {
+        "mimic"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        for (_, p) in ctx.overheard {
+            if let Payload::Raw(g) = p {
+                return Some(Payload::Raw(g.clone()));
+            }
+        }
+        Some(Payload::Raw(ctx.true_grad.to_vec()))
+    }
+}
+
+/// Crash-style: never transmit.
+pub struct Silent;
+
+impl Attack for Silent {
+    fn name(&self) -> &'static str {
+        "silent"
+    }
+
+    fn frame(&mut self, _ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        None
+    }
+}
+
+/// "A Little Is Enough": per-coordinate mean − z·std of the honest
+/// gradients. Evades norm filters entirely (its norm matches honest
+/// gradients) while consistently biasing coordinates; median/trimmed-mean
+/// style rules are its classic victims.
+pub struct Alie {
+    pub z: f64,
+}
+
+impl Attack for Alie {
+    fn name(&self) -> &'static str {
+        "alie"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        let d = ctx.w.len();
+        let hs: Vec<&Vec<f64>> = ctx.honest_grads.values().collect();
+        if hs.is_empty() {
+            return Some(Payload::Raw(vec![0.0; d]));
+        }
+        let m = hs.len() as f64;
+        let mut mean = vec![0.0; d];
+        for g in &hs {
+            linalg::axpy(1.0 / m, g, &mut mean);
+        }
+        let mut out = vec![0.0; d];
+        for c in 0..d {
+            let var = hs.iter().map(|g| (g[c] - mean[c]) * (g[c] - mean[c])).sum::<f64>()
+                / m.max(1.0);
+            out[c] = mean[c] - self.z * var.sqrt();
+        }
+        Some(Payload::Raw(out))
+    }
+}
+
+/// Inner-product manipulation: −ε · mean(honest). Keeps a modest norm (so
+/// clipping barely touches it) while its inner product with the true
+/// gradient is negative every round.
+pub struct InnerProductManipulation {
+    pub epsilon: f64,
+}
+
+impl Attack for InnerProductManipulation {
+    fn name(&self) -> &'static str {
+        "ipm"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        let m = mean_honest(ctx);
+        Some(Payload::Raw(linalg::scale(-self.epsilon, &m)))
+    }
+}
+
+/// Echo forgery: reference a slot that has not transmitted yet. The
+/// reliable-broadcast argument lets the server *prove* the sender is
+/// Byzantine (G[i] = ⊥) — the attack must always be neutralized.
+pub struct EchoForgeDangling;
+
+impl Attack for EchoForgeDangling {
+    fn name(&self) -> &'static str {
+        "echo-dangling"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        // The last slot (n−1) has certainly not transmitted before us
+        // unless we *are* the last slot; then dangle one past our own id
+        // modulo n (some not-yet-heard slot always exists except when we
+        // are last — in that case reference ourselves, equally invalid).
+        let target = if ctx.id + 1 < ctx.n { ctx.n - 1 } else { ctx.id };
+        Some(Payload::Echo { k: 1.0, coeffs: vec![1.0], ids: vec![target] })
+    }
+}
+
+/// Echo forgery: legitimate references but an absurd magnitude ratio `k`.
+/// The reconstruction inflates to a huge norm — the CGC filter must clip it.
+pub struct EchoForgeBadK {
+    pub k: f64,
+}
+
+impl Attack for EchoForgeBadK {
+    fn name(&self) -> &'static str {
+        "echo-bad-k"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        let heard: Vec<usize> = ctx
+            .overheard
+            .iter()
+            .filter(|(_, p)| !matches!(p, Payload::Param(_)))
+            .map(|(i, _)| *i)
+            .collect();
+        match heard.first() {
+            Some(&i) => Some(Payload::Echo { k: self.k, coeffs: vec![1.0], ids: vec![i] }),
+            None => Some(Payload::Raw(linalg::scale(-1.0, ctx.true_grad))),
+        }
+    }
+}
+
+/// Echo forgery: valid references, adversarial coefficients — the
+/// reconstruction is a *reversed* combination of honest gradients with a
+/// norm chosen to evade clipping.
+pub struct EchoForgeRandomX;
+
+impl Attack for EchoForgeRandomX {
+    fn name(&self) -> &'static str {
+        "echo-random-x"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, rng: &mut Rng) -> Option<Payload> {
+        let mut heard: Vec<usize> = ctx
+            .overheard
+            .iter()
+            .filter(|(_, p)| !matches!(p, Payload::Param(_)))
+            .map(|(i, _)| *i)
+            .collect();
+        heard.sort_unstable();
+        heard.dedup();
+        if heard.is_empty() {
+            return Some(Payload::Raw(linalg::scale(-1.0, ctx.true_grad)));
+        }
+        let coeffs: Vec<f64> = heard.iter().map(|_| -rng.uniform_in(0.5, 1.5)).collect();
+        Some(Payload::Echo { k: 1.0, coeffs, ids: heard })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_fixture<'a>(
+        w: &'a [f64],
+        tg: &'a [f64],
+        honest: &'a BTreeMap<usize, Vec<f64>>,
+        overheard: &'a [(usize, Payload)],
+    ) -> AttackCtx<'a> {
+        AttackCtx { id: 2, w, true_grad: tg, honest_grads: honest, overheard, n: 5, f: 1, round: 0 }
+    }
+
+    #[test]
+    fn sign_flip_reverses_mean() {
+        let w = vec![0.0; 2];
+        let tg = vec![1.0, 0.0];
+        let mut honest = BTreeMap::new();
+        honest.insert(0usize, vec![1.0, 1.0]);
+        honest.insert(1usize, vec![3.0, -1.0]);
+        let over = vec![];
+        let mut a = SignFlip { scale: 1.0 };
+        let p = a.frame(&ctx_fixture(&w, &tg, &honest, &over), &mut Rng::new(0)).unwrap();
+        assert_eq!(p, Payload::Raw(vec![-2.0, 0.0]));
+    }
+
+    #[test]
+    fn omniscient_stays_below_min_honest_norm() {
+        let w = vec![0.0; 2];
+        let tg = vec![1.0, 0.0];
+        let mut honest = BTreeMap::new();
+        honest.insert(0usize, vec![3.0, 4.0]); // norm 5
+        honest.insert(1usize, vec![0.6, 0.8]); // norm 1
+        let over = vec![];
+        let mut a = Omniscient;
+        if let Payload::Raw(g) = a.frame(&ctx_fixture(&w, &tg, &honest, &over), &mut Rng::new(0)).unwrap() {
+            assert!(norm(&g) < 1.0);
+            // Direction opposes the honest mean.
+            let m = vec![1.8, 2.4];
+            assert!(linalg::dot(&g, &m) < 0.0);
+        } else {
+            panic!("expected raw");
+        }
+    }
+
+    #[test]
+    fn dangling_echo_references_future_slot() {
+        let w = vec![0.0; 2];
+        let tg = vec![1.0, 0.0];
+        let honest = BTreeMap::new();
+        let over = vec![(0usize, Payload::Raw(vec![1.0, 0.0]))];
+        let mut a = EchoForgeDangling;
+        if let Payload::Echo { ids, .. } =
+            a.frame(&ctx_fixture(&w, &tg, &honest, &over), &mut Rng::new(0)).unwrap()
+        {
+            assert_eq!(ids, vec![4]); // ctx.n - 1, not yet transmitted (id = 2)
+        } else {
+            panic!("expected echo");
+        }
+    }
+
+    #[test]
+    fn silent_returns_none() {
+        let w = vec![0.0];
+        let tg = vec![1.0];
+        let honest = BTreeMap::new();
+        let over = vec![];
+        assert!(Silent.frame(&ctx_fixture(&w, &tg, &honest, &over), &mut Rng::new(0)).is_none());
+    }
+
+    #[test]
+    fn all_kinds_build_and_produce_frames() {
+        let w = vec![0.0; 3];
+        let tg = vec![1.0, 2.0, 3.0];
+        let mut honest = BTreeMap::new();
+        honest.insert(0usize, vec![1.0, 2.0, 2.9]);
+        let over = vec![(0usize, Payload::Raw(vec![1.0, 2.0, 2.9]))];
+        let mut rng = Rng::new(1);
+        for kind in AttackKind::all() {
+            let mut a = kind.build();
+            let ctx = ctx_fixture(&w, &tg, &honest, &over);
+            let frame = a.frame(&ctx, &mut rng);
+            if kind == AttackKind::Silent {
+                assert!(frame.is_none());
+            } else {
+                assert!(frame.is_some(), "{}", kind.name());
+            }
+            assert_eq!(AttackKind::parse(kind.name()), Some(kind));
+        }
+    }
+}

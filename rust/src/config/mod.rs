@@ -1,0 +1,455 @@
+//! Experiment configuration: defaults, a `--key value` CLI parser and a
+//! TOML-lite `key = value` config-file loader (the vendored crate set has
+//! no `clap`/`toml`).
+
+use crate::byzantine::AttackKind;
+use crate::coordinator::Aggregator;
+use crate::wire::{Encoding, IdCodec, Precision};
+
+/// Which cost model the workers train.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Synthetic quadratic with exact (µ, L, σ) — the theory workload.
+    Quadratic,
+    /// Ridge regression over a synthetic linear dataset.
+    Ridge,
+    /// Binary logistic regression.
+    Logistic,
+    /// Multi-class softmax regression.
+    Softmax,
+}
+
+impl ModelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Quadratic => "quadratic",
+            ModelKind::Ridge => "ridge",
+            ModelKind::Logistic => "logistic",
+            ModelKind::Softmax => "softmax",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        Some(match s {
+            "quadratic" | "quad" => ModelKind::Quadratic,
+            "ridge" | "linreg" => ModelKind::Ridge,
+            "logistic" | "logreg" => ModelKind::Logistic,
+            "softmax" => ModelKind::Softmax,
+            _ => return None,
+        })
+    }
+}
+
+/// Where Byzantine workers sit in the TDMA schedule. Early Byzantine slots
+/// pollute honest spans; late slots can reference more gradients when
+/// forging echoes — placement is an ablation axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ByzPlacement {
+    First,
+    Last,
+    Spread,
+    Random,
+}
+
+impl ByzPlacement {
+    pub fn name(self) -> &'static str {
+        match self {
+            ByzPlacement::First => "first",
+            ByzPlacement::Last => "last",
+            ByzPlacement::Spread => "spread",
+            ByzPlacement::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ByzPlacement> {
+        Some(match s {
+            "first" => ByzPlacement::First,
+            "last" => ByzPlacement::Last,
+            "spread" => ByzPlacement::Spread,
+            "random" => ByzPlacement::Random,
+            _ => return None,
+        })
+    }
+
+    /// The set of Byzantine worker ids for `b` faults among `n` workers.
+    pub fn place(self, n: usize, b: usize, rng: &mut crate::rng::Rng) -> Vec<usize> {
+        assert!(b <= n);
+        match self {
+            ByzPlacement::First => (0..b).collect(),
+            ByzPlacement::Last => (n - b..n).collect(),
+            ByzPlacement::Spread => (0..b).map(|i| i * n / b.max(1)).collect(),
+            ByzPlacement::Random => {
+                let mut ids = rng.sample_indices(n, b);
+                ids.sort_unstable();
+                ids
+            }
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Number of workers `n`.
+    pub n: usize,
+    /// Fault tolerance `f` (design parameter of the filter).
+    pub f: usize,
+    /// Actual number of Byzantine workers in the execution (`b ≤ f`).
+    pub b: usize,
+    /// Training rounds `T`.
+    pub rounds: usize,
+    /// Parameter dimension `d` (for quadratic; data models derive it).
+    pub d: usize,
+    pub model: ModelKind,
+    /// (µ, L, σ) for the quadratic model.
+    pub mu: f64,
+    pub l: f64,
+    pub sigma: f64,
+    /// Dataset knobs for data-driven models.
+    pub dataset_m: usize,
+    pub batch: usize,
+    pub noise: f64,
+    pub lambda: f64,
+    pub classes: usize,
+    /// Deviation ratio `r`; `None` ⇒ `r_frac ×` the Lemma-4 bound.
+    pub r: Option<f64>,
+    /// Fraction of the Lemma-4 bound used when `r` is auto-derived.
+    pub r_frac: f64,
+    /// Step size η; `None` ⇒ `η* = β/γ` (Theorem 5 optimum).
+    pub eta: Option<f64>,
+    /// Relative linear-independence tolerance for `R_j`.
+    pub eps_li: f64,
+    pub seed: u64,
+    pub attack: AttackKind,
+    pub byz_placement: ByzPlacement,
+    pub aggregator: Aggregator,
+    pub precision: Precision,
+    pub id_codec: IdCodec,
+    /// Re-draw the TDMA permutation each round.
+    pub shuffle_slots: bool,
+    /// Echo mechanism on/off: off = the Gupta–Vaidya CGC baseline (every
+    /// worker broadcasts raw).
+    pub echo_enabled: bool,
+    /// Top-k sparsification baseline (eSGD-style, ref. [23]): when set,
+    /// honest workers transmit the k largest-|value| coordinates instead of
+    /// echoing — communication-efficient but *not* designed for Byzantine
+    /// tolerance (sparsification biases the gradient).
+    pub topk: Option<usize>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            n: 20,
+            f: 2,
+            b: 2,
+            rounds: 100,
+            d: 100,
+            model: ModelKind::Quadratic,
+            mu: 1.0,
+            l: 1.0,
+            sigma: 0.05,
+            dataset_m: 512,
+            batch: 32,
+            noise: 0.1,
+            lambda: 0.1,
+            classes: 3,
+            r: None,
+            r_frac: 0.9,
+            eta: None,
+            eps_li: 1e-9,
+            seed: 42,
+            attack: AttackKind::Omniscient,
+            byz_placement: ByzPlacement::Spread,
+            aggregator: Aggregator::CgcSum,
+            precision: Precision::F32,
+            id_codec: IdCodec::Varint,
+            shuffle_slots: false,
+            echo_enabled: true,
+            topk: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn encoding(&self) -> Encoding {
+        Encoding { precision: self.precision, id_codec: self.id_codec }
+    }
+
+    /// Resolve the deviation ratio: explicit, or `r_frac ×` Lemma-4 bound.
+    /// Errors when the config violates the resilience condition.
+    pub fn try_resolve_r(&self) -> Result<f64, String> {
+        if let Some(r) = self.r {
+            return Ok(r);
+        }
+        if self.f == 0 {
+            // No faults: Lemma 4's bound degenerates to µ/((1+σ)L); use it.
+            return Ok(self.r_frac * self.mu / ((1.0 + self.sigma) * self.l));
+        }
+        let b = crate::analysis::r_bound_lemma4(self.n, self.f, self.mu, self.l, self.sigma);
+        if b <= 0.0 {
+            return Err(format!(
+                "config violates the resilience condition nµ − (3+k*)fL > 0 \
+                 (n={}, f={}, µ={}, L={})",
+                self.n, self.f, self.mu, self.l
+            ));
+        }
+        Ok(self.r_frac * b)
+    }
+
+    /// Panicking variant of [`Self::try_resolve_r`] (CLI/test convenience).
+    pub fn resolve_r(&self) -> f64 {
+        self.try_resolve_r().unwrap()
+    }
+
+    /// Resolve the step size: explicit, or Theorem 5's η* = β/γ. Errors
+    /// when β ≤ 0 (no contraction guarantee exists for this config).
+    pub fn try_resolve_eta(&self) -> Result<f64, String> {
+        if let Some(e) = self.eta {
+            return Ok(e);
+        }
+        let r = self.try_resolve_r()?;
+        let p = crate::analysis::TheoryParams::worst_case(
+            self.n, self.f, self.mu, self.l, self.sigma, r,
+        );
+        let eta = p.eta_star();
+        if eta <= 0.0 {
+            return Err(format!("η* = β/γ must be positive (β = {})", p.beta()));
+        }
+        Ok(eta)
+    }
+
+    /// Panicking variant of [`Self::try_resolve_eta`].
+    pub fn resolve_eta(&self) -> f64 {
+        self.try_resolve_eta().unwrap()
+    }
+
+    /// Theory parameters for this config (worst case b = f).
+    pub fn theory(&self) -> crate::analysis::TheoryParams {
+        crate::analysis::TheoryParams::worst_case(
+            self.n,
+            self.f,
+            self.mu,
+            self.l,
+            self.sigma,
+            self.resolve_r(),
+        )
+    }
+
+    /// Apply one `key`/`value` pair (shared by the CLI and file loaders).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_usize =
+            |v: &str| v.parse::<usize>().map_err(|e| format!("{key}: {e}"));
+        let parse_f64 = |v: &str| v.parse::<f64>().map_err(|e| format!("{key}: {e}"));
+        let parse_bool = |v: &str| match v {
+            "true" | "1" | "yes" | "on" => Ok(true),
+            "false" | "0" | "no" | "off" => Ok(false),
+            _ => Err(format!("{key}: expected bool, got '{v}'")),
+        };
+        match key {
+            "n" => self.n = parse_usize(value)?,
+            "f" => {
+                self.f = parse_usize(value)?;
+                self.b = self.b.min(self.f);
+            }
+            "b" => self.b = parse_usize(value)?,
+            "rounds" | "t" => self.rounds = parse_usize(value)?,
+            "d" | "dim" => self.d = parse_usize(value)?,
+            "model" => {
+                self.model = ModelKind::parse(value)
+                    .ok_or_else(|| format!("unknown model '{value}'"))?
+            }
+            "mu" => self.mu = parse_f64(value)?,
+            "l" | "lipschitz" => self.l = parse_f64(value)?,
+            "sigma" => self.sigma = parse_f64(value)?,
+            "dataset-m" | "m" => self.dataset_m = parse_usize(value)?,
+            "batch" => self.batch = parse_usize(value)?,
+            "noise" => self.noise = parse_f64(value)?,
+            "lambda" => self.lambda = parse_f64(value)?,
+            "classes" => self.classes = parse_usize(value)?,
+            "r" => self.r = Some(parse_f64(value)?),
+            "r-frac" => self.r_frac = parse_f64(value)?,
+            "eta" => self.eta = Some(parse_f64(value)?),
+            "eps-li" => self.eps_li = parse_f64(value)?,
+            "seed" => self.seed = value.parse::<u64>().map_err(|e| format!("seed: {e}"))?,
+            "attack" => {
+                self.attack = AttackKind::parse(value)
+                    .ok_or_else(|| format!("unknown attack '{value}'"))?
+            }
+            "byz-placement" | "placement" => {
+                self.byz_placement = ByzPlacement::parse(value)
+                    .ok_or_else(|| format!("unknown placement '{value}'"))?
+            }
+            "aggregator" | "agg" => {
+                self.aggregator = Aggregator::parse(value)
+                    .ok_or_else(|| format!("unknown aggregator '{value}'"))?
+            }
+            "precision" => {
+                self.precision = match value {
+                    "f32" => Precision::F32,
+                    "f64" => Precision::F64,
+                    _ => return Err(format!("precision must be f32|f64, got '{value}'")),
+                }
+            }
+            "id-codec" => {
+                self.id_codec = match value {
+                    "varint" => IdCodec::Varint,
+                    "u16" | "fixed" => IdCodec::FixedU16,
+                    _ => return Err(format!("id-codec must be varint|u16, got '{value}'")),
+                }
+            }
+            "shuffle-slots" => self.shuffle_slots = parse_bool(value)?,
+            "echo" | "echo-enabled" => self.echo_enabled = parse_bool(value)?,
+            "topk" => {
+                self.topk = if value == "off" { None } else { Some(parse_usize(value)?) }
+            }
+            _ => return Err(format!("unknown config key '{key}'")),
+        }
+        Ok(())
+    }
+
+    /// Parse `--key value` / `--key=value` argument pairs, returning
+    /// positional leftovers.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<Vec<String>, String> {
+        let mut rest = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    self.set(k, v)?;
+                } else {
+                    let v = args
+                        .get(i + 1)
+                        .ok_or_else(|| format!("--{stripped} needs a value"))?;
+                    self.set(stripped, v)?;
+                    i += 1;
+                }
+            } else {
+                rest.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(rest)
+    }
+
+    /// Load `key = value` lines (TOML-lite: comments with `#`, blank lines
+    /// ignored, no sections).
+    pub fn apply_file(&mut self, contents: &str) -> Result<(), String> {
+        for (ln, line) in contents.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            self.set(k.trim(), v.trim().trim_matches('"'))?;
+        }
+        Ok(())
+    }
+
+    /// Sanity-check invariants (called by `Simulation::build`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("n must be positive".into());
+        }
+        if self.f >= self.n {
+            return Err(format!("need f < n (f={}, n={})", self.f, self.n));
+        }
+        if self.b > self.f {
+            return Err(format!("need b <= f (b={}, f={})", self.b, self.f));
+        }
+        if 2 * self.f >= self.n {
+            return Err(format!("need n > 2f (n={}, f={})", self.n, self.f));
+        }
+        if self.rounds == 0 {
+            return Err("rounds must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid_and_resolvable() {
+        let cfg = ExperimentConfig::default();
+        cfg.validate().unwrap();
+        let r = cfg.resolve_r();
+        assert!(r > 0.0);
+        let eta = cfg.resolve_eta();
+        assert!(eta > 0.0);
+    }
+
+    #[test]
+    fn cli_both_styles() {
+        let mut cfg = ExperimentConfig::default();
+        let args: Vec<String> =
+            ["--n", "50", "--f=4", "--sigma", "0.08", "--attack", "sign-flip", "train"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let rest = cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.n, 50);
+        assert_eq!(cfg.f, 4);
+        assert_eq!(cfg.sigma, 0.08);
+        assert_eq!(cfg.attack, AttackKind::SignFlip);
+        assert_eq!(rest, vec!["train".to_string()]);
+    }
+
+    #[test]
+    fn cli_rejects_unknown_and_missing() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.apply_args(&["--bogus".into(), "1".into()]).is_err());
+        assert!(cfg.apply_args(&["--n".into()]).is_err());
+    }
+
+    #[test]
+    fn file_loader_with_comments() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_file(
+            "# experiment\nn = 30\nf = 3   # three faults\n\naggregator = \"krum\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.n, 30);
+        assert_eq!(cfg.f, 3);
+        assert_eq!(cfg.aggregator, Aggregator::Krum);
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.f = cfg.n; // f >= n
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 10;
+        cfg.f = 5; // 2f >= n
+        cfg.b = 2;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.b = cfg.f + 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn placements_cover_modes() {
+        let mut rng = crate::rng::Rng::new(1);
+        assert_eq!(ByzPlacement::First.place(10, 3, &mut rng), vec![0, 1, 2]);
+        assert_eq!(ByzPlacement::Last.place(10, 3, &mut rng), vec![7, 8, 9]);
+        assert_eq!(ByzPlacement::Spread.place(10, 3, &mut rng), vec![0, 3, 6]);
+        let r = ByzPlacement::Random.place(10, 3, &mut rng);
+        assert_eq!(r.len(), 3);
+        assert!(r.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn resolved_r_respects_lemma4() {
+        let cfg = ExperimentConfig::default();
+        let bound =
+            crate::analysis::r_bound_lemma4(cfg.n, cfg.f, cfg.mu, cfg.l, cfg.sigma);
+        assert!(cfg.resolve_r() < bound);
+    }
+}

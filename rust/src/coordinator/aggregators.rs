@@ -1,0 +1,333 @@
+//! Aggregation rules: the paper's CGC filter (Eq. 8) plus the standard
+//! Byzantine-tolerant baselines it is evaluated against.
+//!
+//! **Scaling convention.** The paper's update is `w ← w − η Σ_j ĝ_j`
+//! (Eq. 2: a *sum*, not a mean). To let one step size work for every rule,
+//! every aggregator returns a sum-equivalent vector: `Mean` returns
+//! `Σ g_j` (= n·mean), `Krum` returns `n·(Krum winner)`, and so on. The
+//! comparison benches therefore sweep the same η for every rule.
+
+use crate::linalg::{self, norm};
+
+/// Selectable aggregation rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregator {
+    /// The CGC filter of Gupta & Vaidya (PODC 2020), Eq. (8): clip the f
+    /// largest norms to the (n−f)-th norm, then sum. Echo-CGC = echo
+    /// mechanism + this rule.
+    CgcSum,
+    /// Fault-intolerant baseline: plain sum (gradient descent).
+    Mean,
+    /// Krum (Blanchard et al., NeurIPS 2017): the gradient with minimal sum
+    /// of squared distances to its n−f−2 nearest neighbours, scaled by n.
+    Krum,
+    /// Coordinate-wise median × n.
+    CoordMedian,
+    /// Coordinate-wise trimmed mean (drop f smallest and f largest per
+    /// coordinate) × n.
+    TrimmedMean,
+}
+
+impl Aggregator {
+    pub fn name(self) -> &'static str {
+        match self {
+            Aggregator::CgcSum => "cgc",
+            Aggregator::Mean => "mean",
+            Aggregator::Krum => "krum",
+            Aggregator::CoordMedian => "median",
+            Aggregator::TrimmedMean => "trimmed-mean",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Aggregator> {
+        Some(match s {
+            "cgc" | "echo-cgc" => Aggregator::CgcSum,
+            "mean" | "sum" => Aggregator::Mean,
+            "krum" => Aggregator::Krum,
+            "median" | "coord-median" => Aggregator::CoordMedian,
+            "trimmed-mean" | "trimmed" => Aggregator::TrimmedMean,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [Aggregator; 5] {
+        [
+            Aggregator::CgcSum,
+            Aggregator::Mean,
+            Aggregator::Krum,
+            Aggregator::CoordMedian,
+            Aggregator::TrimmedMean,
+        ]
+    }
+}
+
+/// CGC filter + report of which slots were clipped (feeds the server's
+/// suspicion scores: honest workers are clipped only occasionally, a
+/// norm-inflating Byzantine every round).
+pub fn cgc_filter_report(grads: &[Vec<f64>], f: usize) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let n = grads.len();
+    assert!(f < n, "need f < n");
+    if f == 0 {
+        return (grads.to_vec(), Vec::new());
+    }
+    let norms: Vec<f64> = grads.iter().map(|g| norm(g)).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap().then(a.cmp(&b)));
+    let threshold = norms[order[n - f - 1]];
+    let mut out = grads.to_vec();
+    let mut clipped = Vec::new();
+    for &j in &order[n - f..] {
+        let nj = norms[j];
+        if nj > threshold {
+            let scale = if nj > 0.0 { threshold / nj } else { 0.0 };
+            linalg::scale_mut(scale, &mut out[j]);
+            clipped.push(j);
+        }
+    }
+    clipped.sort_unstable();
+    (out, clipped)
+}
+
+/// Apply the CGC filter (Eq. 8) and return the filtered gradients `ĝ_j`.
+///
+/// Sort the norms ascending; gradients ranked above `n−f` are scaled down
+/// to the `(n−f)`-th norm; the rest pass unchanged. Zero vectors (exposed
+/// Byzantine slots) sort first and pass unchanged, as in the paper.
+pub fn cgc_filter(grads: &[Vec<f64>], f: usize) -> Vec<Vec<f64>> {
+    cgc_filter_report(grads, f).0
+}
+
+fn krum_select(grads: &[Vec<f64>], f: usize) -> usize {
+    let n = grads.len();
+    // Krum needs n > 2f + 2; fall back to the full-neighbour score when the
+    // margin is too small (still well-defined).
+    let k = n.saturating_sub(f + 2).max(1);
+    let mut dist2 = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in i + 1..n {
+            let d2 = {
+                let mut s = 0.0;
+                for (a, b) in grads[i].iter().zip(grads[j].iter()) {
+                    let e = a - b;
+                    s += e * e;
+                }
+                s
+            };
+            dist2[i][j] = d2;
+            dist2[j][i] = d2;
+        }
+    }
+    let mut best = 0usize;
+    let mut best_score = f64::INFINITY;
+    for i in 0..n {
+        let mut ds: Vec<f64> = (0..n).filter(|&j| j != i).map(|j| dist2[i][j]).collect();
+        ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let score: f64 = ds.iter().take(k).sum();
+        if score < best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    best
+}
+
+fn coordinate_median(grads: &[Vec<f64>]) -> Vec<f64> {
+    let n = grads.len();
+    let d = grads[0].len();
+    let mut out = vec![0.0; d];
+    let mut col = vec![0.0; n];
+    for c in 0..d {
+        for (i, g) in grads.iter().enumerate() {
+            col[i] = g[c];
+        }
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out[c] = if n % 2 == 1 { col[n / 2] } else { 0.5 * (col[n / 2 - 1] + col[n / 2]) };
+    }
+    out
+}
+
+fn trimmed_mean(grads: &[Vec<f64>], f: usize) -> Vec<f64> {
+    let n = grads.len();
+    assert!(2 * f < n, "trimmed mean needs 2f < n");
+    let d = grads[0].len();
+    let keep = n - 2 * f;
+    let mut out = vec![0.0; d];
+    let mut col = vec![0.0; n];
+    for c in 0..d {
+        for (i, g) in grads.iter().enumerate() {
+            col[i] = g[c];
+        }
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out[c] = col[f..n - f].iter().sum::<f64>() / keep as f64;
+    }
+    out
+}
+
+/// Fused CGC-sum: computes `Σ ĝ_j` and the clipped set without
+/// materializing the filtered copies (saves two O(n·d) clones on the
+/// server's per-round hot path — see EXPERIMENTS.md §Perf).
+pub fn cgc_sum_fused(grads: &[Vec<f64>], f: usize) -> (Vec<f64>, Vec<usize>) {
+    let n = grads.len();
+    assert!(f < n, "need f < n");
+    let d = grads[0].len();
+    let norms: Vec<f64> = grads.iter().map(|g| norm(g)).collect();
+    let mut out = vec![0.0; d];
+    let mut clipped = Vec::new();
+    if f == 0 {
+        for g in grads {
+            linalg::axpy(1.0, g, &mut out);
+        }
+        return (out, clipped);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap().then(a.cmp(&b)));
+    let threshold = norms[order[n - f - 1]];
+    for (j, g) in grads.iter().enumerate() {
+        let nj = norms[j];
+        let scale = if nj > threshold {
+            clipped.push(j);
+            if nj > 0.0 { threshold / nj } else { 0.0 }
+        } else {
+            1.0
+        };
+        linalg::axpy(scale, g, &mut out);
+    }
+    clipped.sort_unstable();
+    (out, clipped)
+}
+
+/// Aggregate reconstructed gradients into the update direction `g^t`
+/// (sum-equivalent scaling — see the module docs).
+pub fn aggregate(agg: Aggregator, grads: &[Vec<f64>], f: usize) -> Vec<f64> {
+    let n = grads.len();
+    assert!(n > 0);
+    match agg {
+        Aggregator::CgcSum => cgc_sum_fused(grads, f).0,
+        Aggregator::Mean => {
+            let mut out = vec![0.0; grads[0].len()];
+            for g in grads {
+                linalg::axpy(1.0, g, &mut out);
+            }
+            out
+        }
+        Aggregator::Krum => linalg::scale(n as f64, &grads[krum_select(grads, f)]),
+        Aggregator::CoordMedian => linalg::scale(n as f64, &coordinate_median(grads)),
+        Aggregator::TrimmedMean => linalg::scale(n as f64, &trimmed_mean(grads, f)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[f64]) -> Vec<f64> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn cgc_clips_only_top_f_norms() {
+        let grads = vec![v(&[1.0, 0.0]), v(&[0.0, 2.0]), v(&[0.0, 10.0]), v(&[100.0, 0.0])];
+        let out = cgc_filter(&grads, 2);
+        // Sorted norms: 1, 2, 10, 100; threshold = 2 (index n-f-1 = 1).
+        assert_eq!(out[0], v(&[1.0, 0.0]));
+        assert_eq!(out[1], v(&[0.0, 2.0]));
+        assert!((norm(&out[2]) - 2.0).abs() < 1e-12);
+        assert!((norm(&out[3]) - 2.0).abs() < 1e-12);
+        // Directions preserved.
+        assert!(out[2][1] > 0.0 && out[2][0] == 0.0);
+        assert!(out[3][0] > 0.0 && out[3][1] == 0.0);
+    }
+
+    #[test]
+    fn cgc_f_zero_is_identity() {
+        let grads = vec![v(&[3.0]), v(&[-5.0])];
+        assert_eq!(cgc_filter(&grads, 0), grads);
+    }
+
+    #[test]
+    fn cgc_norm_invariant_all_le_threshold() {
+        // Post-filter, every norm ≤ the (n−f)-th pre-filter norm.
+        let mut rng = crate::rng::Rng::new(1);
+        for _ in 0..20 {
+            let n = 3 + rng.range(0, 8);
+            let f = rng.range(0, (n - 1) / 2 + 1);
+            let grads: Vec<Vec<f64>> =
+                (0..n).map(|_| crate::linalg::scale(rng.uniform() * 10.0, &rng.unit_vector(5))).collect();
+            let mut norms: Vec<f64> = grads.iter().map(|g| norm(g)).collect();
+            norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let thr = norms[n - f - 1];
+            for g in cgc_filter(&grads, f) {
+                assert!(norm(&g) <= thr * (1.0 + 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn cgc_zero_vectors_pass_through() {
+        let grads = vec![v(&[0.0, 0.0]), v(&[1.0, 0.0]), v(&[0.0, 3.0])];
+        let out = cgc_filter(&grads, 1);
+        assert_eq!(out[0], v(&[0.0, 0.0]));
+        assert_eq!(out[1], v(&[1.0, 0.0]));
+        assert!((norm(&out[2]) - 1.0).abs() < 1e-12); // clipped to threshold 1
+    }
+
+    #[test]
+    fn mean_is_plain_sum() {
+        let grads = vec![v(&[1.0, 2.0]), v(&[3.0, -2.0])];
+        assert_eq!(aggregate(Aggregator::Mean, &grads, 0), v(&[4.0, 0.0]));
+    }
+
+    #[test]
+    fn krum_picks_the_cluster_not_the_outlier() {
+        // 4 similar gradients + 1 far outlier; Krum must pick a cluster
+        // member.
+        let grads = vec![
+            v(&[1.0, 1.0]),
+            v(&[1.1, 0.9]),
+            v(&[0.9, 1.1]),
+            v(&[1.0, 1.05]),
+            v(&[100.0, -100.0]),
+        ];
+        let out = aggregate(Aggregator::Krum, &grads, 1);
+        // Scaled by n = 5: each coordinate near 5.
+        assert!(out[0] > 4.0 && out[0] < 6.0, "{out:?}");
+        assert!(out[1] > 4.0 && out[1] < 6.0, "{out:?}");
+    }
+
+    #[test]
+    fn median_resists_extreme_coordinates() {
+        let grads = vec![v(&[1.0]), v(&[2.0]), v(&[1e9])];
+        let out = aggregate(Aggregator::CoordMedian, &grads, 1);
+        assert_eq!(out, v(&[6.0])); // 3 × median(1, 2, 1e9) = 3·2
+    }
+
+    #[test]
+    fn trimmed_mean_drops_tails() {
+        let grads = vec![v(&[-1e9]), v(&[1.0]), v(&[2.0]), v(&[3.0]), v(&[1e9])];
+        let out = aggregate(Aggregator::TrimmedMean, &grads, 1);
+        assert_eq!(out, v(&[10.0])); // 5 × mean(1,2,3) = 5·2
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in Aggregator::all() {
+            assert_eq!(Aggregator::parse(a.name()), Some(a));
+        }
+        assert_eq!(Aggregator::parse("nope"), None);
+    }
+
+    #[test]
+    fn cgc_sum_bounds_byzantine_influence() {
+        // With the filter, a huge Byzantine gradient contributes at most the
+        // (n−f)-th honest norm.
+        let honest = vec![v(&[1.0, 0.0]), v(&[0.9, 0.1]), v(&[1.1, -0.1])];
+        let mut grads = honest.clone();
+        grads.push(v(&[-1e12, 1e12]));
+        let out = aggregate(Aggregator::CgcSum, &grads, 1);
+        let honest_sum: Vec<f64> =
+            honest.iter().fold(vec![0.0, 0.0], |acc, g| crate::linalg::add(&acc, g));
+        let dev = crate::linalg::dist(&out, &honest_sum);
+        // Deviation bounded by the clip threshold (max honest norm ≈ 1.1).
+        assert!(dev <= 1.2, "deviation {dev}");
+    }
+}

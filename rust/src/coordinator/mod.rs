@@ -1,0 +1,9 @@
+//! The parameter server (Algorithm 1, server side) and the aggregation
+//! rules — the paper's CGC filter plus the standard Byzantine-tolerant
+//! baselines it is compared against.
+
+pub mod aggregators;
+pub mod server;
+
+pub use aggregators::{aggregate, cgc_filter, cgc_filter_report, cgc_sum_fused, Aggregator};
+pub use server::{ParameterServer, SlotOutcome};

@@ -1,0 +1,439 @@
+//! [`ParameterServer`] — the fault-free central server of the paper.
+//!
+//! Per round it maintains the vector `G` of reconstructed gradients
+//! (`g̃_j`), initialised to `⊥`. On a raw frame it stores the vector; on an
+//! echo `(k, x, I)` it verifies that every referenced slot has a stored
+//! gradient — the reliable-broadcast property makes a dangling reference
+//! *proof* of Byzantine behaviour (§3, server steps) — and otherwise
+//! reconstructs `g̃_j = k·A_I·x`. Malformed echoes (arity mismatch,
+//! non-finite values, self/future references) are Byzantine by the same
+//! argument. Exposed workers contribute `0⃗`.
+
+use super::aggregators::{aggregate, Aggregator};
+use crate::linalg;
+use crate::wire::Payload;
+use std::collections::BTreeSet;
+
+/// Reference-based fused CGC sum (mirrors `aggregators::cgc_sum_fused`
+/// without requiring owned vectors).
+fn cgc_sum_fused_refs(grads: &[&Vec<f64>], f: usize, d: usize) -> (Vec<f64>, Vec<usize>) {
+    let n = grads.len();
+    let norms: Vec<f64> = grads.iter().map(|g| crate::linalg::norm(g)).collect();
+    let mut out = vec![0.0; d];
+    let mut clipped = Vec::new();
+    if f == 0 {
+        for g in grads {
+            crate::linalg::axpy(1.0, g, &mut out);
+        }
+        return (out, clipped);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap().then(a.cmp(&b)));
+    let threshold = norms[order[n - f - 1]];
+    for (j, g) in grads.iter().enumerate() {
+        let nj = norms[j];
+        let scale = if nj > threshold {
+            clipped.push(j);
+            if nj > 0.0 { threshold / nj } else { 0.0 }
+        } else {
+            1.0
+        };
+        crate::linalg::axpy(scale, g, &mut out);
+    }
+    clipped.sort_unstable();
+    (out, clipped)
+}
+
+/// What the server concluded about one slot (diagnostics / tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotOutcome {
+    /// Raw gradient stored as-is.
+    Raw,
+    /// Echo verified and reconstructed.
+    EchoReconstructed,
+    /// Echo exposed the sender as Byzantine (stored 0⃗).
+    EchoExposed,
+    /// No frame in the slot (synchrony ⇒ sender is faulty; stored 0⃗).
+    Silent,
+}
+
+/// The central parameter server.
+pub struct ParameterServer {
+    n: usize,
+    f: usize,
+    d: usize,
+    agg: Aggregator,
+    /// `G` — reconstructed gradients of the current round (`None` = ⊥).
+    g: Vec<Option<Vec<f64>>>,
+    outcomes: Vec<Option<SlotOutcome>>,
+    /// Workers proven Byzantine in any round so far.
+    exposed: BTreeSet<usize>,
+    /// Zeno-style suspicion: how many rounds each worker's gradient was
+    /// clipped by the CGC filter. Honest workers get clipped only when
+    /// their stochastic norm lands in the top f; a norm-inflating
+    /// Byzantine is clipped every round, so the counter separates them
+    /// sharply over time (diagnostic only — the algorithm's guarantees do
+    /// not depend on it).
+    clip_counts: Vec<u64>,
+    rounds_aggregated: u64,
+}
+
+impl ParameterServer {
+    pub fn new(n: usize, f: usize, d: usize, agg: Aggregator) -> Self {
+        assert!(n >= 1 && f < n, "need f < n");
+        Self {
+            n,
+            f,
+            d,
+            agg,
+            g: vec![None; n],
+            outcomes: vec![None; n],
+            exposed: BTreeSet::new(),
+            clip_counts: vec![0; n],
+            rounds_aggregated: 0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn f(&self) -> usize {
+        self.f
+    }
+
+    pub fn aggregator(&self) -> Aggregator {
+        self.agg
+    }
+
+    /// Reset `G` to all-⊥ (start of the communication phase).
+    pub fn begin_round(&mut self) {
+        for gi in self.g.iter_mut() {
+            *gi = None;
+        }
+        for o in self.outcomes.iter_mut() {
+            *o = None;
+        }
+    }
+
+    fn expose(&mut self, j: usize, outcome: SlotOutcome) {
+        self.exposed.insert(j);
+        self.g[j] = Some(vec![0.0; self.d]);
+        self.outcomes[j] = Some(outcome);
+    }
+
+    /// Process the frame transmitted in worker `j`'s slot.
+    pub fn on_frame(&mut self, j: usize, payload: &Payload) -> SlotOutcome {
+        assert!(j < self.n);
+        assert!(self.g[j].is_none(), "slot {j} delivered twice");
+        match payload {
+            Payload::Raw(grad) => {
+                if grad.len() != self.d || grad.iter().any(|v| !v.is_finite()) {
+                    // A malformed "gradient" can only come from a Byzantine
+                    // worker; it is treated like an extreme gradient and
+                    // zeroed (the CGC filter would clip it anyway, but a
+                    // wrong-dimension vector cannot even be summed).
+                    self.expose(j, SlotOutcome::EchoExposed);
+                    return SlotOutcome::EchoExposed;
+                }
+                self.g[j] = Some(grad.clone());
+                self.outcomes[j] = Some(SlotOutcome::Raw);
+                SlotOutcome::Raw
+            }
+            Payload::Echo { k, coeffs, ids } => {
+                let valid = self.validate_echo(j, *k, coeffs, ids);
+                if !valid {
+                    self.expose(j, SlotOutcome::EchoExposed);
+                    return SlotOutcome::EchoExposed;
+                }
+                // g̃_j = k · A_I · x over the *stored* gradients (which for
+                // echo senders are themselves reconstructions).
+                let cols: Vec<&Vec<f64>> =
+                    ids.iter().map(|&i| self.g[i].as_ref().unwrap()).collect();
+                let mut rec = vec![0.0; self.d];
+                for (c, &xi) in cols.iter().zip(coeffs.iter()) {
+                    linalg::axpy(xi, c, &mut rec);
+                }
+                linalg::scale_mut(*k, &mut rec);
+                if rec.iter().any(|v| !v.is_finite()) {
+                    self.expose(j, SlotOutcome::EchoExposed);
+                    return SlotOutcome::EchoExposed;
+                }
+                self.g[j] = Some(rec);
+                self.outcomes[j] = Some(SlotOutcome::EchoReconstructed);
+                SlotOutcome::EchoReconstructed
+            }
+            Payload::SparseRaw { dim, idx, vals } => {
+                // Top-k baseline frame: densify and treat as a raw gradient.
+                if *dim != self.d
+                    || idx.len() != vals.len()
+                    || vals.iter().any(|v| !v.is_finite())
+                    || idx.iter().any(|&i| i as usize >= self.d)
+                {
+                    self.expose(j, SlotOutcome::EchoExposed);
+                    return SlotOutcome::EchoExposed;
+                }
+                self.g[j] = Some(crate::wire::densify(self.d, idx, vals));
+                self.outcomes[j] = Some(SlotOutcome::Raw);
+                SlotOutcome::Raw
+            }
+            Payload::Param(_) => {
+                // Only the server transmits parameters; a worker sending one
+                // is Byzantine.
+                self.expose(j, SlotOutcome::EchoExposed);
+                SlotOutcome::EchoExposed
+            }
+        }
+    }
+
+    /// A silent slot: the synchronous model lets the server conclude the
+    /// worker is faulty (§2.1).
+    pub fn on_silence(&mut self, j: usize) {
+        assert!(j < self.n);
+        self.expose(j, SlotOutcome::Silent);
+    }
+
+    fn validate_echo(&self, j: usize, k: f64, coeffs: &[f64], ids: &[usize]) -> bool {
+        if !k.is_finite() || k < 0.0 {
+            return false;
+        }
+        if coeffs.is_empty() || coeffs.len() != ids.len() {
+            return false;
+        }
+        if coeffs.iter().any(|c| !c.is_finite()) {
+            return false;
+        }
+        let mut prev: Option<usize> = None;
+        for &i in ids {
+            // The echo may only reference workers whose gradient the server
+            // has stored (G[i] ≠ ⊥). Self-references, future slots and
+            // out-of-range ids all fail this test. Duplicate / unsorted ids
+            // violate the message format (I is an ascending set, line 20).
+            if i >= self.n || i == j || self.g[i].is_none() {
+                return false;
+            }
+            if let Some(p) = prev {
+                if i <= p {
+                    return false;
+                }
+            }
+            prev = Some(i);
+        }
+        true
+    }
+
+    /// Gradients reconstructed this round (⊥ slots panic — call only after
+    /// all slots were processed).
+    pub fn gradients(&self) -> Vec<Vec<f64>> {
+        self.g
+            .iter()
+            .enumerate()
+            .map(|(j, g)| g.clone().unwrap_or_else(|| panic!("slot {j} still ⊥")))
+            .collect()
+    }
+
+    /// The stored gradient of one slot, if present (test access).
+    pub fn stored(&self, j: usize) -> Option<&Vec<f64>> {
+        self.g[j].as_ref()
+    }
+
+    pub fn outcome(&self, j: usize) -> Option<SlotOutcome> {
+        self.outcomes[j]
+    }
+
+    /// Workers proven Byzantine so far (cumulative across rounds).
+    pub fn exposed(&self) -> &BTreeSet<usize> {
+        &self.exposed
+    }
+
+    /// Aggregation phase: apply the configured rule and return `g^t`.
+    pub fn aggregate(&self) -> Vec<f64> {
+        let grads = self.gradients();
+        aggregate(self.agg, &grads, self.f)
+    }
+
+    /// Aggregate and update the suspicion counters (the round engine's
+    /// entry point; [`Self::aggregate`] is the pure variant).
+    pub fn aggregate_tracked(&mut self) -> Vec<f64> {
+        self.rounds_aggregated += 1;
+        if self.agg == Aggregator::CgcSum {
+            // Fused path: no O(n·d) clone of G, no filtered copies.
+            let (out, clipped) = {
+                let grads: Vec<&Vec<f64>> = self
+                    .g
+                    .iter()
+                    .enumerate()
+                    .map(|(j, g)| g.as_ref().unwrap_or_else(|| panic!("slot {j} still ⊥")))
+                    .collect();
+                cgc_sum_fused_refs(&grads, self.f, self.d)
+            };
+            for j in clipped {
+                self.clip_counts[j] += 1;
+            }
+            out
+        } else {
+            let grads = self.gradients();
+            aggregate(self.agg, &grads, self.f)
+        }
+    }
+
+    /// Suspicion score per worker: fraction of aggregated rounds in which
+    /// it was clipped (1.0 for exposed workers).
+    pub fn suspicion(&self) -> Vec<f64> {
+        (0..self.n)
+            .map(|j| {
+                if self.exposed.contains(&j) {
+                    1.0
+                } else if self.rounds_aggregated == 0 {
+                    0.0
+                } else {
+                    self.clip_counts[j] as f64 / self.rounds_aggregated as f64
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn server(n: usize, f: usize, d: usize) -> ParameterServer {
+        let mut s = ParameterServer::new(n, f, d, Aggregator::CgcSum);
+        s.begin_round();
+        s
+    }
+
+    #[test]
+    fn raw_frames_stored_verbatim() {
+        let mut s = server(3, 0, 2);
+        assert_eq!(s.on_frame(0, &Payload::Raw(vec![1.0, 2.0])), SlotOutcome::Raw);
+        assert_eq!(s.stored(0), Some(&vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn echo_reconstructs_k_aix() {
+        let mut s = server(3, 0, 3);
+        s.on_frame(0, &Payload::Raw(vec![1.0, 0.0, 0.0]));
+        s.on_frame(1, &Payload::Raw(vec![0.0, 1.0, 0.0]));
+        let out = s.on_frame(
+            2,
+            &Payload::Echo { k: 2.0, coeffs: vec![3.0, 4.0], ids: vec![0, 1] },
+        );
+        assert_eq!(out, SlotOutcome::EchoReconstructed);
+        assert_eq!(s.stored(2), Some(&vec![6.0, 8.0, 0.0]));
+    }
+
+    #[test]
+    fn dangling_reference_exposes_byzantine() {
+        let mut s = server(4, 1, 2);
+        s.on_frame(0, &Payload::Raw(vec![1.0, 0.0]));
+        // Worker 1 references worker 2, whose slot has not happened: only a
+        // liar can do that (reliable broadcast ⇒ it knows slot order).
+        let out =
+            s.on_frame(1, &Payload::Echo { k: 1.0, coeffs: vec![1.0], ids: vec![2] });
+        assert_eq!(out, SlotOutcome::EchoExposed);
+        assert!(s.exposed().contains(&1));
+        assert_eq!(s.stored(1), Some(&vec![0.0, 0.0]));
+    }
+
+    #[test]
+    fn self_reference_and_duplicates_exposed() {
+        let mut s = server(4, 1, 2);
+        s.on_frame(0, &Payload::Raw(vec![1.0, 0.0]));
+        let self_ref = Payload::Echo { k: 1.0, coeffs: vec![1.0], ids: vec![1] };
+        assert_eq!(s.on_frame(1, &self_ref), SlotOutcome::EchoExposed);
+        let dup = Payload::Echo { k: 1.0, coeffs: vec![1.0, 1.0], ids: vec![0, 0] };
+        assert_eq!(s.on_frame(2, &dup), SlotOutcome::EchoExposed);
+    }
+
+    #[test]
+    fn malformed_echoes_exposed() {
+        let mut s = server(5, 1, 2);
+        s.on_frame(0, &Payload::Raw(vec![1.0, 0.0]));
+        let bad_k = Payload::Echo { k: f64::NAN, coeffs: vec![1.0], ids: vec![0] };
+        assert_eq!(s.on_frame(1, &bad_k), SlotOutcome::EchoExposed);
+        let neg_k = Payload::Echo { k: -2.0, coeffs: vec![1.0], ids: vec![0] };
+        assert_eq!(s.on_frame(2, &neg_k), SlotOutcome::EchoExposed);
+        let arity = Payload::Echo { k: 1.0, coeffs: vec![1.0, 2.0], ids: vec![0] };
+        assert_eq!(s.on_frame(3, &arity), SlotOutcome::EchoExposed);
+        let empty = Payload::Echo { k: 1.0, coeffs: vec![], ids: vec![] };
+        assert_eq!(s.on_frame(4, &empty), SlotOutcome::EchoExposed);
+    }
+
+    #[test]
+    fn silent_slot_is_faulty() {
+        let mut s = server(2, 1, 2);
+        s.on_silence(0);
+        assert!(s.exposed().contains(&0));
+        assert_eq!(s.outcome(0), Some(SlotOutcome::Silent));
+        assert_eq!(s.stored(0), Some(&vec![0.0, 0.0]));
+    }
+
+    #[test]
+    fn wrong_dim_or_nonfinite_raw_exposed() {
+        let mut s = server(3, 1, 3);
+        assert_eq!(s.on_frame(0, &Payload::Raw(vec![1.0])), SlotOutcome::EchoExposed);
+        assert_eq!(
+            s.on_frame(1, &Payload::Raw(vec![f64::NAN, 0.0, 0.0])),
+            SlotOutcome::EchoExposed
+        );
+    }
+
+    #[test]
+    fn echo_chain_through_prior_echo() {
+        // Worker 2 echoes {0}; worker 3 echoes {0, 2} — the server must use
+        // the *reconstructed* g̃_2 as a column.
+        let mut s = server(4, 0, 2);
+        s.on_frame(0, &Payload::Raw(vec![2.0, 0.0]));
+        s.on_frame(1, &Payload::Raw(vec![0.0, 1.0]));
+        s.on_frame(2, &Payload::Echo { k: 1.0, coeffs: vec![0.5], ids: vec![0] });
+        assert_eq!(s.stored(2), Some(&vec![1.0, 0.0]));
+        s.on_frame(
+            3,
+            &Payload::Echo { k: 2.0, coeffs: vec![1.0, 1.0], ids: vec![1, 2] },
+        );
+        assert_eq!(s.stored(3), Some(&vec![2.0, 2.0]));
+    }
+
+    #[test]
+    fn round_trip_matches_worker_reconstruction() {
+        // End-to-end invariant: for an honest worker the server's g̃_j is
+        // the worker's echo gradient rescaled to ‖g_j‖.
+        let mut rng = Rng::new(3);
+        let d = 25;
+        let mut s = server(3, 0, d);
+        let c0 = rng.normal_vec(d);
+        let c1 = rng.normal_vec(d);
+        s.on_frame(0, &Payload::Raw(c0.clone()));
+        s.on_frame(1, &Payload::Raw(c1.clone()));
+
+        let mut w = crate::worker::EchoWorker::new(2, d, 0.9, 1e-9);
+        // Gradient near the span ⇒ echo.
+        let mut g = crate::linalg::add(&c0, &c1);
+        for gi in g.iter_mut() {
+            *gi += 0.01 * rng.normal();
+        }
+        w.begin_round(g.clone());
+        w.overhear(0, &Payload::Raw(c0.clone()));
+        w.overhear(1, &Payload::Raw(c1.clone()));
+        let frame = w.transmit();
+        assert!(frame.is_echo(), "expected echo");
+        s.on_frame(2, &frame);
+        let rec = s.stored(2).unwrap();
+        // ‖g̃‖ = ‖g‖ (paper: a_j scaling preserves the norm).
+        let gn = crate::linalg::norm(&g);
+        assert!((crate::linalg::norm(rec) - gn).abs() < 1e-6 * gn);
+        // And the deviation is bounded by roughly r within the span.
+        assert!(crate::linalg::dist(rec, &g) <= 2.0 * 0.9 * gn);
+    }
+
+    #[test]
+    #[should_panic(expected = "delivered twice")]
+    fn double_delivery_panics() {
+        let mut s = server(2, 0, 1);
+        s.on_frame(0, &Payload::Raw(vec![1.0]));
+        s.on_frame(0, &Payload::Raw(vec![1.0]));
+    }
+}

@@ -1,0 +1,290 @@
+//! Synthetic dataset generators.
+//!
+//! The paper's experiments (and its motivating IIoT scenarios) use ordinary
+//! supervised-learning data; since the reproduction is simulator-based we
+//! generate datasets with controllable noise, which in turn controls the
+//! relative gradient deviation σ (Assumption 5) — the key knob of the
+//! communication analysis (§4.3: "our algorithm performs better when the
+//! variance of the data is relatively small").
+
+use crate::rng::Rng;
+
+/// A dense regression / classification design matrix with targets.
+#[derive(Clone, Debug)]
+pub struct RegressionData {
+    /// Row-major `m × d` design matrix.
+    x: Vec<f64>,
+    /// Targets (regression: real values; classification: 0/1 or class id).
+    y: Vec<f64>,
+    m: usize,
+    d: usize,
+    /// The generating parameter, when the dataset is synthetic.
+    pub w_true: Option<Vec<f64>>,
+}
+
+impl RegressionData {
+    pub fn new(x: Vec<f64>, y: Vec<f64>, m: usize, d: usize) -> Self {
+        assert_eq!(x.len(), m * d);
+        assert_eq!(y.len(), m);
+        Self { x, y, m, d, w_true: None }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The `i`-th row and its target.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[f64], f64) {
+        (&self.x[i * self.d..(i + 1) * self.d], self.y[i])
+    }
+
+    pub fn x_flat(&self) -> &[f64] {
+        &self.x
+    }
+
+    pub fn y(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// `Xᵀ(Xv)` without materializing `XᵀX` (O(m·d) per call).
+    pub fn gram_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.d);
+        let mut out = vec![0.0; self.d];
+        for i in 0..self.m {
+            let (xi, _) = self.row(i);
+            let p = crate::linalg::dot(xi, v);
+            crate::linalg::axpy(p, xi, &mut out);
+        }
+        out
+    }
+
+    /// Dense normal matrix `XᵀX/m + λI` (d×d row-major) — used to solve for
+    /// the exact ridge optimum when `d` is moderate.
+    pub fn normal_matrix(&self, lambda: f64) -> Vec<f64> {
+        let d = self.d;
+        let mut n = vec![0.0; d * d];
+        for i in 0..self.m {
+            let (xi, _) = self.row(i);
+            for a in 0..d {
+                let xa = xi[a];
+                if xa == 0.0 {
+                    continue;
+                }
+                for b in a..d {
+                    n[a * d + b] += xa * xi[b];
+                }
+            }
+        }
+        let minv = 1.0 / self.m as f64;
+        for a in 0..d {
+            for b in a..d {
+                let v = n[a * d + b] * minv;
+                n[a * d + b] = v;
+                n[b * d + a] = v;
+            }
+            n[a * d + a] += lambda;
+        }
+        n
+    }
+
+    /// `Xᵀy/m`.
+    pub fn xty_over_m(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        for i in 0..self.m {
+            let (xi, yi) = self.row(i);
+            crate::linalg::axpy(yi, xi, &mut out);
+        }
+        let minv = 1.0 / self.m as f64;
+        crate::linalg::scale_mut(minv, &mut out);
+        out
+    }
+}
+
+/// Linear-regression dataset: `y = x·w_true + ε`, `x ~ N(0, I_d)`,
+/// `ε ~ N(0, noise²)`. Smaller `noise` ⇒ smaller σ ⇒ more echoes.
+pub fn make_linreg(d: usize, m: usize, noise: f64, rng: &mut Rng) -> RegressionData {
+    let w_true = rng.normal_vec(d);
+    let mut x = Vec::with_capacity(m * d);
+    let mut y = Vec::with_capacity(m);
+    for _ in 0..m {
+        let xi = rng.normal_vec(d);
+        let t = crate::linalg::dot(&xi, &w_true) + noise * rng.normal();
+        x.extend_from_slice(&xi);
+        y.push(t);
+    }
+    let mut data = RegressionData::new(x, y, m, d);
+    data.w_true = Some(w_true);
+    data
+}
+
+/// Logistic-regression dataset: labels `y ∈ {0,1}` from a Bernoulli with
+/// `p = sigmoid(x·w_true / temp)`; higher `temp` ⇒ noisier labels ⇒ larger σ.
+pub fn make_logreg(d: usize, m: usize, temp: f64, rng: &mut Rng) -> RegressionData {
+    assert!(temp > 0.0);
+    let w_true = rng.normal_vec(d);
+    let mut x = Vec::with_capacity(m * d);
+    let mut y = Vec::with_capacity(m);
+    for _ in 0..m {
+        let xi = rng.normal_vec(d);
+        let logit = crate::linalg::dot(&xi, &w_true) / temp;
+        let p = 1.0 / (1.0 + (-logit).exp());
+        y.push(if rng.bool(p) { 1.0 } else { 0.0 });
+        x.extend_from_slice(&xi);
+    }
+    let mut data = RegressionData::new(x, y, m, d);
+    data.w_true = Some(w_true);
+    data
+}
+
+/// Gaussian-blob multi-class dataset for softmax regression: `c` classes
+/// with unit-covariance clusters at distance `sep` from the origin.
+/// `y[i]` holds the class index as f64.
+pub fn make_blobs(d: usize, m: usize, c: usize, sep: f64, rng: &mut Rng) -> RegressionData {
+    assert!(c >= 2);
+    let centers: Vec<Vec<f64>> =
+        (0..c).map(|_| crate::linalg::scale(sep, &rng.unit_vector(d))).collect();
+    let mut x = Vec::with_capacity(m * d);
+    let mut y = Vec::with_capacity(m);
+    for i in 0..m {
+        let k = i % c; // balanced classes
+        let mut xi = rng.normal_vec(d);
+        crate::linalg::axpy(1.0, &centers[k], &mut xi);
+        x.extend_from_slice(&xi);
+        y.push(k as f64);
+    }
+    RegressionData::new(x, y, m, d)
+}
+
+/// A tiny synthetic character corpus for the end-to-end LM driver: a
+/// first-order Markov chain over a small alphabet with deterministic
+/// structure (so a few hundred steps of training visibly reduce loss).
+pub fn make_char_corpus(len: usize, vocab: usize, rng: &mut Rng) -> Vec<u8> {
+    assert!(vocab >= 2 && vocab <= 256);
+    // Build a sparse-ish transition table: each symbol prefers 2 successors.
+    let prefs: Vec<[u8; 2]> = (0..vocab)
+        .map(|_| [rng.below(vocab as u64) as u8, rng.below(vocab as u64) as u8])
+        .collect();
+    let mut out = Vec::with_capacity(len);
+    let mut s = 0u8;
+    for _ in 0..len {
+        out.push(s);
+        s = if rng.bool(0.9) {
+            let p = &prefs[s as usize];
+            if rng.bool(0.7) { p[0] } else { p[1] }
+        } else {
+            rng.below(vocab as u64) as u8
+        };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linreg_shapes_and_recovery() {
+        let mut rng = Rng::new(1);
+        let data = make_linreg(8, 500, 0.01, &mut rng);
+        assert_eq!(data.m(), 500);
+        assert_eq!(data.d(), 8);
+        // With tiny noise, w_true nearly solves the normal equations.
+        let w = data.w_true.clone().unwrap();
+        let mut resid = 0.0;
+        for i in 0..data.m() {
+            let (xi, yi) = data.row(i);
+            let r = crate::linalg::dot(xi, &w) - yi;
+            resid += r * r;
+        }
+        assert!((resid / data.m() as f64).sqrt() < 0.02);
+    }
+
+    #[test]
+    fn gram_matvec_matches_dense() {
+        let mut rng = Rng::new(2);
+        let data = make_linreg(5, 40, 0.1, &mut rng);
+        let v = rng.normal_vec(5);
+        let fast = data.gram_matvec(&v);
+        // Dense: XᵀX v
+        let n = data.normal_matrix(0.0);
+        let dense: Vec<f64> = (0..5)
+            .map(|a| (0..5).map(|b| n[a * 5 + b] * v[b]).sum::<f64>() * data.m() as f64)
+            .collect();
+        for (f, s) in fast.iter().zip(dense.iter()) {
+            assert!((f - s).abs() < 1e-8 * s.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn normal_matrix_is_symmetric_with_ridge_diag() {
+        let mut rng = Rng::new(3);
+        let data = make_linreg(6, 30, 0.1, &mut rng);
+        let n0 = data.normal_matrix(0.0);
+        let n1 = data.normal_matrix(0.5);
+        for a in 0..6 {
+            for b in 0..6 {
+                assert!((n0[a * 6 + b] - n0[b * 6 + a]).abs() < 1e-12);
+                let expect = n0[a * 6 + b] + if a == b { 0.5 } else { 0.0 };
+                assert!((n1[a * 6 + b] - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn logreg_labels_binary_and_correlated() {
+        let mut rng = Rng::new(4);
+        let data = make_logreg(6, 800, 0.5, &mut rng);
+        let w = data.w_true.clone().unwrap();
+        let mut correct = 0;
+        for i in 0..data.m() {
+            let (xi, yi) = data.row(i);
+            assert!(yi == 0.0 || yi == 1.0);
+            let pred = if crate::linalg::dot(xi, &w) > 0.0 { 1.0 } else { 0.0 };
+            if pred == yi {
+                correct += 1;
+            }
+        }
+        // Labels must follow the generating hyperplane well above chance.
+        assert!(correct as f64 / data.m() as f64 > 0.8);
+    }
+
+    #[test]
+    fn blobs_balanced_classes() {
+        let mut rng = Rng::new(5);
+        let c = 4;
+        let data = make_blobs(3, 100, c, 4.0, &mut rng);
+        let mut counts = vec![0usize; c];
+        for i in 0..data.m() {
+            counts[data.y()[i] as usize] += 1;
+        }
+        assert_eq!(counts, vec![25; 4]);
+    }
+
+    #[test]
+    fn char_corpus_in_vocab_and_structured() {
+        let mut rng = Rng::new(6);
+        let v = 16;
+        let corpus = make_char_corpus(5000, v, &mut rng);
+        assert!(corpus.iter().all(|&c| (c as usize) < v));
+        // Structured: bigram entropy must be well below uniform.
+        let mut counts = vec![0f64; v * v];
+        for w in corpus.windows(2) {
+            counts[w[0] as usize * v + w[1] as usize] += 1.0;
+        }
+        let total: f64 = counts.iter().sum();
+        let h: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0.0)
+            .map(|&c| {
+                let p = c / total;
+                -p * p.log2()
+            })
+            .sum();
+        assert!(h < 0.75 * (v as f64 * v as f64).log2(), "bigram entropy {h}");
+    }
+}

@@ -1,0 +1,69 @@
+//! Gradient backends — how a worker obtains its local stochastic gradient.
+//!
+//! * [`NativeBackend`] evaluates a pure-rust [`crate::model::CostModel`]
+//!   (fast, exact, used by most simulations and all property tests);
+//! * [`XlaBackend`] (in [`crate::runtime`]) runs the JAX/Pallas gradient
+//!   computation AOT-lowered to an HLO artifact via PJRT — the
+//!   production-shaped path. The two are equivalence-tested in
+//!   `rust/tests/backend_equivalence.rs`.
+
+use crate::model::CostModel;
+use crate::rng::Rng;
+use std::sync::Arc;
+
+/// A per-worker gradient oracle.
+///
+/// Deliberately **not** `Send`: the XLA/PJRT handles wrap thread-local
+/// pointers (`Rc` internally), and the simulation round loop is
+/// single-threaded by design (the TDMA slot sequence is inherently serial).
+pub trait GradientBackend {
+    /// Parameter dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// Stochastic gradient at `w` over a fresh random batch
+    /// (must be unbiased — Assumption 4).
+    fn gradient(&mut self, w: &[f64], rng: &mut Rng) -> Vec<f64>;
+}
+
+/// Pure-rust backend over a shared cost model.
+pub struct NativeBackend {
+    model: Arc<dyn CostModel>,
+}
+
+impl NativeBackend {
+    pub fn new(model: Arc<dyn CostModel>) -> Self {
+        Self { model }
+    }
+
+    pub fn model(&self) -> &Arc<dyn CostModel> {
+        &self.model
+    }
+}
+
+impl GradientBackend for NativeBackend {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn gradient(&mut self, w: &[f64], rng: &mut Rng) -> Vec<f64> {
+        self.model.stochastic_gradient(w, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GaussianQuadratic;
+
+    #[test]
+    fn native_backend_delegates() {
+        let mut rng = Rng::new(1);
+        let m = Arc::new(GaussianQuadratic::new(6, 1.0, 2.0, 0.0, &mut rng));
+        let mut b = NativeBackend::new(m.clone());
+        assert_eq!(b.dim(), 6);
+        let w = rng.normal_vec(6);
+        let g = b.gradient(&w, &mut rng);
+        // σ = 0 ⇒ deterministic, equals the full gradient.
+        assert_eq!(g, m.full_gradient(&w));
+    }
+}

@@ -1,0 +1,70 @@
+//! # Echo-CGC
+//!
+//! A reproduction of *"Echo-CGC: A Communication-Efficient Byzantine-tolerant
+//! Distributed Machine Learning Algorithm in Single-Hop Radio Network"*
+//! (Qinzi Zhang, Lewis Tseng — OPODIS 2020).
+//!
+//! The crate implements the complete system described by the paper:
+//!
+//! * a **single-hop radio network substrate** ([`radio`]) with slotted TDMA,
+//!   reliable authenticated local broadcast and bit-exact communication
+//!   accounting ([`wire`]);
+//! * the **synchronous parameter-server** training loop ([`sim`]) with the
+//!   Echo-CGC worker ([`worker`]) and server ([`coordinator`]) logic —
+//!   echo-message construction via Moore–Penrose projection ([`linalg`]),
+//!   echo reconstruction, Byzantine exposure and the CGC filter of
+//!   Gupta & Vaidya (PODC 2020);
+//! * baseline Byzantine-tolerant aggregators (mean, Krum, coordinate-wise
+//!   median, trimmed mean) on the same substrate;
+//! * a **Byzantine attack zoo** ([`byzantine`]) including omniscient
+//!   colluding attacks and echo-forgery attacks;
+//! * the paper's **closed-form theory** ([`analysis`]): `k*`, `β`, `γ`, the
+//!   convergence rate `ρ`, the resilience bound of Lemma 3/4 and the
+//!   communication-ratio bound `C(σ, µ/L, x, n)` of Eq. (29) used to
+//!   regenerate Figures 1a–1d;
+//! * synthetic workloads ([`data`], [`model`]) with controllable `(µ, L, σ)`
+//!   so the theory can be checked against measurement;
+//! * an **XLA/PJRT runtime** ([`runtime`]) that loads gradient computations
+//!   AOT-lowered from JAX/Pallas (`python/compile/`) as HLO text and runs
+//!   them from the rust hot path (python is never on the request path).
+//!
+//! Because this workspace builds fully offline against a small vendored
+//! crate set, the usual ecosystem crates are re-implemented in-crate:
+//! deterministic PRNG ([`rng`]), CLI parsing ([`config`]), JSON/CSV output
+//! ([`metrics`]), a micro-benchmark harness ([`bench_utils`]) and a tiny
+//! property-testing driver ([`prop`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use echo_cgc::config::ExperimentConfig;
+//! use echo_cgc::sim::Simulation;
+//!
+//! let mut cfg = ExperimentConfig::default();
+//! cfg.n = 20;
+//! cfg.f = 2;
+//! cfg.rounds = 200;
+//! let mut sim = Simulation::build(&cfg).unwrap();
+//! let records = sim.run();
+//! let last = records.last().unwrap();
+//! println!("final loss {:.3e}, comm saved {:.1}%",
+//!          last.loss, 100.0 * sim.comm_savings());
+//! ```
+
+pub mod analysis;
+pub mod bench_utils;
+pub mod byzantine;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod grad;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod prop;
+pub mod radio;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod wire;
+pub mod worker;

@@ -1,0 +1,208 @@
+//! Incremental Cholesky factorization of a symmetric positive-definite
+//! matrix, specialised for the Gram matrices `AᵀA` that back the echo
+//! projection.
+//!
+//! The factor is stored row-major, lower-triangular (`L` with `G = L Lᵀ`).
+//! [`Cholesky::try_append`] extends the factorization by one row/column in
+//! `O(s²)` — the key to the worker's `O(s·d)`-per-overheard-gradient cost.
+
+/// Lower-triangular Cholesky factor with incremental append.
+#[derive(Clone, Debug, Default)]
+pub struct Cholesky {
+    /// Row-major packed lower triangle: row i holds entries `l[i][0..=i]`.
+    rows: Vec<Vec<f64>>,
+}
+
+impl Cholesky {
+    pub fn new() -> Self {
+        Self { rows: Vec::new() }
+    }
+
+    /// Current size `s`.
+    pub fn size(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Factorize a full s×s row-major SPD matrix from scratch.
+    ///
+    /// Returns `None` if the matrix is not (numerically) positive definite.
+    pub fn factorize(g: &[f64], s: usize) -> Option<Self> {
+        assert_eq!(g.len(), s * s);
+        let mut c = Cholesky::new();
+        for i in 0..s {
+            let row: Vec<f64> = (0..=i).map(|j| g[i * s + j]).collect();
+            // Diagonal tolerance relative to the matrix scale.
+            let scale = (0..s).map(|k| g[k * s + k]).fold(0.0_f64, f64::max);
+            c.try_append_rel(&row, 1e-12 * scale.max(1e-300))?;
+        }
+        Some(c)
+    }
+
+    /// Append row `[g_{s,0}, …, g_{s,s-1}, g_{s,s}]` of the extended Gram
+    /// matrix (the cross inner-products plus the new diagonal element).
+    ///
+    /// Returns `None` (leaving the factor unchanged) if the new pivot is
+    /// below `tol` — i.e. the new column is numerically in the span of the
+    /// previous ones.
+    pub fn try_append(&mut self, grow: &[f64], tol: f64) -> Option<()> {
+        self.try_append_rel(grow, tol)
+    }
+
+    fn try_append_rel(&mut self, grow: &[f64], tol: f64) -> Option<()> {
+        let s = self.rows.len();
+        assert_eq!(grow.len(), s + 1, "need s cross terms + diagonal");
+        // Solve L y = grow[0..s] by forward substitution.
+        let mut y = vec![0.0; s];
+        for i in 0..s {
+            let mut acc = grow[i];
+            for j in 0..i {
+                acc -= self.rows[i][j] * y[j];
+            }
+            let lii = self.rows[i][i];
+            y[i] = acc / lii;
+        }
+        let pivot_sq = grow[s] - y.iter().map(|v| v * v).sum::<f64>();
+        if pivot_sq <= tol {
+            return None;
+        }
+        let mut row = y;
+        row.push(pivot_sq.sqrt());
+        self.rows.push(row);
+        Some(())
+    }
+
+    /// Solve `G x = b` where `G = L Lᵀ` (forward then backward substitution).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let s = self.rows.len();
+        assert_eq!(b.len(), s);
+        // Forward: L y = b
+        let mut y = vec![0.0; s];
+        for i in 0..s {
+            let mut acc = b[i];
+            for j in 0..i {
+                acc -= self.rows[i][j] * y[j];
+            }
+            y[i] = acc / self.rows[i][i];
+        }
+        // Backward: Lᵀ x = y
+        let mut x = vec![0.0; s];
+        for i in (0..s).rev() {
+            let mut acc = y[i];
+            for j in i + 1..s {
+                acc -= self.rows[j][i] * x[j];
+            }
+            x[i] = acc / self.rows[i][i];
+        }
+        x
+    }
+
+    /// `log det G = 2 Σ log L_ii` — used in tests/diagnostics.
+    pub fn log_det(&self) -> f64 {
+        2.0 * self.rows.iter().enumerate().map(|(i, r)| r[i].ln()).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn matvec(g: &[f64], s: usize, x: &[f64]) -> Vec<f64> {
+        (0..s)
+            .map(|i| (0..s).map(|j| g[i * s + j] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn factorize_and_solve_identity() {
+        let s = 4;
+        let mut g = vec![0.0; s * s];
+        for i in 0..s {
+            g[i * s + i] = 1.0;
+        }
+        let c = Cholesky::factorize(&g, s).unwrap();
+        let b = vec![1.0, -2.0, 3.0, 0.5];
+        assert_eq!(c.solve(&b), b);
+    }
+
+    #[test]
+    fn solve_random_spd() {
+        let mut rng = Rng::new(42);
+        for s in [1usize, 2, 3, 5, 8] {
+            // G = B Bᵀ + I is SPD.
+            let b_mat: Vec<f64> = (0..s * s).map(|_| rng.normal()).collect();
+            let mut g = vec![0.0; s * s];
+            for i in 0..s {
+                for j in 0..s {
+                    let mut acc = if i == j { 1.0 } else { 0.0 };
+                    for k in 0..s {
+                        acc += b_mat[i * s + k] * b_mat[j * s + k];
+                    }
+                    g[i * s + j] = acc;
+                }
+            }
+            let c = Cholesky::factorize(&g, s).unwrap();
+            let rhs: Vec<f64> = (0..s).map(|_| rng.normal()).collect();
+            let x = c.solve(&rhs);
+            let back = matvec(&g, s, &x);
+            for (a, b) in back.iter().zip(rhs.iter()) {
+                assert!((a - b).abs() < 1e-8, "s={s}: {back:?} vs {rhs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn append_matches_scratch_factorization() {
+        let mut rng = Rng::new(7);
+        let s = 6;
+        let b_mat: Vec<f64> = (0..s * s).map(|_| rng.normal()).collect();
+        let mut g = vec![0.0; s * s];
+        for i in 0..s {
+            for j in 0..s {
+                let mut acc = if i == j { 2.0 } else { 0.0 };
+                for k in 0..s {
+                    acc += b_mat[i * s + k] * b_mat[j * s + k];
+                }
+                g[i * s + j] = acc;
+            }
+        }
+        let scratch = Cholesky::factorize(&g, s).unwrap();
+        let mut inc = Cholesky::new();
+        for i in 0..s {
+            let row: Vec<f64> = (0..=i).map(|j| g[i * s + j]).collect();
+            inc.try_append(&row, 1e-12).unwrap();
+        }
+        for (ri, rs) in inc.rows.iter().zip(scratch.rows.iter()) {
+            for (a, b) in ri.iter().zip(rs.iter()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn append_rejects_dependent_column() {
+        // G for columns [e1, e1] — second append must fail.
+        let mut c = Cholesky::new();
+        c.try_append(&[1.0], 1e-12).unwrap();
+        assert!(c.try_append(&[1.0, 1.0], 1e-12).is_none());
+        assert_eq!(c.size(), 1);
+    }
+
+    #[test]
+    fn factorize_rejects_indefinite() {
+        // [[1, 2], [2, 1]] has a negative eigenvalue.
+        let g = vec![1.0, 2.0, 2.0, 1.0];
+        assert!(Cholesky::factorize(&g, 2).is_none());
+    }
+
+    #[test]
+    fn log_det_diagonal() {
+        let g = vec![4.0, 0.0, 0.0, 9.0];
+        let c = Cholesky::factorize(&g, 2).unwrap();
+        assert!((c.log_det() - (36.0_f64).ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,232 @@
+//! Dense linear algebra for the Echo-CGC hot path.
+//!
+//! Gradients are `Vec<f64>` in `R^d` with `d` up to ~10^6. The two
+//! performance-critical pieces are:
+//!
+//! * basic BLAS-1 kernels ([`dot`], [`norm`], [`axpy`], …) used everywhere;
+//! * [`SpanProjector`] — the worker-side echo machinery: maintain a set of
+//!   linearly-independent overheard gradients `R_j` (the columns of `A`),
+//!   and project the local gradient `g` onto `span(A)` via the normal
+//!   equations `AᵀA x = Aᵀg` (i.e. the Moore–Penrose pseudoinverse
+//!   `x = A⁺g` of Algorithm 1, line 18). The Gram matrix `AᵀA` and its
+//!   Cholesky factor are maintained *incrementally*: appending a column
+//!   costs `O(s·d + s²)` instead of re-factorizing from scratch
+//!   (`O(s²·d + s³)`). The ablation bench `ablation_linalg` measures the
+//!   difference.
+
+pub mod cholesky;
+pub mod projector;
+
+pub use cholesky::Cholesky;
+pub use projector::SpanProjector;
+
+/// Dot product `<a, b>`.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps FP dependency chains short and lets
+    // LLVM vectorize without -ffast-math (summation order is fixed).
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let k = i * 4;
+        s0 += a[k] * b[k];
+        s1 += a[k + 1] * b[k + 1];
+        s2 += a[k + 2] * b[k + 2];
+        s3 += a[k + 3] * b[k + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in chunks * 4..n {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// Squared Euclidean norm `‖a‖²`.
+#[inline]
+pub fn norm_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// Euclidean norm `‖a‖`.
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    norm_sq(a).sqrt()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `a * x` as a new vector.
+pub fn scale(alpha: f64, x: &[f64]) -> Vec<f64> {
+    x.iter().map(|v| alpha * v).collect()
+}
+
+/// In-place scale `x *= alpha`.
+pub fn scale_mut(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// `a - b` as a new vector.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x - y).collect()
+}
+
+/// `a + b` as a new vector.
+pub fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
+}
+
+/// `‖a − b‖`.
+pub fn dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let e = x - y;
+        s += e * e;
+    }
+    s.sqrt()
+}
+
+/// Linear combination of columns: `sum_k x[k] * cols[k]`.
+///
+/// This is the server-side echo reconstruction `A_I · x` (Algorithm 1,
+/// line 39) and the worker-side echo gradient `A x`.
+pub fn combine(cols: &[Vec<f64>], x: &[f64]) -> Vec<f64> {
+    assert_eq!(cols.len(), x.len(), "combine: arity mismatch");
+    assert!(!cols.is_empty(), "combine: no columns");
+    let d = cols[0].len();
+    let mut out = vec![0.0; d];
+    for (c, &xi) in cols.iter().zip(x.iter()) {
+        debug_assert_eq!(c.len(), d);
+        axpy(xi, c, &mut out);
+    }
+    out
+}
+
+/// Gram matrix `AᵀA` (s×s, row-major) of the given columns.
+pub fn gram(cols: &[Vec<f64>]) -> Vec<f64> {
+    let s = cols.len();
+    let mut g = vec![0.0; s * s];
+    for i in 0..s {
+        for j in i..s {
+            let v = dot(&cols[i], &cols[j]);
+            g[i * s + j] = v;
+            g[j * s + i] = v;
+        }
+    }
+    g
+}
+
+/// `Aᵀ g` for columns `A` (length-s result).
+pub fn mat_t_vec(cols: &[Vec<f64>], g: &[f64]) -> Vec<f64> {
+    cols.iter().map(|c| dot(c, g)).collect()
+}
+
+/// Largest eigenvalue of the symmetric PSD matrix implicitly given by the
+/// dataset Gram operator `v ↦ (1/m) Xᵀ(Xv)`, via power iteration.
+/// Used by `model::RidgeRegression` to estimate `L`.
+pub fn power_iteration<F>(d: usize, matvec: F, iters: usize, seed: u64) -> f64
+where
+    F: Fn(&[f64]) -> Vec<f64>,
+{
+    let mut rng = crate::rng::Rng::new(seed);
+    let mut v = rng.unit_vector(d);
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let w = matvec(&v);
+        let n = norm(&w);
+        if n < 1e-300 {
+            return 0.0;
+        }
+        lambda = dot(&v, &w);
+        v = scale(1.0 / n, &w);
+    }
+    lambda
+}
+
+/// Smallest eigenvalue via power iteration on the shifted operator
+/// `(λ_max + ε) I − M` (works because M is symmetric PSD).
+pub fn min_eigenvalue<F>(d: usize, matvec: F, lambda_max: f64, iters: usize, seed: u64) -> f64
+where
+    F: Fn(&[f64]) -> Vec<f64>,
+{
+    let shift = lambda_max * (1.0 + 1e-6) + 1e-12;
+    let shifted = |v: &[f64]| -> Vec<f64> {
+        let mv = matvec(v);
+        v.iter().zip(mv.iter()).map(|(vi, mi)| shift * vi - mi).collect()
+    };
+    let top_of_shifted = power_iteration(d, shifted, iters, seed);
+    shift - top_of_shifted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..37).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64 - 18.0) * 0.25).collect();
+        let naive: f64 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn norm_of_unit_axes() {
+        let mut e = vec![0.0; 10];
+        e[3] = -2.0;
+        assert_eq!(norm(&e), 2.0);
+        assert_eq!(norm_sq(&e), 4.0);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn combine_is_linear_combination() {
+        let cols = vec![vec![1.0, 0.0, 1.0], vec![0.0, 2.0, -1.0]];
+        let out = combine(&cols, &[3.0, 0.5]);
+        assert_eq!(out, vec![3.0, 1.0, 2.5]);
+    }
+
+    #[test]
+    fn gram_symmetric_and_correct() {
+        let cols = vec![vec![1.0, 2.0], vec![3.0, -1.0]];
+        let g = gram(&cols);
+        assert_eq!(g, vec![5.0, 1.0, 1.0, 10.0]);
+    }
+
+    #[test]
+    fn power_iteration_diagonal() {
+        // M = diag(1, 5, 3): λmax = 5, λmin = 1.
+        let mv = |v: &[f64]| vec![v[0], 5.0 * v[1], 3.0 * v[2]];
+        let lmax = power_iteration(3, mv, 200, 1);
+        assert!((lmax - 5.0).abs() < 1e-6, "lmax={lmax}");
+        let lmin = min_eigenvalue(3, mv, lmax, 400, 2);
+        assert!((lmin - 1.0).abs() < 1e-4, "lmin={lmin}");
+    }
+
+    #[test]
+    fn dist_and_sub_agree() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![0.0, 0.0, 7.0];
+        assert!((dist(&a, &b) - norm(&sub(&a, &b))).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,246 @@
+//! [`SpanProjector`] — the worker-side echo machinery.
+//!
+//! A worker overhears raw gradients in earlier TDMA slots and keeps the
+//! linearly-independent ones as columns of `A` (the set `R_j` of
+//! Algorithm 1). At its own slot it projects its local gradient `g` onto
+//! `span(A)`:
+//!
+//! ```text
+//!   x  = A⁺ g = (AᵀA)⁻¹ Aᵀ g      (Moore–Penrose via normal equations)
+//!   g* = A x                        (echo gradient: closest point in span)
+//! ```
+//!
+//! The Gram matrix `AᵀA` is maintained incrementally through
+//! [`crate::linalg::Cholesky::try_append`], which doubles as the
+//! linear-independence test: a column whose Schur complement pivot is below
+//! tolerance is in the span of the existing ones and is rejected — exactly
+//! the `AA⁺g ≠ g` test of Algorithm 1, line 29, but numerically robust.
+
+use crate::linalg::{combine, dot, norm, Cholesky};
+
+/// Outcome of projecting a gradient onto the current span.
+#[derive(Clone, Debug)]
+pub struct Projection {
+    /// Coefficients `x = A⁺ g` (length = number of stored columns).
+    pub coeffs: Vec<f64>,
+    /// Echo gradient `g* = A x`.
+    pub echo: Vec<f64>,
+    /// Residual norm `‖g − g*‖`.
+    pub residual: f64,
+    /// Norm of the echo gradient `‖g*‖`.
+    pub echo_norm: f64,
+}
+
+/// Maintains the linearly-independent overheard gradients and projects onto
+/// their span.
+#[derive(Clone, Debug)]
+pub struct SpanProjector {
+    d: usize,
+    /// Columns of `A` (the stored gradients), in arrival order.
+    cols: Vec<Vec<f64>>,
+    /// IDs (TDMA slot owners) associated with each stored column.
+    ids: Vec<usize>,
+    chol: Cholesky,
+    /// Relative tolerance for the linear-independence pivot test.
+    eps_li: f64,
+}
+
+impl SpanProjector {
+    /// `eps_li` is the *relative* pivot tolerance: a new column `c` is
+    /// accepted iff its squared distance to the span exceeds
+    /// `eps_li² · ‖c‖²`.
+    pub fn new(d: usize, eps_li: f64) -> Self {
+        Self { d, cols: Vec::new(), ids: Vec::new(), chol: Cholesky::new(), eps_li }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Number of stored (independent) columns `|R_j|`.
+    pub fn rank(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn ids(&self) -> &[usize] {
+        &self.ids
+    }
+
+    pub fn columns(&self) -> &[Vec<f64>] {
+        &self.cols
+    }
+
+    /// Reset for a new round, keeping the allocation-free parameters.
+    pub fn clear(&mut self) {
+        self.cols.clear();
+        self.ids.clear();
+        self.chol = Cholesky::new();
+    }
+
+    /// Offer an overheard gradient. Stores it iff it is linearly
+    /// independent of the current columns (Algorithm 1, lines 27–31).
+    /// Returns `true` if stored.
+    pub fn try_push(&mut self, id: usize, g: &[f64]) -> bool {
+        assert_eq!(g.len(), self.d, "gradient dim mismatch");
+        if self.cols.len() >= self.d {
+            // span(R_j) is already all of R^d; nothing can be independent.
+            // (Structural guard: floating-point pivot noise must not admit
+            // more than d columns.)
+            return false;
+        }
+        let gg = dot(g, g);
+        if gg <= 0.0 || !gg.is_finite() {
+            return false; // zero or non-finite vectors span nothing useful
+        }
+        // Extended Gram row: cross terms with existing columns + diagonal.
+        let mut grow: Vec<f64> = self.cols.iter().map(|c| dot(c, g)).collect();
+        grow.push(gg);
+        // Pivot = squared distance from g to span(A); require it to exceed
+        // (eps_li ‖g‖)² for numerical independence.
+        let tol = self.eps_li * self.eps_li * gg;
+        if self.chol.try_append(&grow, tol).is_none() {
+            return false;
+        }
+        self.cols.push(g.to_vec());
+        self.ids.push(id);
+        true
+    }
+
+    /// Project `g` onto the span of the stored columns.
+    ///
+    /// Returns `None` when no columns are stored (`|R_j| = 0` ⇒ worker must
+    /// broadcast raw, Algorithm 1 line 15).
+    pub fn project(&self, g: &[f64]) -> Option<Projection> {
+        assert_eq!(g.len(), self.d);
+        if self.cols.is_empty() {
+            return None;
+        }
+        let atg: Vec<f64> = self.cols.iter().map(|c| dot(c, g)).collect();
+        let coeffs = self.chol.solve(&atg);
+        let echo = combine(&self.cols, &coeffs);
+        // residual² = ‖g‖² − 2<g, g*> + ‖g*‖², computed directly for
+        // numerical robustness near zero.
+        let mut res_sq = 0.0;
+        for (gi, ei) in g.iter().zip(echo.iter()) {
+            let e = gi - ei;
+            res_sq += e * e;
+        }
+        let echo_norm = norm(&echo);
+        Some(Projection { coeffs, echo, residual: res_sq.sqrt(), echo_norm })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist, norm, scale};
+    use crate::rng::Rng;
+
+    #[test]
+    fn rejects_dependent_columns() {
+        let mut p = SpanProjector::new(3, 1e-9);
+        assert!(p.try_push(0, &[1.0, 0.0, 0.0]));
+        assert!(!p.try_push(1, &scale(2.5, &[1.0, 0.0, 0.0])));
+        assert!(p.try_push(2, &[0.0, 1.0, 0.0]));
+        assert!(!p.try_push(3, &[3.0, -1.0, 0.0])); // in span(e1, e2)
+        assert_eq!(p.rank(), 2);
+        assert_eq!(p.ids(), &[0, 2]);
+    }
+
+    #[test]
+    fn rejects_zero_and_nonfinite() {
+        let mut p = SpanProjector::new(2, 1e-9);
+        assert!(!p.try_push(0, &[0.0, 0.0]));
+        assert!(!p.try_push(1, &[f64::NAN, 1.0]));
+        assert!(!p.try_push(2, &[f64::INFINITY, 1.0]));
+        assert_eq!(p.rank(), 0);
+    }
+
+    #[test]
+    fn projection_onto_axis() {
+        let mut p = SpanProjector::new(3, 1e-9);
+        p.try_push(0, &[2.0, 0.0, 0.0]);
+        let pr = p.project(&[3.0, 4.0, 0.0]).unwrap();
+        assert!((pr.echo[0] - 3.0).abs() < 1e-12);
+        assert!(pr.echo[1].abs() < 1e-12);
+        assert!((pr.residual - 4.0).abs() < 1e-12);
+        assert!((pr.echo_norm - 3.0).abs() < 1e-12);
+        // coefficient reconstructs: 1.5 * [2,0,0] = [3,0,0]
+        assert!((pr.coeffs[0] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_recovery_when_in_span() {
+        let mut rng = Rng::new(5);
+        let d = 50;
+        let mut p = SpanProjector::new(d, 1e-9);
+        let c0 = rng.normal_vec(d);
+        let c1 = rng.normal_vec(d);
+        p.try_push(0, &c0);
+        p.try_push(1, &c1);
+        // g = 2 c0 - 3 c1 is exactly in the span.
+        let mut g = scale(2.0, &c0);
+        crate::linalg::axpy(-3.0, &c1, &mut g);
+        let pr = p.project(&g).unwrap();
+        assert!(pr.residual < 1e-9 * norm(&g));
+        assert!((pr.coeffs[0] - 2.0).abs() < 1e-8);
+        assert!((pr.coeffs[1] + 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn projection_is_idempotent() {
+        let mut rng = Rng::new(6);
+        let d = 40;
+        let mut p = SpanProjector::new(d, 1e-9);
+        for i in 0..5 {
+            p.try_push(i, &rng.normal_vec(d));
+        }
+        let g = rng.normal_vec(d);
+        let pr1 = p.project(&g).unwrap();
+        let pr2 = p.project(&pr1.echo).unwrap();
+        assert!(dist(&pr1.echo, &pr2.echo) < 1e-8 * norm(&pr1.echo));
+        assert!(pr2.residual < 1e-8 * norm(&pr1.echo));
+    }
+
+    #[test]
+    fn residual_orthogonal_to_span() {
+        let mut rng = Rng::new(8);
+        let d = 30;
+        let mut p = SpanProjector::new(d, 1e-9);
+        for i in 0..4 {
+            p.try_push(i, &rng.normal_vec(d));
+        }
+        let g = rng.normal_vec(d);
+        let pr = p.project(&g).unwrap();
+        let resid: Vec<f64> = g.iter().zip(pr.echo.iter()).map(|(a, b)| a - b).collect();
+        for c in p.columns() {
+            let ip = crate::linalg::dot(&resid, c);
+            assert!(ip.abs() < 1e-8 * norm(c) * norm(&resid).max(1e-30), "ip={ip}");
+        }
+    }
+
+    #[test]
+    fn full_rank_span_gives_zero_residual() {
+        let mut rng = Rng::new(9);
+        let d = 6;
+        let mut p = SpanProjector::new(d, 1e-9);
+        let mut stored = 0;
+        while stored < d {
+            if p.try_push(stored, &rng.normal_vec(d)) {
+                stored += 1;
+            }
+        }
+        let g = rng.normal_vec(d);
+        let pr = p.project(&g).unwrap();
+        assert!(pr.residual < 1e-8 * norm(&g));
+    }
+
+    #[test]
+    fn clear_resets_state() {
+        let mut p = SpanProjector::new(4, 1e-9);
+        p.try_push(0, &[1.0, 0.0, 0.0, 0.0]);
+        p.clear();
+        assert_eq!(p.rank(), 0);
+        assert!(p.project(&[1.0; 4]).is_none());
+    }
+}

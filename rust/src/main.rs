@@ -1,0 +1,390 @@
+//! `echo-cgc` — the experiment launcher.
+//!
+//! Subcommands (each accepts the `--key value` config flags of
+//! [`echo_cgc::config::ExperimentConfig`] plus `--config <file>`):
+//!
+//! * `train`          — run one experiment; logs rounds, writes
+//!                      `results/train_<tag>.csv`
+//! * `analyze`        — print the theory constants (β, γ, ρ, r-bound, C, …)
+//! * `figures`        — regenerate Figures 1a–1d (`--which 1a|1b|1c|1d|all`)
+//! * `bench-comm`     — measured communication savings vs the raw-gradient
+//!                      baseline across σ (the §4.3 headline numbers)
+//! * `echo-rate`      — measured echo rate vs the analytic lower bound
+//! * `attack-matrix`  — aggregators × attacks final-error table
+//! * `convergence`    — empirical contraction vs theoretical ρ
+//!
+//! Examples:
+//! ```text
+//! echo-cgc train --n 50 --f 5 --sigma 0.05 --rounds 500
+//! echo-cgc figures --which all
+//! echo-cgc attack-matrix --n 25 --f 2 --rounds 300
+//! ```
+
+use echo_cgc::analysis;
+use echo_cgc::byzantine::AttackKind;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::coordinator::Aggregator;
+use echo_cgc::metrics::CsvTable;
+use echo_cgc::sim::Simulation;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: echo-cgc <train|analyze|figures|bench-comm|echo-rate|attack-matrix|convergence|multihop> [--key value ...]\n\
+         run `echo-cgc train --n 20 --f 2 --rounds 200` for a quick start"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // `--config <file>` is handled before the rest.
+    let mut cfg = ExperimentConfig::default();
+    if let Some(pos) = args.iter().position(|a| a == "--config") {
+        if pos + 1 >= args.len() {
+            eprintln!("--config needs a path");
+            std::process::exit(2);
+        }
+        let path = args[pos + 1].clone();
+        let contents = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(2);
+        });
+        if let Err(e) = cfg.apply_file(&contents) {
+            eprintln!("{path}: {e}");
+            std::process::exit(2);
+        }
+        args.drain(pos..=pos + 1);
+    }
+    // `--which` belongs to the figures subcommand, not the config.
+    let mut which = String::from("all");
+    if let Some(pos) = args.iter().position(|a| a == "--which") {
+        if pos + 1 < args.len() {
+            which = args[pos + 1].clone();
+            args.drain(pos..=pos + 1);
+        }
+    }
+    let rest = match cfg.apply_args(&args) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = rest.first().map(String::as_str).unwrap_or("");
+    let extra: Vec<&str> = rest.iter().skip(1).map(String::as_str).collect();
+    match cmd {
+        "train" => cmd_train(&cfg),
+        "analyze" => cmd_analyze(&cfg),
+        "figures" => cmd_figures(extra.first().copied().unwrap_or(&which)),
+        "bench-comm" => cmd_bench_comm(&cfg),
+        "echo-rate" => cmd_echo_rate(&cfg),
+        "attack-matrix" => cmd_attack_matrix(&cfg),
+        "convergence" => cmd_convergence(&cfg),
+        "multihop" => cmd_multihop(&cfg),
+        _ => usage(),
+    }
+}
+
+fn cmd_train(cfg: &ExperimentConfig) {
+    let mut sim = Simulation::build(cfg).unwrap_or_else(|e| {
+        eprintln!("config error: {e}");
+        std::process::exit(2);
+    });
+    println!(
+        "echo-cgc train: n={} f={} b={} model={} d={} attack={} agg={} r={:.4} eta={:.3e}",
+        cfg.n,
+        cfg.f,
+        cfg.b,
+        cfg.model.name(),
+        sim.model().dim(),
+        cfg.attack.name(),
+        cfg.aggregator.name(),
+        sim.r(),
+        sim.eta()
+    );
+    let mut table = CsvTable::new(&[
+        "round", "loss", "dist_sq", "grad_norm", "uplink_bits", "echo", "raw", "exposed",
+    ]);
+    let log_every = (cfg.rounds / 20).max(1);
+    for t in 0..cfg.rounds {
+        let r = sim.step();
+        table.push_row(&[
+            r.round as f64,
+            r.loss,
+            r.dist_sq.unwrap_or(f64::NAN),
+            r.grad_norm,
+            r.uplink_bits as f64,
+            r.echo_count as f64,
+            r.raw_count as f64,
+            r.exposed_cum as f64,
+        ]);
+        if t % log_every == 0 || t + 1 == cfg.rounds {
+            println!(
+                "round {:>5}  loss {:>12.5e}  ‖∇Q‖ {:>10.3e}  echo {:>3}/{:<3}  bits {:>10}",
+                r.round,
+                r.loss,
+                r.grad_norm,
+                r.echo_count,
+                r.echo_count + r.raw_count,
+                r.uplink_bits
+            );
+        }
+    }
+    let tag = format!(
+        "{}_n{}_f{}_{}",
+        cfg.model.name(),
+        cfg.n,
+        cfg.f,
+        cfg.attack.name()
+    );
+    let path = format!("results/train_{tag}.csv");
+    table.write_file(&path).expect("write results csv");
+    println!(
+        "\nfinal: loss {:.5e}, echo rate {:.1}%, comm saved {:.1}% vs raw baseline\nwrote {path}",
+        sim.records().last().unwrap().loss,
+        100.0 * sim.echo_rate(),
+        100.0 * sim.comm_savings()
+    );
+}
+
+fn cmd_analyze(cfg: &ExperimentConfig) {
+    let p = cfg.theory();
+    println!("theory constants for n={} f={} µ={} L={} σ={}:", cfg.n, cfg.f, cfg.mu, cfg.l, cfg.sigma);
+    println!("  k*            = {:.6}", analysis::k_star());
+    println!("  resilience ok = {}", analysis::resilient_lemma4(cfg.n, cfg.f, cfg.mu, cfg.l));
+    println!("  r bound (L3)  = {:.6}", analysis::r_bound_lemma3(cfg.n, cfg.f, cfg.mu, cfg.l, cfg.sigma));
+    println!("  r bound (L4)  = {:.6}", analysis::r_bound_lemma4(cfg.n, cfg.f, cfg.mu, cfg.l, cfg.sigma));
+    println!("  r (resolved)  = {:.6}", cfg.resolve_r());
+    println!("  beta          = {:.6}", p.beta());
+    println!("  gamma         = {:.6}", p.gamma());
+    println!("  eta*          = {:.6e}", p.eta_star());
+    println!("  rho(eta*)     = {:.6}", p.rho_min());
+    let x = cfg.f as f64 / cfg.n as f64;
+    match analysis::comm_ratio_c(cfg.sigma, cfg.mu / cfg.l, x, cfg.n) {
+        Some(c) => println!(
+            "  C (Eq.29)     = {:.4}  →  guaranteed savings ≥ {:.1}%",
+            c,
+            100.0 * (1.0 - c)
+        ),
+        None => println!("  C (Eq.29)     = ∞ (beyond x_max = {:.4})", analysis::x_max(cfg.sigma, cfg.mu / cfg.l, cfg.n)),
+    }
+    println!(
+        "  p_echo ≥      = {:.4} at r={:.4}",
+        analysis::p_echo_lower(cfg.resolve_r(), cfg.sigma),
+        cfg.resolve_r()
+    );
+}
+
+fn cmd_figures(which: &str) {
+    let jobs: Vec<(&str, Vec<analysis::FigPoint>, &str)> = match which {
+        "1a" => vec![("1a", analysis::figure_1a(100), "sigma")],
+        "1b" => vec![("1b", analysis::figure_1b(100), "mu_over_l")],
+        "1c" => vec![("1c", analysis::figure_1c(100), "x")],
+        "1d" => vec![("1d", analysis::figure_1d(100), "n")],
+        _ => vec![
+            ("1a", analysis::figure_1a(100), "sigma"),
+            ("1b", analysis::figure_1b(100), "mu_over_l"),
+            ("1c", analysis::figure_1c(100), "x"),
+            ("1d", analysis::figure_1d(100), "n"),
+        ],
+    };
+    for (name, pts, xlab) in jobs {
+        let t = analysis::figure_csv(&pts, xlab);
+        let path = format!("results/figure_{name}.csv");
+        t.write_file(&path).expect("write figure csv");
+        // Terminal sparkline-ish preview.
+        let vals: Vec<f64> = pts.iter().filter_map(|p| p.c).collect();
+        let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = vals.iter().cloned().fold(0.0f64, f64::max);
+        println!("figure {name}: C({xlab}) over [{:.3}, {:.3}] → range [{lo:.4}, {hi:.4}], wrote {path}",
+            pts.first().unwrap().x, pts.last().unwrap().x);
+    }
+}
+
+fn cmd_bench_comm(cfg: &ExperimentConfig) {
+    println!("communication savings: Echo-CGC vs all-raw baseline (measured bits on the radio)");
+    println!("{:>8} {:>8} {:>10} {:>14} {:>14} {:>10} {:>10}", "sigma", "echo%", "pred p", "bits/round", "baseline", "saved%", "C bound");
+    let mut table = CsvTable::new(&["sigma", "echo_rate", "p_lower", "bits_per_round", "baseline_bits", "savings", "c_bound"]);
+    for &sigma in &[0.01, 0.02, 0.05, 0.08, 0.1, 0.15, 0.2] {
+        let mut c = cfg.clone();
+        c.sigma = sigma;
+        c.rounds = cfg.rounds.min(60);
+        let mut sim = match Simulation::build(&c) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        sim.run();
+        let rounds = sim.records().len() as u64;
+        let bits = sim.radio().meter.total_uplink() / rounds;
+        let baseline =
+            echo_cgc::wire::raw_gradient_bits(sim.model().dim(), c.encoding()) * c.n as u64;
+        let p = analysis::p_echo_lower(sim.r(), sigma);
+        let cb = analysis::comm_ratio_c(sigma, c.mu / c.l, c.f as f64 / c.n as f64, c.n);
+        println!(
+            "{:>8.3} {:>7.1}% {:>10.3} {:>14} {:>14} {:>9.1}% {:>10}",
+            sigma,
+            100.0 * sim.echo_rate(),
+            p,
+            bits,
+            baseline,
+            100.0 * sim.comm_savings(),
+            cb.map(|v| format!("{v:.3}")).unwrap_or_else(|| "∞".into()),
+        );
+        table.push_row(&[
+            sigma,
+            sim.echo_rate(),
+            p,
+            bits as f64,
+            baseline as f64,
+            sim.comm_savings(),
+            cb.unwrap_or(f64::NAN),
+        ]);
+    }
+    table.write_file("results/bench_comm.csv").expect("write csv");
+    println!("wrote results/bench_comm.csv");
+}
+
+fn cmd_echo_rate(cfg: &ExperimentConfig) {
+    println!("echo rate: measured vs analytic lower bound np−1 (per round, fault-free workers)");
+    println!("{:>8} {:>8} {:>12} {:>12}", "sigma", "r", "measured", "bound");
+    let mut table = CsvTable::new(&["sigma", "r", "measured_echoes_per_round", "np_minus_1"]);
+    for &sigma in &[0.01, 0.03, 0.05, 0.08, 0.1] {
+        let mut c = cfg.clone();
+        c.sigma = sigma;
+        c.rounds = cfg.rounds.min(80);
+        let mut sim = match Simulation::build(&c) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        sim.run();
+        let honest = (c.n - c.b) as f64;
+        let measured = sim.echo_rate() * honest;
+        let bound = (c.n as f64 * analysis::p_echo_lower(sim.r(), sigma) - 1.0).max(0.0);
+        println!("{:>8.3} {:>8.4} {:>12.2} {:>12.2}", sigma, sim.r(), measured, bound);
+        table.push_row(&[sigma, sim.r(), measured, bound]);
+    }
+    table.write_file("results/echo_rate.csv").expect("write csv");
+    println!("wrote results/echo_rate.csv");
+}
+
+fn cmd_attack_matrix(cfg: &ExperimentConfig) {
+    println!(
+        "final ‖w−w*‖² after {} rounds, n={} f={} b={} (rows: attacks; cols: aggregators)",
+        cfg.rounds, cfg.n, cfg.f, cfg.b
+    );
+    let aggs = Aggregator::all();
+    print!("{:>16}", "attack");
+    for a in aggs {
+        print!(" {:>13}", a.name());
+    }
+    println!();
+    let mut table = CsvTable::new(&["attack", "cgc", "mean", "krum", "median", "trimmed_mean"]);
+    for attack in AttackKind::all() {
+        print!("{:>16}", attack.name());
+        let mut row = vec![attack.name().to_string()];
+        for agg in aggs {
+            let mut c = cfg.clone();
+            c.attack = attack;
+            c.aggregator = agg;
+            let out = Simulation::build(&c).and_then(|mut s| {
+                s.run();
+                Ok(s.final_dist_sq().unwrap_or(f64::NAN))
+            });
+            match out {
+                Ok(d) => {
+                    print!(" {:>13.3e}", d);
+                    row.push(format!("{d}"));
+                }
+                Err(_) => {
+                    print!(" {:>13}", "err");
+                    row.push("nan".into());
+                }
+            }
+        }
+        println!();
+        table.push_row_mixed(row);
+    }
+    table.write_file("results/attack_matrix.csv").expect("write csv");
+    println!("wrote results/attack_matrix.csv");
+}
+
+fn cmd_convergence(cfg: &ExperimentConfig) {
+    println!("empirical contraction vs theoretical ρ (quadratic model)");
+    println!("{:>6} {:>4} {:>8} {:>12} {:>12}", "n", "f", "sigma", "emp rho", "theory rho");
+    let mut table = CsvTable::new(&["n", "f", "sigma", "empirical_rho", "theory_rho"]);
+    for &(n, f) in &[(12usize, 1usize), (20, 2), (40, 4), (60, 3)] {
+        for &sigma in &[0.02, 0.05, 0.1] {
+            let mut c = cfg.clone();
+            c.n = n;
+            c.f = f;
+            c.b = f;
+            c.sigma = sigma;
+            let mut sim = match Simulation::build(&c) {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let recs = sim.run();
+            let d0 = recs.first().unwrap().dist_sq.unwrap();
+            // Measure ρ over the contracting prefix only (the f32 wire
+            // quantization floor stalls the distance at ~1e-14).
+            let floor = 1e-10 * d0.max(1.0);
+            let t_eff = recs
+                .iter()
+                .position(|r| r.dist_sq.unwrap() < floor)
+                .unwrap_or(recs.len());
+            let dt = recs[t_eff.saturating_sub(1)].dist_sq.unwrap().max(1e-300);
+            let emp = (dt / d0).powf(1.0 / t_eff.max(1) as f64);
+            let rho = sim.realized_theory().rho(sim.eta());
+            println!("{n:>6} {f:>4} {sigma:>8.3} {emp:>12.6} {rho:>12.6}");
+            table.push_row(&[n as f64, f as f64, sigma, emp, rho]);
+        }
+    }
+    table.write_file("results/convergence.csv").expect("write csv");
+    println!("wrote results/convergence.csv");
+}
+
+fn cmd_multihop(cfg: &ExperimentConfig) {
+    use echo_cgc::sim::multihop::MultiHopSimulation;
+    println!("multi-hop Echo-CGC (paper §5 open problem (i)) — random geometric topologies");
+    println!(
+        "{:>7} {:>9} {:>9} {:>12} {:>14} {:>14}",
+        "range", "depth", "echo%", "saved%", "bits/round", "1-hop bits"
+    );
+    let mut table = CsvTable::new(&[
+        "range", "mean_depth", "echo_rate", "savings", "bits_per_round", "single_hop_bits",
+    ]);
+    for &range in &[0.9, 0.6, 0.45, 0.35] {
+        let mut c = cfg.clone();
+        c.rounds = cfg.rounds.min(80);
+        let mut sim = match MultiHopSimulation::build(&c, range) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("range {range}: {e}");
+                continue;
+            }
+        };
+        sim.run();
+        let rounds = sim.records().len() as f64;
+        let bits: u64 = sim.records().iter().map(|r| r.uplink_bits).sum();
+        let single: u64 = sim.records().iter().map(|r| r.single_hop_bits).sum();
+        println!(
+            "{:>7.2} {:>9.2} {:>8.1}% {:>11.1}% {:>14.0} {:>14.0}",
+            range,
+            sim.topology().mean_depth(),
+            100.0 * sim.echo_rate(),
+            100.0 * sim.comm_savings(),
+            bits as f64 / rounds,
+            single as f64 / rounds,
+        );
+        table.push_row(&[
+            range,
+            sim.topology().mean_depth(),
+            sim.echo_rate(),
+            sim.comm_savings(),
+            bits as f64 / rounds,
+            single as f64 / rounds,
+        ]);
+    }
+    table.write_file("results/multihop.csv").expect("write csv");
+    println!("wrote results/multihop.csv");
+}

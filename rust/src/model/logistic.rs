@@ -1,0 +1,207 @@
+//! [`LogisticRegression`] — ℓ2-regularized binary logistic regression.
+//!
+//! `Q(w) = (1/m) Σ_i [ log(1 + e^{x_i·w}) − y_i (x_i·w) ] + (λ/2)‖w‖²`
+//!
+//! Strongly convex with `µ ≥ λ`; smooth with
+//! `L ≤ λ_max(XᵀX/m)/4 + λ` (the sigmoid's derivative is ≤ 1/4).
+//! There is no closed-form optimum; [`LogisticRegression::fit_optimum`]
+//! computes a high-accuracy `w*` by deterministic gradient descent so
+//! convergence distances can still be measured.
+
+use super::{CostModel, CurvatureConstants};
+use crate::data::RegressionData;
+use crate::linalg;
+use crate::rng::Rng;
+
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable `log(1 + e^z)`.
+#[inline]
+fn log1p_exp(z: f64) -> f64 {
+    if z > 0.0 {
+        z + (-z).exp().ln_1p()
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LogisticRegression {
+    data: RegressionData,
+    lambda: f64,
+    batch: usize,
+    consts: CurvatureConstants,
+    w_star: Vec<f64>,
+}
+
+impl LogisticRegression {
+    pub fn new(data: RegressionData, lambda: f64, batch: usize, rng: &mut Rng) -> Self {
+        assert!(lambda > 0.0, "strong convexity needs lambda > 0");
+        assert!(batch >= 1 && batch <= data.m());
+        let d = data.d();
+        let m = data.m() as f64;
+        let gram_op = |v: &[f64]| -> Vec<f64> {
+            let mut out = data.gram_matvec(v);
+            for o in out.iter_mut() {
+                *o /= m;
+            }
+            out
+        };
+        let gram_top = linalg::power_iteration(d, gram_op, 300, rng.next_u64());
+        let l = gram_top / 4.0 + lambda;
+        let mu = lambda; // conservative lower bound
+
+        let mut me = Self {
+            data,
+            lambda,
+            batch,
+            consts: CurvatureConstants { mu, l, sigma: 0.0 },
+            w_star: vec![0.0; d],
+        };
+        me.w_star = me.fit_optimum(2000, 1e-10);
+        let w0 = rng.normal_vec(d);
+        me.consts.sigma = super::estimate_sigma(&me, &w0, 200, rng);
+        me
+    }
+
+    /// High-accuracy deterministic GD to the optimum (for measurement only;
+    /// not part of the distributed algorithm).
+    pub fn fit_optimum(&self, iters: usize, tol: f64) -> Vec<f64> {
+        let mut w = vec![0.0; self.dim()];
+        let eta = 1.0 / self.consts.l;
+        for _ in 0..iters {
+            let g = self.full_gradient(&w);
+            if linalg::norm(&g) < tol {
+                break;
+            }
+            for (wi, gi) in w.iter_mut().zip(g.iter()) {
+                *wi -= eta * gi;
+            }
+        }
+        w
+    }
+
+    pub fn gradient_on_batch(&self, w: &[f64], idx: &[usize]) -> Vec<f64> {
+        let d = self.data.d();
+        let mut g = vec![0.0; d];
+        for &i in idx {
+            let (xi, yi) = self.data.row(i);
+            let p = sigmoid(linalg::dot(xi, w));
+            linalg::axpy((p - yi) / idx.len() as f64, xi, &mut g);
+        }
+        linalg::axpy(self.lambda, w, &mut g);
+        g
+    }
+
+    pub fn data(&self) -> &RegressionData {
+        &self.data
+    }
+}
+
+impl CostModel for LogisticRegression {
+    fn dim(&self) -> usize {
+        self.data.d()
+    }
+
+    fn loss(&self, w: &[f64]) -> f64 {
+        let m = self.data.m();
+        let mut acc = 0.0;
+        for i in 0..m {
+            let (xi, yi) = self.data.row(i);
+            let z = linalg::dot(xi, w);
+            acc += log1p_exp(z) - yi * z;
+        }
+        acc / m as f64 + 0.5 * self.lambda * linalg::norm_sq(w)
+    }
+
+    fn full_gradient(&self, w: &[f64]) -> Vec<f64> {
+        let idx: Vec<usize> = (0..self.data.m()).collect();
+        self.gradient_on_batch(w, &idx)
+    }
+
+    fn stochastic_gradient(&self, w: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let idx: Vec<usize> =
+            (0..self.batch).map(|_| rng.range(0, self.data.m())).collect();
+        self.gradient_on_batch(w, &idx)
+    }
+
+    fn optimum(&self) -> Option<Vec<f64>> {
+        Some(self.w_star.clone())
+    }
+
+    fn constants(&self) -> CurvatureConstants {
+        self.consts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_logreg;
+    use crate::model::finite_diff_check;
+
+    fn fixture(seed: u64) -> (LogisticRegression, Rng) {
+        let mut rng = Rng::new(seed);
+        let data = make_logreg(10, 300, 1.0, &mut rng);
+        let m = LogisticRegression::new(data, 0.05, 16, &mut rng);
+        (m, rng)
+    }
+
+    #[test]
+    fn sigmoid_stable_at_extremes() {
+        assert!(sigmoid(800.0) <= 1.0 && sigmoid(800.0) > 0.999);
+        assert!(sigmoid(-800.0) >= 0.0 && sigmoid(-800.0) < 1e-300);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(log1p_exp(900.0).is_finite());
+        assert!(log1p_exp(-900.0) >= 0.0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (m, mut rng) = fixture(1);
+        let w = rng.normal_vec(10);
+        assert!(finite_diff_check(&m, &w, 1e-5) < 1e-4);
+    }
+
+    #[test]
+    fn fitted_optimum_is_stationary() {
+        let (m, _) = fixture(2);
+        let w = m.optimum().unwrap();
+        assert!(linalg::norm(&m.full_gradient(&w)) < 1e-6);
+    }
+
+    #[test]
+    fn stochastic_gradient_unbiased() {
+        let (m, mut rng) = fixture(3);
+        let w = rng.normal_vec(10);
+        let full = m.full_gradient(&w);
+        let trials = 4000;
+        let mut mean = vec![0.0; 10];
+        for _ in 0..trials {
+            let g = m.stochastic_gradient(&w, &mut rng);
+            for (a, b) in mean.iter_mut().zip(g.iter()) {
+                *a += b / trials as f64;
+            }
+        }
+        assert!(linalg::dist(&mean, &full) / linalg::norm(&full) < 0.05);
+    }
+
+    #[test]
+    fn loss_at_optimum_below_loss_at_zero_and_random() {
+        let (m, mut rng) = fixture(4);
+        let w_star = m.optimum().unwrap();
+        let at_star = m.loss(&w_star);
+        assert!(at_star <= m.loss(&vec![0.0; 10]));
+        for _ in 0..5 {
+            assert!(at_star <= m.loss(&rng.normal_vec(10)) + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Cost models — the workers' compute.
+//!
+//! The paper's theory is parameterized by the curvature constants `(µ, L)`
+//! of the cost `Q` (Assumptions 2–3) and the relative gradient variance `σ`
+//! (Assumption 5). To check theory against measurement we need workloads
+//! where those knobs are *set*, not estimated:
+//!
+//! * [`GaussianQuadratic`] — synthetic strongly-convex quadratic with an
+//!   exact, user-chosen spectrum `[µ, L]` and a noise model that satisfies
+//!   Assumptions 4–5 *with equality*. The workhorse for validating ρ and
+//!   the echo-rate bound.
+//! * [`RidgeRegression`] / [`LogisticRegression`] / [`SoftmaxRegression`] —
+//!   data-driven costs over synthetic datasets ([`crate::data`]) where
+//!   `(µ, L, σ)` are estimated (power iteration on the Gram operator,
+//!   empirical gradient variance), exercising the realistic path.
+//!
+//! Every model implements [`CostModel`]; the native backend in
+//! [`crate::grad`] adapts it for workers, and `python/compile/model.py`
+//! mirrors the same math in JAX for the XLA backend (equivalence-tested in
+//! `rust/tests/backend_equivalence.rs`).
+
+pub mod logistic;
+pub mod quadratic;
+pub mod ridge;
+pub mod softmax;
+
+pub use logistic::LogisticRegression;
+pub use quadratic::GaussianQuadratic;
+pub use ridge::RidgeRegression;
+pub use softmax::SoftmaxRegression;
+
+use crate::rng::Rng;
+
+/// Curvature and noise constants of a cost model, as used by the paper's
+/// formulas. For synthetic models these are exact; for data-driven models
+/// they are estimates.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvatureConstants {
+    /// Strong-convexity constant µ (Assumption 3).
+    pub mu: f64,
+    /// Lipschitz-smoothness constant L (Assumption 2).
+    pub l: f64,
+    /// Relative stochastic-gradient deviation σ (Assumption 5):
+    /// `E‖g − ∇Q‖² ≤ σ²‖∇Q‖²`.
+    pub sigma: f64,
+}
+
+impl CurvatureConstants {
+    pub fn mu_over_l(&self) -> f64 {
+        self.mu / self.l
+    }
+}
+
+/// A differentiable cost `Q : R^d → R` with stochastic gradient oracle.
+pub trait CostModel: Send + Sync {
+    /// Dimension `d` of the parameter space.
+    fn dim(&self) -> usize;
+
+    /// `Q(w)` over the full dataset.
+    fn loss(&self, w: &[f64]) -> f64;
+
+    /// Deterministic full gradient `∇Q(w)`.
+    fn full_gradient(&self, w: &[f64]) -> Vec<f64>;
+
+    /// Stochastic gradient `g` over a fresh random batch;
+    /// must satisfy `E g = ∇Q(w)` (Assumption 4).
+    fn stochastic_gradient(&self, w: &[f64], rng: &mut Rng) -> Vec<f64>;
+
+    /// The optimal parameter `w*`, when known in closed form.
+    fn optimum(&self) -> Option<Vec<f64>>;
+
+    /// Curvature/noise constants (exact or estimated).
+    fn constants(&self) -> CurvatureConstants;
+
+    /// A reasonable initial parameter for experiments.
+    fn initial_w(&self, rng: &mut Rng) -> Vec<f64> {
+        rng.normal_vec(self.dim())
+    }
+}
+
+/// Finite-difference check used by the per-model unit tests:
+/// max_i |(Q(w + h e_i) − Q(w − h e_i))/2h − ∇Q(w)_i| relative error.
+#[cfg(test)]
+pub(crate) fn finite_diff_check<M: CostModel>(m: &M, w: &[f64], h: f64) -> f64 {
+    let g = m.full_gradient(w);
+    let mut max_rel = 0.0_f64;
+    let mut wp = w.to_vec();
+    for i in 0..w.len() {
+        wp[i] = w[i] + h;
+        let qp = m.loss(&wp);
+        wp[i] = w[i] - h;
+        let qm = m.loss(&wp);
+        wp[i] = w[i];
+        let fd = (qp - qm) / (2.0 * h);
+        let denom = g[i].abs().max(1e-6);
+        max_rel = max_rel.max((fd - g[i]).abs() / denom);
+    }
+    max_rel
+}
+
+/// Empirically estimate the relative gradient deviation σ at `w`:
+/// sqrt(mean ‖g − ∇Q‖² / ‖∇Q‖²) over `samples` stochastic draws.
+pub fn estimate_sigma<M: CostModel + ?Sized>(
+    m: &M,
+    w: &[f64],
+    samples: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let full = m.full_gradient(w);
+    let fn2 = crate::linalg::norm_sq(&full);
+    if fn2 <= 0.0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for _ in 0..samples {
+        let g = m.stochastic_gradient(w, rng);
+        acc += crate::linalg::norm_sq(&crate::linalg::sub(&g, &full));
+    }
+    (acc / samples as f64 / fn2).sqrt()
+}

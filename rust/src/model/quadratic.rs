@@ -1,0 +1,173 @@
+//! [`GaussianQuadratic`] — the theory-validation workload.
+//!
+//! `Q(w) = ½ (w − w*)ᵀ H (w − w*)` with `H = diag(λ_1 … λ_d)`,
+//! `λ_i` linearly spaced in `[µ, L]`. Then Assumptions 1–3 hold exactly
+//! with the chosen `µ, L`, and `w*` is known.
+//!
+//! The stochastic gradient is `g = ∇Q(w) + σ ‖∇Q(w)‖ · z/√d` with
+//! `z ~ N(0, I_d)`, so `E g = ∇Q(w)` (Assumption 4) and
+//! `E‖g − ∇Q‖² = σ²‖∇Q‖²` — Assumption 5 holds **with equality**, which
+//! makes the echo-rate and convergence-rate predictions sharp.
+
+use super::{CostModel, CurvatureConstants};
+use crate::linalg;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct GaussianQuadratic {
+    eigs: Vec<f64>,
+    w_star: Vec<f64>,
+    mu: f64,
+    l: f64,
+    sigma: f64,
+}
+
+impl GaussianQuadratic {
+    /// `d`-dimensional quadratic with spectrum linearly spaced in `[mu, l]`,
+    /// random optimum `w*` drawn from `N(0, I)`, and exact relative noise
+    /// `sigma`.
+    pub fn new(d: usize, mu: f64, l: f64, sigma: f64, rng: &mut Rng) -> Self {
+        assert!(d >= 1);
+        assert!(mu > 0.0 && l >= mu, "need 0 < mu <= L");
+        assert!(sigma >= 0.0);
+        let eigs: Vec<f64> = if d == 1 {
+            vec![l]
+        } else {
+            (0..d).map(|i| mu + (l - mu) * i as f64 / (d - 1) as f64).collect()
+        };
+        let w_star = rng.normal_vec(d);
+        Self { eigs, w_star, mu: if d == 1 { l } else { mu }, l, sigma }
+    }
+
+    /// Fixed optimum (for reproducible cross-language tests).
+    pub fn with_optimum(d: usize, mu: f64, l: f64, sigma: f64, w_star: Vec<f64>) -> Self {
+        assert_eq!(w_star.len(), d);
+        assert!(mu > 0.0 && l >= mu);
+        let eigs: Vec<f64> = if d == 1 {
+            vec![l]
+        } else {
+            (0..d).map(|i| mu + (l - mu) * i as f64 / (d - 1) as f64).collect()
+        };
+        Self { eigs, w_star, mu: if d == 1 { l } else { mu }, l, sigma }
+    }
+
+    pub fn eigenvalues(&self) -> &[f64] {
+        &self.eigs
+    }
+}
+
+impl CostModel for GaussianQuadratic {
+    fn dim(&self) -> usize {
+        self.eigs.len()
+    }
+
+    fn loss(&self, w: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..w.len() {
+            let e = w[i] - self.w_star[i];
+            acc += self.eigs[i] * e * e;
+        }
+        0.5 * acc
+    }
+
+    fn full_gradient(&self, w: &[f64]) -> Vec<f64> {
+        (0..w.len()).map(|i| self.eigs[i] * (w[i] - self.w_star[i])).collect()
+    }
+
+    fn stochastic_gradient(&self, w: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let mut g = self.full_gradient(w);
+        if self.sigma > 0.0 {
+            let gn = linalg::norm(&g);
+            let d = g.len();
+            let scale = self.sigma * gn / (d as f64).sqrt();
+            for gi in g.iter_mut() {
+                *gi += scale * rng.normal();
+            }
+        }
+        g
+    }
+
+    fn optimum(&self) -> Option<Vec<f64>> {
+        Some(self.w_star.clone())
+    }
+
+    fn constants(&self) -> CurvatureConstants {
+        CurvatureConstants { mu: self.mu, l: self.l, sigma: self.sigma }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{estimate_sigma, finite_diff_check};
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = Rng::new(1);
+        let m = GaussianQuadratic::new(8, 0.5, 2.0, 0.0, &mut rng);
+        let w = rng.normal_vec(8);
+        assert!(finite_diff_check(&m, &w, 1e-5) < 1e-5);
+    }
+
+    #[test]
+    fn optimum_has_zero_gradient_and_loss() {
+        let mut rng = Rng::new(2);
+        let m = GaussianQuadratic::new(5, 1.0, 3.0, 0.0, &mut rng);
+        let w = m.optimum().unwrap();
+        assert!(m.loss(&w) < 1e-12);
+        assert!(linalg::norm(&m.full_gradient(&w)) < 1e-12);
+    }
+
+    #[test]
+    fn stochastic_gradient_unbiased() {
+        let mut rng = Rng::new(3);
+        let m = GaussianQuadratic::new(4, 1.0, 2.0, 0.3, &mut rng);
+        let w = rng.normal_vec(4);
+        let full = m.full_gradient(&w);
+        let n = 20_000;
+        let mut mean = vec![0.0; 4];
+        for _ in 0..n {
+            let g = m.stochastic_gradient(&w, &mut rng);
+            for (mi, gi) in mean.iter_mut().zip(g.iter()) {
+                *mi += gi / n as f64;
+            }
+        }
+        let err = linalg::dist(&mean, &full) / linalg::norm(&full);
+        assert!(err < 0.02, "bias={err}");
+    }
+
+    #[test]
+    fn sigma_is_exact_in_expectation() {
+        let mut rng = Rng::new(4);
+        let m = GaussianQuadratic::new(16, 1.0, 2.0, 0.25, &mut rng);
+        let w = rng.normal_vec(16);
+        let s = estimate_sigma(&m, &w, 20_000, &mut rng);
+        assert!((s - 0.25).abs() < 0.01, "sigma_hat={s}");
+    }
+
+    #[test]
+    fn spectrum_bounds_match_constants() {
+        let mut rng = Rng::new(5);
+        let m = GaussianQuadratic::new(10, 0.7, 1.9, 0.0, &mut rng);
+        let c = m.constants();
+        let min = m.eigenvalues().iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = m.eigenvalues().iter().cloned().fold(0.0, f64::max);
+        assert_eq!(c.mu, min);
+        assert_eq!(c.l, max);
+    }
+
+    #[test]
+    fn gradient_descent_converges_at_quadratic_rate() {
+        let mut rng = Rng::new(6);
+        let m = GaussianQuadratic::new(12, 1.0, 4.0, 0.0, &mut rng);
+        let mut w = m.initial_w(&mut rng);
+        let eta = 2.0 / (m.constants().mu + m.constants().l);
+        for _ in 0..200 {
+            let g = m.full_gradient(&w);
+            for (wi, gi) in w.iter_mut().zip(g.iter()) {
+                *wi -= eta * gi;
+            }
+        }
+        assert!(linalg::dist(&w, &m.optimum().unwrap()) < 1e-8);
+    }
+}

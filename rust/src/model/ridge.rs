@@ -1,0 +1,209 @@
+//! [`RidgeRegression`] — ℓ2-regularized least squares over a dataset.
+//!
+//! `Q(w) = 1/(2m) ‖Xw − y‖² + (λ/2)‖w‖²`
+//!
+//! Strongly convex with `µ = λ_min(XᵀX/m) + λ`, smooth with
+//! `L = λ_max(XᵀX/m) + λ` (estimated by power iteration on the Gram
+//! operator). The stochastic gradient draws a uniform IID batch, so
+//! Assumption 4 holds exactly; σ is estimated empirically at `w⁰`.
+
+use super::{CostModel, CurvatureConstants};
+use crate::data::RegressionData;
+use crate::linalg::{self, Cholesky};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RidgeRegression {
+    data: RegressionData,
+    lambda: f64,
+    batch: usize,
+    consts: CurvatureConstants,
+    w_star: Vec<f64>,
+}
+
+impl RidgeRegression {
+    /// Build from a dataset; estimates (µ, L) via power iteration, solves
+    /// the normal equations for the exact `w*`, and estimates σ at a random
+    /// point.
+    pub fn new(data: RegressionData, lambda: f64, batch: usize, rng: &mut Rng) -> Self {
+        assert!(batch >= 1 && batch <= data.m());
+        assert!(lambda >= 0.0);
+        let d = data.d();
+        let m = data.m() as f64;
+
+        // Gram operator v ↦ (1/m) Xᵀ(Xv) + λv.
+        let gram_op = |v: &[f64]| -> Vec<f64> {
+            let mut out = data.gram_matvec(v);
+            for (o, vi) in out.iter_mut().zip(v.iter()) {
+                *o = *o / m + lambda * vi;
+            }
+            out
+        };
+        let l = linalg::power_iteration(d, gram_op, 300, rng.next_u64());
+        let mu = linalg::min_eigenvalue(d, gram_op, l, 600, rng.next_u64()).max(lambda);
+
+        // Exact optimum: (XᵀX/m + λI) w* = Xᵀy/m via dense Cholesky
+        // (d is moderate in our experiments; the normal matrix is d×d).
+        let normal = data.normal_matrix(lambda);
+        let rhs = data.xty_over_m();
+        let chol = Cholesky::factorize(&normal, d)
+            .expect("normal matrix must be SPD (lambda > 0 or full-rank X)");
+        let w_star = chol.solve(&rhs);
+
+        let mut me = Self {
+            data,
+            lambda,
+            batch,
+            consts: CurvatureConstants { mu, l, sigma: 0.0 },
+            w_star,
+        };
+        // Estimate σ at a generic point (relative deviation is roughly
+        // position-independent for regression noise scales).
+        let w0 = rng.normal_vec(d);
+        let sigma = super::estimate_sigma(&me, &w0, 200, rng);
+        me.consts.sigma = sigma;
+        me
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn data(&self) -> &RegressionData {
+        &self.data
+    }
+
+    /// Gradient over an explicit index set (shared with the XLA backend
+    /// equivalence tests).
+    pub fn gradient_on_batch(&self, w: &[f64], idx: &[usize]) -> Vec<f64> {
+        let d = self.data.d();
+        let mut g = vec![0.0; d];
+        for &i in idx {
+            let (xi, yi) = self.data.row(i);
+            let r = linalg::dot(xi, w) - yi;
+            linalg::axpy(r / idx.len() as f64, xi, &mut g);
+        }
+        linalg::axpy(self.lambda, w, &mut g);
+        g
+    }
+}
+
+impl CostModel for RidgeRegression {
+    fn dim(&self) -> usize {
+        self.data.d()
+    }
+
+    fn loss(&self, w: &[f64]) -> f64 {
+        let m = self.data.m();
+        let mut acc = 0.0;
+        for i in 0..m {
+            let (xi, yi) = self.data.row(i);
+            let r = linalg::dot(xi, w) - yi;
+            acc += r * r;
+        }
+        acc / (2.0 * m as f64) + 0.5 * self.lambda * linalg::norm_sq(w)
+    }
+
+    fn full_gradient(&self, w: &[f64]) -> Vec<f64> {
+        let idx: Vec<usize> = (0..self.data.m()).collect();
+        self.gradient_on_batch(w, &idx)
+    }
+
+    fn stochastic_gradient(&self, w: &[f64], rng: &mut Rng) -> Vec<f64> {
+        // IID batch (with replacement — exactly iid as Assumption 4 wants).
+        let idx: Vec<usize> =
+            (0..self.batch).map(|_| rng.range(0, self.data.m())).collect();
+        self.gradient_on_batch(w, &idx)
+    }
+
+    fn optimum(&self) -> Option<Vec<f64>> {
+        Some(self.w_star.clone())
+    }
+
+    fn constants(&self) -> CurvatureConstants {
+        self.consts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_linreg;
+    use crate::model::finite_diff_check;
+
+    fn fixture(seed: u64) -> (RidgeRegression, Rng) {
+        let mut rng = Rng::new(seed);
+        let data = make_linreg(16, 200, 0.1, &mut rng);
+        let m = RidgeRegression::new(data, 0.1, 16, &mut rng);
+        (m, rng)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (m, mut rng) = fixture(1);
+        let w = rng.normal_vec(16);
+        assert!(finite_diff_check(&m, &w, 1e-5) < 1e-4);
+    }
+
+    #[test]
+    fn optimum_is_stationary() {
+        let (m, _) = fixture(2);
+        let w = m.optimum().unwrap();
+        let g = m.full_gradient(&w);
+        assert!(
+            linalg::norm(&g) < 1e-8 * (1.0 + linalg::norm(&w)),
+            "‖∇Q(w*)‖ = {}",
+            linalg::norm(&g)
+        );
+    }
+
+    #[test]
+    fn mu_le_l_and_positive() {
+        let (m, _) = fixture(3);
+        let c = m.constants();
+        assert!(c.mu > 0.0);
+        assert!(c.mu <= c.l * (1.0 + 1e-9), "mu={} l={}", c.mu, c.l);
+    }
+
+    #[test]
+    fn stochastic_gradient_unbiased() {
+        let (m, mut rng) = fixture(4);
+        let w = rng.normal_vec(16);
+        let full = m.full_gradient(&w);
+        let trials = 4000;
+        let mut mean = vec![0.0; 16];
+        for _ in 0..trials {
+            let g = m.stochastic_gradient(&w, &mut rng);
+            for (a, b) in mean.iter_mut().zip(g.iter()) {
+                *a += b / trials as f64;
+            }
+        }
+        let rel = linalg::dist(&mean, &full) / linalg::norm(&full);
+        assert!(rel < 0.05, "bias={rel}");
+    }
+
+    #[test]
+    fn full_batch_equals_full_gradient() {
+        let (m, mut rng) = fixture(5);
+        let w = rng.normal_vec(16);
+        let idx: Vec<usize> = (0..m.data().m()).collect();
+        let a = m.gradient_on_batch(&w, &idx);
+        let b = m.full_gradient(&w);
+        assert!(linalg::dist(&a, &b) < 1e-12);
+    }
+
+    #[test]
+    fn loss_decreases_under_gd() {
+        let (m, mut rng) = fixture(6);
+        let mut w = rng.normal_vec(16);
+        let eta = 1.0 / m.constants().l;
+        let l0 = m.loss(&w);
+        for _ in 0..50 {
+            let g = m.full_gradient(&w);
+            for (wi, gi) in w.iter_mut().zip(g.iter()) {
+                *wi -= eta * gi;
+            }
+        }
+        assert!(m.loss(&w) < l0 * 0.1);
+    }
+}

@@ -1,0 +1,215 @@
+//! [`SoftmaxRegression`] — ℓ2-regularized multinomial logistic regression.
+//!
+//! Parameter is the flattened `c × d` weight matrix (`dim = c·d`).
+//!
+//! `Q(W) = (1/m) Σ_i [ logsumexp(W x_i) − (W x_i)_{y_i} ] + (λ/2)‖W‖²`
+//!
+//! Used as the third domain workload (multi-class sensor classification, the
+//! kind of task the paper's IIoT motivation describes).
+
+use super::{CostModel, CurvatureConstants};
+use crate::data::RegressionData;
+use crate::linalg;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SoftmaxRegression {
+    data: RegressionData,
+    classes: usize,
+    lambda: f64,
+    batch: usize,
+    consts: CurvatureConstants,
+    w_star: Vec<f64>,
+}
+
+impl SoftmaxRegression {
+    pub fn new(
+        data: RegressionData,
+        classes: usize,
+        lambda: f64,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(classes >= 2);
+        assert!(lambda > 0.0);
+        assert!(batch >= 1 && batch <= data.m());
+        let d = data.d();
+        let m = data.m() as f64;
+        let gram_op = |v: &[f64]| -> Vec<f64> {
+            let mut out = data.gram_matvec(v);
+            for o in out.iter_mut() {
+                *o /= m;
+            }
+            out
+        };
+        let gram_top = linalg::power_iteration(d, gram_op, 300, rng.next_u64());
+        // Softmax Hessian block norm is ≤ 1/2 · Gram.
+        let l = gram_top / 2.0 + lambda;
+        let mu = lambda;
+        let mut me = Self {
+            data,
+            classes,
+            lambda,
+            batch,
+            consts: CurvatureConstants { mu, l, sigma: 0.0 },
+            w_star: vec![0.0; classes * d],
+        };
+        me.w_star = me.fit_optimum(3000, 1e-9);
+        let w0 = rng.normal_vec(classes * d);
+        me.consts.sigma = super::estimate_sigma(&me, &w0, 100, rng);
+        me
+    }
+
+    fn logits(&self, w: &[f64], xi: &[f64]) -> Vec<f64> {
+        let d = self.data.d();
+        (0..self.classes).map(|k| linalg::dot(&w[k * d..(k + 1) * d], xi)).collect()
+    }
+
+    fn softmax(logits: &[f64]) -> Vec<f64> {
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|z| (z - mx).exp()).collect();
+        let s: f64 = exps.iter().sum();
+        exps.into_iter().map(|e| e / s).collect()
+    }
+
+    pub fn gradient_on_batch(&self, w: &[f64], idx: &[usize]) -> Vec<f64> {
+        let d = self.data.d();
+        let mut g = vec![0.0; self.classes * d];
+        for &i in idx {
+            let (xi, yi) = self.data.row(i);
+            let p = Self::softmax(&self.logits(w, xi));
+            for k in 0..self.classes {
+                let coef = (p[k] - if k == yi as usize { 1.0 } else { 0.0 })
+                    / idx.len() as f64;
+                linalg::axpy(coef, xi, &mut g[k * d..(k + 1) * d]);
+            }
+        }
+        linalg::axpy(self.lambda, w, &mut g);
+        g
+    }
+
+    pub fn fit_optimum(&self, iters: usize, tol: f64) -> Vec<f64> {
+        let mut w = vec![0.0; self.classes * self.data.d()];
+        let eta = 1.0 / self.consts.l;
+        for _ in 0..iters {
+            let g = self.full_gradient(&w);
+            if linalg::norm(&g) < tol {
+                break;
+            }
+            for (wi, gi) in w.iter_mut().zip(g.iter()) {
+                *wi -= eta * gi;
+            }
+        }
+        w
+    }
+
+    /// Classification accuracy over the dataset (sanity metric for examples).
+    pub fn accuracy(&self, w: &[f64]) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..self.data.m() {
+            let (xi, yi) = self.data.row(i);
+            let logits = self.logits(w, xi);
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == yi as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / self.data.m() as f64
+    }
+}
+
+impl CostModel for SoftmaxRegression {
+    fn dim(&self) -> usize {
+        self.classes * self.data.d()
+    }
+
+    fn loss(&self, w: &[f64]) -> f64 {
+        let m = self.data.m();
+        let mut acc = 0.0;
+        for i in 0..m {
+            let (xi, yi) = self.data.row(i);
+            let logits = self.logits(w, xi);
+            let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = mx + logits.iter().map(|z| (z - mx).exp()).sum::<f64>().ln();
+            acc += lse - logits[yi as usize];
+        }
+        acc / m as f64 + 0.5 * self.lambda * linalg::norm_sq(w)
+    }
+
+    fn full_gradient(&self, w: &[f64]) -> Vec<f64> {
+        let idx: Vec<usize> = (0..self.data.m()).collect();
+        self.gradient_on_batch(w, &idx)
+    }
+
+    fn stochastic_gradient(&self, w: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let idx: Vec<usize> =
+            (0..self.batch).map(|_| rng.range(0, self.data.m())).collect();
+        self.gradient_on_batch(w, &idx)
+    }
+
+    fn optimum(&self) -> Option<Vec<f64>> {
+        Some(self.w_star.clone())
+    }
+
+    fn constants(&self) -> CurvatureConstants {
+        self.consts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_blobs;
+    use crate::model::finite_diff_check;
+
+    fn fixture(seed: u64) -> (SoftmaxRegression, Rng) {
+        let mut rng = Rng::new(seed);
+        let data = make_blobs(6, 240, 3, 3.0, &mut rng);
+        let m = SoftmaxRegression::new(data, 3, 0.05, 16, &mut rng);
+        (m, rng)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (m, mut rng) = fixture(1);
+        let w = rng.normal_vec(m.dim());
+        assert!(finite_diff_check(&m, &w, 1e-5) < 1e-4);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = SoftmaxRegression::softmax(&[1.0, 2.0, 3.0, -100.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn optimum_is_stationary_and_accurate() {
+        let (m, _) = fixture(2);
+        let w = m.optimum().unwrap();
+        assert!(linalg::norm(&m.full_gradient(&w)) < 1e-5);
+        // Separated blobs ⇒ high train accuracy at the optimum.
+        assert!(m.accuracy(&w) > 0.85, "acc={}", m.accuracy(&w));
+    }
+
+    #[test]
+    fn stochastic_gradient_unbiased() {
+        let (m, mut rng) = fixture(3);
+        let w = rng.normal_vec(m.dim());
+        let full = m.full_gradient(&w);
+        let trials = 2000;
+        let mut mean = vec![0.0; m.dim()];
+        for _ in 0..trials {
+            let g = m.stochastic_gradient(&w, &mut rng);
+            for (a, b) in mean.iter_mut().zip(g.iter()) {
+                *a += b / trials as f64;
+            }
+        }
+        assert!(linalg::dist(&mean, &full) / linalg::norm(&full) < 0.08);
+    }
+}

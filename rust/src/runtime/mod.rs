@@ -1,0 +1,347 @@
+//! XLA/PJRT runtime: load the AOT-compiled gradient computations emitted by
+//! `python/compile/aot.py` (HLO **text** — see `/opt/xla-example/README.md`
+//! for why text, not serialized protos) and run them from the rust hot
+//! path. Python never runs at request time: `make artifacts` is the only
+//! python invocation, and the resulting `.hlo.txt` files are self-contained.
+//!
+//! The concrete backends ([`XlaQuadraticBackend`], [`XlaRidgeBackend`])
+//! implement [`crate::grad::GradientBackend`] so a [`crate::sim::Simulation`]
+//! can run with XLA-computed gradients; equivalence against the native
+//! backends is tested in `rust/tests/backend_equivalence.rs`.
+
+use crate::data::RegressionData;
+use crate::grad::GradientBackend;
+use crate::rng::Rng;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Typed host-side argument for an executable.
+pub enum ArgValue {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl ArgValue {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            ArgValue::F32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+            ArgValue::I32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+        };
+        Ok(lit)
+    }
+}
+
+/// A compiled HLO module on the PJRT CPU client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with the given arguments; returns the flattened f32 outputs
+    /// (the python side lowers with `return_tuple=True`, so the result is
+    /// always a tuple, possibly of one element).
+    pub fn run(&self, args: &[ArgValue]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// The PJRT CPU client plus an artifact directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU runtime rooted at `artifacts_dir` (usually
+    /// `artifacts/`).
+    pub fn cpu<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifacts_dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact by file name.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.artifacts_dir.join(name);
+        let text_path = path
+            .to_str()
+            .context("artifact path is not valid UTF-8")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&text_path)
+            .with_context(|| format!("loading HLO text from {text_path} (run `make artifacts`?)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, path })
+    }
+
+    /// True if the artifact file exists (tests skip gracefully otherwise).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts_dir.join(name).exists()
+    }
+}
+
+fn f32v(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+fn f64v(xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| x as f64).collect()
+}
+
+/// XLA-backed gradient for the [`crate::model::GaussianQuadratic`] model:
+/// the artifact computes `g = H(w − w*) + σ‖H(w−w*)‖ z/√d` given
+/// `(eigs, w_star, w, z)`; the noise vector `z` is drawn host-side so the
+/// backend matches the native model's noise law exactly.
+pub struct XlaQuadraticBackend {
+    exe: Rc<Executable>,
+    eigs: Vec<f32>,
+    w_star: Vec<f32>,
+    sigma: f32,
+    d: usize,
+}
+
+impl XlaQuadraticBackend {
+    /// Artifact name convention: `quadratic_grad_d{d}.hlo.txt`.
+    pub fn artifact_name(d: usize) -> String {
+        format!("quadratic_grad_d{d}.hlo.txt")
+    }
+
+    pub fn new(
+        exe: Rc<Executable>,
+        eigs: &[f64],
+        w_star: &[f64],
+        sigma: f64,
+    ) -> Self {
+        assert_eq!(eigs.len(), w_star.len());
+        Self {
+            exe,
+            eigs: f32v(eigs),
+            w_star: f32v(w_star),
+            sigma: sigma as f32,
+            d: eigs.len(),
+        }
+    }
+}
+
+impl GradientBackend for XlaQuadraticBackend {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn gradient(&mut self, w: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let d = self.d as i64;
+        let z: Vec<f32> = (0..self.d).map(|_| rng.normal() as f32).collect();
+        let sigma_arr = vec![self.sigma];
+        let out = self
+            .exe
+            .run(&[
+                ArgValue::F32(self.eigs.clone(), vec![d]),
+                ArgValue::F32(self.w_star.clone(), vec![d]),
+                ArgValue::F32(f32v(w), vec![d]),
+                ArgValue::F32(z, vec![d]),
+                ArgValue::F32(sigma_arr, vec![]),
+            ])
+            .expect("XLA quadratic gradient execution failed");
+        f64v(&out[0])
+    }
+}
+
+/// XLA-backed stochastic gradient for ridge regression: the artifact
+/// computes the fused Pallas batch-gradient `Xᵀ(Xw − y)/b + λw` given
+/// `(w, xb, yb, lambda)`; the batch is sampled host-side (IID with
+/// replacement, matching the native model).
+pub struct XlaRidgeBackend {
+    exe: Rc<Executable>,
+    data: Rc<RegressionData>,
+    batch: usize,
+    lambda: f32,
+}
+
+impl XlaRidgeBackend {
+    /// Artifact name convention: `ridge_grad_d{d}_b{batch}.hlo.txt`.
+    pub fn artifact_name(d: usize, batch: usize) -> String {
+        format!("ridge_grad_d{d}_b{batch}.hlo.txt")
+    }
+
+    pub fn new(
+        exe: Rc<Executable>,
+        data: Rc<RegressionData>,
+        batch: usize,
+        lambda: f64,
+    ) -> Self {
+        Self { exe, data, batch, lambda: lambda as f32 }
+    }
+}
+
+impl GradientBackend for XlaRidgeBackend {
+    fn dim(&self) -> usize {
+        self.data.d()
+    }
+
+    fn gradient(&mut self, w: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let d = self.data.d();
+        let b = self.batch;
+        let mut xb = Vec::with_capacity(b * d);
+        let mut yb = Vec::with_capacity(b);
+        for _ in 0..b {
+            let i = rng.range(0, self.data.m());
+            let (xi, yi) = self.data.row(i);
+            xb.extend(xi.iter().map(|&v| v as f32));
+            yb.push(yi as f32);
+        }
+        let out = self
+            .exe
+            .run(&[
+                ArgValue::F32(f32v(w), vec![d as i64]),
+                ArgValue::F32(xb, vec![b as i64, d as i64]),
+                ArgValue::F32(yb, vec![b as i64]),
+                ArgValue::F32(vec![self.lambda], vec![]),
+            ])
+            .expect("XLA ridge gradient execution failed");
+        f64v(&out[0])
+    }
+}
+
+/// XLA-backed softmax-regression stochastic gradient: the artifact
+/// computes the fused Pallas softmax gradient given `(W, xb, onehot, λ)`
+/// and returns the flattened `(c·d,)` gradient. Batch + one-hot encoding
+/// happen host-side (matching the native model's IID sampling).
+pub struct XlaSoftmaxBackend {
+    exe: Rc<Executable>,
+    data: Rc<RegressionData>,
+    classes: usize,
+    batch: usize,
+    lambda: f32,
+}
+
+impl XlaSoftmaxBackend {
+    /// Artifact name convention: `softmax_grad_c{c}_d{d}_b{b}.hlo.txt`.
+    pub fn artifact_name(c: usize, d: usize, batch: usize) -> String {
+        format!("softmax_grad_c{c}_d{d}_b{batch}.hlo.txt")
+    }
+
+    pub fn new(
+        exe: Rc<Executable>,
+        data: Rc<RegressionData>,
+        classes: usize,
+        batch: usize,
+        lambda: f64,
+    ) -> Self {
+        Self { exe, data, classes, batch, lambda: lambda as f32 }
+    }
+}
+
+impl GradientBackend for XlaSoftmaxBackend {
+    fn dim(&self) -> usize {
+        self.classes * self.data.d()
+    }
+
+    fn gradient(&mut self, w: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let d = self.data.d();
+        let c = self.classes;
+        let b = self.batch;
+        assert_eq!(w.len(), c * d);
+        let mut xb = Vec::with_capacity(b * d);
+        let mut onehot = vec![0.0f32; b * c];
+        for row in 0..b {
+            let i = rng.range(0, self.data.m());
+            let (xi, yi) = self.data.row(i);
+            xb.extend(xi.iter().map(|&v| v as f32));
+            onehot[row * c + yi as usize] = 1.0;
+        }
+        let out = self
+            .exe
+            .run(&[
+                ArgValue::F32(f32v(w), vec![c as i64, d as i64]),
+                ArgValue::F32(xb, vec![b as i64, d as i64]),
+                ArgValue::F32(onehot, vec![b as i64, c as i64]),
+                ArgValue::F32(vec![self.lambda], vec![]),
+            ])
+            .expect("XLA softmax gradient execution failed");
+        f64v(&out[0])
+    }
+}
+
+/// Flattened-parameter transformer LM step artifact wrapper: given
+/// `(params, tokens)` returns `(loss, grad)`. Used by `examples/train_lm.rs`.
+pub struct XlaLmStep {
+    exe: Rc<Executable>,
+    pub n_params: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl XlaLmStep {
+    /// Artifact name convention matches `python/compile/aot.py`.
+    pub fn artifact_name(vocab: usize, seq: usize, layers: usize, dmodel: usize, batch: usize) -> String {
+        format!("lm_grad_v{vocab}_t{seq}_l{layers}_e{dmodel}_b{batch}.hlo.txt")
+    }
+
+    pub fn new(exe: Rc<Executable>, n_params: usize, batch: usize, seq_len: usize) -> Self {
+        Self { exe, n_params, batch, seq_len }
+    }
+
+    /// One loss+grad evaluation. `tokens` is `batch × (seq_len + 1)` row-major
+    /// (inputs and shifted targets are sliced inside the graph).
+    pub fn loss_and_grad(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        assert_eq!(params.len(), self.n_params);
+        assert_eq!(tokens.len(), self.batch * (self.seq_len + 1));
+        let out = self.exe.run(&[
+            ArgValue::F32(params.to_vec(), vec![self.n_params as i64]),
+            ArgValue::I32(tokens.to_vec(), vec![self.batch as i64, (self.seq_len + 1) as i64]),
+        ])?;
+        let loss = out[0][0];
+        Ok((loss, out[1].clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/ and skip when
+    // artifacts/ is missing; here we only check pure host-side logic.
+
+    #[test]
+    fn artifact_names_stable() {
+        assert_eq!(
+            XlaQuadraticBackend::artifact_name(100),
+            "quadratic_grad_d100.hlo.txt"
+        );
+        assert_eq!(XlaRidgeBackend::artifact_name(50, 32), "ridge_grad_d50_b32.hlo.txt");
+        assert_eq!(
+            XlaSoftmaxBackend::artifact_name(3, 6, 16),
+            "softmax_grad_c3_d6_b16.hlo.txt"
+        );
+        assert_eq!(
+            XlaLmStep::artifact_name(64, 32, 2, 64, 8),
+            "lm_grad_v64_t32_l2_e64_b8.hlo.txt"
+        );
+    }
+
+    #[test]
+    fn f32_conversions() {
+        let a = vec![1.5f64, -2.25];
+        assert_eq!(f64v(&f32v(&a)), a);
+    }
+
+    #[test]
+    fn missing_artifact_reported() {
+        if let Ok(rt) = PjrtRuntime::cpu("artifacts") {
+            assert!(!rt.has_artifact("definitely_missing.hlo.txt"));
+            assert!(rt.load("definitely_missing.hlo.txt").is_err());
+        }
+    }
+}

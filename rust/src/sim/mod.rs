@@ -1,0 +1,565 @@
+//! The synchronous round engine: computation → communication → aggregation
+//! (Algorithm 1, outer loop), over the radio substrate, with Byzantine
+//! workers injected per the experiment config.
+pub mod multihop;
+
+
+use crate::byzantine::{Attack, AttackCtx};
+use crate::config::{ExperimentConfig, ModelKind};
+use crate::coordinator::ParameterServer;
+use crate::data;
+use crate::grad::{GradientBackend, NativeBackend};
+use crate::linalg;
+use crate::model::{
+    CostModel, GaussianQuadratic, LogisticRegression, RidgeRegression, SoftmaxRegression,
+};
+use crate::radio::{RadioNetwork, TdmaSchedule};
+use crate::rng::Rng;
+use crate::wire::Payload;
+use crate::worker::EchoWorker;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-round measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// `Q(w^t)` (full-dataset loss at the *start* of the round).
+    pub loss: f64,
+    /// `‖w^t − w*‖²` when the optimum is known.
+    pub dist_sq: Option<f64>,
+    /// `‖∇Q(w^t)‖`.
+    pub grad_norm: f64,
+    /// Worker→server bits this round.
+    pub uplink_bits: u64,
+    /// Echo / raw frame counts among *fault-free* workers.
+    pub echo_count: usize,
+    pub raw_count: usize,
+    /// Byzantine workers exposed so far (cumulative).
+    pub exposed_cum: usize,
+}
+
+/// Wall-clock totals per phase (feeds the §Perf profile).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimings {
+    pub grad_ns: u128,
+    pub comm_ns: u128,
+    pub agg_ns: u128,
+}
+
+/// A fully-wired experiment.
+pub struct Simulation {
+    pub cfg: ExperimentConfig,
+    model: Arc<dyn CostModel>,
+    server: ParameterServer,
+    /// Fault-free workers (`None` at Byzantine ids).
+    workers: Vec<Option<EchoWorker>>,
+    backends: Vec<Option<Box<dyn GradientBackend>>>,
+    attacks: BTreeMap<usize, Box<dyn Attack>>,
+    radio: RadioNetwork,
+    w: Vec<f64>,
+    eta: f64,
+    r: f64,
+    byz_ids: Vec<usize>,
+    worker_rngs: Vec<Rng>,
+    attack_rng: Rng,
+    sched_rng: Rng,
+    round: usize,
+    records: Vec<RoundRecord>,
+    pub timings: PhaseTimings,
+}
+
+impl Simulation {
+    /// Build the model described by the config (shared by examples/tests).
+    pub fn build_model(cfg: &ExperimentConfig, rng: &mut Rng) -> Arc<dyn CostModel> {
+        match cfg.model {
+            ModelKind::Quadratic => {
+                Arc::new(GaussianQuadratic::new(cfg.d, cfg.mu, cfg.l, cfg.sigma, rng))
+            }
+            ModelKind::Ridge => {
+                let ds = data::make_linreg(cfg.d, cfg.dataset_m, cfg.noise, rng);
+                Arc::new(RidgeRegression::new(ds, cfg.lambda, cfg.batch, rng))
+            }
+            ModelKind::Logistic => {
+                let ds = data::make_logreg(cfg.d, cfg.dataset_m, 1.0, rng);
+                Arc::new(LogisticRegression::new(ds, cfg.lambda, cfg.batch, rng))
+            }
+            ModelKind::Softmax => {
+                let ds = data::make_blobs(cfg.d, cfg.dataset_m, cfg.classes, 3.0, rng);
+                Arc::new(SoftmaxRegression::new(ds, cfg.classes, cfg.lambda, cfg.batch, rng))
+            }
+        }
+    }
+
+    /// Wire the experiment with native (pure-rust) gradient backends.
+    pub fn build(cfg: &ExperimentConfig) -> Result<Simulation, String> {
+        let mut rng = Rng::new(cfg.seed);
+        let model = Self::build_model(cfg, &mut rng);
+        let backends: Vec<Option<Box<dyn GradientBackend>>> = {
+            let byz = cfg.byz_placement.place(cfg.n, cfg.b, &mut rng.split(1));
+            (0..cfg.n)
+                .map(|i| {
+                    if byz.contains(&i) {
+                        None
+                    } else {
+                        Some(Box::new(NativeBackend::new(model.clone()))
+                            as Box<dyn GradientBackend>)
+                    }
+                })
+                .collect()
+        };
+        Self::build_with(cfg, model, backends)
+    }
+
+    /// Wire the experiment with explicit per-worker backends (`None` slots
+    /// become Byzantine). Used by the XLA-backend examples and tests.
+    /// `model` is still needed for loss/optimum measurement; with an XLA
+    /// backend it should be the numerically-equivalent native model.
+    pub fn build_with(
+        cfg: &ExperimentConfig,
+        model: Arc<dyn CostModel>,
+        backends: Vec<Option<Box<dyn GradientBackend>>>,
+    ) -> Result<Simulation, String> {
+        cfg.validate()?;
+        assert_eq!(backends.len(), cfg.n);
+        let byz_ids: Vec<usize> =
+            backends.iter().enumerate().filter(|(_, b)| b.is_none()).map(|(i, _)| i).collect();
+        if byz_ids.len() != cfg.b {
+            return Err(format!(
+                "backend vector has {} Byzantine slots but config says b = {}",
+                byz_ids.len(),
+                cfg.b
+            ));
+        }
+
+        // For data-driven models the effective constants come from the
+        // model (estimated); for the quadratic they equal the config.
+        let consts = model.constants();
+        let mut theory_cfg = cfg.clone();
+        theory_cfg.mu = consts.mu;
+        theory_cfg.l = consts.l;
+        theory_cfg.sigma = consts.sigma;
+        let r = theory_cfg.try_resolve_r()?;
+        let eta = theory_cfg.try_resolve_eta()?;
+
+        let d = model.dim();
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED_0001);
+        let w0 = model.initial_w(&mut rng);
+        let workers: Vec<Option<EchoWorker>> = (0..cfg.n)
+            .map(|i| {
+                if byz_ids.contains(&i) {
+                    None
+                } else {
+                    Some(EchoWorker::new(i, d, r, cfg.eps_li))
+                }
+            })
+            .collect();
+        let attacks: BTreeMap<usize, Box<dyn Attack>> =
+            byz_ids.iter().map(|&i| (i, cfg.attack.build())).collect();
+        let worker_rngs: Vec<Rng> = (0..cfg.n).map(|i| rng.split(100 + i as u64)).collect();
+
+        Ok(Simulation {
+            server: ParameterServer::new(cfg.n, cfg.f, d, cfg.aggregator),
+            workers,
+            backends,
+            attacks,
+            radio: RadioNetwork::new(cfg.n, cfg.encoding()),
+            w: w0,
+            eta,
+            r,
+            byz_ids,
+            worker_rngs,
+            attack_rng: rng.split(7),
+            sched_rng: rng.split(8),
+            round: 0,
+            records: Vec::new(),
+            timings: PhaseTimings::default(),
+            model,
+            cfg: cfg.clone(),
+        })
+    }
+
+    pub fn model(&self) -> &Arc<dyn CostModel> {
+        &self.model
+    }
+
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+
+    pub fn r(&self) -> f64 {
+        self.r
+    }
+
+    pub fn byzantine_ids(&self) -> &[usize] {
+        &self.byz_ids
+    }
+
+    pub fn current_w(&self) -> &[f64] {
+        &self.w
+    }
+
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    pub fn radio(&self) -> &RadioNetwork {
+        &self.radio
+    }
+
+    pub fn server(&self) -> &ParameterServer {
+        &self.server
+    }
+
+    /// Execute one synchronous round; returns its record.
+    pub fn step(&mut self) -> RoundRecord {
+        let cfg_n = self.cfg.n;
+        // Pre-update measurements at w^t.
+        let loss = self.model.loss(&self.w);
+        let full_grad_at_w = self.model.full_gradient(&self.w);
+        let dist_sq = self.model.optimum().map(|o| {
+            let d = linalg::dist(&self.w, &o);
+            d * d
+        });
+
+        // ---- Computation phase -------------------------------------------------
+        // Server broadcasts w^t; workers compute local stochastic gradients
+        // on the *received* (possibly f32-quantized) parameter.
+        let t0 = Instant::now();
+        let w_recv = self.radio.downlink(&self.w);
+        let mut honest_grads: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+        for i in 0..cfg_n {
+            if let Some(backend) = self.backends[i].as_mut() {
+                let g = backend.gradient(&w_recv, &mut self.worker_rngs[i]);
+                honest_grads.insert(i, g);
+            }
+        }
+        // Omniscient adversaries know the true gradient at the received w.
+        let true_grad = self.model.full_gradient(&w_recv);
+        for (i, g) in &honest_grads {
+            self.workers[*i].as_mut().unwrap().begin_round(g.clone());
+        }
+        self.timings.grad_ns += t0.elapsed().as_nanos();
+
+        // ---- Communication phase -----------------------------------------------
+        let t1 = Instant::now();
+        if self.cfg.shuffle_slots {
+            self.radio.schedule = TdmaSchedule::shuffled(cfg_n, &mut self.sched_rng);
+        }
+        self.server.begin_round();
+        let schedule = self.radio.schedule.clone();
+        let mut overheard: Vec<(usize, Payload)> = Vec::with_capacity(cfg_n);
+        let mut echo_count = 0usize;
+        let mut raw_count = 0usize;
+        {
+            let mut round = self.radio.begin_round();
+            for slot in 0..cfg_n {
+                let owner = schedule.owner(slot);
+                let frame: Option<Payload> = if let Some(att) = self.attacks.get_mut(&owner) {
+                    let ctx = AttackCtx {
+                        id: owner,
+                        w: &w_recv,
+                        true_grad: &true_grad,
+                        honest_grads: &honest_grads,
+                        overheard: &overheard,
+                        n: cfg_n,
+                        f: self.cfg.f,
+                        round: self.round,
+                    };
+                    att.frame(&ctx, &mut self.attack_rng)
+                } else {
+                    let w = self.workers[owner].as_mut().unwrap();
+                    if let Some(k) = self.cfg.topk {
+                        // eSGD-style baseline: top-k sparsified gradient.
+                        w.stats.raw_rounds += 1;
+                        Some(crate::wire::top_k_sparsify(w.local_gradient().unwrap(), k))
+                    } else if self.cfg.echo_enabled {
+                        Some(w.transmit())
+                    } else {
+                        // Gupta–Vaidya CGC baseline: raw broadcast always.
+                        w.stats.raw_rounds += 1;
+                        Some(Payload::Raw(w.local_gradient().unwrap().to_vec()))
+                    }
+                };
+                match frame {
+                    None => {
+                        round.silence(slot);
+                        self.server.on_silence(owner);
+                    }
+                    Some(p) => {
+                        let (delivered, _bits) = round.broadcast(slot, owner, &p);
+                        if !self.attacks.contains_key(&owner) {
+                            match &delivered {
+                                Payload::Echo { .. } => echo_count += 1,
+                                _ => raw_count += 1,
+                            }
+                        }
+                        self.server.on_frame(owner, &delivered);
+                        if self.cfg.echo_enabled {
+                            for i in 0..cfg_n {
+                                if i != owner {
+                                    if let Some(wk) = self.workers[i].as_mut() {
+                                        wk.overhear(owner, &delivered);
+                                    }
+                                }
+                            }
+                        }
+                        overheard.push((owner, delivered));
+                    }
+                }
+            }
+            round.finish();
+        }
+        self.timings.comm_ns += t1.elapsed().as_nanos();
+
+        // ---- Aggregation phase -------------------------------------------------
+        let t2 = Instant::now();
+        let g_t = self.server.aggregate_tracked();
+        linalg::axpy(-self.eta, &g_t, &mut self.w);
+        self.timings.agg_ns += t2.elapsed().as_nanos();
+
+        let rec = RoundRecord {
+            round: self.round,
+            loss,
+            dist_sq,
+            grad_norm: linalg::norm(&full_grad_at_w),
+            uplink_bits: *self.radio.meter.uplink_history.last().unwrap(),
+            echo_count,
+            raw_count,
+            exposed_cum: self.server.exposed().len(),
+        };
+        self.round += 1;
+        self.records.push(rec);
+        rec
+    }
+
+    /// Run all configured rounds.
+    pub fn run(&mut self) -> Vec<RoundRecord> {
+        for _ in 0..self.cfg.rounds {
+            self.step();
+        }
+        self.records.clone()
+    }
+
+    /// Total echo rate among fault-free workers so far.
+    pub fn echo_rate(&self) -> f64 {
+        let (mut e, mut r) = (0u64, 0u64);
+        for w in self.workers.iter().flatten() {
+            e += w.stats.echo_rounds;
+            r += w.stats.raw_rounds;
+        }
+        if e + r == 0 {
+            0.0
+        } else {
+            e as f64 / (e + r) as f64
+        }
+    }
+
+    /// Fraction of uplink bits saved relative to the all-raw baseline
+    /// (every worker broadcasting its full gradient every round — what
+    /// Krum/CGC/prior algorithms cost on this radio).
+    pub fn comm_savings(&self) -> f64 {
+        let rounds = self.radio.meter.uplink_history.len() as u64;
+        if rounds == 0 {
+            return 0.0;
+        }
+        let raw_bits =
+            crate::wire::raw_gradient_bits(self.model.dim(), self.cfg.encoding());
+        let baseline = rounds * self.cfg.n as u64 * raw_bits;
+        1.0 - self.radio.meter.total_uplink() as f64 / baseline as f64
+    }
+
+    /// Final squared distance to the optimum (if known).
+    pub fn final_dist_sq(&self) -> Option<f64> {
+        self.model.optimum().map(|o| {
+            let d = linalg::dist(&self.w, &o);
+            d * d
+        })
+    }
+
+    /// Realized theory parameters (using the actual b of this execution).
+    pub fn realized_theory(&self) -> crate::analysis::TheoryParams {
+        let c = self.model.constants();
+        crate::analysis::TheoryParams {
+            n: self.cfg.n,
+            f: self.cfg.f,
+            h: self.cfg.n - self.byz_ids.len(),
+            b: self.byz_ids.len(),
+            l: c.l,
+            mu: c.mu,
+            sigma: c.sigma,
+            r: self.r,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::byzantine::AttackKind;
+    use crate::coordinator::Aggregator;
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 12;
+        cfg.f = 1;
+        cfg.b = 1;
+        cfg.d = 30;
+        cfg.rounds = 50;
+        cfg.sigma = 0.05;
+        cfg.seed = 7;
+        cfg
+    }
+
+    #[test]
+    fn fault_free_quadratic_converges() {
+        let mut cfg = quick_cfg();
+        cfg.b = 0;
+        cfg.f = 0;
+        cfg.attack = AttackKind::None;
+        cfg.rounds = 400;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        let recs = sim.run();
+        let first = recs.first().unwrap().dist_sq.unwrap();
+        let last = sim.final_dist_sq().unwrap();
+        assert!(last < first * 1e-3, "no convergence: {first} → {last}");
+    }
+
+    #[test]
+    fn converges_under_omniscient_attack() {
+        let mut cfg = quick_cfg();
+        cfg.rounds = 600;
+        cfg.attack = AttackKind::Omniscient;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        let recs = sim.run();
+        let first = recs.first().unwrap().dist_sq.unwrap();
+        let last = sim.final_dist_sq().unwrap();
+        assert!(last < first * 1e-2, "no convergence under attack: {first} → {last}");
+    }
+
+    #[test]
+    fn echo_saves_bits_vs_baseline() {
+        let mut cfg = quick_cfg();
+        cfg.sigma = 0.02; // low variance ⇒ echoes frequent
+        cfg.rounds = 30;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        sim.run();
+        assert!(sim.echo_rate() > 0.2, "echo rate {}", sim.echo_rate());
+        assert!(sim.comm_savings() > 0.1, "savings {}", sim.comm_savings());
+
+        // Baseline (echo disabled): zero echoes, ~zero savings.
+        let mut cfg2 = cfg.clone();
+        cfg2.echo_enabled = false;
+        let mut sim2 = Simulation::build(&cfg2).unwrap();
+        sim2.run();
+        assert_eq!(sim2.echo_rate(), 0.0);
+        assert!(sim2.comm_savings().abs() < 0.01);
+    }
+
+    #[test]
+    fn contraction_matches_theory_rate() {
+        // E‖w^{t+1} − w*‖² ≤ ρ‖w^t − w*‖² with the *realized* constants.
+        let mut cfg = quick_cfg();
+        cfg.rounds = 200;
+        cfg.attack = AttackKind::LargeNorm;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        let recs = sim.run();
+        let theory = sim.realized_theory();
+        let rho = theory.rho(sim.eta());
+        assert!(rho < 1.0);
+        // Empirical per-round contraction (geometric mean over the run).
+        let d0 = recs.first().unwrap().dist_sq.unwrap();
+        let dt = sim.final_dist_sq().unwrap();
+        let emp_rho = (dt / d0).powf(1.0 / cfg.rounds as f64);
+        assert!(
+            emp_rho <= rho + 0.05,
+            "empirical ρ = {emp_rho} exceeds theoretical ρ = {rho}"
+        );
+    }
+
+    #[test]
+    fn mean_aggregator_fails_where_cgc_survives() {
+        let mut base = quick_cfg();
+        base.rounds = 300;
+        base.attack = AttackKind::LargeNorm;
+        base.n = 11;
+        base.f = 1;
+        base.b = 1;
+
+        let mut cgc = base.clone();
+        cgc.aggregator = Aggregator::CgcSum;
+        let mut sim_c = Simulation::build(&cgc).unwrap();
+        sim_c.run();
+        let d_cgc = sim_c.final_dist_sq().unwrap();
+
+        let mut mean = base.clone();
+        mean.aggregator = Aggregator::Mean;
+        let mut sim_m = Simulation::build(&mean).unwrap();
+        sim_m.run();
+        let d_mean = sim_m.final_dist_sq().unwrap();
+
+        assert!(
+            d_cgc * 10.0 < d_mean,
+            "CGC ({d_cgc}) should beat mean ({d_mean}) under large-norm attack"
+        );
+    }
+
+    #[test]
+    fn echo_forgeries_neutralized() {
+        for attack in [
+            AttackKind::EchoForgeDangling,
+            AttackKind::EchoForgeBadK,
+            AttackKind::EchoForgeRandomX,
+            AttackKind::Silent,
+        ] {
+            let mut cfg = quick_cfg();
+            cfg.rounds = 300;
+            cfg.attack = attack;
+            let mut sim = Simulation::build(&cfg).unwrap();
+            let recs = sim.run();
+            let first = recs.first().unwrap().dist_sq.unwrap();
+            let last = sim.final_dist_sq().unwrap();
+            assert!(
+                last < first * 0.05,
+                "{}: {first} → {last}",
+                attack.name()
+            );
+            if attack == AttackKind::EchoForgeDangling || attack == AttackKind::Silent {
+                assert!(
+                    sim.server().exposed().len() >= 1,
+                    "{} should expose the byzantine worker",
+                    attack.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg();
+        let mut a = Simulation::build(&cfg).unwrap();
+        let mut b = Simulation::build(&cfg).unwrap();
+        let ra = a.run();
+        let rb = b.run();
+        for (x, y) in ra.iter().zip(rb.iter()) {
+            assert_eq!(x.loss, y.loss);
+            assert_eq!(x.uplink_bits, y.uplink_bits);
+            assert_eq!(x.echo_count, y.echo_count);
+        }
+    }
+
+    #[test]
+    fn records_track_round_numbers_and_bits() {
+        let mut cfg = quick_cfg();
+        cfg.rounds = 5;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        let recs = sim.run();
+        assert_eq!(recs.len(), 5);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.round, i);
+            assert!(r.uplink_bits > 0);
+            assert_eq!(r.echo_count + r.raw_count, cfg.n - cfg.b);
+        }
+    }
+}

@@ -1,0 +1,344 @@
+//! The Echo-CGC worker state machine (Algorithm 1, worker side).
+//!
+//! Per round a fault-free worker `j`:
+//!
+//! 1. receives `w^t`, computes its local stochastic gradient `g_j`
+//!    ([`EchoWorker::begin_round`]);
+//! 2. overhears earlier slots; every *raw* gradient that is linearly
+//!    independent of the stored ones joins `R_j`
+//!    ([`EchoWorker::overhear`], lines 26–31). Echo messages never extend
+//!    `R_j`: an echo reconstructs to `k·A_I·x ∈ span(R_j ∩ earlier raws)`,
+//!    so storing it cannot change any later projection — the simulator
+//!    skips them, a pure optimization over the paper's literal text, which
+//!    also only stores "vectors" (line 27);
+//! 3. in its own slot decides: if `|R_j| = 0` → raw; else project and echo
+//!    iff `‖Ax − g_j‖ ≤ r‖g_j‖` ([`EchoWorker::transmit`], lines 14–24).
+
+use crate::linalg::SpanProjector;
+use crate::wire::Payload;
+
+/// The echo-acceptance rule (§5 open problem (ii): "usage of angles rather
+/// than distance ratio").
+///
+/// * [`EchoRule::DistanceRatio`] — the paper's test `‖Ax − g‖ ≤ r‖g‖`.
+/// * [`EchoRule::Angle`] — accept iff the angle between `g` and `span(R_j)`
+///   is at most θ: `asin(residual/‖g‖) ≤ θ`, i.e. `residual ≤ sin(θ)‖g‖`.
+///
+/// For projection-based echoes the two are the *same family* —
+/// `Angle(θ) ≡ DistanceRatio(sin θ)` — which this implementation makes
+/// precise (and the ablation in `benches/echo_rate.rs` confirms
+/// empirically). The angle form is the natural knob when gradients are
+/// normalized.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EchoRule {
+    DistanceRatio(f64),
+    Angle(f64),
+}
+
+impl EchoRule {
+    /// The residual threshold as a fraction of ‖g‖.
+    pub fn residual_fraction(self) -> f64 {
+        match self {
+            EchoRule::DistanceRatio(r) => r,
+            EchoRule::Angle(theta) => theta.sin(),
+        }
+    }
+}
+
+/// Cumulative statistics of one worker across rounds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerStats {
+    pub echo_rounds: u64,
+    pub raw_rounds: u64,
+    /// Sum over rounds of `|R_j|` at transmit time.
+    pub span_sizes: u64,
+}
+
+impl WorkerStats {
+    pub fn echo_rate(&self) -> f64 {
+        let total = self.echo_rounds + self.raw_rounds;
+        if total == 0 {
+            0.0
+        } else {
+            self.echo_rounds as f64 / total as f64
+        }
+    }
+}
+
+/// A fault-free Echo-CGC worker.
+pub struct EchoWorker {
+    pub id: usize,
+    /// Deviation ratio `r` (echo test threshold).
+    pub r: f64,
+    projector: SpanProjector,
+    grad: Option<Vec<f64>>,
+    transmitted: bool,
+    pub stats: WorkerStats,
+}
+
+impl EchoWorker {
+    /// `eps_li` is the relative linear-independence tolerance used when
+    /// growing `R_j` (see [`SpanProjector`]).
+    pub fn new(id: usize, d: usize, r: f64, eps_li: f64) -> Self {
+        Self::with_rule(id, d, EchoRule::DistanceRatio(r), eps_li)
+    }
+
+    /// Construct with an explicit echo-acceptance rule.
+    pub fn with_rule(id: usize, d: usize, rule: EchoRule, eps_li: f64) -> Self {
+        let r = rule.residual_fraction();
+        assert!(r >= 0.0, "echo threshold must be non-negative");
+        Self {
+            id,
+            r,
+            projector: SpanProjector::new(d, eps_li),
+            grad: None,
+            transmitted: false,
+            stats: WorkerStats::default(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.projector.dim()
+    }
+
+    /// Start round `t` with the local stochastic gradient `g_j^t`.
+    pub fn begin_round(&mut self, gradient: Vec<f64>) {
+        assert_eq!(gradient.len(), self.projector.dim());
+        self.projector.clear();
+        self.grad = Some(gradient);
+        self.transmitted = false;
+    }
+
+    /// Current `|R_j|`.
+    pub fn span_size(&self) -> usize {
+        self.projector.rank()
+    }
+
+    /// Overhear an earlier slot's frame. Only raw gradient vectors can
+    /// extend `R_j` (Algorithm 1, line 27). Frames from slots after our own
+    /// are ignored (we already transmitted; the span is frozen).
+    pub fn overhear(&mut self, sender: usize, payload: &Payload) {
+        if self.transmitted || sender == self.id {
+            return;
+        }
+        if let Payload::Raw(g) = payload {
+            if g.len() == self.projector.dim() {
+                self.projector.try_push(sender, g);
+            }
+            // A wrong-dimension "gradient" is Byzantine garbage; it cannot
+            // be a useful span element, so it is simply not stored.
+        }
+    }
+
+    /// Produce this worker's frame for its own TDMA slot
+    /// (Algorithm 1, lines 14–24).
+    pub fn transmit(&mut self) -> Payload {
+        let g = self.grad.as_ref().expect("begin_round before transmit").clone();
+        self.transmitted = true;
+        self.stats.span_sizes += self.projector.rank() as u64;
+
+        if let Some(pr) = self.projector.project(&g) {
+            let gnorm = crate::linalg::norm(&g);
+            // Echo test ‖Ax − g‖ ≤ r‖g‖; additionally require the echo
+            // gradient to be non-degenerate so k = ‖g‖/‖Ax‖ is finite.
+            if pr.residual <= self.r * gnorm && pr.echo_norm > 1e-300 && gnorm.is_finite() {
+                let k = gnorm / pr.echo_norm;
+                // R_j is stored in slot order, which for the identity
+                // schedule is already ascending; sort defensively so the
+                // wire format always carries an ascending `I` (line 20).
+                let mut order: Vec<usize> = (0..pr.coeffs.len()).collect();
+                let ids = self.projector.ids().to_vec();
+                order.sort_by_key(|&i| ids[i]);
+                let sorted_ids: Vec<usize> = order.iter().map(|&i| ids[i]).collect();
+                let sorted_coeffs: Vec<f64> = order.iter().map(|&i| pr.coeffs[i]).collect();
+                self.stats.echo_rounds += 1;
+                return Payload::Echo { k, coeffs: sorted_coeffs, ids: sorted_ids };
+            }
+        }
+        self.stats.raw_rounds += 1;
+        Payload::Raw(g)
+    }
+
+    /// The local gradient of the current round (test/diagnostic access).
+    pub fn local_gradient(&self) -> Option<&[f64]> {
+        self.grad.as_deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{combine, norm, scale};
+    use crate::rng::Rng;
+
+    fn worker(d: usize, r: f64) -> EchoWorker {
+        EchoWorker::new(3, d, r, 1e-9)
+    }
+
+    #[test]
+    fn empty_span_sends_raw() {
+        let mut w = worker(4, 10.0); // even a huge r cannot echo with no span
+        w.begin_round(vec![1.0, 2.0, 3.0, 4.0]);
+        let p = w.transmit();
+        assert_eq!(p, Payload::Raw(vec![1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(w.stats.raw_rounds, 1);
+    }
+
+    #[test]
+    fn echoes_when_gradient_in_span() {
+        let mut rng = Rng::new(1);
+        let d = 20;
+        let c0 = rng.normal_vec(d);
+        let c1 = rng.normal_vec(d);
+        let mut w = worker(d, 0.1);
+        // g = 1.5 c0 − 0.5 c1 lies exactly in the span.
+        let mut g = scale(1.5, &c0);
+        crate::linalg::axpy(-0.5, &c1, &mut g);
+        w.begin_round(g.clone());
+        w.overhear(0, &Payload::Raw(c0.clone()));
+        w.overhear(1, &Payload::Raw(c1.clone()));
+        match w.transmit() {
+            Payload::Echo { k, coeffs, ids } => {
+                assert_eq!(ids, vec![0, 1]);
+                // Reconstruction k·A_I·x must equal g (it is in the span,
+                // so ‖Ax‖ = ‖g‖ and k = 1).
+                assert!((k - 1.0).abs() < 1e-9);
+                let rec = scale(k, &combine(&[c0, c1], &coeffs));
+                assert!(crate::linalg::dist(&rec, &g) < 1e-8 * norm(&g));
+            }
+            p => panic!("expected echo, got {}", p.kind()),
+        }
+        assert_eq!(w.stats.echo_rounds, 1);
+    }
+
+    #[test]
+    fn raw_when_residual_exceeds_r() {
+        let d = 3;
+        let mut w = worker(d, 0.01);
+        w.begin_round(vec![0.0, 0.0, 5.0]); // orthogonal to span(e1)
+        w.overhear(0, &Payload::Raw(vec![1.0, 0.0, 0.0]));
+        assert!(matches!(w.transmit(), Payload::Raw(_)));
+    }
+
+    #[test]
+    fn echo_preserves_local_norm() {
+        // ‖g̃_j‖ = ‖g_j‖ is the key invariant the server relies on (§4.2).
+        let mut rng = Rng::new(2);
+        let d = 30;
+        let mut w = worker(d, 0.5);
+        let base = rng.normal_vec(d);
+        // g = base + small perpendicular-ish noise, within r of span.
+        let mut g = base.clone();
+        for gi in g.iter_mut() {
+            *gi += 0.05 * rng.normal();
+        }
+        w.begin_round(g.clone());
+        w.overhear(0, &Payload::Raw(base.clone()));
+        if let Payload::Echo { k, coeffs, ids } = w.transmit() {
+            assert_eq!(ids, vec![0]);
+            let rec = scale(k, &combine(&[base], &coeffs));
+            assert!((norm(&rec) - norm(&g)).abs() < 1e-9 * norm(&g));
+        } else {
+            panic!("expected echo");
+        }
+    }
+
+    #[test]
+    fn ignores_frames_after_own_slot_and_self() {
+        let d = 3;
+        let mut w = worker(d, 0.5);
+        w.begin_round(vec![1.0, 0.0, 0.0]);
+        w.overhear(3, &Payload::Raw(vec![0.0, 1.0, 0.0])); // own id — ignored
+        assert_eq!(w.span_size(), 0);
+        let _ = w.transmit();
+        w.overhear(5, &Payload::Raw(vec![0.0, 0.0, 1.0])); // after transmit
+        assert_eq!(w.span_size(), 0);
+    }
+
+    #[test]
+    fn echo_frames_do_not_extend_span() {
+        let d = 3;
+        let mut w = worker(d, 0.5);
+        w.begin_round(vec![1.0, 1.0, 0.0]);
+        w.overhear(0, &Payload::Raw(vec![1.0, 0.0, 0.0]));
+        w.overhear(
+            1,
+            &Payload::Echo { k: 1.0, coeffs: vec![1.0], ids: vec![0] },
+        );
+        assert_eq!(w.span_size(), 1);
+    }
+
+    #[test]
+    fn wrong_dimension_gradient_not_stored() {
+        let mut w = worker(3, 0.5);
+        w.begin_round(vec![1.0, 0.0, 0.0]);
+        w.overhear(0, &Payload::Raw(vec![1.0, 2.0])); // wrong d
+        assert_eq!(w.span_size(), 0);
+    }
+
+    #[test]
+    fn ids_ascending_under_shuffled_arrival() {
+        let mut rng = Rng::new(4);
+        let d = 10;
+        let mut w = worker(d, 2.0);
+        let g = rng.normal_vec(d);
+        w.begin_round(g);
+        // Arrivals with non-monototonic ids (a shuffled TDMA schedule).
+        for &id in &[7usize, 2, 9, 4] {
+            w.overhear(id, &Payload::Raw(rng.normal_vec(d)));
+        }
+        if let Payload::Echo { ids, .. } = w.transmit() {
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            assert_eq!(ids, sorted);
+        } // with r=2.0 and 4 random columns an echo is likely but not
+          // guaranteed; raw is also a valid outcome.
+    }
+}
+
+#[cfg(test)]
+mod echo_rule_tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn angle_rule_equals_ratio_rule_at_sin_theta() {
+        let theta: f64 = 0.3;
+        assert!((EchoRule::Angle(theta).residual_fraction() - theta.sin()).abs() < 1e-15);
+        // Same decisions on random inputs.
+        let mut rng = Rng::new(31);
+        let d = 25;
+        for trial in 0..20 {
+            let base = rng.normal_vec(d);
+            let mut g = base.clone();
+            for gi in g.iter_mut() {
+                *gi += (0.05 + 0.02 * trial as f64) * rng.normal();
+            }
+            let mut wa = EchoWorker::with_rule(2, d, EchoRule::Angle(theta), 1e-9);
+            let mut wr =
+                EchoWorker::with_rule(2, d, EchoRule::DistanceRatio(theta.sin()), 1e-9);
+            for w in [&mut wa, &mut wr] {
+                w.begin_round(g.clone());
+                w.overhear(0, &Payload::Raw(base.clone()));
+            }
+            let fa = wa.transmit();
+            let fr = wr.transmit();
+            assert_eq!(fa.is_echo(), fr.is_echo(), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn right_angle_never_echoes_small_angle_always() {
+        let d = 4;
+        // g orthogonal to span: angle = 90° > any θ < π/2.
+        let mut w = EchoWorker::with_rule(1, d, EchoRule::Angle(1.0), 1e-9);
+        w.begin_round(vec![0.0, 1.0, 0.0, 0.0]);
+        w.overhear(0, &Payload::Raw(vec![1.0, 0.0, 0.0, 0.0]));
+        assert!(!w.transmit().is_echo());
+        // g within the span: angle 0 ≤ θ.
+        let mut w2 = EchoWorker::with_rule(1, d, EchoRule::Angle(0.01), 1e-9);
+        w2.begin_round(vec![2.0, 0.0, 0.0, 0.0]);
+        w2.overhear(0, &Payload::Raw(vec![1.0, 0.0, 0.0, 0.0]));
+        assert!(w2.transmit().is_echo());
+    }
+}

@@ -1,0 +1,224 @@
+//! Integration: the XLA/PJRT gradient path (JAX/Pallas AOT artifacts)
+//! matches the native rust models, and a full Echo-CGC simulation runs on
+//! XLA gradients end-to-end.
+//!
+//! These tests require `make artifacts`; they *fail* loudly when artifacts
+//! are missing rather than silently skipping, because the AOT bridge is a
+//! core deliverable. Set ECHO_CGC_ALLOW_MISSING_ARTIFACTS=1 to downgrade to
+//! a skip (used before the first artifact build).
+
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::data::make_linreg;
+use echo_cgc::grad::{GradientBackend, NativeBackend};
+use echo_cgc::linalg;
+use echo_cgc::model::{CostModel, GaussianQuadratic, RidgeRegression};
+use echo_cgc::rng::Rng;
+use echo_cgc::runtime::{PjrtRuntime, XlaQuadraticBackend, XlaRidgeBackend};
+use echo_cgc::sim::Simulation;
+use std::rc::Rc;
+use std::sync::Arc;
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = PjrtRuntime::cpu(&dir).expect("PJRT CPU client must initialize");
+    if !rt.has_artifact("quadratic_grad_d100.hlo.txt") {
+        if std::env::var("ECHO_CGC_ALLOW_MISSING_ARTIFACTS").as_deref() == Ok("1") {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            return None;
+        }
+        panic!("artifacts/ missing — run `make artifacts` first");
+    }
+    Some(rt)
+}
+
+#[test]
+fn quadratic_xla_matches_native_deterministic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = Rc::new(rt.load("quadratic_grad_d100.hlo.txt").unwrap());
+
+    let d = 100;
+    let mut rng = Rng::new(9);
+    let w_star: Vec<f64> = rng.normal_vec(d);
+    // σ = 0: both backends are deterministic ⇒ exact comparison up to f32.
+    let native = GaussianQuadratic::with_optimum(d, 0.5, 2.0, 0.0, w_star.clone());
+    let mut xla =
+        XlaQuadraticBackend::new(exe, native.eigenvalues(), &w_star, 0.0);
+
+    for trial in 0..5 {
+        let w = rng.normal_vec(d);
+        let g_native = native.full_gradient(&w);
+        let g_xla = xla.gradient(&w, &mut rng.split(trial));
+        let rel = linalg::dist(&g_native, &g_xla) / linalg::norm(&g_native);
+        assert!(rel < 1e-5, "trial {trial}: relative error {rel}");
+    }
+}
+
+#[test]
+fn quadratic_xla_noise_statistics_match_sigma() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = Rc::new(rt.load("quadratic_grad_d100.hlo.txt").unwrap());
+
+    let d = 100;
+    let sigma = 0.2;
+    let mut rng = Rng::new(11);
+    let w_star = rng.normal_vec(d);
+    let native = GaussianQuadratic::with_optimum(d, 1.0, 1.0, sigma, w_star.clone());
+    let mut xla = XlaQuadraticBackend::new(exe, native.eigenvalues(), &w_star, sigma);
+
+    let w = rng.normal_vec(d);
+    let full = native.full_gradient(&w);
+    let fn2 = linalg::norm_sq(&full);
+    let trials = 300;
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        let g = xla.gradient(&w, &mut rng);
+        acc += linalg::norm_sq(&linalg::sub(&g, &full));
+    }
+    let sigma_hat = (acc / trials as f64 / fn2).sqrt();
+    assert!(
+        (sigma_hat - sigma).abs() < 0.05,
+        "sigma_hat = {sigma_hat}, want ≈ {sigma}"
+    );
+}
+
+#[test]
+fn ridge_xla_matches_native_on_fixed_batches() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = Rc::new(rt.load("ridge_grad_d50_b32.hlo.txt").unwrap());
+
+    let mut rng = Rng::new(21);
+    let data = make_linreg(50, 256, 0.1, &mut rng);
+    let lambda = 0.25;
+    let model = RidgeRegression::new(data.clone(), lambda, 32, &mut rng);
+    let data_rc = Rc::new(data);
+    let mut xla = XlaRidgeBackend::new(exe, data_rc, 32, lambda);
+
+    // Same RNG seed ⇒ same batch indices ⇒ gradients must agree to f32.
+    for trial in 0..5 {
+        let w = rng.normal_vec(50);
+        let seed = 1000 + trial;
+        let g_xla = xla.gradient(&w, &mut Rng::new(seed));
+        // Reproduce the exact batch the backend drew.
+        let mut batch_rng = Rng::new(seed);
+        let idx: Vec<usize> = (0..32).map(|_| batch_rng.range(0, 256)).collect();
+        let g_native = model.gradient_on_batch(&w, &idx);
+        let rel = linalg::dist(&g_native, &g_xla) / linalg::norm(&g_native).max(1e-12);
+        assert!(rel < 1e-4, "trial {trial}: relative error {rel}");
+    }
+}
+
+#[test]
+fn simulation_runs_on_xla_backends_and_converges() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = Rc::new(rt.load("quadratic_grad_d100.hlo.txt").unwrap());
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 8;
+    cfg.f = 1;
+    cfg.b = 1;
+    cfg.d = 100;
+    cfg.sigma = 0.05;
+    cfg.rounds = 120;
+    cfg.seed = 3;
+
+    // The measurement model must match the artifact's constants exactly.
+    let mut rng = Rng::new(cfg.seed);
+    let model = Arc::new(GaussianQuadratic::new(cfg.d, cfg.mu, cfg.l, cfg.sigma, &mut rng));
+    let byz = cfg.byz_placement.place(cfg.n, cfg.b, &mut rng.split(1));
+    let backends: Vec<Option<Box<dyn GradientBackend>>> = (0..cfg.n)
+        .map(|i| {
+            if byz.contains(&i) {
+                None
+            } else {
+                Some(Box::new(XlaQuadraticBackend::new(
+                    exe.clone(),
+                    model.eigenvalues(),
+                    &model.optimum().unwrap(),
+                    cfg.sigma,
+                )) as Box<dyn GradientBackend>)
+            }
+        })
+        .collect();
+    let mut sim = Simulation::build_with(&cfg, model, backends).unwrap();
+    let recs = sim.run();
+    let first = recs.first().unwrap().dist_sq.unwrap();
+    let last = sim.final_dist_sq().unwrap();
+    assert!(last < first * 0.05, "XLA-backed run did not converge: {first} → {last}");
+    assert!(sim.echo_rate() > 0.0, "echoes should occur");
+}
+
+#[test]
+fn xla_and_native_simulations_agree_statistically() {
+    // Same config, one sim native + one XLA: final errors within an order
+    // of magnitude (different RNG consumption ⇒ not bitwise).
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = Rc::new(rt.load("quadratic_grad_d100.hlo.txt").unwrap());
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 8;
+    cfg.f = 1;
+    cfg.b = 1;
+    cfg.d = 100;
+    cfg.sigma = 0.05;
+    cfg.rounds = 150;
+    cfg.seed = 5;
+
+    let mut native_sim = Simulation::build(&cfg).unwrap();
+    native_sim.run();
+    let d_native = native_sim.final_dist_sq().unwrap();
+
+    let mut rng = Rng::new(cfg.seed);
+    let model = Arc::new(GaussianQuadratic::new(cfg.d, cfg.mu, cfg.l, cfg.sigma, &mut rng));
+    let byz = cfg.byz_placement.place(cfg.n, cfg.b, &mut rng.split(1));
+    let backends: Vec<Option<Box<dyn GradientBackend>>> = (0..cfg.n)
+        .map(|i| {
+            if byz.contains(&i) {
+                None
+            } else {
+                Some(Box::new(XlaQuadraticBackend::new(
+                    exe.clone(),
+                    model.eigenvalues(),
+                    &model.optimum().unwrap(),
+                    cfg.sigma,
+                )) as Box<dyn GradientBackend>)
+            }
+        })
+        .collect();
+    let mut xla_sim = Simulation::build_with(&cfg, model, backends).unwrap();
+    xla_sim.run();
+    let d_xla = xla_sim.final_dist_sq().unwrap();
+
+    let ratio = (d_native / d_xla).max(d_xla / d_native);
+    assert!(
+        ratio < 100.0,
+        "native {d_native} vs xla {d_xla}: ratio {ratio}"
+    );
+}
+
+#[test]
+fn softmax_xla_matches_native_on_fixed_batches() {
+    let Some(rt) = runtime_or_skip() else { return };
+    if !rt.has_artifact("softmax_grad_c3_d6_b16.hlo.txt") {
+        panic!("softmax artifact missing — run `make artifacts`");
+    }
+    let exe = Rc::new(rt.load("softmax_grad_c3_d6_b16.hlo.txt").unwrap());
+    let mut rng = Rng::new(31);
+    let data = echo_cgc::data::make_blobs(6, 120, 3, 3.0, &mut rng);
+    let lambda = 0.1;
+    let model =
+        echo_cgc::model::SoftmaxRegression::new(data.clone(), 3, lambda, 16, &mut rng);
+    let data_rc = Rc::new(data);
+    let mut xla = echo_cgc::runtime::XlaSoftmaxBackend::new(exe, data_rc, 3, 16, lambda);
+
+    for trial in 0..3 {
+        let w = rng.normal_vec(18);
+        let seed = 500 + trial;
+        let g_xla = xla.gradient(&w, &mut Rng::new(seed));
+        let mut batch_rng = Rng::new(seed);
+        let idx: Vec<usize> = (0..16).map(|_| batch_rng.range(0, 120)).collect();
+        let g_native = model.gradient_on_batch(&w, &idx);
+        let rel =
+            linalg::dist(&g_native, &g_xla) / linalg::norm(&g_native).max(1e-12);
+        assert!(rel < 1e-4, "trial {trial}: rel err {rel}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Failure injection: degenerate configurations, fewer-than-f faults,
+//! placement sweeps, crash churn and hostile frame floods.
+
+use echo_cgc::byzantine::AttackKind;
+use echo_cgc::config::{ByzPlacement, ExperimentConfig};
+use echo_cgc::coordinator::{Aggregator, ParameterServer};
+use echo_cgc::sim::Simulation;
+use echo_cgc::wire::Payload;
+
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 12;
+    cfg.f = 2;
+    cfg.b = 2;
+    cfg.d = 20;
+    cfg.rounds = 150;
+    cfg.sigma = 0.05;
+    cfg.seed = 23;
+    cfg
+}
+
+#[test]
+fn fewer_actual_faults_than_tolerance() {
+    // b < f: the filter over-provisions; convergence must still hold (the
+    // CGC filter clips honest gradients too, but Theorem 9 covers b <= f).
+    for b in 0..=2usize {
+        let mut cfg = base();
+        cfg.b = b;
+        cfg.attack = AttackKind::LargeNorm;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        let recs = sim.run();
+        let first = recs.first().unwrap().dist_sq.unwrap();
+        let last = sim.final_dist_sq().unwrap();
+        assert!(last < first * 0.05, "b={b}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn every_byzantine_placement_converges() {
+    for placement in [
+        ByzPlacement::First,
+        ByzPlacement::Last,
+        ByzPlacement::Spread,
+        ByzPlacement::Random,
+    ] {
+        let mut cfg = base();
+        cfg.byz_placement = placement;
+        cfg.attack = AttackKind::Omniscient;
+        cfg.rounds = 250;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        let recs = sim.run();
+        let first = recs.first().unwrap().dist_sq.unwrap();
+        let last = sim.final_dist_sq().unwrap();
+        assert!(
+            last < first * 0.05,
+            "{}: {first} -> {last}",
+            placement.name()
+        );
+    }
+}
+
+#[test]
+fn smallest_legal_network() {
+    // n = 3, f = 1 violates n > 2f? 2f = 2 < 3 — legal. But the resilience
+    // condition nµ − (3+k*)fL > 0 fails (3 < 4.12), so auto-derivation must
+    // error; an explicit (r, η) keeps it runnable as a best-effort system.
+    let mut cfg = base();
+    cfg.n = 3;
+    cfg.f = 1;
+    cfg.b = 1;
+    cfg.attack = AttackKind::Zero;
+    assert!(Simulation::build(&cfg).is_err(), "auto (r, η) must fail at n=3, f=1");
+    cfg.r = Some(0.2);
+    cfg.eta = Some(0.05);
+    let mut sim = Simulation::build(&cfg).unwrap();
+    sim.run();
+}
+
+#[test]
+fn crash_exposure_is_permanent_and_progress_continues() {
+    let mut cfg = base();
+    cfg.attack = AttackKind::Silent;
+    let mut sim = Simulation::build(&cfg).unwrap();
+    let recs = sim.run();
+    // Both silent workers exposed from round 0 onwards.
+    assert_eq!(recs.first().unwrap().exposed_cum, 2);
+    assert_eq!(recs.last().unwrap().exposed_cum, 2);
+    assert!(sim.final_dist_sq().unwrap() < recs.first().unwrap().dist_sq.unwrap() * 0.05);
+}
+
+#[test]
+fn dangling_echo_exposed_every_round_still_converges() {
+    let mut cfg = base();
+    cfg.attack = AttackKind::EchoForgeDangling;
+    let mut sim = Simulation::build(&cfg).unwrap();
+    let recs = sim.run();
+    assert!(recs.last().unwrap().exposed_cum >= 1);
+    assert!(sim.final_dist_sq().unwrap() < recs.first().unwrap().dist_sq.unwrap() * 0.05);
+}
+
+#[test]
+fn server_survives_hostile_frame_flood() {
+    // Direct server fuzz: a barrage of malformed frames must never panic
+    // and must always land as raw-stored or exposed-zero.
+    let n = 16;
+    let d = 8;
+    let mut server = ParameterServer::new(n, 3, d, Aggregator::CgcSum);
+    server.begin_round();
+    let mut rng = echo_cgc::rng::Rng::new(99);
+    for j in 0..n {
+        let frame = match j % 8 {
+            0 => Payload::Raw(vec![f64::INFINITY; d]),
+            1 => Payload::Raw(vec![]),
+            2 => Payload::Raw(rng.normal_vec(d + 3)),
+            3 => Payload::Echo { k: f64::NAN, coeffs: vec![1.0], ids: vec![0] },
+            4 => Payload::Echo { k: 1e308, coeffs: vec![1e308], ids: vec![0] },
+            5 => Payload::Echo { k: 1.0, coeffs: vec![], ids: vec![] },
+            6 => Payload::Param(rng.normal_vec(d)),
+            _ => Payload::Raw(rng.normal_vec(d)),
+        };
+        server.on_frame(j, &frame);
+    }
+    let agg = server.aggregate();
+    assert_eq!(agg.len(), d);
+    assert!(agg.iter().all(|v| v.is_finite()), "aggregate must stay finite");
+}
+
+#[test]
+fn zero_gradient_rounds_near_optimum_do_not_collapse_echoes() {
+    // Near w*, gradients shrink towards the f32 floor; the echo machinery
+    // must handle near-zero norms without NaN/Inf panics.
+    let mut cfg = base();
+    cfg.attack = AttackKind::None;
+    cfg.b = 0;
+    cfg.rounds = 600; // drive well past the quantization floor
+    let mut sim = Simulation::build(&cfg).unwrap();
+    let recs = sim.run();
+    for r in &recs {
+        assert!(r.loss.is_finite());
+    }
+}
+
+#[test]
+fn aggressive_eta_diverges_but_stays_finite_math() {
+    // 10x the theoretical 2η* bound: divergence is expected, panics are not.
+    let mut cfg = base();
+    cfg.attack = AttackKind::LargeNorm;
+    let eta_star = cfg.theory().eta_star();
+    cfg.eta = Some(eta_star * 20.0);
+    cfg.rounds = 50;
+    let mut sim = Simulation::build(&cfg).unwrap();
+    let recs = sim.run();
+    assert_eq!(recs.len(), 50); // completed without panic
+}
+
+#[test]
+fn suspicion_scores_separate_norm_inflating_byzantine() {
+    let mut cfg = base();
+    cfg.attack = AttackKind::LargeNorm;
+    cfg.rounds = 100;
+    let mut sim = Simulation::build(&cfg).unwrap();
+    sim.run();
+    let sus = sim.server().suspicion();
+    let byz: Vec<usize> = sim.byzantine_ids().to_vec();
+    let byz_min = byz.iter().map(|&i| sus[i]).fold(f64::INFINITY, f64::min);
+    let honest_max = (0..cfg.n)
+        .filter(|i| !byz.contains(i))
+        .map(|i| sus[i])
+        .fold(0.0, f64::max);
+    assert!(
+        byz_min > honest_max + 0.3,
+        "suspicion must separate: byz_min={byz_min} honest_max={honest_max} ({sus:?})"
+    );
+}

@@ -1,0 +1,343 @@
+//! Property-based tests over the core invariants, driven by the in-crate
+//! `prop` mini-framework (seeded, replayable via ECHO_CGC_PROP_SEED).
+
+use echo_cgc::coordinator::{aggregate, cgc_filter, Aggregator, ParameterServer};
+use echo_cgc::linalg::{self, SpanProjector};
+use echo_cgc::prop::forall;
+use echo_cgc::rng::Rng;
+use echo_cgc::wire::{bit_len, decode, encode, Encoding, IdCodec, Payload, Precision};
+use echo_cgc::worker::EchoWorker;
+
+fn rand_encoding(rng: &mut Rng) -> Encoding {
+    Encoding {
+        precision: if rng.bool(0.5) { Precision::F32 } else { Precision::F64 },
+        id_codec: if rng.bool(0.5) { IdCodec::Varint } else { IdCodec::FixedU16 },
+    }
+}
+
+fn rand_payload(rng: &mut Rng, max_d: usize) -> Payload {
+    match rng.range(0, 3) {
+        0 => {
+            let d = 1 + rng.range(0, max_d);
+            Payload::Raw(rng.normal_vec(d))
+        }
+        1 => {
+            let d = 1 + rng.range(0, max_d);
+            Payload::Param(rng.normal_vec(d))
+        }
+        _ => {
+            let s = 1 + rng.range(0, 8);
+            let mut ids: Vec<usize> = (0..s).map(|_| rng.range(0, 500)).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            let coeffs: Vec<f64> = (0..ids.len()).map(|_| rng.normal()).collect();
+            Payload::Echo { k: rng.uniform() * 3.0, coeffs, ids }
+        }
+    }
+}
+
+#[test]
+fn prop_wire_roundtrip_f64_exact() {
+    forall(
+        "wire f64 roundtrip is exact",
+        300,
+        |g| {
+            let enc = Encoding {
+                precision: Precision::F64,
+                id_codec: if g.rng.bool(0.5) { IdCodec::Varint } else { IdCodec::FixedU16 },
+            };
+            let p = rand_payload(&mut g.rng, 64);
+            ((), (p, enc))
+        },
+        |(_, (p, enc))| {
+            let back = decode(&encode(&p, enc), enc).map_err(|e| e.to_string())?;
+            if back == p {
+                Ok(())
+            } else {
+                Err(format!("{p:?} != {back:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_wire_decode_never_panics_on_corruption() {
+    forall(
+        "decode is total on corrupted frames",
+        500,
+        |g| {
+            let enc = rand_encoding(&mut g.rng);
+            let p = rand_payload(&mut g.rng, 32);
+            let mut bytes = encode(&p, enc);
+            // Corrupt: flip bytes, truncate, or extend.
+            match g.rng.range(0, 3) {
+                0 => {
+                    if !bytes.is_empty() {
+                        let i = g.rng.range(0, bytes.len());
+                        bytes[i] ^= 1 << g.rng.range(0, 8);
+                    }
+                }
+                1 => {
+                    let keep = g.rng.range(0, bytes.len() + 1);
+                    bytes.truncate(keep);
+                }
+                _ => {
+                    for _ in 0..g.rng.range(1, 8) {
+                        bytes.push(g.rng.next_u64() as u8);
+                    }
+                }
+            }
+            ((), (bytes, enc))
+        },
+        |(_, (bytes, enc))| {
+            let _ = decode(&bytes, enc); // must not panic; Err is fine
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_echo_always_smaller_than_raw() {
+    forall(
+        "echo frames cost fewer bits than raw gradients when d > 3n",
+        200,
+        |g| {
+            let n = 2 + g.rng.range(0, 100);
+            let d = 3 * n + g.rng.range(1, 1000);
+            let enc = rand_encoding(&mut g.rng);
+            let s = 1 + g.rng.range(0, n.min(32));
+            ((n, d, s), enc)
+        },
+        |((_n, d, s), enc)| {
+            let ids: Vec<usize> = (0..s).collect();
+            let echo = Payload::Echo { k: 1.0, coeffs: vec![0.5; s], ids };
+            let raw = Payload::Raw(vec![0.5; d]);
+            if bit_len(&echo, enc) < bit_len(&raw, enc) {
+                Ok(())
+            } else {
+                Err(format!("echo {} >= raw {}", bit_len(&echo, enc), bit_len(&raw, enc)))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_cgc_filter_invariants() {
+    forall(
+        "cgc: norms clipped to (n-f)-th, directions preserved, small untouched",
+        200,
+        |g| {
+            let n = 2 + g.rng.range(0, 12);
+            let f = g.rng.range(0, (n - 1) / 2 + 1);
+            let d = 1 + g.rng.range(0, 30);
+            let grads: Vec<Vec<f64>> = (0..n)
+                .map(|_| linalg::scale(g.rng.uniform() * 100.0, &g.rng.unit_vector(d)))
+                .collect();
+            ((n, f), grads)
+        },
+        |((n, f), grads)| {
+            let out = cgc_filter(&grads, f);
+            let mut norms: Vec<f64> = grads.iter().map(|v| linalg::norm(v)).collect();
+            norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let thr = norms[n - f - 1];
+            for (j, (o, i)) in out.iter().zip(grads.iter()).enumerate() {
+                let no = linalg::norm(o);
+                let ni = linalg::norm(i);
+                if no > thr * (1.0 + 1e-9) {
+                    return Err(format!("slot {j}: filtered norm {no} > threshold {thr}"));
+                }
+                if no > ni * (1.0 + 1e-9) {
+                    return Err(format!("slot {j}: filter increased norm"));
+                }
+                // Direction preserved: filtered = c * original with c >= 0.
+                if ni > 1e-12 && no > 1e-12 {
+                    let cos = linalg::dot(o, i) / (no * ni);
+                    if cos < 1.0 - 1e-9 {
+                        return Err(format!("slot {j}: direction changed (cos={cos})"));
+                    }
+                }
+                if ni <= thr * (1.0 + 1e-12) && linalg::dist(o, i) > 1e-9 * ni.max(1.0) {
+                    return Err(format!("slot {j}: small gradient was modified"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cgc_sum_permutation_invariant() {
+    forall(
+        "cgc aggregate is invariant to slot permutation",
+        100,
+        |g| {
+            let n = 3 + g.rng.range(0, 10);
+            let f = g.rng.range(0, (n - 1) / 2 + 1);
+            let d = 1 + g.rng.range(0, 20);
+            let grads: Vec<Vec<f64>> = (0..n).map(|_| g.rng.normal_vec(d)).collect();
+            let mut perm: Vec<usize> = (0..n).collect();
+            g.rng.shuffle(&mut perm);
+            ((f, perm), grads)
+        },
+        |((f, perm), grads)| {
+            let a = aggregate(Aggregator::CgcSum, &grads, f);
+            let permuted: Vec<Vec<f64>> = perm.iter().map(|&i| grads[i].clone()).collect();
+            let b = aggregate(Aggregator::CgcSum, &permuted, f);
+            if linalg::dist(&a, &b) < 1e-9 * (1.0 + linalg::norm(&a)) {
+                Ok(())
+            } else {
+                Err("sum changed under permutation".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_projector_rank_residual_pythagoras() {
+    forall(
+        "projector: rank <= min(d, pushes); residual <= |g|; pythagoras",
+        150,
+        |g| {
+            let d = 1 + g.rng.range(0, 40);
+            let pushes = g.rng.range(0, 12);
+            let cols: Vec<Vec<f64>> = (0..pushes).map(|_| g.rng.normal_vec(d)).collect();
+            let target = g.rng.normal_vec(d);
+            ((d, pushes), (cols, target))
+        },
+        |((d, pushes), (cols, target))| {
+            let mut p = SpanProjector::new(d, 1e-9);
+            for (i, c) in cols.iter().enumerate() {
+                p.try_push(i, c);
+            }
+            if p.rank() > d.min(pushes) {
+                return Err(format!("rank {} > min(d={d}, pushes={pushes})", p.rank()));
+            }
+            if let Some(pr) = p.project(&target) {
+                let gn = linalg::norm(&target);
+                if pr.residual > gn * (1.0 + 1e-9) {
+                    return Err(format!("residual {} > |g| {gn}", pr.residual));
+                }
+                let lhs = gn * gn;
+                let rhs = pr.echo_norm * pr.echo_norm + pr.residual * pr.residual;
+                if (lhs - rhs).abs() > 1e-6 * lhs.max(1.0) {
+                    return Err(format!("pythagoras violated: {lhs} vs {rhs}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_honest_echo_reconstruction_bounded() {
+    // For an honest worker that echoes, the server's reconstruction has
+    // exactly the local norm and deviates by at most ~2r/(1-r).
+    forall(
+        "server reconstruction of honest echo is norm-exact and r-close",
+        100,
+        |g| {
+            let d = 5 + g.rng.range(0, 40);
+            let n_cols = 1 + g.rng.range(0, 4);
+            let r = 0.05 + g.rng.uniform() * 0.3;
+            let cols: Vec<Vec<f64>> = (0..n_cols).map(|_| g.rng.normal_vec(d)).collect();
+            let coeffs: Vec<f64> = (0..n_cols).map(|_| g.rng.normal()).collect();
+            let base = linalg::combine(&cols, &coeffs);
+            let bn = linalg::norm(&base).max(1e-9);
+            let noise = linalg::scale(0.3 * r * bn, &g.rng.unit_vector(d));
+            let grad = linalg::add(&base, &noise);
+            ((d, r), (cols, grad))
+        },
+        |((d, r), (cols, grad))| {
+            let n = cols.len() + 1;
+            let mut server = ParameterServer::new(n, 0, d, Aggregator::CgcSum);
+            server.begin_round();
+            let mut worker = EchoWorker::new(n - 1, d, r, 1e-9);
+            worker.begin_round(grad.clone());
+            for (i, c) in cols.iter().enumerate() {
+                server.on_frame(i, &Payload::Raw(c.clone()));
+                worker.overhear(i, &Payload::Raw(c.clone()));
+            }
+            let frame = worker.transmit();
+            server.on_frame(n - 1, &frame);
+            let rec = server.stored(n - 1).unwrap();
+            if frame.is_echo() {
+                let gn = linalg::norm(&grad);
+                if (linalg::norm(rec) - gn).abs() > 1e-6 * gn {
+                    return Err(format!("norm not preserved: {} vs {gn}", linalg::norm(rec)));
+                }
+                let bound = 2.0 * r / (1.0 - r) * gn + 1e-9;
+                let dev = linalg::dist(rec, &grad);
+                if dev > bound {
+                    return Err(format!("deviation {dev} > bound {bound} (r={r})"));
+                }
+            } else if linalg::dist(rec, &grad) > 1e-12 * (1.0 + linalg::norm(&grad)) {
+                return Err("raw frame must be stored verbatim".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aggregators_fixed_point_on_identical_gradients() {
+    forall(
+        "aggregate(identical gradients) = n*g for every rule",
+        100,
+        |g| {
+            let n = 3 + g.rng.range(0, 10);
+            let f = g.rng.range(0, (n - 1) / 2 + 1);
+            let d = 1 + g.rng.range(0, 20);
+            let grad = g.rng.normal_vec(d);
+            ((n, f), grad)
+        },
+        |((n, f), grad)| {
+            let grads: Vec<Vec<f64>> = (0..n).map(|_| grad.clone()).collect();
+            for agg in Aggregator::all() {
+                let out = aggregate(agg, &grads, f);
+                let expect = linalg::scale(n as f64, &grad);
+                if linalg::dist(&out, &expect) > 1e-9 * (1.0 + linalg::norm(&expect)) {
+                    return Err(format!("{}: not n*g", agg.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_theory_rho_minimized_at_eta_star() {
+    forall(
+        "rho(eta*) <= rho(eta) for admissible eta; rho in [0,1)",
+        200,
+        |g| {
+            let n = 10 + g.rng.range(0, 90);
+            let f = g.rng.range(0, n / 8 + 1);
+            let sigma = g.rng.uniform() * (1.0 / (n as f64).sqrt());
+            ((n, f, sigma), ())
+        },
+        |((n, f, sigma), _)| {
+            if !echo_cgc::analysis::resilient_lemma4(n, f, 1.0, 1.0) {
+                return Ok(()); // out of the theorem's domain
+            }
+            let r = echo_cgc::analysis::r_bound_lemma4(n, f, 1.0, 1.0, sigma) * 0.9;
+            if r <= 0.0 {
+                return Ok(());
+            }
+            let p = echo_cgc::analysis::TheoryParams::worst_case(n, f, 1.0, 1.0, sigma, r);
+            if p.beta() <= 0.0 {
+                return Err(format!("beta <= 0 inside Lemma-4 domain: {p:?}"));
+            }
+            let eta_star = p.eta_star();
+            let r_min = p.rho(eta_star);
+            if !(0.0..1.0).contains(&r_min) {
+                return Err(format!("rho(eta*) = {r_min} outside [0,1)"));
+            }
+            for frac in [0.25, 0.5, 1.5, 1.75] {
+                if p.rho(eta_star * frac) < r_min - 1e-12 {
+                    return Err(format!("rho not minimized at eta* (frac {frac})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
