@@ -24,7 +24,7 @@ use echo_cgc::rng::Rng;
 use echo_cgc::runtime::{PjrtRuntime, XlaLmStep};
 use echo_cgc::wire::{Encoding, Payload};
 use echo_cgc::worker::EchoWorker;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 // Must match the artifact exported by `make artifacts`
@@ -53,13 +53,20 @@ fn sample_tokens(corpus: &[u8], rng: &mut Rng) -> Vec<i32> {
 
 fn main() {
     let t_setup = Instant::now();
+    if !PjrtRuntime::available() {
+        eprintln!(
+            "XLA/PJRT runtime is stubbed in this build (xla crate not vendored); \
+             the LM e2e driver requires it — exiting"
+        );
+        std::process::exit(1);
+    }
     let rt = PjrtRuntime::cpu("artifacts").expect("PJRT CPU client");
     let name = XlaLmStep::artifact_name(VOCAB, SEQ, LAYERS, DMODEL, BATCH);
     if !rt.has_artifact(&name) {
         eprintln!("missing artifacts/{name} — run `make artifacts` first");
         std::process::exit(1);
     }
-    let exe = Rc::new(rt.load(&name).expect("compile LM artifact"));
+    let exe = Arc::new(rt.load(&name).expect("compile LM artifact"));
     // Parameter count comes from the artifact's exported spec (fixed by the
     // aot shapes); see python/compile/model.py lm_num_params.
     let n_params = 105_728usize;

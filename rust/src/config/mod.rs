@@ -135,6 +135,12 @@ pub struct ExperimentConfig {
     /// echoing — communication-efficient but *not* designed for Byzantine
     /// tolerance (sparsification biases the gradient).
     pub topk: Option<usize>,
+    /// Worker threads for the round engine's computation phase and overhear
+    /// fan-out. `1` = serial (default), `0` = auto-detect from
+    /// `std::thread::available_parallelism`. Results are **bit-identical**
+    /// at any setting (per-worker RNG streams are pre-split), so this is a
+    /// pure throughput knob.
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -167,6 +173,7 @@ impl Default for ExperimentConfig {
             shuffle_slots: false,
             echo_enabled: true,
             topk: None,
+            threads: 1,
         }
     }
 }
@@ -174,6 +181,16 @@ impl Default for ExperimentConfig {
 impl ExperimentConfig {
     pub fn encoding(&self) -> Encoding {
         Encoding { precision: self.precision, id_codec: self.id_codec }
+    }
+
+    /// Resolve [`Self::threads`]: `0` means "one thread per available
+    /// core", anything else is taken literally (min 1).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
     }
 
     /// Resolve the deviation ratio: explicit, or `r_frac ×` Lemma-4 bound.
@@ -302,6 +319,9 @@ impl ExperimentConfig {
             "echo" | "echo-enabled" => self.echo_enabled = parse_bool(value)?,
             "topk" => {
                 self.topk = if value == "off" { None } else { Some(parse_usize(value)?) }
+            }
+            "threads" | "j" => {
+                self.threads = if value == "auto" { 0 } else { parse_usize(value)? }
             }
             _ => return Err(format!("unknown config key '{key}'")),
         }
@@ -432,6 +452,22 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.b = cfg.f + 1;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn threads_knob_parses_and_resolves() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.threads, 1);
+        assert_eq!(cfg.effective_threads(), 1);
+        cfg.set("threads", "4").unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.effective_threads(), 4);
+        cfg.set("threads", "auto").unwrap();
+        assert_eq!(cfg.threads, 0);
+        assert!(cfg.effective_threads() >= 1);
+        cfg.set("j", "2").unwrap();
+        assert_eq!(cfg.threads, 2);
+        assert!(cfg.set("threads", "bogus").is_err());
     }
 
     #[test]

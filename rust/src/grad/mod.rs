@@ -1,11 +1,13 @@
-//! Gradient backends — how a worker obtains its local stochastic gradient.
+//! Gradient backends — how a worker obtains its local stochastic gradient —
+//! and the deterministic parallel fan-out that computes all workers'
+//! gradients at once.
 //!
 //! * [`NativeBackend`] evaluates a pure-rust [`crate::model::CostModel`]
 //!   (fast, exact, used by most simulations and all property tests);
-//! * [`XlaBackend`] (in [`crate::runtime`]) runs the JAX/Pallas gradient
+//! * [`XlaBackend`](crate::runtime) runs the JAX/Pallas gradient
 //!   computation AOT-lowered to an HLO artifact via PJRT — the
-//!   production-shaped path. The two are equivalence-tested in
-//!   `rust/tests/backend_equivalence.rs`.
+//!   production-shaped path (currently stubbed; see [`crate::runtime`]).
+//!   The two are equivalence-tested in `rust/tests/backend_equivalence.rs`.
 
 use crate::model::CostModel;
 use crate::rng::Rng;
@@ -13,10 +15,14 @@ use std::sync::Arc;
 
 /// A per-worker gradient oracle.
 ///
-/// Deliberately **not** `Send`: the XLA/PJRT handles wrap thread-local
-/// pointers (`Rc` internally), and the simulation round loop is
-/// single-threaded by design (the TDMA slot sequence is inherently serial).
-pub trait GradientBackend {
+/// `Send` by design: backends are pure host-side state (native models are
+/// plain data behind `Arc`, and the XLA path shares its executable via
+/// `Arc` rather than thread-local `Rc` handles), so the round engine can
+/// fan the computation phase out across a scoped thread pool. Determinism
+/// is preserved because every worker draws from its own pre-split
+/// [`Rng`] stream regardless of which thread runs it — see
+/// [`parallel_gradients`].
+pub trait GradientBackend: Send {
     /// Parameter dimension `d`.
     fn dim(&self) -> usize;
 
@@ -50,6 +56,35 @@ impl GradientBackend for NativeBackend {
     }
 }
 
+/// Compute every live backend's stochastic gradient at `w`, fanning the
+/// work across up to `threads` OS threads (`std::thread::scope`, no pool
+/// crate needed). Returns `(worker_id, gradient)` pairs in ascending
+/// worker order. `None` slots (Byzantine workers) are skipped.
+///
+/// **Bit-identical at any thread count**: worker `i` always consumes
+/// `rngs[i]`, its own pre-split stream, and the per-worker computation is
+/// independent of every other worker's — the thread partition only decides
+/// *where* each stream is advanced, never *how*. The determinism test in
+/// `rust/tests/determinism.rs` pins this invariant.
+pub fn parallel_gradients(
+    backends: &mut [Option<Box<dyn GradientBackend>>],
+    rngs: &mut [Rng],
+    w: &[f64],
+    threads: usize,
+) -> Vec<(usize, Vec<f64>)> {
+    assert_eq!(backends.len(), rngs.len(), "one rng stream per worker slot");
+    let mut jobs: Vec<(usize, &mut Box<dyn GradientBackend>, &mut Rng, Vec<f64>)> = backends
+        .iter_mut()
+        .zip(rngs.iter_mut())
+        .enumerate()
+        .filter_map(|(i, (b, r))| b.as_mut().map(|b| (i, b, r, Vec::new())))
+        .collect();
+    crate::par::scoped_for_each(&mut jobs, threads, |(_, b, r, out)| {
+        *out = b.gradient(w, r);
+    });
+    jobs.into_iter().map(|(i, _, _, g)| (i, g)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +100,55 @@ mod tests {
         let g = b.gradient(&w, &mut rng);
         // σ = 0 ⇒ deterministic, equals the full gradient.
         assert_eq!(g, m.full_gradient(&w));
+    }
+
+    fn fan_out_fixture(
+        n: usize,
+        byz: &[usize],
+    ) -> (Vec<Option<Box<dyn GradientBackend>>>, Vec<Rng>, Vec<f64>) {
+        let mut rng = Rng::new(42);
+        let d = 25;
+        let m = Arc::new(GaussianQuadratic::new(d, 1.0, 2.0, 0.3, &mut rng));
+        let backends: Vec<Option<Box<dyn GradientBackend>>> = (0..n)
+            .map(|i| {
+                if byz.contains(&i) {
+                    None
+                } else {
+                    Some(Box::new(NativeBackend::new(m.clone())) as Box<dyn GradientBackend>)
+                }
+            })
+            .collect();
+        let rngs: Vec<Rng> = (0..n).map(|i| rng.split(100 + i as u64)).collect();
+        let w = rng.normal_vec(d);
+        (backends, rngs, w)
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        for threads in [2usize, 3, 4, 16] {
+            let (mut b1, mut r1, w) = fan_out_fixture(7, &[2]);
+            let (mut b2, mut r2, _) = fan_out_fixture(7, &[2]);
+            let serial = parallel_gradients(&mut b1, &mut r1, &w, 1);
+            let par = parallel_gradients(&mut b2, &mut r2, &w, threads);
+            assert_eq!(serial.len(), par.len());
+            for ((i, gs), (j, gp)) in serial.iter().zip(par.iter()) {
+                assert_eq!(i, j);
+                assert_eq!(gs, gp, "worker {i} differs at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn byzantine_slots_skipped_and_order_ascending() {
+        let (mut b, mut r, w) = fan_out_fixture(6, &[0, 3]);
+        let out = parallel_gradients(&mut b, &mut r, &w, 4);
+        let ids: Vec<usize> = out.iter().map(|(i, _)| *i).collect();
+        assert_eq!(ids, vec![1, 2, 4, 5]);
+    }
+
+    #[test]
+    fn all_byzantine_is_empty() {
+        let (mut b, mut r, w) = fan_out_fixture(3, &[0, 1, 2]);
+        assert!(parallel_gradients(&mut b, &mut r, &w, 4).is_empty());
     }
 }

@@ -24,32 +24,50 @@
 //!   regenerate Figures 1a–1d;
 //! * synthetic workloads ([`data`], [`model`]) with controllable `(µ, L, σ)`
 //!   so the theory can be checked against measurement;
-//! * an **XLA/PJRT runtime** ([`runtime`]) that loads gradient computations
-//!   AOT-lowered from JAX/Pallas (`python/compile/`) as HLO text and runs
-//!   them from the rust hot path (python is never on the request path).
+//! * a **parallel round engine**: the computation phase and the per-slot
+//!   overhear fan-out run across a scoped thread pool
+//!   ([`config::ExperimentConfig::threads`]) with bit-identical results at
+//!   any thread count (per-worker RNG streams are pre-split);
+//! * an **XLA/PJRT runtime** facade ([`runtime`]) for gradient computations
+//!   AOT-lowered from JAX/Pallas (`python/compile/`) as HLO text (python is
+//!   never on the request path). Currently a stub — see [`runtime`] — until
+//!   the `xla` crate is vendored; native backends cover every workload.
 //!
-//! Because this workspace builds fully offline against a small vendored
-//! crate set, the usual ecosystem crates are re-implemented in-crate:
+//! Because this workspace builds fully offline with zero external
+//! dependencies, the usual ecosystem crates are re-implemented in-crate:
 //! deterministic PRNG ([`rng`]), CLI parsing ([`config`]), JSON/CSV output
 //! ([`metrics`]), a micro-benchmark harness ([`bench_utils`]) and a tiny
 //! property-testing driver ([`prop`]).
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use echo_cgc::config::ExperimentConfig;
 //! use echo_cgc::sim::Simulation;
 //!
 //! let mut cfg = ExperimentConfig::default();
-//! cfg.n = 20;
-//! cfg.f = 2;
-//! cfg.rounds = 200;
+//! cfg.n = 12;
+//! cfg.f = 1;
+//! cfg.b = 1;
+//! cfg.d = 30;
+//! cfg.rounds = 40;
+//! cfg.threads = 2; // bit-identical to the serial engine
 //! let mut sim = Simulation::build(&cfg).unwrap();
 //! let records = sim.run();
 //! let last = records.last().unwrap();
+//! assert!(last.loss.is_finite());
+//! assert!(sim.comm_savings() > 0.0, "echoes must save uplink bits");
 //! println!("final loss {:.3e}, comm saved {:.1}%",
 //!          last.loss, 100.0 * sim.comm_savings());
 //! ```
+
+// Style allowances for simulation-codebase idiom (indexed numeric loops
+// mirror the paper's subscripts; serializers expose explicit to_string).
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::inherent_to_string)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
 
 pub mod analysis;
 pub mod bench_utils;
@@ -61,6 +79,7 @@ pub mod grad;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod par;
 pub mod prop;
 pub mod radio;
 pub mod rng;

@@ -18,7 +18,7 @@ pub mod cholesky;
 pub mod projector;
 
 pub use cholesky::Cholesky;
-pub use projector::SpanProjector;
+pub use projector::{Projection, ProjectionInfo, SpanProjector};
 
 /// Dot product `<a, b>`.
 #[inline]

@@ -15,8 +15,16 @@
 //! linear-independence test: a column whose Schur complement pivot is below
 //! tolerance is in the span of the existing ones and is rejected — exactly
 //! the `AA⁺g ≠ g` test of Algorithm 1, line 29, but numerically robust.
+//!
+//! **Storage layout.** Columns live in one flat `Vec<f64>` (column `k` is
+//! `cols[k·d..(k+1)·d]`), grown by `extend_from_slice` and reset with
+//! `clear()` so the allocation is reused across rounds — no per-push
+//! `Vec<Vec<f64>>` boxing, no per-round reallocation. The engine's hot
+//! path, [`SpanProjector::project_into`], writes the echo gradient into a
+//! caller-owned reusable buffer, so a worker's transmit decision allocates
+//! only the `O(s)` coefficient vector.
 
-use crate::linalg::{combine, dot, norm, Cholesky};
+use crate::linalg::{axpy, dot, norm, Cholesky};
 
 /// Outcome of projecting a gradient onto the current span.
 #[derive(Clone, Debug)]
@@ -31,18 +39,33 @@ pub struct Projection {
     pub echo_norm: f64,
 }
 
+/// Allocation-light projection result: the echo gradient is written into a
+/// caller-provided buffer instead of being returned by value.
+#[derive(Clone, Debug)]
+pub struct ProjectionInfo {
+    /// Coefficients `x = A⁺ g` (length = number of stored columns).
+    pub coeffs: Vec<f64>,
+    /// Residual norm `‖g − g*‖`.
+    pub residual: f64,
+    /// Norm of the echo gradient `‖g*‖`.
+    pub echo_norm: f64,
+}
+
 /// Maintains the linearly-independent overheard gradients and projects onto
 /// their span.
 #[derive(Clone, Debug)]
 pub struct SpanProjector {
     d: usize,
-    /// Columns of `A` (the stored gradients), in arrival order.
-    cols: Vec<Vec<f64>>,
+    /// Flat column storage: column `k` is `cols[k*d..(k+1)*d]`, in arrival
+    /// order. One allocation, reused across rounds via [`Self::clear`].
+    cols: Vec<f64>,
     /// IDs (TDMA slot owners) associated with each stored column.
     ids: Vec<usize>,
     chol: Cholesky,
     /// Relative tolerance for the linear-independence pivot test.
     eps_li: f64,
+    /// Scratch for the extended Gram row (cross terms + diagonal).
+    grow: Vec<f64>,
 }
 
 impl SpanProjector {
@@ -50,7 +73,15 @@ impl SpanProjector {
     /// accepted iff its squared distance to the span exceeds
     /// `eps_li² · ‖c‖²`.
     pub fn new(d: usize, eps_li: f64) -> Self {
-        Self { d, cols: Vec::new(), ids: Vec::new(), chol: Cholesky::new(), eps_li }
+        assert!(d >= 1, "projector needs d >= 1");
+        Self {
+            d,
+            cols: Vec::new(),
+            ids: Vec::new(),
+            chol: Cholesky::new(),
+            eps_li,
+            grow: Vec::new(),
+        }
     }
 
     pub fn dim(&self) -> usize {
@@ -59,18 +90,20 @@ impl SpanProjector {
 
     /// Number of stored (independent) columns `|R_j|`.
     pub fn rank(&self) -> usize {
-        self.cols.len()
+        self.ids.len()
     }
 
     pub fn ids(&self) -> &[usize] {
         &self.ids
     }
 
-    pub fn columns(&self) -> &[Vec<f64>] {
-        &self.cols
+    /// The stored columns, in arrival order.
+    pub fn columns(&self) -> impl Iterator<Item = &[f64]> + '_ {
+        self.cols.chunks_exact(self.d)
     }
 
-    /// Reset for a new round, keeping the allocation-free parameters.
+    /// Reset for a new round, keeping all allocations (flat column buffer,
+    /// id list, Gram-row scratch).
     pub fn clear(&mut self) {
         self.cols.clear();
         self.ids.clear();
@@ -82,7 +115,7 @@ impl SpanProjector {
     /// Returns `true` if stored.
     pub fn try_push(&mut self, id: usize, g: &[f64]) -> bool {
         assert_eq!(g.len(), self.d, "gradient dim mismatch");
-        if self.cols.len() >= self.d {
+        if self.ids.len() >= self.d {
             // span(R_j) is already all of R^d; nothing can be independent.
             // (Structural guard: floating-point pivot noise must not admit
             // more than d columns.)
@@ -92,41 +125,62 @@ impl SpanProjector {
         if gg <= 0.0 || !gg.is_finite() {
             return false; // zero or non-finite vectors span nothing useful
         }
-        // Extended Gram row: cross terms with existing columns + diagonal.
-        let mut grow: Vec<f64> = self.cols.iter().map(|c| dot(c, g)).collect();
-        grow.push(gg);
+        // Extended Gram row: cross terms with existing columns + diagonal,
+        // built in the reusable scratch buffer.
+        self.grow.clear();
+        for c in self.cols.chunks_exact(self.d) {
+            self.grow.push(dot(c, g));
+        }
+        self.grow.push(gg);
         // Pivot = squared distance from g to span(A); require it to exceed
         // (eps_li ‖g‖)² for numerical independence.
         let tol = self.eps_li * self.eps_li * gg;
-        if self.chol.try_append(&grow, tol).is_none() {
+        if self.chol.try_append(&self.grow, tol).is_none() {
             return false;
         }
-        self.cols.push(g.to_vec());
+        self.cols.extend_from_slice(g);
         self.ids.push(id);
         true
     }
 
-    /// Project `g` onto the span of the stored columns.
+    /// Project `g` onto the span of the stored columns, writing the echo
+    /// gradient `g* = A x` into `echo` (cleared and resized to `d`; its
+    /// capacity is reused across calls).
     ///
     /// Returns `None` when no columns are stored (`|R_j| = 0` ⇒ worker must
-    /// broadcast raw, Algorithm 1 line 15).
-    pub fn project(&self, g: &[f64]) -> Option<Projection> {
+    /// broadcast raw, Algorithm 1 line 15); `echo` is untouched then.
+    pub fn project_into(&self, g: &[f64], echo: &mut Vec<f64>) -> Option<ProjectionInfo> {
         assert_eq!(g.len(), self.d);
-        if self.cols.is_empty() {
+        if self.ids.is_empty() {
             return None;
         }
-        let atg: Vec<f64> = self.cols.iter().map(|c| dot(c, g)).collect();
+        let atg: Vec<f64> = self.cols.chunks_exact(self.d).map(|c| dot(c, g)).collect();
         let coeffs = self.chol.solve(&atg);
-        let echo = combine(&self.cols, &coeffs);
-        // residual² = ‖g‖² − 2<g, g*> + ‖g*‖², computed directly for
-        // numerical robustness near zero.
+        echo.clear();
+        echo.resize(self.d, 0.0);
+        for (c, &xi) in self.cols.chunks_exact(self.d).zip(coeffs.iter()) {
+            axpy(xi, c, echo);
+        }
+        // residual² = Σ (g_i − g*_i)², computed directly for numerical
+        // robustness near zero.
         let mut res_sq = 0.0;
         for (gi, ei) in g.iter().zip(echo.iter()) {
             let e = gi - ei;
             res_sq += e * e;
         }
-        let echo_norm = norm(&echo);
-        Some(Projection { coeffs, echo, residual: res_sq.sqrt(), echo_norm })
+        let echo_norm = norm(echo);
+        Some(ProjectionInfo { coeffs, residual: res_sq.sqrt(), echo_norm })
+    }
+
+    /// Allocating convenience wrapper around [`Self::project_into`].
+    pub fn project(&self, g: &[f64]) -> Option<Projection> {
+        let mut echo = Vec::new();
+        self.project_into(g, &mut echo).map(|info| Projection {
+            coeffs: info.coeffs,
+            echo,
+            residual: info.residual,
+            echo_norm: info.echo_norm,
+        })
     }
 }
 
@@ -167,6 +221,31 @@ mod tests {
         assert!((pr.echo_norm - 3.0).abs() < 1e-12);
         // coefficient reconstructs: 1.5 * [2,0,0] = [3,0,0]
         assert!((pr.coeffs[0] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn project_into_reuses_buffer_and_matches_project() {
+        let mut rng = Rng::new(12);
+        let d = 30;
+        let mut p = SpanProjector::new(d, 1e-9);
+        for i in 0..4 {
+            p.try_push(i, &rng.normal_vec(d));
+        }
+        let mut buf = vec![99.0; 7]; // wrong size on purpose; must be resized
+        for _ in 0..3 {
+            let g = rng.normal_vec(d);
+            let info = p.project_into(&g, &mut buf).unwrap();
+            let pr = p.project(&g).unwrap();
+            assert_eq!(buf, pr.echo);
+            assert_eq!(info.coeffs, pr.coeffs);
+            assert_eq!(info.residual, pr.residual);
+            assert_eq!(info.echo_norm, pr.echo_norm);
+        }
+        // Empty projector leaves the buffer untouched.
+        let empty = SpanProjector::new(d, 1e-9);
+        let before = buf.clone();
+        assert!(empty.project_into(&rng.normal_vec(d), &mut buf).is_none());
+        assert_eq!(buf, before);
     }
 
     #[test]
@@ -241,6 +320,7 @@ mod tests {
         p.try_push(0, &[1.0, 0.0, 0.0, 0.0]);
         p.clear();
         assert_eq!(p.rank(), 0);
+        assert_eq!(p.columns().count(), 0);
         assert!(p.project(&[1.0; 4]).is_none());
     }
 }

@@ -13,9 +13,14 @@
 //! * `attack-matrix`  — aggregators × attacks final-error table
 //! * `convergence`    — empirical contraction vs theoretical ρ
 //!
+//! Every subcommand accepts `--threads <k>` (or `--threads auto`) to fan
+//! the round engine's computation phase across `k` worker threads —
+//! results are bit-identical at any thread count.
+//!
 //! Examples:
 //! ```text
 //! echo-cgc train --n 50 --f 5 --sigma 0.05 --rounds 500
+//! echo-cgc train --d 100000 --threads auto
 //! echo-cgc figures --which all
 //! echo-cgc attack-matrix --n 25 --f 2 --rounds 300
 //! ```
@@ -30,6 +35,7 @@ use echo_cgc::sim::Simulation;
 fn usage() -> ! {
     eprintln!(
         "usage: echo-cgc <train|analyze|figures|bench-comm|echo-rate|attack-matrix|convergence|multihop> [--key value ...]\n\
+         common flags: --n --f --b --d --rounds --sigma --attack --aggregator --seed --threads <k|auto>\n\
          run `echo-cgc train --n 20 --f 2 --rounds 200` for a quick start"
     );
     std::process::exit(2);
@@ -91,7 +97,7 @@ fn cmd_train(cfg: &ExperimentConfig) {
         std::process::exit(2);
     });
     println!(
-        "echo-cgc train: n={} f={} b={} model={} d={} attack={} agg={} r={:.4} eta={:.3e}",
+        "echo-cgc train: n={} f={} b={} model={} d={} attack={} agg={} r={:.4} eta={:.3e} threads={}",
         cfg.n,
         cfg.f,
         cfg.b,
@@ -100,7 +106,8 @@ fn cmd_train(cfg: &ExperimentConfig) {
         cfg.attack.name(),
         cfg.aggregator.name(),
         sim.r(),
-        sim.eta()
+        sim.eta(),
+        cfg.effective_threads()
     );
     let mut table = CsvTable::new(&[
         "round", "loss", "dist_sq", "grad_norm", "uplink_bits", "echo", "raw", "exposed",

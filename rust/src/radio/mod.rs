@@ -188,6 +188,13 @@ impl<'a> RadioRound<'a> {
         self.next_slot
     }
 
+    /// Transmitter of `slot` under the network's schedule (convenience so
+    /// the round engine need not clone the schedule to look up owners
+    /// while the round borrows the network).
+    pub fn owner(&self, slot: usize) -> NodeId {
+        self.net.schedule.owner(slot)
+    }
+
     /// Finish the round; panics if slots remain unused (every slot must be
     /// either transmitted in or explicitly silent).
     pub fn finish(self) {
@@ -328,6 +335,21 @@ mod tests {
         assert_eq!(got.len(), 100);
         assert!(net.meter.downlink_bits > 100 * 32);
         assert_eq!(net.meter.rx_bits[3], net.meter.downlink_bits);
+    }
+
+    #[test]
+    fn round_exposes_slot_owners() {
+        let mut rng = crate::rng::Rng::new(4);
+        let mut net =
+            RadioNetwork::with_schedule(TdmaSchedule::shuffled(6, &mut rng), Encoding::default());
+        let expect: Vec<usize> = net.schedule.order().to_vec();
+        let mut round = net.begin_round();
+        let owners: Vec<usize> = (0..6).map(|s| round.owner(s)).collect();
+        assert_eq!(owners, expect);
+        for slot in 0..6 {
+            round.silence(slot);
+        }
+        round.finish();
     }
 
     #[test]

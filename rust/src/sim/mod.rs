@@ -1,6 +1,15 @@
 //! The synchronous round engine: computation → communication → aggregation
 //! (Algorithm 1, outer loop), over the radio substrate, with Byzantine
 //! workers injected per the experiment config.
+//!
+//! **Parallelism.** The computation phase (one stochastic gradient per
+//! fault-free worker — the dominant cost when `d ≫ n`, the paper's regime)
+//! and the per-slot overhear fan-out (each listener's span update is
+//! independent) run across a scoped thread pool sized by
+//! [`ExperimentConfig::threads`]. Results are **bit-identical at any
+//! thread count**: every worker owns a pre-split RNG stream, and the TDMA
+//! slot sequence itself stays serial (it is inherently ordered).
+//! `rust/tests/determinism.rs` pins this invariant.
 pub mod multihop;
 
 
@@ -215,6 +224,7 @@ impl Simulation {
     /// Execute one synchronous round; returns its record.
     pub fn step(&mut self) -> RoundRecord {
         let cfg_n = self.cfg.n;
+        let threads = self.cfg.effective_threads();
         // Pre-update measurements at w^t.
         let loss = self.model.loss(&self.w);
         let full_grad_at_w = self.model.full_gradient(&self.w);
@@ -225,20 +235,30 @@ impl Simulation {
 
         // ---- Computation phase -------------------------------------------------
         // Server broadcasts w^t; workers compute local stochastic gradients
-        // on the *received* (possibly f32-quantized) parameter.
+        // on the *received* (possibly f32-quantized) parameter, fanned out
+        // across the thread pool (bit-identical at any thread count: each
+        // worker consumes its own pre-split RNG stream).
         let t0 = Instant::now();
         let w_recv = self.radio.downlink(&self.w);
+        let grads = crate::grad::parallel_gradients(
+            &mut self.backends,
+            &mut self.worker_rngs,
+            &w_recv,
+            threads,
+        );
+        // Omniscient adversaries know the true gradient at the received w
+        // and every honest gradient. Both are pure attack inputs, and the
+        // true gradient costs a full O(d·m) dataset pass — so materialize
+        // them only when at least one attack is wired.
+        let have_attacks = !self.attacks.is_empty();
+        let true_grad =
+            if have_attacks { self.model.full_gradient(&w_recv) } else { Vec::new() };
         let mut honest_grads: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
-        for i in 0..cfg_n {
-            if let Some(backend) = self.backends[i].as_mut() {
-                let g = backend.gradient(&w_recv, &mut self.worker_rngs[i]);
-                honest_grads.insert(i, g);
+        for (i, g) in grads {
+            if have_attacks {
+                honest_grads.insert(i, g.clone());
             }
-        }
-        // Omniscient adversaries know the true gradient at the received w.
-        let true_grad = self.model.full_gradient(&w_recv);
-        for (i, g) in &honest_grads {
-            self.workers[*i].as_mut().unwrap().begin_round(g.clone());
+            self.workers[i].as_mut().unwrap().begin_round(g);
         }
         self.timings.grad_ns += t0.elapsed().as_nanos();
 
@@ -248,14 +268,13 @@ impl Simulation {
             self.radio.schedule = TdmaSchedule::shuffled(cfg_n, &mut self.sched_rng);
         }
         self.server.begin_round();
-        let schedule = self.radio.schedule.clone();
         let mut overheard: Vec<(usize, Payload)> = Vec::with_capacity(cfg_n);
         let mut echo_count = 0usize;
         let mut raw_count = 0usize;
         {
             let mut round = self.radio.begin_round();
             for slot in 0..cfg_n {
-                let owner = schedule.owner(slot);
+                let owner = round.owner(slot);
                 let frame: Option<Payload> = if let Some(att) = self.attacks.get_mut(&owner) {
                     let ctx = AttackCtx {
                         id: owner,
@@ -297,13 +316,7 @@ impl Simulation {
                         }
                         self.server.on_frame(owner, &delivered);
                         if self.cfg.echo_enabled {
-                            for i in 0..cfg_n {
-                                if i != owner {
-                                    if let Some(wk) = self.workers[i].as_mut() {
-                                        wk.overhear(owner, &delivered);
-                                    }
-                                }
-                            }
+                            overhear_fan_out(&mut self.workers, owner, &delivered, threads);
                         }
                         overheard.push((owner, delivered));
                     }
@@ -392,6 +405,37 @@ impl Simulation {
             r: self.r,
         }
     }
+}
+
+/// Deliver one broadcast frame to every other fault-free worker, fanning
+/// the span updates across up to `threads` scoped threads (shared helper:
+/// [`crate::par::scoped_for_each`]). Each listener's
+/// [`EchoWorker::overhear`] touches only its own projector state, so the
+/// fan-out is embarrassingly parallel and involves no RNG — the result is
+/// identical at any thread count.
+fn overhear_fan_out(
+    workers: &mut [Option<EchoWorker>],
+    owner: usize,
+    delivered: &Payload,
+    threads: usize,
+) {
+    // Only raw gradients can extend a span (Algorithm 1, line 27):
+    // listeners ignore echo/sparse/param frames entirely, so skip those
+    // slots rather than paying per-slot fan-out for no-ops — exactly the
+    // echo-heavy slots the algorithm optimizes for.
+    if !matches!(delivered, Payload::Raw(_)) {
+        return;
+    }
+    let mut listeners: Vec<&mut EchoWorker> = Vec::with_capacity(workers.len());
+    for (i, slot) in workers.iter_mut().enumerate() {
+        if i == owner {
+            continue;
+        }
+        if let Some(wk) = slot.as_mut() {
+            listeners.push(wk);
+        }
+    }
+    crate::par::scoped_for_each(&mut listeners, threads, |wk| wk.overhear(owner, delivered));
 }
 
 #[cfg(test)]
@@ -547,6 +591,26 @@ mod tests {
             assert_eq!(x.uplink_bits, y.uplink_bits);
             assert_eq!(x.echo_count, y.echo_count);
         }
+    }
+
+    #[test]
+    fn parallel_engine_matches_serial_bitwise() {
+        let mut cfg = quick_cfg();
+        cfg.rounds = 25;
+        let mut serial = Simulation::build(&cfg).unwrap();
+        let ra = serial.run();
+        let mut cfg4 = cfg.clone();
+        cfg4.threads = 4;
+        let mut par = Simulation::build(&cfg4).unwrap();
+        let rb = par.run();
+        for (x, y) in ra.iter().zip(rb.iter()) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.grad_norm.to_bits(), y.grad_norm.to_bits());
+            assert_eq!(x.uplink_bits, y.uplink_bits);
+            assert_eq!(x.echo_count, y.echo_count);
+            assert_eq!(x.raw_count, y.raw_count);
+        }
+        assert_eq!(serial.current_w(), par.current_w());
     }
 
     #[test]

@@ -73,6 +73,9 @@ pub struct EchoWorker {
     projector: SpanProjector,
     grad: Option<Vec<f64>>,
     transmitted: bool,
+    /// Reusable scratch for the projected echo gradient (capacity kept
+    /// across rounds; see [`SpanProjector::project_into`]).
+    echo_buf: Vec<f64>,
     pub stats: WorkerStats,
 }
 
@@ -93,6 +96,7 @@ impl EchoWorker {
             projector: SpanProjector::new(d, eps_li),
             grad: None,
             transmitted: false,
+            echo_buf: Vec::new(),
             stats: WorkerStats::default(),
         }
     }
@@ -132,12 +136,21 @@ impl EchoWorker {
 
     /// Produce this worker's frame for its own TDMA slot
     /// (Algorithm 1, lines 14–24).
+    ///
+    /// Consumes the round's local gradient: on the raw branch it moves
+    /// straight into the frame (no O(d) clone), so [`Self::local_gradient`]
+    /// returns `None` after transmitting. The projection itself writes into
+    /// the worker's reusable echo buffer — the whole decision allocates
+    /// only the O(s) coefficient/id vectors of an echo frame.
     pub fn transmit(&mut self) -> Payload {
-        let g = self.grad.as_ref().expect("begin_round before transmit").clone();
+        let g = self.grad.take().expect("begin_round before transmit");
         self.transmitted = true;
         self.stats.span_sizes += self.projector.rank() as u64;
 
-        if let Some(pr) = self.projector.project(&g) {
+        // `projector` and `echo_buf` are disjoint fields, so the reusable
+        // buffer can be borrowed straight through.
+        let projected = self.projector.project_into(&g, &mut self.echo_buf);
+        if let Some(pr) = projected {
             let gnorm = crate::linalg::norm(&g);
             // Echo test ‖Ax − g‖ ≤ r‖g‖; additionally require the echo
             // gradient to be non-degenerate so k = ‖g‖/‖Ax‖ is finite.
@@ -159,7 +172,10 @@ impl EchoWorker {
         Payload::Raw(g)
     }
 
-    /// The local gradient of the current round (test/diagnostic access).
+    /// The local gradient of the current round (test/diagnostic access and
+    /// the raw-broadcast baselines). `None` before [`Self::begin_round`]
+    /// and after [`Self::transmit`] (which moves the gradient into the
+    /// frame).
     pub fn local_gradient(&self) -> Option<&[f64]> {
         self.grad.as_deref()
     }

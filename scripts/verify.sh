@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus hygiene gates. Run from anywhere; operates on
+# the repo root. Fails on the first broken gate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q (unit + integration + doctests) =="
+cargo test -q
+
+echo "== hygiene: cargo fmt --check =="
+cargo fmt --check
+
+echo "== hygiene: cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "verify: all gates green"
