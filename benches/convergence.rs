@@ -1,78 +1,78 @@
 //! Bench T-conv (Theorem 9): the measured per-round contraction of
 //! ‖wᵗ − w*‖² never exceeds the theoretical rate ρ = 1 − 2βη + γη²
 //! (computed with the *realized* h, b of the execution), across network
-//! sizes, noise levels and attacks.
+//! sizes, noise levels and attacks. The (n, f) × σ × attack surface is a
+//! grid on the sweep engine ([`echo_cgc::sweep::presets::convergence`]);
+//! each cell's contraction estimate (`empirical_rho`, windowed to the
+//! contracting prefix above the f32 wire-quantization floor) is computed
+//! by the engine itself.
+//!
+//! The smoke profile (`--profile smoke` / `ECHO_CGC_BENCH_QUICK=1`)
+//! shrinks the grid and horizon for CI and widens the sampling slack.
+#![allow(clippy::field_reassign_with_default)]
 
 use echo_cgc::bench_utils::Bencher;
-use echo_cgc::byzantine::AttackKind;
 use echo_cgc::config::ExperimentConfig;
 use echo_cgc::metrics::CsvTable;
 use echo_cgc::sim::Simulation;
+use echo_cgc::sweep::{auto_threads, bench_profile, presets, SweepProfile};
 
 fn main() {
     let mut b = Bencher::new();
+    let profile = bench_profile();
+    let threads = auto_threads();
+    let grid = presets::convergence(profile);
+    println!(
+        "contraction: empirical ρ vs theoretical ρ — {} cells, profile {}, {} threads\n",
+        grid.len(),
+        profile.name(),
+        threads
+    );
+    let report = grid.run(threads);
+
     let mut table =
         CsvTable::new(&["n", "f", "sigma", "attack", "empirical_rho", "theory_rho"]);
-
-    println!("contraction: empirical ρ vs theoretical ρ (300 rounds each)\n");
     println!(
         "{:>5} {:>4} {:>7} {:>12} {:>12} {:>12}",
         "n", "f", "σ", "attack", "emp ρ", "theory ρ"
     );
-    for &(n, f) in &[(12usize, 1usize), (24, 2), (48, 4)] {
-        for &sigma in &[0.02, 0.08] {
-            for attack in [AttackKind::Omniscient, AttackKind::LargeNorm, AttackKind::SignFlip] {
-                let mut cfg = ExperimentConfig::default();
-                cfg.n = n;
-                cfg.f = f;
-                cfg.b = f;
-                cfg.sigma = sigma;
-                cfg.d = 60;
-                cfg.rounds = 300;
-                cfg.attack = attack;
-                let mut sim = Simulation::build(&cfg).expect("valid config");
-                let recs = sim.run();
-                let d0 = recs.first().unwrap().dist_sq.unwrap();
-                // Contraction stalls at the f32 wire-quantization floor
-                // (~1e-14); measure ρ only over the contracting prefix.
-                let floor = 1e-10 * d0.max(1.0);
-                let t_eff = recs
-                    .iter()
-                    .position(|r| r.dist_sq.unwrap() < floor)
-                    .unwrap_or(recs.len());
-                let dt = recs[t_eff.saturating_sub(1)].dist_sq.unwrap().max(1e-300);
-                let emp = (dt / d0).powf(1.0 / t_eff.max(1) as f64);
-                let rho = sim.realized_theory().rho(sim.eta());
-                println!(
-                    "{:>5} {:>4} {:>7.2} {:>12} {:>12.6} {:>12.6}",
-                    n,
-                    f,
-                    sigma,
-                    attack.name(),
-                    emp,
-                    rho
-                );
-                // The theorem bounds the *expected* contraction; allow a
-                // small sampling slack but never a gross violation.
-                assert!(
-                    emp <= rho + 0.02,
-                    "empirical ρ {emp} grossly exceeds theory {rho}"
-                );
-                table.push_row_mixed(vec![
-                    format!("{n}"),
-                    format!("{f}"),
-                    format!("{sigma}"),
-                    attack.name().to_string(),
-                    format!("{emp}"),
-                    format!("{rho}"),
-                ]);
-            }
-        }
+    // The theorem bounds the *expected* contraction; allow sampling slack
+    // but never a gross violation. Shorter smoke horizons are noisier.
+    let slack = match profile {
+        SweepProfile::Full => 0.02,
+        SweepProfile::Smoke => 0.10,
+    };
+    for c in &report.cells {
+        assert!(c.error.is_none(), "cell {} ({}) failed: {:?}", c.index, c.label, c.error);
+        let emp = c.empirical_rho.expect("quadratic model knows its optimum");
+        let rho = c.theory_rho.expect("theory constants always resolve");
+        println!(
+            "{:>5} {:>4} {:>7.2} {:>12} {:>12.6} {:>12.6}",
+            c.n, c.f, c.sigma, c.attack, emp, rho
+        );
+        assert!(
+            emp <= rho + slack,
+            "empirical ρ {emp} grossly exceeds theoretical ρ {rho} (cell {})",
+            c.label
+        );
+        table.push_row_mixed(vec![
+            format!("{}", c.n),
+            format!("{}", c.f),
+            format!("{}", c.sigma),
+            c.attack.to_string(),
+            format!("{emp}"),
+            format!("{rho}"),
+        ]);
     }
     table.write_file("results/bench_convergence.csv").unwrap();
+    report.write_json_with_timings("results/BENCH_convergence.json").unwrap();
 
-    // Wall-clock: full 100-round training runs at two scales.
-    for &(n, d) in &[(20usize, 100usize), (50, 500)] {
+    // Wall-clock: full 100-round training runs (one scale in smoke mode).
+    let scales: &[(usize, usize)] = match profile {
+        SweepProfile::Full => &[(20, 100), (50, 500)],
+        SweepProfile::Smoke => &[(20, 100)],
+    };
+    for &(n, d) in scales {
         b.bench(&format!("train_100rounds/n{n}_d{d}"), || {
             let mut cfg = ExperimentConfig::default();
             cfg.n = n;

@@ -2,6 +2,7 @@
 //! bound `E n* ≥ np − 1`, `p = 1 − (1+2/r)²σ²` (§4.3). The bound must hold
 //! wherever it is non-vacuous; the measurement is usually far above it
 //! (the bound only counts gradients inside the ball B).
+#![allow(clippy::field_reassign_with_default)]
 
 use echo_cgc::analysis;
 use echo_cgc::bench_utils::Bencher;

@@ -6,6 +6,7 @@
 //! exposed by the server's reliable-broadcast check.
 //!
 //! Run: `cargo run --release --example byzantine_attacks`
+#![allow(clippy::field_reassign_with_default)]
 
 use echo_cgc::byzantine::AttackKind;
 use echo_cgc::config::ExperimentConfig;

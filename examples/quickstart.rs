@@ -6,6 +6,7 @@
 //! savings vs the all-raw baseline.
 //!
 //! Run: `cargo run --release --example quickstart`
+#![allow(clippy::field_reassign_with_default)]
 
 use echo_cgc::analysis;
 use echo_cgc::config::ExperimentConfig;

@@ -4,6 +4,7 @@
 //! whole design (power ∝ bits).
 //!
 //! Run: `cargo run --release --example radio_comm_savings`
+#![allow(clippy::field_reassign_with_default)]
 
 use echo_cgc::analysis;
 use echo_cgc::config::ExperimentConfig;

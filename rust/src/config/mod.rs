@@ -184,13 +184,20 @@ impl ExperimentConfig {
     }
 
     /// Resolve [`Self::threads`]: `0` means "one thread per available
-    /// core", anything else is taken literally (min 1).
+    /// core" ([`crate::par::available_threads`]), anything else is taken
+    /// literally (min 1).
     pub fn effective_threads(&self) -> usize {
         if self.threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            crate::par::available_threads()
         } else {
             self.threads
         }
+    }
+
+    /// Short filesystem-safe tag naming this run — used by `train` result
+    /// CSVs and sweep cell labels.
+    pub fn run_tag(&self) -> String {
+        format!("{}_n{}_f{}_{}", self.model.name(), self.n, self.f, self.attack.name())
     }
 
     /// Resolve the deviation ratio: explicit, or `r_frac ×` Lemma-4 bound.
@@ -468,6 +475,12 @@ mod tests {
         cfg.set("j", "2").unwrap();
         assert_eq!(cfg.threads, 2);
         assert!(cfg.set("threads", "bogus").is_err());
+    }
+
+    #[test]
+    fn run_tag_is_stable() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.run_tag(), "quadratic_n20_f2_omniscient");
     }
 
     #[test]

@@ -61,30 +61,52 @@ impl Aggregator {
     }
 }
 
-/// CGC filter + report of which slots were clipped (feeds the server's
-/// suspicion scores: honest workers are clipped only occasionally, a
-/// norm-inflating Byzantine every round).
-pub fn cgc_filter_report(grads: &[Vec<f64>], f: usize) -> (Vec<Vec<f64>>, Vec<usize>) {
-    let n = grads.len();
+/// CGC clip scales from the norm vector (Eq. 8's per-gradient factors):
+/// `1.0` at or below the `(n−f)`-th smallest norm, `threshold/‖g_j‖`
+/// above it (`0.0` for a pathological zero-norm "large" gradient).
+/// Returns `(scales, clipped ids ascending)`.
+///
+/// This is **the** clip rule — [`cgc_filter_report`], [`cgc_sum_fused`]
+/// and the server's parallel fused path all derive from it, so
+/// tie-breaking and threshold selection live in exactly one place.
+pub fn cgc_scales(norms: &[f64], f: usize) -> (Vec<f64>, Vec<usize>) {
+    let n = norms.len();
     assert!(f < n, "need f < n");
+    let mut scales = vec![1.0; n];
+    let mut clipped = Vec::new();
     if f == 0 {
-        return (grads.to_vec(), Vec::new());
+        return (scales, clipped);
     }
-    let norms: Vec<f64> = grads.iter().map(|g| norm(g)).collect();
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap().then(a.cmp(&b)));
     let threshold = norms[order[n - f - 1]];
-    let mut out = grads.to_vec();
-    let mut clipped = Vec::new();
-    for &j in &order[n - f..] {
-        let nj = norms[j];
+    for (j, &nj) in norms.iter().enumerate() {
         if nj > threshold {
-            let scale = if nj > 0.0 { threshold / nj } else { 0.0 };
-            linalg::scale_mut(scale, &mut out[j]);
             clipped.push(j);
+            scales[j] = if nj > 0.0 { threshold / nj } else { 0.0 };
         }
     }
-    clipped.sort_unstable();
+    (scales, clipped)
+}
+
+/// CGC filter + report of which slots were clipped (feeds the server's
+/// suspicion scores: honest workers are clipped only occasionally, a
+/// norm-inflating Byzantine every round).
+///
+/// Generic over `AsRef<[f64]>` (owned vectors or borrowed slices), like
+/// every rule in this module, so the server can aggregate its stored
+/// gradients without cloning them first.
+pub fn cgc_filter_report<G: AsRef<[f64]>>(grads: &[G], f: usize) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let mut out: Vec<Vec<f64>> = grads.iter().map(|g| g.as_ref().to_vec()).collect();
+    if f == 0 {
+        assert!(!grads.is_empty(), "need f < n");
+        return (out, Vec::new());
+    }
+    let norms: Vec<f64> = grads.iter().map(|g| norm(g.as_ref())).collect();
+    let (scales, clipped) = cgc_scales(&norms, f);
+    for &j in &clipped {
+        linalg::scale_mut(scales[j], &mut out[j]);
+    }
     (out, clipped)
 }
 
@@ -93,11 +115,11 @@ pub fn cgc_filter_report(grads: &[Vec<f64>], f: usize) -> (Vec<Vec<f64>>, Vec<us
 /// Sort the norms ascending; gradients ranked above `n−f` are scaled down
 /// to the `(n−f)`-th norm; the rest pass unchanged. Zero vectors (exposed
 /// Byzantine slots) sort first and pass unchanged, as in the paper.
-pub fn cgc_filter(grads: &[Vec<f64>], f: usize) -> Vec<Vec<f64>> {
+pub fn cgc_filter<G: AsRef<[f64]>>(grads: &[G], f: usize) -> Vec<Vec<f64>> {
     cgc_filter_report(grads, f).0
 }
 
-fn krum_select(grads: &[Vec<f64>], f: usize) -> usize {
+fn krum_select<G: AsRef<[f64]>>(grads: &[G], f: usize) -> usize {
     let n = grads.len();
     // Krum needs n > 2f + 2; fall back to the full-neighbour score when the
     // margin is too small (still well-defined).
@@ -107,7 +129,7 @@ fn krum_select(grads: &[Vec<f64>], f: usize) -> usize {
         for j in i + 1..n {
             let d2 = {
                 let mut s = 0.0;
-                for (a, b) in grads[i].iter().zip(grads[j].iter()) {
+                for (a, b) in grads[i].as_ref().iter().zip(grads[j].as_ref().iter()) {
                     let e = a - b;
                     s += e * e;
                 }
@@ -131,14 +153,14 @@ fn krum_select(grads: &[Vec<f64>], f: usize) -> usize {
     best
 }
 
-fn coordinate_median(grads: &[Vec<f64>]) -> Vec<f64> {
+fn coordinate_median<G: AsRef<[f64]>>(grads: &[G]) -> Vec<f64> {
     let n = grads.len();
-    let d = grads[0].len();
+    let d = grads[0].as_ref().len();
     let mut out = vec![0.0; d];
     let mut col = vec![0.0; n];
     for c in 0..d {
         for (i, g) in grads.iter().enumerate() {
-            col[i] = g[c];
+            col[i] = g.as_ref()[c];
         }
         col.sort_by(|a, b| a.partial_cmp(b).unwrap());
         out[c] = if n % 2 == 1 { col[n / 2] } else { 0.5 * (col[n / 2 - 1] + col[n / 2]) };
@@ -146,16 +168,16 @@ fn coordinate_median(grads: &[Vec<f64>]) -> Vec<f64> {
     out
 }
 
-fn trimmed_mean(grads: &[Vec<f64>], f: usize) -> Vec<f64> {
+fn trimmed_mean<G: AsRef<[f64]>>(grads: &[G], f: usize) -> Vec<f64> {
     let n = grads.len();
     assert!(2 * f < n, "trimmed mean needs 2f < n");
-    let d = grads[0].len();
+    let d = grads[0].as_ref().len();
     let keep = n - 2 * f;
     let mut out = vec![0.0; d];
     let mut col = vec![0.0; n];
     for c in 0..d {
         for (i, g) in grads.iter().enumerate() {
-            col[i] = g[c];
+            col[i] = g.as_ref()[c];
         }
         col.sort_by(|a, b| a.partial_cmp(b).unwrap());
         out[c] = col[f..n - f].iter().sum::<f64>() / keep as f64;
@@ -166,51 +188,40 @@ fn trimmed_mean(grads: &[Vec<f64>], f: usize) -> Vec<f64> {
 /// Fused CGC-sum: computes `Σ ĝ_j` and the clipped set without
 /// materializing the filtered copies (saves two O(n·d) clones on the
 /// server's per-round hot path — see EXPERIMENTS.md §Perf).
-pub fn cgc_sum_fused(grads: &[Vec<f64>], f: usize) -> (Vec<f64>, Vec<usize>) {
+pub fn cgc_sum_fused<G: AsRef<[f64]>>(grads: &[G], f: usize) -> (Vec<f64>, Vec<usize>) {
     let n = grads.len();
     assert!(f < n, "need f < n");
-    let d = grads[0].len();
-    let norms: Vec<f64> = grads.iter().map(|g| norm(g)).collect();
+    let d = grads[0].as_ref().len();
     let mut out = vec![0.0; d];
-    let mut clipped = Vec::new();
     if f == 0 {
         for g in grads {
-            linalg::axpy(1.0, g, &mut out);
+            linalg::axpy(1.0, g.as_ref(), &mut out);
         }
-        return (out, clipped);
+        return (out, Vec::new());
     }
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap().then(a.cmp(&b)));
-    let threshold = norms[order[n - f - 1]];
-    for (j, g) in grads.iter().enumerate() {
-        let nj = norms[j];
-        let scale = if nj > threshold {
-            clipped.push(j);
-            if nj > 0.0 { threshold / nj } else { 0.0 }
-        } else {
-            1.0
-        };
-        linalg::axpy(scale, g, &mut out);
+    let norms: Vec<f64> = grads.iter().map(|g| norm(g.as_ref())).collect();
+    let (scales, clipped) = cgc_scales(&norms, f);
+    for (g, &s) in grads.iter().zip(scales.iter()) {
+        linalg::axpy(s, g.as_ref(), &mut out);
     }
-    clipped.sort_unstable();
     (out, clipped)
 }
 
 /// Aggregate reconstructed gradients into the update direction `g^t`
 /// (sum-equivalent scaling — see the module docs).
-pub fn aggregate(agg: Aggregator, grads: &[Vec<f64>], f: usize) -> Vec<f64> {
+pub fn aggregate<G: AsRef<[f64]>>(agg: Aggregator, grads: &[G], f: usize) -> Vec<f64> {
     let n = grads.len();
     assert!(n > 0);
     match agg {
         Aggregator::CgcSum => cgc_sum_fused(grads, f).0,
         Aggregator::Mean => {
-            let mut out = vec![0.0; grads[0].len()];
+            let mut out = vec![0.0; grads[0].as_ref().len()];
             for g in grads {
-                linalg::axpy(1.0, g, &mut out);
+                linalg::axpy(1.0, g.as_ref(), &mut out);
             }
             out
         }
-        Aggregator::Krum => linalg::scale(n as f64, &grads[krum_select(grads, f)]),
+        Aggregator::Krum => linalg::scale(n as f64, grads[krum_select(grads, f)].as_ref()),
         Aggregator::CoordMedian => linalg::scale(n as f64, &coordinate_median(grads)),
         Aggregator::TrimmedMean => linalg::scale(n as f64, &trimmed_mean(grads, f)),
     }
@@ -236,6 +247,21 @@ mod tests {
         // Directions preserved.
         assert!(out[2][1] > 0.0 && out[2][0] == 0.0);
         assert!(out[3][0] > 0.0 && out[3][1] == 0.0);
+    }
+
+    #[test]
+    fn scales_agree_with_filter_report() {
+        let grads = vec![v(&[1.0, 0.0]), v(&[0.0, 2.0]), v(&[0.0, 10.0]), v(&[100.0, 0.0])];
+        let norms: Vec<f64> = grads.iter().map(|g| norm(g)).collect();
+        let (scales, clipped) = cgc_scales(&norms, 2);
+        assert_eq!(clipped, vec![2, 3]);
+        assert_eq!(scales[0], 1.0);
+        assert_eq!(scales[1], 1.0);
+        assert!((scales[2] - 0.2).abs() < 1e-12);
+        assert!((scales[3] - 0.02).abs() < 1e-12);
+        // The filter's clipped set is the same rule.
+        let (_, report_clipped) = cgc_filter_report(&grads, 2);
+        assert_eq!(clipped, report_clipped);
     }
 
     #[test]

@@ -5,5 +5,7 @@
 pub mod aggregators;
 pub mod server;
 
-pub use aggregators::{aggregate, cgc_filter, cgc_filter_report, cgc_sum_fused, Aggregator};
+pub use aggregators::{
+    aggregate, cgc_filter, cgc_filter_report, cgc_scales, cgc_sum_fused, Aggregator,
+};
 pub use server::{ParameterServer, SlotOutcome};

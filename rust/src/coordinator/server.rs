@@ -9,38 +9,55 @@
 //! non-finite values, self/future references) are Byzantine by the same
 //! argument. Exposed workers contribute `0⃗`.
 
-use super::aggregators::{aggregate, Aggregator};
+use super::aggregators::{aggregate, cgc_scales, Aggregator};
 use crate::linalg;
 use crate::wire::Payload;
 use std::collections::BTreeSet;
 
-/// Reference-based fused CGC sum (mirrors `aggregators::cgc_sum_fused`
-/// without requiring owned vectors).
-fn cgc_sum_fused_refs(grads: &[&Vec<f64>], f: usize, d: usize) -> (Vec<f64>, Vec<usize>) {
-    let n = grads.len();
-    let norms: Vec<f64> = grads.iter().map(|g| crate::linalg::norm(g)).collect();
+/// Per-worker norms `‖g̃_j‖`, fanned across up to `threads` scoped threads.
+/// Each norm is an independent O(d) reduction computed exactly as the
+/// serial [`crate::linalg::norm`], so the partition cannot change a bit.
+fn parallel_norms(grads: &[&[f64]], threads: usize) -> Vec<f64> {
+    let mut jobs: Vec<(usize, f64)> = (0..grads.len()).map(|i| (i, 0.0)).collect();
+    crate::par::scoped_for_each(&mut jobs, threads, |job| {
+        job.1 = crate::linalg::norm(grads[job.0]);
+    });
+    jobs.into_iter().map(|(_, n)| n).collect()
+}
+
+/// Parallel fused CGC sum (the threaded counterpart of
+/// [`super::aggregators::cgc_sum_fused`], sharing its
+/// [`cgc_scales`] clip rule), parallel over **workers** for the
+/// O(n·d) norm pass and over **coordinates** for the O(n·d) weighted sum.
+///
+/// Bit-identical to the serial fallback at any thread count: every norm is
+/// an independent reduction, and each thread owns a disjoint coordinate
+/// range in which it accumulates worker contributions in exactly the
+/// serial order `j = 0..n` (`out[c] += scale_j · g_j[c]`, same operation,
+/// same order). Pinned by `parallel_cgc_aggregation_bitwise_matches_serial`
+/// below and the engine-level tests in `rust/tests/determinism.rs`.
+fn cgc_sum_fused_refs(
+    grads: &[&[f64]],
+    f: usize,
+    d: usize,
+    threads: usize,
+) -> (Vec<f64>, Vec<usize>) {
+    // f = 0 needs no norms at all; scales degenerate to all-ones.
+    let (scales, clipped) = if f == 0 {
+        (vec![1.0; grads.len()], Vec::new())
+    } else {
+        let norms = parallel_norms(grads, threads);
+        cgc_scales(&norms, f)
+    };
     let mut out = vec![0.0; d];
-    let mut clipped = Vec::new();
-    if f == 0 {
-        for g in grads {
-            crate::linalg::axpy(1.0, g, &mut out);
+    crate::par::scoped_chunks(&mut out, threads, |off, chunk| {
+        for (g, &s) in grads.iter().zip(scales.iter()) {
+            let seg = &g[off..off + chunk.len()];
+            for (o, &x) in chunk.iter_mut().zip(seg.iter()) {
+                *o += s * x;
+            }
         }
-        return (out, clipped);
-    }
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap().then(a.cmp(&b)));
-    let threshold = norms[order[n - f - 1]];
-    for (j, g) in grads.iter().enumerate() {
-        let nj = norms[j];
-        let scale = if nj > threshold {
-            clipped.push(j);
-            if nj > 0.0 { threshold / nj } else { 0.0 }
-        } else {
-            1.0
-        };
-        crate::linalg::axpy(scale, g, &mut out);
-    }
-    clipped.sort_unstable();
+    });
     (out, clipped)
 }
 
@@ -76,6 +93,9 @@ pub struct ParameterServer {
     /// not depend on it).
     clip_counts: Vec<u64>,
     rounds_aggregated: u64,
+    /// Worker threads for the aggregation phase (norm pass + CGC sum).
+    /// `1` = serial; results are bit-identical at any setting.
+    threads: usize,
 }
 
 impl ParameterServer {
@@ -91,7 +111,15 @@ impl ParameterServer {
             exposed: BTreeSet::new(),
             clip_counts: vec![0; n],
             rounds_aggregated: 0,
+            threads: 1,
         }
+    }
+
+    /// Set the aggregation-phase thread count (a pure throughput knob —
+    /// see [`cgc_sum_fused_refs`]). The round engine wires this to
+    /// [`crate::config::ExperimentConfig::threads`].
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     pub fn n(&self) -> usize {
@@ -222,13 +250,13 @@ impl ParameterServer {
         true
     }
 
-    /// Gradients reconstructed this round (⊥ slots panic — call only after
-    /// all slots were processed).
-    pub fn gradients(&self) -> Vec<Vec<f64>> {
+    /// Gradients reconstructed this round, as borrowed slices — no O(n·d)
+    /// clone (⊥ slots panic — call only after all slots were processed).
+    pub fn gradients(&self) -> Vec<&[f64]> {
         self.g
             .iter()
             .enumerate()
-            .map(|(j, g)| g.clone().unwrap_or_else(|| panic!("slot {j} still ⊥")))
+            .map(|(j, g)| g.as_deref().unwrap_or_else(|| panic!("slot {j} still ⊥")))
             .collect()
     }
 
@@ -257,15 +285,11 @@ impl ParameterServer {
     pub fn aggregate_tracked(&mut self) -> Vec<f64> {
         self.rounds_aggregated += 1;
         if self.agg == Aggregator::CgcSum {
-            // Fused path: no O(n·d) clone of G, no filtered copies.
+            // Fused path: no O(n·d) clone of G, no filtered copies; the
+            // norm pass and the weighted sum run across the thread pool.
             let (out, clipped) = {
-                let grads: Vec<&Vec<f64>> = self
-                    .g
-                    .iter()
-                    .enumerate()
-                    .map(|(j, g)| g.as_ref().unwrap_or_else(|| panic!("slot {j} still ⊥")))
-                    .collect();
-                cgc_sum_fused_refs(&grads, self.f, self.d)
+                let grads = self.gradients();
+                cgc_sum_fused_refs(&grads, self.f, self.d, self.threads)
             };
             for j in clipped {
                 self.clip_counts[j] += 1;
@@ -427,6 +451,60 @@ mod tests {
         assert!((crate::linalg::norm(rec) - gn).abs() < 1e-6 * gn);
         // And the deviation is bounded by roughly r within the span.
         assert!(crate::linalg::dist(rec, &g) <= 2.0 * 0.9 * gn);
+    }
+
+    #[test]
+    fn parallel_cgc_aggregation_bitwise_matches_serial() {
+        // Two servers fed identical frames — raw honest gradients, one
+        // Byzantine-sized gradient (forces the clip path), one verified
+        // echo, one silent slot — must aggregate to the same bits whether
+        // the norm pass + CGC sum run serial or threaded. d is odd so the
+        // coordinate chunking exercises a ragged tail.
+        let mut rng = Rng::new(9);
+        let (n, f, d) = (9usize, 2usize, 103usize);
+        for threads in [2usize, 4, 8] {
+            let mut rng_t = rng.split(threads as u64);
+            let mut serial = ParameterServer::new(n, f, d, Aggregator::CgcSum);
+            let mut par = ParameterServer::new(n, f, d, Aggregator::CgcSum);
+            par.set_threads(threads);
+            serial.begin_round();
+            par.begin_round();
+            for j in 0..n {
+                if j == 4 {
+                    serial.on_silence(j);
+                    par.on_silence(j);
+                    continue;
+                }
+                let payload = if j == 3 {
+                    Payload::Raw(crate::linalg::scale(1e6, &rng_t.normal_vec(d)))
+                } else if j == n - 1 {
+                    Payload::Echo { k: 1.5, coeffs: vec![0.5, -0.25], ids: vec![0, 1] }
+                } else {
+                    Payload::Raw(rng_t.normal_vec(d))
+                };
+                assert_eq!(serial.on_frame(j, &payload), par.on_frame(j, &payload));
+            }
+            let a = serial.aggregate_tracked();
+            let b = par.aggregate_tracked();
+            let ab: Vec<u64> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u64> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "threads={threads}");
+            assert_eq!(serial.suspicion(), par.suspicion(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn borrowed_gradients_expose_stored_slots() {
+        let mut s = server(3, 0, 2);
+        s.on_frame(0, &Payload::Raw(vec![1.0, 2.0]));
+        s.on_frame(1, &Payload::Raw(vec![3.0, 4.0]));
+        s.on_frame(2, &Payload::Raw(vec![5.0, 6.0]));
+        let grads = s.gradients();
+        assert_eq!(grads.len(), 3);
+        assert_eq!(grads[1], &[3.0, 4.0][..]);
+        // The non-fused rules consume the same borrows without cloning.
+        let sum = aggregate(Aggregator::Mean, &grads, 0);
+        assert_eq!(sum, vec![9.0, 12.0]);
     }
 
     #[test]

@@ -24,10 +24,20 @@
 //!   regenerate Figures 1a–1d;
 //! * synthetic workloads ([`data`], [`model`]) with controllable `(µ, L, σ)`
 //!   so the theory can be checked against measurement;
-//! * a **parallel round engine**: the computation phase and the per-slot
-//!   overhear fan-out run across a scoped thread pool
+//! * a **parallel round engine**: the computation phase, the per-slot
+//!   overhear fan-out and the server's aggregation (norm pass + fused CGC
+//!   sum) run across a scoped thread pool
 //!   ([`config::ExperimentConfig::threads`]) with bit-identical results at
 //!   any thread count (per-worker RNG streams are pre-split);
+//! * a **sweep engine** ([`sweep`]): declarative grids of experiment
+//!   variations (n/f, σ, d, model, attack, aggregator, echo, seed)
+//!   executed as batched parallel simulations over the same pool, with a
+//!   typed, deterministically-serialized [`sweep::SweepReport`]. The
+//!   `attack-matrix`, `comm-savings` and `convergence` benches are grid
+//!   declarations on this engine, and `echo-cgc sweep --grid <name>
+//!   --profile smoke|full` runs the same grids from the CLI (`smoke` is
+//!   the reduced-size profile CI's `bench-smoke` job runs on every pull
+//!   request);
 //! * an **XLA/PJRT runtime** facade ([`runtime`]) for gradient computations
 //!   AOT-lowered from JAX/Pallas (`python/compile/`) as HLO text (python is
 //!   never on the request path). Currently a stub — see [`runtime`] — until
@@ -60,14 +70,39 @@
 //! println!("final loss {:.3e}, comm saved {:.1}%",
 //!          last.loss, 100.0 * sim.comm_savings());
 //! ```
+//!
+//! Sweeping many configurations at once (what the benches and the
+//! `echo-cgc sweep` subcommand do):
+//!
+//! ```
+//! use echo_cgc::config::ExperimentConfig;
+//! use echo_cgc::coordinator::Aggregator;
+//! use echo_cgc::sweep::SweepGrid;
+//!
+//! let mut base = ExperimentConfig::default();
+//! base.n = 12;
+//! base.f = 1;
+//! base.b = 1;
+//! base.d = 20;
+//! base.rounds = 10;
+//! let mut grid = SweepGrid::new("demo", base);
+//! grid.sigmas = vec![0.03, 0.08];
+//! grid.aggregators = vec![Aggregator::CgcSum, Aggregator::Mean];
+//! let report = grid.run(4); // 4 cells, run across 4 threads —
+//!                           // byte-identical to grid.run(1)
+//! assert_eq!(report.cells.len(), 4);
+//! assert!(report.cells.iter().all(|c| c.error.is_none()));
+//! ```
 
 // Style allowances for simulation-codebase idiom (indexed numeric loops
-// mirror the paper's subscripts; serializers expose explicit to_string).
+// mirror the paper's subscripts; serializers expose explicit to_string;
+// configs are built by mutating a default, the form every bench shares).
 #![allow(unknown_lints)]
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::inherent_to_string)]
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::manual_div_ceil)]
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod analysis;
 pub mod bench_utils;
@@ -85,5 +120,6 @@ pub mod radio;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod wire;
 pub mod worker;

@@ -12,10 +12,20 @@
 //! * `echo-rate`      — measured echo rate vs the analytic lower bound
 //! * `attack-matrix`  — aggregators × attacks final-error table
 //! * `convergence`    — empirical contraction vs theoretical ρ
+//! * `sweep`          — run a declarative experiment grid on the sweep
+//!                      engine (`--grid attack-matrix|gv-baseline|
+//!                      comm-savings|convergence|quick`, `--profile
+//!                      smoke|full`, `--out <path>`); config flags
+//!                      override the preset's base (swept axes win for
+//!                      their own dimension), cells fan out across the
+//!                      thread pool, and the JSON report is
+//!                      byte-identical at any thread count
 //!
 //! Every subcommand accepts `--threads <k>` (or `--threads auto`) to fan
 //! the round engine's computation phase across `k` worker threads —
-//! results are bit-identical at any thread count.
+//! results are bit-identical at any thread count. For `sweep` the same
+//! flag sets the *cell-level* parallelism (each cell runs serially
+//! inside).
 //!
 //! Examples:
 //! ```text
@@ -23,6 +33,7 @@
 //! echo-cgc train --d 100000 --threads auto
 //! echo-cgc figures --which all
 //! echo-cgc attack-matrix --n 25 --f 2 --rounds 300
+//! echo-cgc sweep --grid comm-savings --profile smoke --threads auto
 //! ```
 
 use echo_cgc::analysis;
@@ -34,11 +45,25 @@ use echo_cgc::sim::Simulation;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: echo-cgc <train|analyze|figures|bench-comm|echo-rate|attack-matrix|convergence|multihop> [--key value ...]\n\
+        "usage: echo-cgc <train|analyze|figures|bench-comm|echo-rate|attack-matrix|convergence|multihop|sweep> [--key value ...]\n\
          common flags: --n --f --b --d --rounds --sigma --attack --aggregator --seed --threads <k|auto>\n\
+         sweep flags:  --grid attack-matrix|gv-baseline|comm-savings|convergence|quick --profile smoke|full --out <path>\n\
          run `echo-cgc train --n 20 --f 2 --rounds 200` for a quick start"
     );
     std::process::exit(2);
+}
+
+/// Pull `--flag value` out of the arg vector before config parsing (these
+/// flags belong to a subcommand, not to [`ExperimentConfig`]).
+fn extract_flag(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    let pos = args.iter().position(|a| a == flag)?;
+    if pos + 1 >= args.len() {
+        eprintln!("{flag} needs a value");
+        std::process::exit(2);
+    }
+    let value = args[pos + 1].clone();
+    args.drain(pos..=pos + 1);
+    Some(value)
 }
 
 fn main() {
@@ -69,6 +94,21 @@ fn main() {
             args.drain(pos..=pos + 1);
         }
     }
+    // Sweep-specific flags — extracted only when the sweep subcommand is
+    // present, so other subcommands still reject them as unknown keys.
+    let is_sweep = args.iter().any(|a| a == "sweep");
+    let mut grid_name = String::from("quick");
+    let mut profile_name = String::from("full");
+    let mut sweep_out = None;
+    if is_sweep {
+        if let Some(v) = extract_flag(&mut args, "--grid") {
+            grid_name = v;
+        }
+        if let Some(v) = extract_flag(&mut args, "--profile") {
+            profile_name = v;
+        }
+        sweep_out = extract_flag(&mut args, "--out");
+    }
     let rest = match cfg.apply_args(&args) {
         Ok(r) => r,
         Err(e) => {
@@ -87,8 +127,87 @@ fn main() {
         "attack-matrix" => cmd_attack_matrix(&cfg),
         "convergence" => cmd_convergence(&cfg),
         "multihop" => cmd_multihop(&cfg),
+        "sweep" => cmd_sweep(&cfg, &args, &grid_name, &profile_name, sweep_out),
         _ => usage(),
     }
+}
+
+fn cmd_sweep(
+    cfg: &ExperimentConfig,
+    flag_args: &[String],
+    grid_name: &str,
+    profile_name: &str,
+    out: Option<String>,
+) {
+    use echo_cgc::sweep::{presets, SweepProfile};
+    let profile = SweepProfile::parse(profile_name).unwrap_or_else(|| {
+        eprintln!("unknown profile '{profile_name}' (expected smoke|full)");
+        std::process::exit(2);
+    });
+    let mut grid = presets::by_name(grid_name, profile).unwrap_or_else(|| {
+        eprintln!(
+            "unknown grid '{grid_name}' \
+             (expected attack-matrix|gv-baseline|comm-savings|convergence|quick)"
+        );
+        std::process::exit(2);
+    });
+    // Config flags override the preset's *base* (e.g. --rounds, --seed,
+    // --sigma); axes the grid sweeps still win for their own dimension.
+    if let Err(e) = grid.base.apply_args(flag_args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+    // `--threads` sets cell-level parallelism; each cell stays serial.
+    grid.base.threads = 1;
+    let threads = cfg.effective_threads();
+    println!(
+        "echo-cgc sweep: grid={} profile={} cells={} threads={}",
+        grid.name,
+        profile.name(),
+        grid.len(),
+        threads
+    );
+    let report = grid.run(threads);
+    println!(
+        "{:>4} {:>5} {:>3} {:>10} {:>14} {:>13} {:>7} {:>7} {:>8} {:>13}",
+        "cell", "n", "f", "model", "attack", "agg", "sigma", "echo%", "saved%", "final dist²"
+    );
+    for c in &report.cells {
+        if let Some(e) = &c.error {
+            println!("{:>4} {:>5} {:>3}  config error: {e}", c.index, c.n, c.f);
+            continue;
+        }
+        println!(
+            "{:>4} {:>5} {:>3} {:>10} {:>14} {:>13} {:>7.3} {:>6.1}% {:>7.1}% {:>13.3e}",
+            c.index,
+            c.n,
+            c.f,
+            c.model,
+            c.attack,
+            c.aggregator,
+            c.sigma,
+            100.0 * c.echo_rate,
+            100.0 * c.comm_savings,
+            c.final_dist_sq.unwrap_or(f64::NAN)
+        );
+    }
+    let failed = report.failed().len();
+    // The primary artifact is the deterministic report (byte-identical at
+    // any thread count); wall-clock phase timings go to a sibling file so
+    // diffing two runs' reports stays meaningful.
+    let path = out.unwrap_or_else(|| format!("results/sweep_{}.json", grid.name));
+    report.write_json(&path).expect("write sweep json");
+    let timings_path = match path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}_timings.json"),
+        None => format!("{path}.timings.json"),
+    };
+    report.write_json_with_timings(&timings_path).expect("write sweep timings json");
+    println!(
+        "wrote {path} (deterministic) + {timings_path} ({} cells, {} failed, profile {})",
+        report.cells.len(),
+        failed,
+        report.profile.name()
+    );
 }
 
 fn cmd_train(cfg: &ExperimentConfig) {
@@ -137,14 +256,7 @@ fn cmd_train(cfg: &ExperimentConfig) {
             );
         }
     }
-    let tag = format!(
-        "{}_n{}_f{}_{}",
-        cfg.model.name(),
-        cfg.n,
-        cfg.f,
-        cfg.attack.name()
-    );
-    let path = format!("results/train_{tag}.csv");
+    let path = format!("results/train_{}.csv", cfg.run_tag());
     table.write_file(&path).expect("write results csv");
     println!(
         "\nfinal: loss {:.5e}, echo rate {:.1}%, comm saved {:.1}% vs raw baseline\nwrote {path}",

@@ -86,9 +86,57 @@ impl Json {
         }
     }
 
+    fn render_pretty(&self, out: &mut String, indent: usize) {
+        fn pad(out: &mut String, n: usize) {
+            for _ in 0..n {
+                out.push_str("  ");
+            }
+        }
+        match self {
+            Json::Arr(xs) if !xs.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    pad(out, indent + 1);
+                    x.render_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(map) if !map.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    pad(out, indent + 1);
+                    Self::escape(k, out);
+                    out.push_str(": ");
+                    v.render_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                pad(out, indent);
+                out.push('}');
+            }
+            other => other.render(out),
+        }
+    }
+
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.render(&mut s);
+        s
+    }
+
+    /// Indented rendering for artifacts meant to be read by humans (CI
+    /// bench reports). Same content and key order as [`Self::to_string`],
+    /// so it is just as deterministic.
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.render_pretty(&mut s, 0);
         s
     }
 
@@ -97,6 +145,14 @@ impl Json {
             fs::create_dir_all(parent)?;
         }
         fs::write(path, self.to_string())
+    }
+
+    /// [`Self::write_file`] with pretty rendering.
+    pub fn write_file_pretty<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string_pretty())
     }
 }
 
@@ -210,6 +266,22 @@ mod tests {
     fn json_nonfinite_to_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn json_pretty_roundtrips_content() {
+        let j = Json::obj(vec![
+            ("name", Json::Str("sweep".into())),
+            ("cells", Json::Arr(vec![Json::obj(vec![("n", Json::Num(12.0))])])),
+            ("empty", Json::Arr(vec![])),
+        ]);
+        let pretty = j.to_string_pretty();
+        assert!(pretty.contains("\"cells\": [\n"));
+        assert!(pretty.contains("\"empty\": []"));
+        // Stripping whitespace outside strings recovers the compact form.
+        let stripped: String = pretty.chars().filter(|c| !c.is_whitespace()).collect();
+        let compact: String = j.to_string().chars().filter(|c| !c.is_whitespace()).collect();
+        assert_eq!(stripped, compact);
     }
 
     #[test]

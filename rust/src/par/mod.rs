@@ -1,10 +1,15 @@
-//! Minimal scoped-thread fan-out for the parallel round engine.
+//! Minimal scoped-thread fan-out for the parallel round and sweep engines.
 //!
-//! One helper, [`scoped_for_each`], shared by the computation-phase
-//! gradient fan-out ([`crate::grad::parallel_gradients`]) and the per-slot
-//! overhear fan-out in [`crate::sim`] — so chunking, thread clamping and
-//! panic policy live in exactly one place. `std::thread::scope` only: the
-//! workspace builds offline with zero dependencies, so no pool crate.
+//! Three helpers sharing one clamping/panic policy —
+//! [`scoped_for_each`] (static chunking, for homogeneous items: the
+//! computation-phase gradient fan-out in
+//! [`crate::grad::parallel_gradients`], the per-slot overhear fan-out in
+//! [`crate::sim`], the server's norm pass),
+//! [`scoped_for_each_dynamic`] (shared work queue, for heterogeneous
+//! items: the cell fan-out in [`crate::sweep`]), and [`scoped_chunks`]
+//! (range-parallel with chunk offsets: the server's coordinate-chunked
+//! CGC sum). `std::thread::scope` only: the workspace builds offline with
+//! zero dependencies, so no pool crate.
 
 /// Apply `f` to every item, partitioning `items` into up to `threads`
 /// contiguous chunks, each processed on its own scoped thread.
@@ -35,6 +40,87 @@ where
                     f(item);
                 }
             });
+        }
+    });
+}
+
+/// One thread per available core (`available_parallelism`, falling back
+/// to 1) — the shared "auto" policy behind `--threads auto`
+/// ([`crate::config::ExperimentConfig::effective_threads`]) and the bench
+/// binaries' cell-level parallelism ([`crate::sweep::auto_threads`]).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Like [`scoped_for_each`], but workers pull items from a shared queue
+/// instead of owning contiguous chunks — dynamic load balancing for
+/// heterogeneous items (sweep cells: an n=48 simulation costs many times
+/// an n=12 one, so chunking would pile the expensive tail onto one
+/// thread). Each item is processed exactly once and only ever touched by
+/// one thread; *which* thread runs it varies run to run, so `f` must be
+/// independent per item and write only through its own `&mut T` — the
+/// same contract as [`scoped_for_each`], under which results stay
+/// identical at any thread count.
+pub fn scoped_for_each_dynamic<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        for item in items.iter_mut() {
+            f(item);
+        }
+        return;
+    }
+    // A Mutex<Receiver> is the zero-dependency work queue: the lock is
+    // held only for the pop (recv never blocks — all senders are dropped
+    // before any worker starts), never while `f` runs.
+    let (tx, rx) = std::sync::mpsc::channel::<&mut T>();
+    for item in items.iter_mut() {
+        tx.send(item).expect("receiver alive");
+    }
+    drop(tx);
+    let rx = std::sync::Mutex::new(rx);
+    let rx = &rx;
+    let f = &f;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let item = rx.lock().expect("queue lock").recv();
+                match item {
+                    Ok(item) => f(item),
+                    Err(_) => break, // queue drained
+                }
+            });
+        }
+    });
+}
+
+/// Partition `data` into up to `threads` contiguous chunks and hand each
+/// chunk — together with its start offset into `data` — to `f` on its own
+/// scoped thread.
+///
+/// Built for the server's coordinate-parallel aggregation: each thread owns
+/// a disjoint coordinate range of the output vector, so per-coordinate
+/// accumulation order is exactly the serial order and the result is
+/// **bit-identical at any thread count**. With `threads <= 1` it
+/// degenerates to a single call `f(0, data)` with zero thread overhead.
+pub fn scoped_chunks<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let threads = threads.max(1).min(data.len().max(1));
+    if threads <= 1 || data.len() <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = (data.len() + threads - 1) / threads;
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (ci, group) in data.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || f(ci * chunk, group));
         }
     });
 }
@@ -75,6 +161,66 @@ mod tests {
         for t in [2usize, 4, 7] {
             assert_eq!(serial, run(t));
         }
+    }
+
+    #[test]
+    fn dynamic_queue_touches_every_item_exactly_once() {
+        for threads in [0usize, 1, 2, 3, 4, 16, 100] {
+            let mut items: Vec<u32> = vec![0; 17];
+            scoped_for_each_dynamic(&mut items, threads, |x| *x += 1);
+            assert!(items.iter().all(|&x| x == 1), "t={threads}: {items:?}");
+        }
+    }
+
+    #[test]
+    fn dynamic_queue_results_independent_of_thread_count() {
+        let mk = || (0..33u64).map(|i| (i, 0u64)).collect::<Vec<_>>();
+        let run = |threads: usize| {
+            let mut v = mk();
+            scoped_for_each_dynamic(&mut v, threads, |(i, out)| {
+                *out = i.wrapping_mul(0x9E37_79B9)
+            });
+            v
+        };
+        let serial = run(1);
+        for t in [2usize, 4, 7] {
+            assert_eq!(serial, run(t));
+        }
+    }
+
+    #[test]
+    fn available_threads_is_positive() {
+        assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn chunks_cover_every_offset_exactly_once() {
+        for threads in [0usize, 1, 2, 3, 4, 9, 50] {
+            let mut data = vec![0usize; 23];
+            scoped_chunks(&mut data, threads, |off, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = off + i;
+                }
+            });
+            let expect: Vec<usize> = (0..23).collect();
+            assert_eq!(data, expect, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn chunks_handle_empty_and_singleton() {
+        let mut empty: Vec<u8> = Vec::new();
+        scoped_chunks(&mut empty, 4, |_, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1;
+            }
+        });
+        let mut one = vec![7u8];
+        scoped_chunks(&mut one, 4, |off, chunk| {
+            assert_eq!(off, 0);
+            chunk[0] *= 2;
+        });
+        assert_eq!(one, vec![14]);
     }
 
     // No `expected`: the serial path re-raises the original payload while

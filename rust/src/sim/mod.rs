@@ -3,13 +3,16 @@
 //! workers injected per the experiment config.
 //!
 //! **Parallelism.** The computation phase (one stochastic gradient per
-//! fault-free worker — the dominant cost when `d ≫ n`, the paper's regime)
-//! and the per-slot overhear fan-out (each listener's span update is
-//! independent) run across a scoped thread pool sized by
-//! [`ExperimentConfig::threads`]. Results are **bit-identical at any
-//! thread count**: every worker owns a pre-split RNG stream, and the TDMA
-//! slot sequence itself stays serial (it is inherently ordered).
-//! `rust/tests/determinism.rs` pins this invariant.
+//! fault-free worker — the dominant cost when `d ≫ n`, the paper's regime),
+//! the per-slot overhear fan-out (each listener's span update is
+//! independent) and the server's aggregation phase (the O(n·d) norm pass
+//! and the fused CGC sum, parallel over workers/coordinates) run across a
+//! scoped thread pool sized by [`ExperimentConfig::threads`]. Results are
+//! **bit-identical at any thread count**: every worker owns a pre-split
+//! RNG stream, the TDMA slot sequence itself stays serial (it is
+//! inherently ordered), and the coordinate partition preserves the serial
+//! accumulation order. `rust/tests/determinism.rs` pins this invariant.
+//! To batch *many* simulations across the same pool, see [`crate::sweep`].
 pub mod multihop;
 
 
@@ -168,8 +171,10 @@ impl Simulation {
             byz_ids.iter().map(|&i| (i, cfg.attack.build())).collect();
         let worker_rngs: Vec<Rng> = (0..cfg.n).map(|i| rng.split(100 + i as u64)).collect();
 
+        let mut server = ParameterServer::new(cfg.n, cfg.f, d, cfg.aggregator);
+        server.set_threads(cfg.effective_threads());
         Ok(Simulation {
-            server: ParameterServer::new(cfg.n, cfg.f, d, cfg.aggregator),
+            server,
             workers,
             backends,
             attacks,

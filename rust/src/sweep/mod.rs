@@ -1,0 +1,709 @@
+//! The sweep engine: batched execution of many simulations.
+//!
+//! The paper's headline claims (Figs. 2–4: ~80 % communication savings at
+//! large n, robustness across the attack zoo, contraction at the
+//! theoretical rate) are established by *sweeping* n, f, σ, attacks and
+//! aggregators — not by any single run. This module turns that sweep
+//! surface into a first-class subsystem:
+//!
+//! * [`SweepGrid`] declares a cross-product of [`ExperimentConfig`]
+//!   variations over typed axes — `(n, f, b)` triples (varied jointly
+//!   because validity couples them), σ, d, model, attack, aggregator,
+//!   echo on/off, and seed;
+//! * [`SweepGrid::run`] executes every cell across the shared scoped
+//!   thread pool ([`crate::par`]). Each cell is an independent
+//!   `Simulation` whose RNG streams are derived solely from its own
+//!   config (pre-split per cell by construction — no RNG is shared across
+//!   cells), so the schedule across threads can never change a bit of any
+//!   result;
+//! * results collect into a typed [`SweepReport`] (per-cell echo rate,
+//!   comm savings, final distance, contraction estimate, phase timings)
+//!   with JSON/CSV serialization via [`crate::metrics`].
+//!
+//! **Determinism contract.** [`SweepReport::to_json`] excludes wall-clock
+//! timings, and cells are ordered by grid position — so the rendered
+//! report is **byte-identical at any thread count** for the same grid
+//! (pinned by `rust/tests/sweep.rs`). Timings are still recorded per cell
+//! and rendered by [`SweepReport::to_json_with_timings`], which the bench
+//! binaries use for the CI `BENCH_*.json` perf artifacts.
+//!
+//! Cell-level parallelism composes with the round engine's inner
+//! parallelism (`base.threads`), but the presets pin inner threads to 1:
+//! for a grid of many small simulations, one cell per core is the right
+//! decomposition.
+
+use crate::byzantine::AttackKind;
+use crate::config::{ExperimentConfig, ModelKind};
+use crate::coordinator::Aggregator;
+use crate::metrics::{CsvTable, Json};
+use crate::sim::{PhaseTimings, RoundRecord, Simulation};
+use std::io;
+use std::path::Path;
+
+/// Scale profile for a sweep: `Full` is the paper-figure size, `Smoke` a
+/// seconds-not-minutes reduction used by CI's `bench-smoke` job and
+/// `scripts/verify.sh --smoke-bench`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepProfile {
+    Full,
+    Smoke,
+}
+
+impl SweepProfile {
+    pub fn name(self) -> &'static str {
+        match self {
+            SweepProfile::Full => "full",
+            SweepProfile::Smoke => "smoke",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SweepProfile> {
+        Some(match s {
+            "full" => SweepProfile::Full,
+            "smoke" | "quick" | "ci" => SweepProfile::Smoke,
+            _ => return None,
+        })
+    }
+}
+
+/// Resolve the profile for a bench binary: a `--profile smoke|full` CLI
+/// argument wins (a malformed one is a hard error — silently falling back
+/// to the full paper-size grid would burn minutes on a typo); otherwise
+/// `ECHO_CGC_BENCH_QUICK=1` (the harness's existing quick-mode switch)
+/// selects smoke; otherwise full.
+pub fn bench_profile() -> SweepProfile {
+    let args: Vec<String> = std::env::args().collect();
+    for (i, a) in args.iter().enumerate() {
+        let value = if a == "--profile" {
+            Some(args.get(i + 1).map(String::as_str).unwrap_or_else(|| {
+                eprintln!("--profile needs a value (smoke|full)");
+                std::process::exit(2);
+            }))
+        } else {
+            a.strip_prefix("--profile=")
+        };
+        if let Some(v) = value {
+            return SweepProfile::parse(v).unwrap_or_else(|| {
+                eprintln!("unknown profile '{v}' (expected smoke|full)");
+                std::process::exit(2);
+            });
+        }
+    }
+    let quick = std::env::var("ECHO_CGC_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    if quick {
+        SweepProfile::Smoke
+    } else {
+        SweepProfile::Full
+    }
+}
+
+/// One thread per available core — the default cell-level parallelism for
+/// bench binaries (`ExperimentConfig::effective_threads` with `threads=0`
+/// resolves through the same [`crate::par::available_threads`] policy).
+pub fn auto_threads() -> usize {
+    crate::par::available_threads()
+}
+
+/// A declarative grid of experiment variations. Empty axes fall back to
+/// the base config's value; non-empty axes multiply into a cross-product
+/// enumerated in a fixed nesting order (outermost → innermost): `nfb`,
+/// `models`, `sigmas`, `dims`, `attacks`, `aggregators`, `echo`, `seeds`.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    pub name: String,
+    pub profile: SweepProfile,
+    pub base: ExperimentConfig,
+    /// Joint `(n, f, b)` axis — varied together because `f < n/2` and
+    /// `b ≤ f` couple them.
+    pub nfb: Vec<(usize, usize, usize)>,
+    pub models: Vec<ModelKind>,
+    pub sigmas: Vec<f64>,
+    pub dims: Vec<usize>,
+    pub attacks: Vec<AttackKind>,
+    pub aggregators: Vec<Aggregator>,
+    pub echo: Vec<bool>,
+    pub seeds: Vec<u64>,
+}
+
+impl SweepGrid {
+    pub fn new(name: &str, base: ExperimentConfig) -> SweepGrid {
+        SweepGrid {
+            name: name.to_string(),
+            profile: SweepProfile::Full,
+            base,
+            nfb: Vec::new(),
+            models: Vec::new(),
+            sigmas: Vec::new(),
+            dims: Vec::new(),
+            attacks: Vec::new(),
+            aggregators: Vec::new(),
+            echo: Vec::new(),
+            seeds: Vec::new(),
+        }
+    }
+
+    /// Materialize the cross-product as concrete configs, in grid order.
+    pub fn cells(&self) -> Vec<ExperimentConfig> {
+        fn axis<T: Copy>(vals: &[T], base: T) -> Vec<T> {
+            if vals.is_empty() {
+                vec![base]
+            } else {
+                vals.to_vec()
+            }
+        }
+        let nfb = axis(&self.nfb, (self.base.n, self.base.f, self.base.b));
+        let models = axis(&self.models, self.base.model);
+        let sigmas = axis(&self.sigmas, self.base.sigma);
+        let dims = axis(&self.dims, self.base.d);
+        let attacks = axis(&self.attacks, self.base.attack);
+        let aggs = axis(&self.aggregators, self.base.aggregator);
+        let echoes = axis(&self.echo, self.base.echo_enabled);
+        let seeds = axis(&self.seeds, self.base.seed);
+        let mut out = Vec::new();
+        for &(n, f, b) in &nfb {
+            for &model in &models {
+                for &sigma in &sigmas {
+                    for &d in &dims {
+                        for &attack in &attacks {
+                            for &agg in &aggs {
+                                for &echo in &echoes {
+                                    for &seed in &seeds {
+                                        let mut cfg = self.base.clone();
+                                        cfg.n = n;
+                                        cfg.f = f;
+                                        cfg.b = b;
+                                        cfg.model = model;
+                                        cfg.sigma = sigma;
+                                        cfg.d = d;
+                                        cfg.attack = attack;
+                                        cfg.aggregator = agg;
+                                        cfg.echo_enabled = echo;
+                                        cfg.seed = seed;
+                                        out.push(cfg);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of cells the grid will execute (derived from [`Self::cells`]
+    /// so it can never drift from the enumeration when axes are added).
+    pub fn len(&self) -> usize {
+        self.cells().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // an all-empty grid still yields the single base cell
+    }
+
+    /// Execute every cell, fanning the simulations across up to `threads`
+    /// scoped threads pulling from a shared work queue (dynamic balancing:
+    /// grids enumerate n ascending, so contiguous chunking would pile the
+    /// expensive large-n tail onto the last thread). A cell whose config
+    /// fails to build is recorded in the report (`error: Some(..)`) rather
+    /// than aborting the sweep, so a partially-invalid grid still yields a
+    /// deterministic report.
+    pub fn run(&self, threads: usize) -> SweepReport {
+        let mut jobs: Vec<(ExperimentConfig, Option<SweepCell>)> =
+            self.cells().into_iter().map(|cfg| (cfg, None)).collect();
+        crate::par::scoped_for_each_dynamic(&mut jobs, threads, |(cfg, out)| {
+            *out = Some(run_cell(cfg));
+        });
+        let mut cells = Vec::with_capacity(jobs.len());
+        for (i, (_, cell)) in jobs.into_iter().enumerate() {
+            let mut cell = cell.expect("every cell executes");
+            cell.index = i;
+            cells.push(cell);
+        }
+        SweepReport { name: self.name.clone(), profile: self.profile, cells }
+    }
+}
+
+/// One executed grid cell: the config coordinates that identify it plus
+/// the measured outcomes. Wall-clock phase timings ride along but are
+/// excluded from the deterministic JSON (see [`SweepReport::to_json`]).
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub index: usize,
+    pub label: String,
+    pub n: usize,
+    pub f: usize,
+    pub b: usize,
+    pub d: usize,
+    pub model: &'static str,
+    pub attack: &'static str,
+    pub aggregator: &'static str,
+    pub sigma: f64,
+    pub seed: u64,
+    pub rounds: usize,
+    pub echo_enabled: bool,
+    pub echo_rate: f64,
+    pub comm_savings: f64,
+    pub final_loss: f64,
+    pub final_dist_sq: Option<f64>,
+    pub uplink_bits_total: u64,
+    pub exposed: usize,
+    pub empirical_rho: Option<f64>,
+    pub theory_rho: Option<f64>,
+    pub timings: PhaseTimings,
+    pub error: Option<String>,
+}
+
+impl SweepCell {
+    /// Measured uplink bits per round.
+    pub fn bits_per_round(&self) -> u64 {
+        if self.rounds == 0 {
+            0
+        } else {
+            self.uplink_bits_total / self.rounds as u64
+        }
+    }
+
+    fn to_json(&self, include_timings: bool) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        let mut pairs = vec![
+            ("index", Json::Num(self.index as f64)),
+            ("label", Json::Str(self.label.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("f", Json::Num(self.f as f64)),
+            ("b", Json::Num(self.b as f64)),
+            ("d", Json::Num(self.d as f64)),
+            ("model", Json::Str(self.model.to_string())),
+            ("attack", Json::Str(self.attack.to_string())),
+            ("aggregator", Json::Str(self.aggregator.to_string())),
+            ("sigma", Json::Num(self.sigma)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("echo_enabled", Json::Bool(self.echo_enabled)),
+            ("echo_rate", Json::Num(self.echo_rate)),
+            ("comm_savings", Json::Num(self.comm_savings)),
+            ("final_loss", Json::Num(self.final_loss)),
+            ("final_dist_sq", opt(self.final_dist_sq)),
+            ("uplink_bits_total", Json::Num(self.uplink_bits_total as f64)),
+            ("exposed", Json::Num(self.exposed as f64)),
+            ("empirical_rho", opt(self.empirical_rho)),
+            ("theory_rho", opt(self.theory_rho)),
+            (
+                "error",
+                self.error.as_ref().map(|e| Json::Str(e.clone())).unwrap_or(Json::Null),
+            ),
+        ];
+        if include_timings {
+            pairs.push(("grad_ns", Json::Num(self.timings.grad_ns as f64)));
+            pairs.push(("comm_ns", Json::Num(self.timings.comm_ns as f64)));
+            pairs.push(("agg_ns", Json::Num(self.timings.agg_ns as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The typed result of a sweep, in grid order.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub name: String,
+    pub profile: SweepProfile,
+    pub cells: Vec<SweepCell>,
+}
+
+impl SweepReport {
+    /// Cells that failed to build.
+    pub fn failed(&self) -> Vec<&SweepCell> {
+        self.cells.iter().filter(|c| c.error.is_some()).collect()
+    }
+
+    fn json(&self, include_timings: bool) -> Json {
+        Json::obj(vec![
+            ("sweep", Json::Str(self.name.clone())),
+            ("profile", Json::Str(self.profile.name().to_string())),
+            ("cell_count", Json::Num(self.cells.len() as f64)),
+            (
+                "cells",
+                Json::Arr(self.cells.iter().map(|c| c.to_json(include_timings)).collect()),
+            ),
+        ])
+    }
+
+    /// Deterministic rendering: **no wall-clock fields**, cells in grid
+    /// order — byte-identical at any thread count for the same grid.
+    pub fn to_json(&self) -> Json {
+        self.json(false)
+    }
+
+    /// Rendering with per-cell phase timings — the CI `BENCH_*.json`
+    /// perf-trajectory artifact.
+    pub fn to_json_with_timings(&self) -> Json {
+        self.json(true)
+    }
+
+    pub fn write_json<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        self.to_json().write_file_pretty(path)
+    }
+
+    pub fn write_json_with_timings<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        self.to_json_with_timings().write_file_pretty(path)
+    }
+
+    /// Flat CSV rendering (one row per cell, fixed schema).
+    pub fn csv(&self) -> CsvTable {
+        let mut t = CsvTable::new(&[
+            "index",
+            "label",
+            "n",
+            "f",
+            "b",
+            "d",
+            "model",
+            "attack",
+            "aggregator",
+            "sigma",
+            "seed",
+            "rounds",
+            "echo_enabled",
+            "echo_rate",
+            "comm_savings",
+            "final_loss",
+            "final_dist_sq",
+            "uplink_bits_total",
+            "exposed",
+            "empirical_rho",
+            "theory_rho",
+            "error",
+        ]);
+        let opt = |v: Option<f64>| v.map(|x| format!("{x}")).unwrap_or_default();
+        for c in &self.cells {
+            t.push_row_mixed(vec![
+                format!("{}", c.index),
+                c.label.clone(),
+                format!("{}", c.n),
+                format!("{}", c.f),
+                format!("{}", c.b),
+                format!("{}", c.d),
+                c.model.to_string(),
+                c.attack.to_string(),
+                c.aggregator.to_string(),
+                format!("{}", c.sigma),
+                format!("{}", c.seed),
+                format!("{}", c.rounds),
+                format!("{}", c.echo_enabled),
+                format!("{}", c.echo_rate),
+                format!("{}", c.comm_savings),
+                format!("{}", c.final_loss),
+                opt(c.final_dist_sq),
+                format!("{}", c.uplink_bits_total),
+                format!("{}", c.exposed),
+                opt(c.empirical_rho),
+                opt(c.theory_rho),
+                c.error.clone().unwrap_or_default(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Geometric-mean per-round contraction of `‖wᵗ − w*‖²` over the
+/// contracting prefix (the f32 wire-quantization floor stalls the distance
+/// at ~1e-14, so rounds past the floor are excluded — the same windowing
+/// the convergence bench has always used).
+pub fn empirical_rho(recs: &[RoundRecord]) -> Option<f64> {
+    let d0 = recs.first()?.dist_sq?;
+    if d0 <= 0.0 {
+        return None;
+    }
+    let floor = 1e-10 * d0.max(1.0);
+    let t_eff = recs
+        .iter()
+        .position(|r| r.dist_sq.map_or(false, |v| v < floor))
+        .unwrap_or(recs.len());
+    let dt = recs[t_eff.saturating_sub(1)].dist_sq?.max(1e-300);
+    Some((dt / d0).powf(1.0 / t_eff.max(1) as f64))
+}
+
+/// Build + run one cell; build failures become report rows, not panics.
+fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
+    // `run_tag()` covers model/n/f/attack; extend it with the remaining
+    // swept axes so every cell in a grid gets a distinct label.
+    let label = format!(
+        "{}_{}_sigma{}_d{}_seed{}{}",
+        cfg.run_tag(),
+        cfg.aggregator.name(),
+        cfg.sigma,
+        cfg.d,
+        cfg.seed,
+        if cfg.echo_enabled { "" } else { "_noecho" }
+    );
+    let mut cell = SweepCell {
+        index: 0,
+        label,
+        n: cfg.n,
+        f: cfg.f,
+        b: cfg.b,
+        d: cfg.d,
+        model: cfg.model.name(),
+        attack: cfg.attack.name(),
+        aggregator: cfg.aggregator.name(),
+        sigma: cfg.sigma,
+        seed: cfg.seed,
+        rounds: cfg.rounds,
+        echo_enabled: cfg.echo_enabled,
+        echo_rate: f64::NAN,
+        comm_savings: f64::NAN,
+        final_loss: f64::NAN,
+        final_dist_sq: None,
+        uplink_bits_total: 0,
+        exposed: 0,
+        empirical_rho: None,
+        theory_rho: None,
+        timings: PhaseTimings::default(),
+        error: None,
+    };
+    let mut sim = match Simulation::build(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            cell.error = Some(e);
+            return cell;
+        }
+    };
+    let recs = sim.run();
+    cell.d = sim.model().dim();
+    cell.echo_rate = sim.echo_rate();
+    cell.comm_savings = sim.comm_savings();
+    cell.final_loss = recs.last().map(|r| r.loss).unwrap_or(f64::NAN);
+    cell.final_dist_sq = sim.final_dist_sq();
+    cell.uplink_bits_total = sim.radio().meter.total_uplink();
+    cell.exposed = sim.server().exposed().len();
+    cell.empirical_rho = empirical_rho(&recs);
+    cell.theory_rho = Some(sim.realized_theory().rho(sim.eta()));
+    cell.timings = sim.timings;
+    cell
+}
+
+/// Canonical grids: the bench binaries and `echo-cgc sweep` share these,
+/// so a figure regenerated locally and one produced by CI come from the
+/// same declaration.
+pub mod presets {
+    use super::*;
+
+    /// Attack zoo × aggregation rules (benches/attack_matrix.rs; the
+    /// qualitative Fig. 3 claim — Echo-CGC converges under every attack).
+    pub fn attack_matrix(profile: SweepProfile) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.n = 15;
+        base.f = 1;
+        base.b = 1;
+        base.d = 50;
+        base.sigma = 0.05;
+        base.threads = 1;
+        base.rounds = match profile {
+            SweepProfile::Full => 250,
+            SweepProfile::Smoke => 60,
+        };
+        let mut grid = SweepGrid::new("attack_matrix", base);
+        grid.profile = profile;
+        grid.attacks = AttackKind::all().to_vec();
+        grid.aggregators = Aggregator::all().to_vec();
+        grid
+    }
+
+    /// Echo-CGC vs GV-CGC (echo disabled — the raw-broadcast ancestor):
+    /// same robustness, full bit cost.
+    pub fn gv_baseline(profile: SweepProfile) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.n = 15;
+        base.f = 1;
+        base.b = 1;
+        base.d = 50;
+        base.sigma = 0.05;
+        base.threads = 1;
+        base.attack = AttackKind::Omniscient;
+        base.rounds = match profile {
+            SweepProfile::Full => 250,
+            SweepProfile::Smoke => 60,
+        };
+        let mut grid = SweepGrid::new("gv_baseline", base);
+        grid.profile = profile;
+        grid.echo = vec![true, false];
+        grid
+    }
+
+    /// Measured communication savings across (n, f) × σ (the §4.3
+    /// headline numbers; benches/comm_savings.rs).
+    pub fn comm_savings(profile: SweepProfile) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.d = 200;
+        base.threads = 1;
+        base.rounds = match profile {
+            SweepProfile::Full => 40,
+            SweepProfile::Smoke => 10,
+        };
+        let mut grid = SweepGrid::new("comm_savings", base);
+        grid.profile = profile;
+        grid.nfb = match profile {
+            SweepProfile::Full => vec![(20, 2, 2), (50, 5, 5), (100, 10, 10)],
+            SweepProfile::Smoke => vec![(20, 2, 2), (50, 5, 5)],
+        };
+        grid.sigmas = vec![0.05, 0.10];
+        grid
+    }
+
+    /// Empirical vs theoretical contraction across (n, f) × σ × attack
+    /// (Theorem 9; benches/convergence.rs).
+    pub fn convergence(profile: SweepProfile) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.d = 60;
+        base.threads = 1;
+        base.rounds = match profile {
+            SweepProfile::Full => 300,
+            SweepProfile::Smoke => 80,
+        };
+        let mut grid = SweepGrid::new("convergence", base);
+        grid.profile = profile;
+        grid.nfb = match profile {
+            SweepProfile::Full => vec![(12, 1, 1), (24, 2, 2), (48, 4, 4)],
+            SweepProfile::Smoke => vec![(12, 1, 1), (24, 2, 2)],
+        };
+        grid.sigmas = vec![0.02, 0.08];
+        grid.attacks =
+            vec![AttackKind::Omniscient, AttackKind::LargeNorm, AttackKind::SignFlip];
+        grid
+    }
+
+    /// Tiny demonstration grid (`echo-cgc sweep --grid quick`).
+    pub fn quick() -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.n = 12;
+        base.f = 1;
+        base.b = 1;
+        base.d = 30;
+        base.rounds = 40;
+        base.threads = 1;
+        let mut grid = SweepGrid::new("quick", base);
+        grid.profile = SweepProfile::Smoke;
+        grid.attacks = vec![AttackKind::Omniscient, AttackKind::LargeNorm];
+        grid.aggregators = vec![Aggregator::CgcSum, Aggregator::Mean];
+        grid
+    }
+
+    /// Look up a preset by CLI name.
+    pub fn by_name(name: &str, profile: SweepProfile) -> Option<SweepGrid> {
+        Some(match name {
+            "attack-matrix" | "attack_matrix" => attack_matrix(profile),
+            "gv-baseline" | "gv_baseline" => gv_baseline(profile),
+            "comm-savings" | "comm_savings" => comm_savings(profile),
+            "convergence" => convergence(profile),
+            "quick" => quick(),
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_grid() -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.n = 10;
+        base.f = 1;
+        base.b = 1;
+        base.d = 12;
+        base.rounds = 8;
+        base.seed = 5;
+        let mut grid = SweepGrid::new("tiny", base);
+        grid.sigmas = vec![0.03, 0.08];
+        grid.aggregators = vec![Aggregator::CgcSum, Aggregator::Mean];
+        grid
+    }
+
+    #[test]
+    fn cells_enumerate_the_cross_product_in_grid_order() {
+        let grid = tiny_grid();
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(grid.len(), 4);
+        // sigma is the outer axis relative to aggregator.
+        assert_eq!(cells[0].sigma, 0.03);
+        assert_eq!(cells[0].aggregator, Aggregator::CgcSum);
+        assert_eq!(cells[1].sigma, 0.03);
+        assert_eq!(cells[1].aggregator, Aggregator::Mean);
+        assert_eq!(cells[2].sigma, 0.08);
+        // Untouched axes fall back to the base.
+        assert!(cells.iter().all(|c| c.n == 10 && c.d == 12 && c.seed == 5));
+    }
+
+    #[test]
+    fn empty_axes_yield_the_single_base_cell() {
+        let grid = SweepGrid::new("base-only", tiny_grid().base);
+        assert_eq!(grid.cells().len(), 1);
+        assert_eq!(grid.len(), 1);
+        assert!(!grid.is_empty());
+    }
+
+    #[test]
+    fn report_records_outcomes_per_cell() {
+        let report = tiny_grid().run(2);
+        assert_eq!(report.cells.len(), 4);
+        for (i, c) in report.cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert!(c.error.is_none(), "{:?}", c.error);
+            assert!(c.final_loss.is_finite());
+            assert!(c.uplink_bits_total > 0);
+            assert!((0.0..=1.0).contains(&c.echo_rate));
+            assert!(c.theory_rho.is_some());
+        }
+        // CgcSum vs Mean cells share every coordinate except the rule.
+        assert_eq!(report.cells[0].aggregator, "cgc");
+        assert_eq!(report.cells[1].aggregator, "mean");
+        assert_eq!(report.csv().n_rows(), 4);
+    }
+
+    #[test]
+    fn deterministic_json_excludes_timings() {
+        let report = tiny_grid().run(2);
+        let det = report.to_json().to_string();
+        let timed = report.to_json_with_timings().to_string();
+        assert!(!det.contains("grad_ns"));
+        assert!(timed.contains("grad_ns"));
+    }
+
+    #[test]
+    fn profile_parse_roundtrip() {
+        for p in [SweepProfile::Full, SweepProfile::Smoke] {
+            assert_eq!(SweepProfile::parse(p.name()), Some(p));
+        }
+        assert_eq!(SweepProfile::parse("bogus"), None);
+    }
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for name in ["attack-matrix", "gv-baseline", "comm-savings", "convergence", "quick"] {
+            let grid = presets::by_name(name, SweepProfile::Smoke).unwrap();
+            assert!(grid.len() >= 2, "{name} should sweep something");
+        }
+        assert!(presets::by_name("nope", SweepProfile::Smoke).is_none());
+    }
+
+    #[test]
+    fn empirical_rho_windows_the_contracting_prefix() {
+        // Synthetic geometric decay: rho recovered exactly.
+        let recs: Vec<RoundRecord> = (0..20)
+            .map(|t| RoundRecord {
+                round: t,
+                loss: 0.0,
+                dist_sq: Some(4.0 * 0.5f64.powi(t as i32)),
+                grad_norm: 0.0,
+                uplink_bits: 0,
+                echo_count: 0,
+                raw_count: 0,
+                exposed_cum: 0,
+            })
+            .collect();
+        let rho = empirical_rho(&recs).unwrap();
+        assert!((rho - 0.5).abs() < 0.03, "rho {rho}");
+        assert_eq!(empirical_rho(&[]), None);
+    }
+}

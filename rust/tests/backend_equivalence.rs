@@ -8,6 +8,7 @@
 //! missing rather than silently skipping, because the AOT bridge is a core
 //! deliverable. Set ECHO_CGC_ALLOW_MISSING_ARTIFACTS=1 to downgrade to a
 //! skip (used before the first artifact build).
+#![allow(clippy::field_reassign_with_default)]
 
 use echo_cgc::config::ExperimentConfig;
 use echo_cgc::data::make_linreg;

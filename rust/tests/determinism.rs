@@ -7,6 +7,7 @@
 //! This is the contract that makes `threads` a pure throughput knob: every
 //! worker consumes its own pre-split RNG stream, and the TDMA slot sequence
 //! stays serial, so the thread partition can never influence the math.
+#![allow(clippy::field_reassign_with_default)]
 
 use echo_cgc::byzantine::AttackKind;
 use echo_cgc::config::{ExperimentConfig, ModelKind};
@@ -134,4 +135,18 @@ fn silent_attack_is_thread_invariant() {
     let mut cfg = quadratic_cfg();
     cfg.attack = AttackKind::Silent;
     assert_identical(&cfg, "quadratic+silent");
+}
+
+#[test]
+fn parallel_server_aggregation_is_thread_invariant() {
+    // `threads` now also drives the server's aggregation phase (parallel
+    // norm pass + coordinate-chunked CGC sum). Large-norm attackers force
+    // the clip path every round, across both a synthetic quadratic and a
+    // data-driven logistic model with Byzantine workers wired.
+    let mut q = quadratic_cfg();
+    q.attack = AttackKind::LargeNorm;
+    assert_identical(&q, "quadratic+large-norm (parallel aggregation)");
+    let mut l = logistic_cfg();
+    l.attack = AttackKind::LargeNorm;
+    assert_identical(&l, "logistic+large-norm (parallel aggregation)");
 }

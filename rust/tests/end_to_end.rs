@@ -1,5 +1,6 @@
 //! Full-system integration: every model kind, every aggregator, baseline
 //! comparisons and config plumbing, end to end through the radio.
+#![allow(clippy::field_reassign_with_default)]
 
 use echo_cgc::byzantine::AttackKind;
 use echo_cgc::config::{ExperimentConfig, ModelKind};

@@ -1,5 +1,6 @@
 //! Failure injection: degenerate configurations, fewer-than-f faults,
 //! placement sweeps, crash churn and hostile frame floods.
+#![allow(clippy::field_reassign_with_default)]
 
 use echo_cgc::byzantine::AttackKind;
 use echo_cgc::config::{ByzPlacement, ExperimentConfig};

@@ -1,0 +1,101 @@
+//! The sweep engine's determinism contract: a multi-threaded sweep must
+//! produce a **byte-identical** deterministic report to the serial run on
+//! the same grid — cells are independent simulations whose RNG streams
+//! derive only from their own configs, and the report excludes wall-clock
+//! fields and orders cells by grid position, so the thread schedule can
+//! never surface.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use echo_cgc::byzantine::AttackKind;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::coordinator::Aggregator;
+use echo_cgc::sim::Simulation;
+use echo_cgc::sweep::SweepGrid;
+
+fn small_grid() -> SweepGrid {
+    let mut base = ExperimentConfig::default();
+    base.n = 12;
+    base.f = 1;
+    base.b = 1;
+    base.d = 24;
+    base.rounds = 20;
+    base.sigma = 0.05;
+    base.seed = 11;
+    let mut grid = SweepGrid::new("test_grid", base);
+    grid.nfb = vec![(12, 1, 1), (11, 1, 1)];
+    grid.sigmas = vec![0.03, 0.08];
+    grid.attacks = vec![AttackKind::Omniscient, AttackKind::LargeNorm];
+    grid.aggregators = vec![Aggregator::CgcSum, Aggregator::Mean];
+    grid
+}
+
+#[test]
+fn multithreaded_sweep_is_byte_identical_to_serial() {
+    let grid = small_grid();
+    let serial = grid.run(1).to_json().to_string();
+    for threads in [2usize, 4, 8] {
+        let par = grid.run(threads).to_json().to_string();
+        assert_eq!(serial.as_bytes(), par.as_bytes(), "threads={threads}");
+    }
+}
+
+#[test]
+fn sweep_cells_match_standalone_simulations() {
+    let grid = small_grid();
+    let report = grid.run(4);
+    let cfgs = grid.cells();
+    assert_eq!(report.cells.len(), cfgs.len());
+    for (cell, cfg) in report.cells.iter().zip(cfgs.iter()) {
+        assert!(cell.error.is_none(), "{:?}", cell.error);
+        let mut sim = Simulation::build(cfg).expect("valid config");
+        sim.run();
+        assert_eq!(cell.echo_rate.to_bits(), sim.echo_rate().to_bits(), "{}", cell.label);
+        assert_eq!(
+            cell.comm_savings.to_bits(),
+            sim.comm_savings().to_bits(),
+            "{}",
+            cell.label
+        );
+        assert_eq!(
+            cell.final_dist_sq.map(f64::to_bits),
+            sim.final_dist_sq().map(f64::to_bits),
+            "{}",
+            cell.label
+        );
+        assert_eq!(cell.uplink_bits_total, sim.radio().meter.total_uplink(), "{}", cell.label);
+        assert_eq!(cell.exposed, sim.server().exposed().len(), "{}", cell.label);
+    }
+}
+
+#[test]
+fn invalid_cells_are_reported_not_fatal() {
+    let mut base = ExperimentConfig::default();
+    base.rounds = 5;
+    base.d = 10;
+    let mut grid = SweepGrid::new("partially-invalid", base);
+    // The second triple violates n > 2f; the sweep must record the error
+    // and keep going.
+    grid.nfb = vec![(12, 1, 1), (4, 2, 2)];
+    let report = grid.run(2);
+    assert_eq!(report.cells.len(), 2);
+    assert!(report.cells[0].error.is_none());
+    assert!(report.cells[1].error.is_some());
+    assert_eq!(report.failed().len(), 1);
+    // Both renderings still produce valid, deterministic output.
+    let a = report.to_json().to_string();
+    let b = report.to_json().to_string();
+    assert_eq!(a, b);
+    assert!(a.contains("\"error\""));
+}
+
+#[test]
+fn smoke_presets_stay_small() {
+    use echo_cgc::sweep::{presets, SweepProfile};
+    for name in ["attack-matrix", "gv-baseline", "comm-savings", "convergence"] {
+        let full = presets::by_name(name, SweepProfile::Full).unwrap();
+        let smoke = presets::by_name(name, SweepProfile::Smoke).unwrap();
+        assert!(smoke.len() <= full.len(), "{name}: smoke grid larger than full");
+        assert!(smoke.base.rounds < full.base.rounds, "{name}: smoke horizon not reduced");
+    }
+}

@@ -1,19 +1,76 @@
 #!/usr/bin/env bash
 # Tier-1 verification plus hygiene gates. Run from anywhere; operates on
 # the repo root. Fails on the first broken gate.
+#
+# Usage: verify.sh [STAGE] [--smoke-bench]
+#
+#   STAGE (optional, default `all`):
+#     build-test   — cargo build --release && cargo test  (tier-1)
+#     lint         — cargo fmt --check && cargo clippy    (hygiene)
+#     smoke-bench  — the sweep-backed benches in reduced smoke mode,
+#                    emitting results/BENCH_*.json (what CI's bench-smoke
+#                    job runs — one code path for CI and local runs)
+#     all          — build-test + lint
+#
+#   --smoke-bench  — append the smoke-bench stage to `all`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== tier-1: cargo build --release =="
-cargo build --release
+STAGE=""
+SMOKE=0
+for arg in "$@"; do
+  case "$arg" in
+    build-test|lint|smoke-bench|all)
+      if [ -n "$STAGE" ]; then
+        echo "verify.sh: multiple stages given ('$STAGE' and '$arg') — pass one" >&2
+        exit 2
+      fi
+      STAGE="$arg"
+      ;;
+    --smoke-bench) SMOKE=1 ;;
+    *) echo "verify.sh: unknown argument '$arg'" >&2; exit 2 ;;
+  esac
+done
+STAGE="${STAGE:-all}"
 
-echo "== tier-1: cargo test -q (unit + integration + doctests) =="
-cargo test -q
+run_build_test() {
+  echo "== tier-1: cargo build --release =="
+  cargo build --release
 
-echo "== hygiene: cargo fmt --check =="
-cargo fmt --check
+  echo "== tier-1: cargo test -q (unit + integration + doctests) =="
+  cargo test -q
+}
 
-echo "== hygiene: cargo clippy -- -D warnings =="
-cargo clippy --all-targets -- -D warnings
+run_lint() {
+  echo "== hygiene: cargo fmt --check =="
+  cargo fmt --check
 
-echo "verify: all gates green"
+  echo "== hygiene: cargo clippy -- -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+}
+
+run_smoke_bench() {
+  echo "== bench-smoke: sweep-backed benches, smoke profile =="
+  export ECHO_CGC_BENCH_QUICK=1
+  for bench in attack_matrix comm_savings convergence; do
+    echo "-- cargo bench --bench $bench -- --profile smoke"
+    cargo bench --bench "$bench" -- --profile smoke
+  done
+  echo "-- bench artifacts:"
+  ls -l results/BENCH_*.json
+}
+
+case "$STAGE" in
+  build-test) run_build_test ;;
+  lint) run_lint ;;
+  smoke-bench) run_smoke_bench ;;
+  all)
+    run_build_test
+    run_lint
+    if [ "$SMOKE" = "1" ]; then
+      run_smoke_bench
+    fi
+    ;;
+esac
+
+echo "verify: requested gates green (stage: $STAGE)"
