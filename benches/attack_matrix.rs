@@ -13,6 +13,7 @@
 
 use echo_cgc::bench_utils::Bencher;
 use echo_cgc::coordinator::{aggregate, Aggregator};
+use echo_cgc::figures::{Axis, Chart, Metric, SeriesSpec};
 use echo_cgc::metrics::CsvTable;
 use echo_cgc::rng::Rng;
 use echo_cgc::sweep::{auto_threads, bench_profile, presets, SweepProfile};
@@ -86,6 +87,20 @@ fn main() {
     // Machine-readable sweep report with per-cell phase timings: the CI
     // bench-smoke artifact (the repo's perf trajectory).
     report.write_json_with_timings("results/BENCH_attack_matrix.json").unwrap();
+
+    // Figure artifact next to the JSON: final error per attack, one
+    // series per aggregator (the Fig. 4 shape), log y — plain averaging
+    // blowing up under norm attacks is the whole point of the plot.
+    let spec = SeriesSpec {
+        metric: Metric::FinalDistSq,
+        x: Axis::Attack,
+        series: Some(Axis::Aggregator),
+        pins: vec![],
+    };
+    let mut chart = Chart::from_report(&report, &spec, "final error under attack (bench grid)");
+    chart.log_y = true;
+    let (csv_path, svg_path) = chart.write("results", "FIG_attack_matrix").unwrap();
+    println!("wrote {} + {}", csv_path.display(), svg_path.display());
 
     // Time the aggregation rules themselves at scale.
     let mut b = Bencher::new();

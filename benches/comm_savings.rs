@@ -14,6 +14,7 @@
 
 use echo_cgc::bench_utils::Bencher;
 use echo_cgc::config::ExperimentConfig;
+use echo_cgc::figures::{Axis, Chart, Metric, SeriesSpec};
 use echo_cgc::metrics::CsvTable;
 use echo_cgc::sim::Simulation;
 use echo_cgc::sweep::{auto_threads, bench_profile, presets, SweepProfile};
@@ -76,6 +77,18 @@ fn main() {
     }
     table.write_file("results/bench_comm_savings.csv").unwrap();
     report.write_json_with_timings("results/BENCH_comm_savings.json").unwrap();
+
+    // Figure artifact next to the JSON: savings vs n, one series per σ
+    // (the Fig. 2 shape, rendered from this bench's own report).
+    let spec = SeriesSpec {
+        metric: Metric::CommSavings,
+        x: Axis::N,
+        series: Some(Axis::Sigma),
+        pins: vec![],
+    };
+    let chart = Chart::from_report(&report, &spec, "communication savings vs n (bench grid)");
+    let (csv_path, svg_path) = chart.write("results", "FIG_comm_savings").unwrap();
+    println!("wrote {} + {}", csv_path.display(), svg_path.display());
 
     // Wall-clock per phase of the round loop (the L3 §Perf numbers).
     println!();

@@ -13,6 +13,7 @@
 
 use echo_cgc::bench_utils::Bencher;
 use echo_cgc::config::ExperimentConfig;
+use echo_cgc::figures::{Axis, AxisValue, Chart, Metric, SeriesSpec};
 use echo_cgc::metrics::CsvTable;
 use echo_cgc::sim::Simulation;
 use echo_cgc::sweep::{auto_threads, bench_profile, presets, SweepProfile};
@@ -66,6 +67,19 @@ fn main() {
     }
     table.write_file("results/bench_convergence.csv").unwrap();
     report.write_json_with_timings("results/BENCH_convergence.json").unwrap();
+
+    // Figure artifact next to the JSON: measured contraction vs n, one
+    // series per attack, pinned to the low-noise slice of the grid.
+    let spec = SeriesSpec {
+        metric: Metric::EmpiricalRho,
+        x: Axis::N,
+        series: Some(Axis::Attack),
+        pins: vec![(Axis::Sigma, AxisValue::Num(0.02))],
+    };
+    let chart =
+        Chart::from_report(&report, &spec, "empirical contraction rho vs n (sigma=0.02)");
+    let (csv_path, svg_path) = chart.write("results", "FIG_convergence").unwrap();
+    println!("wrote {} + {}", csv_path.display(), svg_path.display());
 
     // Wall-clock: full 100-round training runs (one scale in smoke mode).
     let scales: &[(usize, usize)] = match profile {

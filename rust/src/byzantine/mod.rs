@@ -337,7 +337,7 @@ impl Attack for InnerProductManipulation {
 
 /// Echo forgery: reference a slot that has not transmitted yet. The
 /// reliable-broadcast argument lets the server *prove* the sender is
-/// Byzantine (G[i] = ⊥) — the attack must always be neutralized.
+/// Byzantine (`G[i] = ⊥`) — the attack must always be neutralized.
 pub struct EchoForgeDangling;
 
 impl Attack for EchoForgeDangling {

@@ -1,6 +1,31 @@
 //! The parameter server (Algorithm 1, server side) and the aggregation
 //! rules — the paper's CGC filter plus the standard Byzantine-tolerant
 //! baselines it is compared against.
+//!
+//! The server side of one round:
+//!
+//! 1. **Overhear bookkeeping** — the server (like every worker) records
+//!    each slot's broadcast; raw gradients fill the reference set `G`,
+//!    echo messages are kept symbolic until reconstruction.
+//! 2. **Echo reconstruction** — an echo `(S, x, ‖g‖)` names earlier
+//!    slots `S` and coefficients `x`; the server rebuilds the intended
+//!    gradient from its own overheard history. A reference to a slot
+//!    that never transmitted *proves* the sender Byzantine (reliable
+//!    local broadcast), and [`ParameterServer::exposed`] accumulates
+//!    such proofs across rounds.
+//! 3. **Aggregation** — [`cgc_scales`] implements Eq. (8)'s clip rule
+//!    (the `(n−f)`-th norm as threshold); [`cgc_sum_fused`] and the
+//!    parallel fused path in [`server`] derive from it, so tie-breaking
+//!    lives in exactly one place. [`Aggregator`] selects CGC or a
+//!    baseline ([`aggregate`]): mean, Krum, coordinate-wise median,
+//!    trimmed mean — all on the same substrate, all generic over
+//!    `AsRef<[f64]>` so borrowed gradient slices aggregate without the
+//!    per-round O(n·d) clone.
+//!
+//! The norm pass and the fused CGC sum fan out across the scoped thread
+//! pool ([`crate::par`]) with serial accumulation order preserved —
+//! bitwise-equal results at any thread count (pinned by
+//! `rust/tests/determinism.rs`).
 
 pub mod aggregators;
 pub mod server;

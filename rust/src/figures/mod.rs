@@ -1,0 +1,973 @@
+//! The figure/ablation layer: from [`SweepReport`]s to the paper's plots.
+//!
+//! The paper's headline claims are its figures — communication savings
+//! across network sizes and fault counts (Figs. 2–3) and convergence
+//! under attack (Fig. 4). The sweep engine ([`crate::sweep`]) produces
+//! the raw per-cell measurements; this module turns them into publishable
+//! artifacts, end to end:
+//!
+//! ```text
+//! SweepGrid ──run──▶ SweepReport ──replicates──▶ [ReplicateCell]
+//!                                       │  per-cell mean/std/min/max
+//!                                       │  across the `seeds` axis
+//!                                  select(spec)
+//!                                       ▼
+//!                                   [Series] ──▶ Chart ──▶ CSV + SVG
+//! ```
+//!
+//! * [`replicates`] groups a report's cells by every grid coordinate
+//!   *except* the seed and computes [`Summary`] statistics (mean / std /
+//!   min / max) per metric across the replicate seeds. Groups are emitted
+//!   in first-occurrence (= grid) order, so the output inherits the sweep
+//!   engine's determinism contract: **byte-identical at any thread
+//!   count** (pinned by `rust/tests/figures.rs`).
+//! * [`select`] slices the replicate cells along one [`Axis`] (the x
+//!   axis) while splitting on an optional series axis and pinning the
+//!   rest ([`SeriesSpec::pins`]) — the facet/series layer.
+//! * [`Chart`] renders the selected series as a flat CSV table
+//!   (`series,x,mean,std,min,max,n_seeds`) and as a self-contained SVG
+//!   line chart ([`svg`]) with mean lines, ±1 std bands and a legend —
+//!   zero dependencies, deterministic bytes.
+//! * [`paper_figure`] declares Figures 2–4 as [`FigureJob`]s (grid +
+//!   selection + labels); `echo-cgc figures --fig 2|3|4 --profile
+//!   smoke|full` runs them from the CLI, and the grid benches emit
+//!   `results/FIG_*.{svg,csv}` next to their `BENCH_*.json`.
+//! * [`apply_axis_specs`] implements the ad-hoc ablation mini-DSL
+//!   (`--axis n=10,20,50 --axis f=0..4`): comma lists or inclusive
+//!   `a..b` integer ranges per axis key. Unless `b` is given explicitly,
+//!   the Byzantine count tracks the fault tolerance (`b = f`, the
+//!   worst-case adversary the paper plots).
+//!
+//! The `BENCH_*.json` / `SweepReport` schema these figures consume is
+//! documented in `docs/bench-schema.md`.
+
+pub mod svg;
+
+use crate::byzantine::AttackKind;
+use crate::config::{ExperimentConfig, ModelKind};
+use crate::coordinator::Aggregator;
+use crate::metrics::{CsvTable, Summary};
+use crate::sweep::{presets, SweepCell, SweepGrid, SweepProfile, SweepReport};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// A measured per-cell quantity that can be plotted on the y axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    CommSavings,
+    EchoRate,
+    FinalLoss,
+    FinalDistSq,
+    EmpiricalRho,
+    TheoryRho,
+    BitsPerRound,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::CommSavings => "comm_savings",
+            Metric::EchoRate => "echo_rate",
+            Metric::FinalLoss => "final_loss",
+            Metric::FinalDistSq => "final_dist_sq",
+            Metric::EmpiricalRho => "empirical_rho",
+            Metric::TheoryRho => "theory_rho",
+            Metric::BitsPerRound => "bits_per_round",
+        }
+    }
+
+    /// Human axis label for the SVG renderer.
+    pub fn axis_label(self) -> &'static str {
+        match self {
+            Metric::CommSavings => "communication savings (fraction of raw bits)",
+            Metric::EchoRate => "echo rate",
+            Metric::FinalLoss => "final loss",
+            Metric::FinalDistSq => "final ‖w − w*‖²",
+            Metric::EmpiricalRho => "empirical contraction ρ",
+            Metric::TheoryRho => "theoretical contraction ρ",
+            Metric::BitsPerRound => "uplink bits per round",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        Some(match s.replace('-', "_").as_str() {
+            "comm_savings" | "savings" => Metric::CommSavings,
+            "echo_rate" => Metric::EchoRate,
+            "final_loss" | "loss" => Metric::FinalLoss,
+            "final_dist_sq" | "dist" => Metric::FinalDistSq,
+            "empirical_rho" | "rho" => Metric::EmpiricalRho,
+            "theory_rho" => Metric::TheoryRho,
+            "bits_per_round" | "bits" => Metric::BitsPerRound,
+            _ => return None,
+        })
+    }
+
+    /// Extract the metric from one executed cell. `None` when the cell
+    /// does not define it (no known optimum, NaN measurement). An
+    /// *infinite* error/loss is a real outcome — an aggregator blown up
+    /// by a norm attack, exactly what Fig. 4 exists to show — so it is
+    /// clamped to [`DIVERGED`] instead of being dropped: the series stays
+    /// on the chart, pinned far above any converged value.
+    pub fn extract(self, c: &SweepCell) -> Option<f64> {
+        let clamp_diverged = |v: f64| {
+            if v.is_nan() {
+                None
+            } else if v.is_infinite() {
+                Some(DIVERGED)
+            } else {
+                Some(v)
+            }
+        };
+        let v = match self {
+            Metric::CommSavings => c.comm_savings,
+            Metric::EchoRate => c.echo_rate,
+            Metric::FinalLoss => return clamp_diverged(c.final_loss),
+            Metric::FinalDistSq => return c.final_dist_sq.and_then(clamp_diverged),
+            Metric::EmpiricalRho => return c.empirical_rho.filter(|v| v.is_finite()),
+            Metric::TheoryRho => return c.theory_rho.filter(|v| v.is_finite()),
+            Metric::BitsPerRound => c.bits_per_round() as f64,
+        };
+        if v.is_finite() {
+            Some(v)
+        } else {
+            None
+        }
+    }
+}
+
+/// Sentinel a diverged (infinite) error/loss measurement is clamped to in
+/// charts and statistics — large enough to sit decades above any real
+/// value, finite so means/CSV/SVG stay well-defined.
+pub const DIVERGED: f64 = 1e30;
+
+/// A grid coordinate usable as x axis, series splitter or pin filter.
+/// The seed is deliberately absent: it is the replicate axis that
+/// [`replicates`] folds into statistics, never a plot axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    N,
+    F,
+    B,
+    D,
+    Sigma,
+    Attack,
+    Aggregator,
+    Echo,
+    Model,
+}
+
+impl Axis {
+    pub fn name(self) -> &'static str {
+        match self {
+            Axis::N => "n",
+            Axis::F => "f",
+            Axis::B => "b",
+            Axis::D => "d",
+            Axis::Sigma => "sigma",
+            Axis::Attack => "attack",
+            Axis::Aggregator => "aggregator",
+            Axis::Echo => "echo",
+            Axis::Model => "model",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Axis> {
+        Some(match s {
+            "n" => Axis::N,
+            "f" => Axis::F,
+            "b" => Axis::B,
+            "d" | "dim" => Axis::D,
+            "sigma" => Axis::Sigma,
+            "attack" => Axis::Attack,
+            "aggregator" | "agg" => Axis::Aggregator,
+            "echo" => Axis::Echo,
+            "model" => Axis::Model,
+            _ => return None,
+        })
+    }
+
+    /// The coordinate of a replicate cell along this axis.
+    pub fn value(self, c: &ReplicateCell) -> AxisValue {
+        match self {
+            Axis::N => AxisValue::Num(c.n as f64),
+            Axis::F => AxisValue::Num(c.f as f64),
+            Axis::B => AxisValue::Num(c.b as f64),
+            Axis::D => AxisValue::Num(c.d as f64),
+            Axis::Sigma => AxisValue::Num(c.sigma),
+            Axis::Attack => AxisValue::Cat(c.attack.to_string()),
+            Axis::Aggregator => AxisValue::Cat(c.aggregator.to_string()),
+            Axis::Echo => {
+                let label = if c.echo_enabled { "echo" } else { "raw" };
+                AxisValue::Cat(label.to_string())
+            }
+            Axis::Model => AxisValue::Cat(c.model.to_string()),
+        }
+    }
+}
+
+/// A coordinate value: numeric (plotted on a continuous scale) or
+/// categorical (evenly spaced in first-occurrence order).
+#[derive(Clone, Debug)]
+pub enum AxisValue {
+    Num(f64),
+    Cat(String),
+}
+
+impl AxisValue {
+    pub fn label(&self) -> String {
+        match self {
+            AxisValue::Num(x) => format!("{x}"),
+            AxisValue::Cat(s) => s.clone(),
+        }
+    }
+
+    pub fn num(&self) -> Option<f64> {
+        match self {
+            AxisValue::Num(x) => Some(*x),
+            AxisValue::Cat(_) => None,
+        }
+    }
+}
+
+impl PartialEq for AxisValue {
+    /// Bitwise equality for numbers (grid coordinates are exact copies of
+    /// the declared axis values, never re-derived arithmetic).
+    fn eq(&self, other: &AxisValue) -> bool {
+        match (self, other) {
+            (AxisValue::Num(a), AxisValue::Num(b)) => a.to_bits() == b.to_bits(),
+            (AxisValue::Cat(a), AxisValue::Cat(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+/// One replicate group: every grid coordinate except the seed, plus the
+/// executed cells (one per seed) the statistics are computed from.
+#[derive(Clone, Debug)]
+pub struct ReplicateCell {
+    pub n: usize,
+    pub f: usize,
+    pub b: usize,
+    pub d: usize,
+    pub model: &'static str,
+    pub attack: &'static str,
+    pub aggregator: &'static str,
+    pub sigma: f64,
+    pub echo_enabled: bool,
+    /// Seeds of the replicates, in grid order.
+    pub seeds: Vec<u64>,
+    samples: Vec<SweepCell>,
+}
+
+impl ReplicateCell {
+    fn key_matches(&self, c: &SweepCell) -> bool {
+        self.n == c.n
+            && self.f == c.f
+            && self.b == c.b
+            && self.d == c.d
+            && self.model == c.model
+            && self.attack == c.attack
+            && self.aggregator == c.aggregator
+            && self.sigma.to_bits() == c.sigma.to_bits()
+            && self.echo_enabled == c.echo_enabled
+    }
+
+    /// Number of replicate samples in the group.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Replicate statistics for one metric, across the seeds that define
+    /// it. `None` when no replicate defines the metric.
+    pub fn stat(&self, metric: Metric) -> Option<Summary> {
+        let xs: Vec<f64> = self.samples.iter().filter_map(|c| metric.extract(c)).collect();
+        Summary::of_opt(&xs)
+    }
+}
+
+/// Group a report's cells by every coordinate except the seed, in
+/// first-occurrence (= grid) order — with `seeds` as the innermost grid
+/// axis, replicates of one configuration are consecutive cells. Error
+/// cells (invalid configs recorded by the sweep engine) are dropped.
+///
+/// Statistics are computed serially from the grid-ordered report, so the
+/// result is independent of how many threads executed the sweep.
+pub fn replicates(report: &SweepReport) -> Vec<ReplicateCell> {
+    let mut out: Vec<ReplicateCell> = Vec::new();
+    for c in &report.cells {
+        if c.error.is_some() {
+            continue;
+        }
+        match out.iter_mut().find(|rc| rc.key_matches(c)) {
+            Some(rc) => {
+                rc.seeds.push(c.seed);
+                rc.samples.push(c.clone());
+            }
+            None => out.push(ReplicateCell {
+                n: c.n,
+                f: c.f,
+                b: c.b,
+                d: c.d,
+                model: c.model,
+                attack: c.attack,
+                aggregator: c.aggregator,
+                sigma: c.sigma,
+                echo_enabled: c.echo_enabled,
+                seeds: vec![c.seed],
+                samples: vec![c.clone()],
+            }),
+        }
+    }
+    out
+}
+
+/// What to plot: a metric against an x axis, optionally split into one
+/// series per value of another axis, with the remaining axes pinned.
+#[derive(Clone, Debug)]
+pub struct SeriesSpec {
+    pub metric: Metric,
+    pub x: Axis,
+    /// `None` ⇒ a single series named after the metric.
+    pub series: Option<Axis>,
+    /// Keep only replicate cells whose coordinate on each pinned axis
+    /// equals the given value.
+    pub pins: Vec<(Axis, AxisValue)>,
+}
+
+/// One plotted point: an x coordinate and the replicate statistics of the
+/// metric at that coordinate.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub x: AxisValue,
+    pub stat: Summary,
+}
+
+/// One plotted line: a name (legend entry) and its points in axis order.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<Point>,
+}
+
+/// Slice replicate cells into series according to `spec`. Series appear
+/// in first-occurrence order; numeric x points are sorted ascending,
+/// categorical x keeps first-occurrence order. If the grid varies an axis
+/// the spec neither plots, splits on, nor pins, the first cell at each x
+/// wins — pin the extra axis to select a different slice.
+pub fn select(cells: &[ReplicateCell], spec: &SeriesSpec) -> Vec<Series> {
+    let mut out: Vec<Series> = Vec::new();
+    for rc in cells {
+        if !spec.pins.iter().all(|(a, v)| a.value(rc) == *v) {
+            continue;
+        }
+        let stat = match rc.stat(spec.metric) {
+            Some(s) => s,
+            None => continue,
+        };
+        let name = match spec.series {
+            Some(a) => format!("{}={}", a.name(), a.value(rc).label()),
+            None => spec.metric.name().to_string(),
+        };
+        let idx = match out.iter().position(|s| s.name == name) {
+            Some(i) => i,
+            None => {
+                out.push(Series { name, points: Vec::new() });
+                out.len() - 1
+            }
+        };
+        let x = spec.x.value(rc);
+        if !out[idx].points.iter().any(|p| p.x == x) {
+            out[idx].points.push(Point { x, stat });
+        }
+    }
+    for s in &mut out {
+        if s.points.iter().all(|p| matches!(p.x, AxisValue::Num(_))) {
+            s.points.sort_by(|a, b| {
+                a.x.num().unwrap_or(f64::NAN).total_cmp(&b.x.num().unwrap_or(f64::NAN))
+            });
+        }
+    }
+    out
+}
+
+/// A renderable figure: selected series plus labels. [`Chart::csv`] and
+/// [`Chart::svg`] are pure functions of the fields, so a chart built from
+/// a deterministic report renders to deterministic bytes.
+#[derive(Clone, Debug)]
+pub struct Chart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    /// Log₁₀ y scale (final-error plots span many decades).
+    pub log_y: bool,
+    pub series: Vec<Series>,
+}
+
+impl Chart {
+    /// Replicate-fold `report` and select series according to `spec`.
+    pub fn from_report(report: &SweepReport, spec: &SeriesSpec, title: &str) -> Chart {
+        let cells = replicates(report);
+        Chart {
+            title: title.to_string(),
+            x_label: spec.x.name().to_string(),
+            y_label: spec.metric.axis_label().to_string(),
+            log_y: false,
+            series: select(&cells, spec),
+        }
+    }
+
+    /// Flat CSV: one row per (series, x) with the replicate statistics.
+    pub fn csv(&self) -> CsvTable {
+        let mut t = CsvTable::new(&["series", "x", "mean", "std", "min", "max", "n_seeds"]);
+        for s in &self.series {
+            for p in &s.points {
+                t.push_row_mixed(vec![
+                    s.name.clone(),
+                    p.x.label(),
+                    format!("{}", p.stat.mean),
+                    format!("{}", p.stat.std),
+                    format!("{}", p.stat.min),
+                    format!("{}", p.stat.max),
+                    format!("{}", p.stat.n),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// Self-contained SVG line chart (see [`svg`]).
+    pub fn svg(&self) -> String {
+        svg::render(self)
+    }
+
+    /// Write `<dir>/<stem>.csv` + `<dir>/<stem>.svg`, returning the paths.
+    pub fn write<P: AsRef<Path>>(&self, dir: P, stem: &str) -> io::Result<(PathBuf, PathBuf)> {
+        let dir = dir.as_ref();
+        fs::create_dir_all(dir)?;
+        let csv_path = dir.join(format!("{stem}.csv"));
+        let svg_path = dir.join(format!("{stem}.svg"));
+        self.csv().write_file(&csv_path)?;
+        fs::write(&svg_path, self.svg())?;
+        Ok((csv_path, svg_path))
+    }
+}
+
+/// The paper figures this layer reproduces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FigId {
+    /// Communication savings vs network size n (series: σ).
+    Fig2,
+    /// Communication savings vs fault tolerance f at fixed n (series: σ).
+    Fig3,
+    /// Final ‖w − w*‖² under each attack (series: aggregator, log y).
+    Fig4,
+}
+
+impl FigId {
+    pub fn all() -> [FigId; 3] {
+        [FigId::Fig2, FigId::Fig3, FigId::Fig4]
+    }
+
+    pub fn parse(s: &str) -> Option<FigId> {
+        Some(match s {
+            "2" | "fig2" => FigId::Fig2,
+            "3" | "fig3" => FigId::Fig3,
+            "4" | "fig4" => FigId::Fig4,
+            _ => return None,
+        })
+    }
+
+    /// Artifact stem: `results/<stem>.{svg,csv}`.
+    pub fn stem(self) -> &'static str {
+        match self {
+            FigId::Fig2 => "FIG_2",
+            FigId::Fig3 => "FIG_3",
+            FigId::Fig4 => "FIG_4",
+        }
+    }
+}
+
+/// A declared figure: the grid to run and how to plot its report.
+#[derive(Clone, Debug)]
+pub struct FigureJob {
+    pub id: FigId,
+    pub grid: SweepGrid,
+    pub spec: SeriesSpec,
+    pub title: String,
+    pub log_y: bool,
+}
+
+impl FigureJob {
+    /// Execute the grid across `threads` cells at a time and render. The
+    /// chart bytes are byte-identical at any `threads` value (sweep
+    /// determinism + serial statistics).
+    pub fn run(&self, threads: usize) -> Chart {
+        let report = self.grid.run(threads);
+        let mut chart = Chart::from_report(&report, &self.spec, &self.title);
+        chart.log_y = self.log_y;
+        chart
+    }
+}
+
+/// Replicate seeds per profile — the statistics axis of every paper
+/// figure (smoke keeps CI inside seconds).
+pub fn replicate_seeds(profile: SweepProfile) -> Vec<u64> {
+    match profile {
+        SweepProfile::Full => vec![41, 42, 43],
+        SweepProfile::Smoke => vec![41, 42],
+    }
+}
+
+/// Declare one of the paper's figures at the given profile. Grids build
+/// on the sweep presets (`comm_savings`, `attack_matrix`) with the
+/// replicate `seeds` axis added, so a figure regenerated locally and one
+/// from CI come from the same declaration.
+pub fn paper_figure(id: FigId, profile: SweepProfile) -> FigureJob {
+    match id {
+        FigId::Fig2 => {
+            let mut grid = presets::comm_savings(profile);
+            grid.name = "fig2".to_string();
+            grid.seeds = replicate_seeds(profile);
+            FigureJob {
+                id,
+                grid,
+                spec: SeriesSpec {
+                    metric: Metric::CommSavings,
+                    x: Axis::N,
+                    series: Some(Axis::Sigma),
+                    pins: vec![],
+                },
+                title: "Fig. 2 — communication savings vs network size n".to_string(),
+                log_y: false,
+            }
+        }
+        FigId::Fig3 => {
+            let mut base = ExperimentConfig::default();
+            base.model = ModelKind::Quadratic;
+            base.d = 200;
+            base.threads = 1;
+            base.rounds = match profile {
+                SweepProfile::Full => 40,
+                SweepProfile::Smoke => 10,
+            };
+            let (n, f_max) = match profile {
+                SweepProfile::Full => (50usize, 5usize),
+                SweepProfile::Smoke => (20, 2),
+            };
+            let mut grid = SweepGrid::new("fig3", base);
+            grid.profile = profile;
+            grid.nfb = (0..=f_max).map(|f| (n, f, f)).collect();
+            grid.sigmas = vec![0.05, 0.10];
+            grid.seeds = replicate_seeds(profile);
+            FigureJob {
+                id,
+                grid,
+                spec: SeriesSpec {
+                    metric: Metric::CommSavings,
+                    x: Axis::F,
+                    series: Some(Axis::Sigma),
+                    pins: vec![],
+                },
+                title: format!("Fig. 3 — communication savings vs fault tolerance f (n={n})"),
+                log_y: false,
+            }
+        }
+        FigId::Fig4 => {
+            let mut grid = presets::attack_matrix(profile);
+            grid.name = "fig4".to_string();
+            if profile == SweepProfile::Smoke {
+                // A readable subset keeps the smoke grid inside seconds.
+                grid.attacks = vec![
+                    AttackKind::Omniscient,
+                    AttackKind::SignFlip,
+                    AttackKind::LargeNorm,
+                    AttackKind::Zero,
+                    AttackKind::Alie,
+                    AttackKind::Ipm,
+                ];
+                grid.aggregators =
+                    vec![Aggregator::CgcSum, Aggregator::Mean, Aggregator::Krum];
+            }
+            grid.seeds = replicate_seeds(profile);
+            FigureJob {
+                id,
+                grid,
+                spec: SeriesSpec {
+                    metric: Metric::FinalDistSq,
+                    x: Axis::Attack,
+                    series: Some(Axis::Aggregator),
+                    pins: vec![],
+                },
+                title: "Fig. 4 — final ‖w − w*‖² under attack".to_string(),
+                log_y: true,
+            }
+        }
+    }
+}
+
+/// Axes a grid actually sweeps (≥ 2 distinct values), in nesting order —
+/// the default x/series choice for ad-hoc ablations.
+pub fn swept_axes(grid: &SweepGrid) -> Vec<Axis> {
+    fn distinct<T: PartialEq + Copy>(vals: &[T]) -> usize {
+        let mut seen: Vec<T> = Vec::new();
+        for &v in vals {
+            if !seen.contains(&v) {
+                seen.push(v);
+            }
+        }
+        seen.len()
+    }
+    let ns: Vec<usize> = grid.nfb.iter().map(|t| t.0).collect();
+    let fs: Vec<usize> = grid.nfb.iter().map(|t| t.1).collect();
+    let bs: Vec<usize> = grid.nfb.iter().map(|t| t.2).collect();
+    let mut out = Vec::new();
+    if distinct(&ns) > 1 {
+        out.push(Axis::N);
+    }
+    if distinct(&fs) > 1 {
+        out.push(Axis::F);
+    }
+    if distinct(&bs) > 1 && fs != bs {
+        out.push(Axis::B);
+    }
+    if grid.models.len() > 1 {
+        out.push(Axis::Model);
+    }
+    if grid.sigmas.len() > 1 {
+        out.push(Axis::Sigma);
+    }
+    if grid.dims.len() > 1 {
+        out.push(Axis::D);
+    }
+    if grid.attacks.len() > 1 {
+        out.push(Axis::Attack);
+    }
+    if grid.aggregators.len() > 1 {
+        out.push(Axis::Aggregator);
+    }
+    if grid.echo.len() > 1 {
+        out.push(Axis::Echo);
+    }
+    out
+}
+
+/// Apply `--axis key=spec` declarations to a grid (the ad-hoc ablation
+/// mini-DSL). `spec` is a comma list (`n=10,20,50`, `attack=omniscient,
+/// alie`) or an inclusive integer range (`f=0..4` ⇒ 0,1,2,3,4). Keys:
+/// `n f b d sigma seed attack aggregator model echo`. `n`/`f`/`b` build
+/// the joint `(n, f, b)` axis as their cross-product; without an explicit
+/// `b`, the Byzantine count tracks the fault tolerance (`b = f`).
+/// Combinations violating `f < n/2` become error cells in the report and
+/// are dropped from the chart.
+pub fn apply_axis_specs(grid: &mut SweepGrid, specs: &[String]) -> Result<(), String> {
+    let mut ns: Vec<usize> = Vec::new();
+    let mut fs: Vec<usize> = Vec::new();
+    let mut bs: Vec<usize> = Vec::new();
+    for spec in specs {
+        let (key, val) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("--axis '{spec}': expected key=v1,v2 or key=a..b"))?;
+        match key.trim() {
+            "n" => ns = parse_usize_list(val)?,
+            "f" => fs = parse_usize_list(val)?,
+            "b" => bs = parse_usize_list(val)?,
+            "d" | "dim" => grid.dims = parse_usize_list(val)?,
+            "sigma" => grid.sigmas = parse_f64_list(val)?,
+            "seed" | "seeds" => {
+                grid.seeds =
+                    parse_usize_list(val)?.into_iter().map(|v| v as u64).collect()
+            }
+            "attack" => {
+                grid.attacks = parse_named_list(val, AttackKind::parse, "attack")?
+            }
+            "aggregator" | "agg" => {
+                grid.aggregators = parse_named_list(val, Aggregator::parse, "aggregator")?
+            }
+            "model" => grid.models = parse_named_list(val, ModelKind::parse, "model")?,
+            "echo" => grid.echo = parse_bool_list(val)?,
+            other => {
+                return Err(format!(
+                    "unknown axis '{other}' \
+                     (expected n|f|b|d|sigma|seed|attack|aggregator|model|echo)"
+                ))
+            }
+        }
+    }
+    if !ns.is_empty() || !fs.is_empty() || !bs.is_empty() {
+        if ns.is_empty() {
+            ns.push(grid.base.n);
+        }
+        if fs.is_empty() {
+            fs.push(grid.base.f);
+        }
+        let mut nfb = Vec::new();
+        for &n in &ns {
+            for &f in &fs {
+                if bs.is_empty() {
+                    nfb.push((n, f, f));
+                } else {
+                    for &b in &bs {
+                        nfb.push((n, f, b));
+                    }
+                }
+            }
+        }
+        grid.nfb = nfb;
+    }
+    Ok(())
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>, String> {
+    if let Some((a, b)) = s.split_once("..") {
+        let lo: usize =
+            a.trim().parse().map_err(|e| format!("range start '{a}': {e}"))?;
+        let hi: usize = b.trim().parse().map_err(|e| format!("range end '{b}': {e}"))?;
+        if hi < lo {
+            return Err(format!("range '{s}': end below start"));
+        }
+        return Ok((lo..=hi).collect());
+    }
+    s.split(',')
+        .map(|v| v.trim().parse::<usize>().map_err(|e| format!("'{v}': {e}")))
+        .collect()
+}
+
+fn parse_f64_list(s: &str) -> Result<Vec<f64>, String> {
+    s.split(',')
+        .map(|v| v.trim().parse::<f64>().map_err(|e| format!("'{v}': {e}")))
+        .collect()
+}
+
+fn parse_bool_list(s: &str) -> Result<Vec<bool>, String> {
+    s.split(',')
+        .map(|v| match v.trim() {
+            "true" | "1" | "on" => Ok(true),
+            "false" | "0" | "off" => Ok(false),
+            other => Err(format!("'{other}': expected bool")),
+        })
+        .collect()
+}
+
+fn parse_named_list<T>(
+    s: &str,
+    parse: fn(&str) -> Option<T>,
+    what: &str,
+) -> Result<Vec<T>, String> {
+    s.split(',')
+        .map(|v| {
+            let v = v.trim();
+            parse(v).ok_or_else(|| format!("unknown {what} '{v}'"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::PhaseTimings;
+
+    fn cell(n: usize, sigma: f64, seed: u64, savings: f64, dist: Option<f64>) -> SweepCell {
+        SweepCell {
+            index: 0,
+            label: format!("n{n}_s{seed}"),
+            n,
+            f: 1,
+            b: 1,
+            d: 10,
+            model: "quadratic",
+            attack: "omniscient",
+            aggregator: "cgc",
+            sigma,
+            seed,
+            rounds: 5,
+            echo_enabled: true,
+            echo_rate: 0.5,
+            comm_savings: savings,
+            final_loss: 0.1,
+            final_dist_sq: dist,
+            uplink_bits_total: 100,
+            exposed: 0,
+            empirical_rho: None,
+            theory_rho: Some(0.9),
+            timings: PhaseTimings::default(),
+            error: None,
+        }
+    }
+
+    fn report(cells: Vec<SweepCell>) -> SweepReport {
+        SweepReport { name: "t".to_string(), profile: SweepProfile::Smoke, cells }
+    }
+
+    #[test]
+    fn replicates_fold_seeds_in_grid_order() {
+        let r = report(vec![
+            cell(10, 0.05, 1, 0.6, Some(1.0)),
+            cell(10, 0.05, 2, 0.8, None),
+            cell(20, 0.05, 1, 0.7, Some(2.0)),
+        ]);
+        let rc = replicates(&r);
+        assert_eq!(rc.len(), 2);
+        assert_eq!(rc[0].seeds, vec![1, 2]);
+        assert_eq!(rc[0].len(), 2);
+        assert!(!rc[0].is_empty());
+        let s = rc[0].stat(Metric::CommSavings).unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.7).abs() < 1e-12);
+        // final_dist_sq is defined by only one replicate of the first group.
+        assert_eq!(rc[0].stat(Metric::FinalDistSq).unwrap().n, 1);
+        assert_eq!(rc[1].seeds, vec![1]);
+    }
+
+    #[test]
+    fn infinite_error_clamps_to_the_diverged_sentinel() {
+        // A mean aggregator blown up by a norm attack must stay visible.
+        let c = cell(10, 0.05, 1, 0.5, Some(f64::INFINITY));
+        assert_eq!(Metric::FinalDistSq.extract(&c), Some(DIVERGED));
+        let mut c = cell(10, 0.05, 1, 0.5, None);
+        c.final_loss = f64::INFINITY;
+        assert_eq!(Metric::FinalLoss.extract(&c), Some(DIVERGED));
+        c.final_loss = f64::NAN;
+        assert_eq!(Metric::FinalLoss.extract(&c), None);
+        assert_eq!(Metric::FinalDistSq.extract(&c), None);
+    }
+
+    #[test]
+    fn error_cells_are_dropped() {
+        let mut bad = cell(10, 0.05, 1, f64::NAN, None);
+        bad.error = Some("boom".to_string());
+        let r = report(vec![bad, cell(10, 0.05, 2, 0.5, None)]);
+        let rc = replicates(&r);
+        assert_eq!(rc.len(), 1);
+        assert_eq!(rc[0].seeds, vec![2]);
+    }
+
+    #[test]
+    fn select_splits_series_and_sorts_numeric_x() {
+        let r = report(vec![
+            cell(20, 0.05, 1, 0.6, None),
+            cell(10, 0.05, 1, 0.5, None),
+            cell(10, 0.10, 1, 0.4, None),
+        ]);
+        let series = select(
+            &replicates(&r),
+            &SeriesSpec {
+                metric: Metric::CommSavings,
+                x: Axis::N,
+                series: Some(Axis::Sigma),
+                pins: vec![],
+            },
+        );
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].name, "sigma=0.05");
+        let xs: Vec<f64> = series[0].points.iter().map(|p| p.x.num().unwrap()).collect();
+        assert_eq!(xs, vec![10.0, 20.0]);
+        assert_eq!(series[1].name, "sigma=0.1");
+        assert_eq!(series[1].points.len(), 1);
+    }
+
+    #[test]
+    fn pins_filter_cells() {
+        let r = report(vec![cell(10, 0.05, 1, 0.5, None), cell(10, 0.10, 1, 0.4, None)]);
+        let series = select(
+            &replicates(&r),
+            &SeriesSpec {
+                metric: Metric::CommSavings,
+                x: Axis::N,
+                series: None,
+                pins: vec![(Axis::Sigma, AxisValue::Num(0.10))],
+            },
+        );
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].points.len(), 1);
+        assert!((series[0].points[0].stat.mean - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axis_and_metric_names_roundtrip() {
+        for a in [
+            Axis::N,
+            Axis::F,
+            Axis::B,
+            Axis::D,
+            Axis::Sigma,
+            Axis::Attack,
+            Axis::Aggregator,
+            Axis::Echo,
+            Axis::Model,
+        ] {
+            assert_eq!(Axis::parse(a.name()), Some(a));
+        }
+        for m in [
+            Metric::CommSavings,
+            Metric::EchoRate,
+            Metric::FinalLoss,
+            Metric::FinalDistSq,
+            Metric::EmpiricalRho,
+            Metric::TheoryRho,
+            Metric::BitsPerRound,
+        ] {
+            assert_eq!(Metric::parse(m.name()), Some(m));
+        }
+        assert_eq!(Axis::parse("bogus"), None);
+        assert_eq!(Metric::parse("bogus"), None);
+    }
+
+    #[test]
+    fn paper_figures_declare_replicated_grids() {
+        for id in FigId::all() {
+            for profile in [SweepProfile::Smoke, SweepProfile::Full] {
+                let job = paper_figure(id, profile);
+                assert_eq!(job.id, id);
+                assert!(job.grid.seeds.len() >= 2, "{:?} needs replicate seeds", id);
+                assert!(job.grid.len() >= 4, "{:?} grid too small", id);
+                let digit = job.id.stem().chars().last().unwrap().to_string();
+                assert_eq!(FigId::parse(&digit), Some(id));
+            }
+        }
+    }
+
+    #[test]
+    fn axis_dsl_builds_cross_products() {
+        let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
+        let specs: Vec<String> = vec![
+            "n=10,20,50".to_string(),
+            "f=0..4".to_string(),
+            "sigma=0.02,0.08".to_string(),
+        ];
+        apply_axis_specs(&mut grid, &specs).unwrap();
+        assert_eq!(grid.nfb.len(), 15);
+        assert_eq!(grid.nfb[0], (10, 0, 0));
+        assert_eq!(grid.nfb[14], (50, 4, 4));
+        assert_eq!(grid.sigmas, vec![0.02, 0.08]);
+        assert_eq!(swept_axes(&grid), vec![Axis::N, Axis::F, Axis::Sigma]);
+    }
+
+    #[test]
+    fn axis_dsl_rejects_garbage() {
+        let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
+        assert!(apply_axis_specs(&mut grid, &["n".to_string()]).is_err());
+        assert!(apply_axis_specs(&mut grid, &["bogus=1".to_string()]).is_err());
+        assert!(apply_axis_specs(&mut grid, &["f=4..0".to_string()]).is_err());
+        assert!(apply_axis_specs(&mut grid, &["attack=nope".to_string()]).is_err());
+        assert!(apply_axis_specs(&mut grid, &["n=x,y".to_string()]).is_err());
+    }
+
+    #[test]
+    fn axis_dsl_named_axes() {
+        let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
+        let specs: Vec<String> = vec![
+            "attack=omniscient,alie".to_string(),
+            "aggregator=cgc,mean".to_string(),
+            "echo=on,off".to_string(),
+        ];
+        apply_axis_specs(&mut grid, &specs).unwrap();
+        assert_eq!(grid.attacks, vec![AttackKind::Omniscient, AttackKind::Alie]);
+        assert_eq!(grid.aggregators, vec![Aggregator::CgcSum, Aggregator::Mean]);
+        assert_eq!(grid.echo, vec![true, false]);
+    }
+}

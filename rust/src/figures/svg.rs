@@ -1,0 +1,544 @@
+//! Zero-dependency SVG line-chart rendering for the figure layer.
+//!
+//! [`render`] turns a [`Chart`] into one self-contained SVG document:
+//! mean polylines with point markers, a ±1 standard-deviation band per
+//! series (when any replicate spread exists), axes with "nice" ticks
+//! (decade ticks on log charts), optional categorical x labels, and a
+//! legend. No external fonts, scripts or CSS — the file renders anywhere.
+//!
+//! **Determinism.** The output is a pure function of the chart: fixed
+//! canvas geometry, fixed palette, fixed `{:.2}` pixel formatting and
+//! shortest-round-trip tick labels. A chart built from a deterministic
+//! [`crate::sweep::SweepReport`] therefore renders to byte-identical SVG
+//! at any thread count (pinned by `rust/tests/figures.rs`).
+
+use super::{AxisValue, Chart};
+use std::fmt::Write as _;
+
+const W: f64 = 760.0;
+const H: f64 = 480.0;
+/// Margins: left (y tick labels), right (legend), top (title), bottom
+/// (x tick labels, possibly rotated).
+const ML: f64 = 76.0;
+const MR: f64 = 170.0;
+const MT: f64 = 48.0;
+const MB: f64 = 72.0;
+
+const PALETTE: [&str; 8] = [
+    "#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e", "#8c564b", "#e377c2", "#7f7f7f",
+];
+
+/// Escape the XML-special characters of text content.
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// Pixel coordinate formatting: fixed two decimals, so equal inputs give
+/// equal bytes.
+fn px(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Tick label: plain decimal in a readable range, exponent notation
+/// outside it, trailing zeros trimmed.
+fn tick_label(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if !(1e-3..1e5).contains(&a) {
+        return format!("{v:e}");
+    }
+    let s = format!("{v:.4}");
+    s.trim_end_matches('0').trim_end_matches('.').to_string()
+}
+
+/// Round ticks covering `[min, max]` with a 1/2/5·10^k step (~`target`
+/// labels). Degenerates to the single value when the span is empty.
+fn nice_ticks(min: f64, max: f64, target: usize) -> Vec<f64> {
+    if max <= min {
+        return vec![min];
+    }
+    let raw = (max - min) / target.max(1) as f64;
+    let mag = 10f64.powf(raw.log10().floor());
+    let norm = raw / mag;
+    let mult = if norm <= 1.0 {
+        1.0
+    } else if norm <= 2.0 {
+        2.0
+    } else if norm <= 5.0 {
+        5.0
+    } else {
+        10.0
+    };
+    let step = mag * mult;
+    let mut t = (min / step).ceil() * step;
+    let mut out = Vec::new();
+    while t <= max + step * 1e-9 {
+        if t.abs() < step * 1e-9 {
+            t = 0.0;
+        }
+        out.push(t);
+        t += step;
+    }
+    if out.is_empty() {
+        out.push(min);
+    }
+    out
+}
+
+/// A point prepared for drawing: pixel x plus mean/band in the (possibly
+/// log-transformed) y domain.
+struct PlotPt {
+    x: f64,
+    mean: f64,
+    lo: f64,
+    hi: f64,
+    has_band: bool,
+}
+
+/// Render `chart` as a complete `<svg>` document (see module docs).
+pub fn render(chart: &Chart) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{W}\" height=\"{H}\" \
+         viewBox=\"0 0 {W} {H}\" font-family=\"Helvetica, Arial, sans-serif\">"
+    );
+    let _ = writeln!(s, "<rect width=\"{W}\" height=\"{H}\" fill=\"#ffffff\"/>");
+    let pw = W - ML - MR;
+    let ph = H - MT - MB;
+    let _ = writeln!(
+        s,
+        "<text x=\"{}\" y=\"26\" text-anchor=\"middle\" font-size=\"14\" \
+         font-weight=\"600\" fill=\"#222222\">{}</text>",
+        px(ML + pw / 2.0),
+        esc(&chart.title)
+    );
+
+    // --- domains -----------------------------------------------------
+    let log = chart.log_y;
+    let numeric_x = chart
+        .series
+        .iter()
+        .flat_map(|sr| sr.points.iter())
+        .all(|p| matches!(p.x, AxisValue::Num(_)));
+    // Categorical x positions: first-occurrence order across series.
+    let mut cats: Vec<String> = Vec::new();
+    if !numeric_x {
+        for sr in &chart.series {
+            for p in &sr.points {
+                let l = p.x.label();
+                if !cats.contains(&l) {
+                    cats.push(l);
+                }
+            }
+        }
+    }
+    let mut xmin = f64::INFINITY;
+    let mut xmax = f64::NEG_INFINITY;
+    let mut tvals: Vec<f64> = Vec::new();
+    for sr in &chart.series {
+        for p in &sr.points {
+            if numeric_x {
+                let v = p.x.num().unwrap_or(f64::NAN);
+                if v.is_finite() {
+                    xmin = xmin.min(v);
+                    xmax = xmax.max(v);
+                }
+            }
+            let st = &p.stat;
+            for v in [st.mean, st.mean - st.std, st.mean + st.std, st.min, st.max] {
+                if v.is_finite() && (!log || v > 0.0) {
+                    tvals.push(if log { v.log10() } else { v });
+                }
+            }
+        }
+    }
+    if tvals.is_empty() || (numeric_x && !xmin.is_finite()) {
+        let _ = writeln!(
+            s,
+            "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" font-size=\"13\" \
+             fill=\"#666666\">no plottable data</text>\n</svg>",
+            px(W / 2.0),
+            px(H / 2.0)
+        );
+        return s;
+    }
+    if numeric_x && xmax - xmin <= 0.0 {
+        let pad = xmin.abs() * 0.5 + 1.0;
+        xmin -= pad;
+        xmax += pad;
+    }
+    let mut ymin = tvals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut ymax = tvals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if ymax - ymin <= 0.0 {
+        ymin -= 1.0;
+        ymax += 1.0;
+    } else {
+        let pad = 0.05 * (ymax - ymin);
+        ymin -= pad;
+        ymax += pad;
+    }
+
+    // --- scales ------------------------------------------------------
+    let n_cats = cats.len().max(1) as f64;
+    let sx_num = |v: f64| ML + (v - xmin) / (xmax - xmin) * pw;
+    let sx_cat = |i: usize| ML + (i as f64 + 0.5) * pw / n_cats;
+    let sy = |t: f64| H - MB - (t - ymin) / (ymax - ymin) * ph;
+    let xpos = |x: &AxisValue| -> f64 {
+        if numeric_x {
+            sx_num(x.num().unwrap_or(xmin))
+        } else {
+            let l = x.label();
+            let i = cats.iter().position(|c| *c == l).unwrap_or(0);
+            sx_cat(i)
+        }
+    };
+
+    // --- y gridlines + ticks -----------------------------------------
+    let yticks: Vec<(f64, String)> = if log {
+        let lo = ymin.ceil() as i64;
+        let hi = ymax.floor() as i64;
+        if lo > hi {
+            nice_ticks(ymin, ymax, 4)
+                .into_iter()
+                .map(|t| (t, format!("{:.1e}", 10f64.powf(t))))
+                .collect()
+        } else {
+            let span = (hi - lo) as usize + 1;
+            let step = ((span + 7) / 8).max(1);
+            (lo..=hi)
+                .step_by(step)
+                .map(|e| {
+                    let label = if e == 0 {
+                        "1".to_string()
+                    } else {
+                        format!("1e{e}")
+                    };
+                    (e as f64, label)
+                })
+                .collect()
+        }
+    } else {
+        nice_ticks(ymin, ymax, 5).into_iter().map(|t| (t, tick_label(t))).collect()
+    };
+    for (t, label) in &yticks {
+        let y = sy(*t);
+        let _ = writeln!(
+            s,
+            "<line x1=\"{}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"#e5e5e5\"/>",
+            px(ML),
+            px(y),
+            px(W - MR),
+            px(y)
+        );
+        let _ = writeln!(
+            s,
+            "<text x=\"{}\" y=\"{}\" text-anchor=\"end\" font-size=\"11\" \
+             fill=\"#444444\">{}</text>",
+            px(ML - 8.0),
+            px(y + 4.0),
+            esc(label)
+        );
+    }
+
+    // --- x ticks ------------------------------------------------------
+    if numeric_x {
+        for t in nice_ticks(xmin, xmax, 6) {
+            let x = sx_num(t);
+            let _ = writeln!(
+                s,
+                "<line x1=\"{}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"#999999\"/>",
+                px(x),
+                px(H - MB),
+                px(x),
+                px(H - MB + 5.0)
+            );
+            let _ = writeln!(
+                s,
+                "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" font-size=\"11\" \
+                 fill=\"#444444\">{}</text>",
+                px(x),
+                px(H - MB + 20.0),
+                esc(&tick_label(t))
+            );
+        }
+    } else {
+        for (i, c) in cats.iter().enumerate() {
+            let x = sx_cat(i);
+            let _ = writeln!(
+                s,
+                "<line x1=\"{}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"#999999\"/>",
+                px(x),
+                px(H - MB),
+                px(x),
+                px(H - MB + 5.0)
+            );
+            let _ = writeln!(
+                s,
+                "<text transform=\"translate({},{}) rotate(-35)\" text-anchor=\"end\" \
+                 font-size=\"10\" fill=\"#444444\">{}</text>",
+                px(x),
+                px(H - MB + 16.0),
+                esc(c)
+            );
+        }
+    }
+
+    // --- frame + axis labels -----------------------------------------
+    let _ = writeln!(
+        s,
+        "<rect x=\"{}\" y=\"{}\" width=\"{}\" height=\"{}\" fill=\"none\" \
+         stroke=\"#999999\"/>",
+        px(ML),
+        px(MT),
+        px(pw),
+        px(ph)
+    );
+    let _ = writeln!(
+        s,
+        "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" font-size=\"12\" \
+         fill=\"#333333\">{}</text>",
+        px(ML + pw / 2.0),
+        px(H - 12.0),
+        esc(&chart.x_label)
+    );
+    let y_label = if log {
+        format!("{} (log scale)", chart.y_label)
+    } else {
+        chart.y_label.clone()
+    };
+    let _ = writeln!(
+        s,
+        "<text transform=\"translate(18,{}) rotate(-90)\" text-anchor=\"middle\" \
+         font-size=\"12\" fill=\"#333333\">{}</text>",
+        px(MT + ph / 2.0),
+        esc(&y_label)
+    );
+
+    // --- series ------------------------------------------------------
+    for (si, sr) in chart.series.iter().enumerate() {
+        let color = PALETTE[si % PALETTE.len()];
+        let mut pts: Vec<PlotPt> = Vec::new();
+        for p in &sr.points {
+            let m = p.stat.mean;
+            if !m.is_finite() || (log && m <= 0.0) {
+                continue;
+            }
+            let mean_t = if log { m.log10() } else { m };
+            let lo_v = p.stat.mean - p.stat.std;
+            let hi_v = p.stat.mean + p.stat.std;
+            let lo_t = if log {
+                if lo_v > 0.0 {
+                    lo_v.log10()
+                } else {
+                    ymin
+                }
+            } else {
+                lo_v
+            };
+            let hi_t = if log {
+                if hi_v > 0.0 {
+                    hi_v.log10()
+                } else {
+                    ymin
+                }
+            } else {
+                hi_v
+            };
+            pts.push(PlotPt {
+                x: xpos(&p.x),
+                mean: mean_t.clamp(ymin, ymax),
+                lo: lo_t.clamp(ymin, ymax),
+                hi: hi_t.clamp(ymin, ymax),
+                has_band: p.stat.std > 0.0,
+            });
+        }
+        if pts.len() >= 2 && pts.iter().any(|p| p.has_band) {
+            let mut poly = String::new();
+            for p in &pts {
+                let _ = write!(poly, "{},{} ", px(p.x), px(sy(p.hi)));
+            }
+            for p in pts.iter().rev() {
+                let _ = write!(poly, "{},{} ", px(p.x), px(sy(p.lo)));
+            }
+            let _ = writeln!(
+                s,
+                "<polygon points=\"{}\" fill=\"{color}\" fill-opacity=\"0.15\"/>",
+                poly.trim_end()
+            );
+        }
+        if pts.len() >= 2 {
+            let mut line = String::new();
+            for p in &pts {
+                let _ = write!(line, "{},{} ", px(p.x), px(sy(p.mean)));
+            }
+            let _ = writeln!(
+                s,
+                "<polyline points=\"{}\" fill=\"none\" stroke=\"{color}\" \
+                 stroke-width=\"1.8\"/>",
+                line.trim_end()
+            );
+        }
+        for p in &pts {
+            let _ = writeln!(
+                s,
+                "<circle cx=\"{}\" cy=\"{}\" r=\"2.8\" fill=\"{color}\"/>",
+                px(p.x),
+                px(sy(p.mean))
+            );
+        }
+    }
+
+    // --- legend ------------------------------------------------------
+    for (si, sr) in chart.series.iter().enumerate() {
+        let color = PALETTE[si % PALETTE.len()];
+        let y = MT + 8.0 + 16.0 * si as f64;
+        let _ = writeln!(
+            s,
+            "<line x1=\"{}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"{color}\" \
+             stroke-width=\"2\"/>",
+            px(W - MR + 10.0),
+            px(y),
+            px(W - MR + 30.0),
+            px(y)
+        );
+        let _ = writeln!(
+            s,
+            "<text x=\"{}\" y=\"{}\" font-size=\"11\" fill=\"#333333\">{}</text>",
+            px(W - MR + 36.0),
+            px(y + 4.0),
+            esc(&sr.name)
+        );
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::{Point, Series};
+    use crate::metrics::Summary;
+
+    fn stat(mean: f64, std: f64) -> Summary {
+        Summary { n: 3, mean, std, min: mean - std, max: mean + std, median: mean }
+    }
+
+    fn demo_chart(log_y: bool) -> Chart {
+        Chart {
+            title: "demo <chart> & things".to_string(),
+            x_label: "n".to_string(),
+            y_label: "savings".to_string(),
+            log_y,
+            series: vec![
+                Series {
+                    name: "sigma=0.05".to_string(),
+                    points: vec![
+                        Point { x: AxisValue::Num(10.0), stat: stat(0.5, 0.1) },
+                        Point { x: AxisValue::Num(20.0), stat: stat(0.7, 0.05) },
+                    ],
+                },
+                Series {
+                    name: "sigma=0.1".to_string(),
+                    points: vec![
+                        Point { x: AxisValue::Num(10.0), stat: stat(0.4, 0.0) },
+                        Point { x: AxisValue::Num(20.0), stat: stat(0.6, 0.0) },
+                    ],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn renders_wellformed_svg_with_legend_and_band() {
+        let svg = render(&demo_chart(false));
+        assert!(svg.starts_with("<svg xmlns="));
+        assert!(svg.ends_with("</svg>\n"));
+        assert!(svg.contains("demo &lt;chart&gt; &amp; things"));
+        assert!(svg.contains("sigma=0.05"));
+        assert!(svg.contains("sigma=0.1"));
+        assert!(svg.contains("<polyline"));
+        // Series 1 has spread ⇒ exactly one band polygon.
+        assert_eq!(svg.matches("<polygon").count(), 1);
+        assert_eq!(svg.matches("<circle").count(), 4);
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        let a = render(&demo_chart(false));
+        let b = render(&demo_chart(false));
+        assert_eq!(a.as_bytes(), b.as_bytes());
+    }
+
+    #[test]
+    fn log_scale_uses_decade_ticks_and_skips_nonpositive() {
+        let mut chart = demo_chart(true);
+        chart.series[0].points[0].stat =
+            Summary { n: 3, mean: 1e-8, std: 0.0, min: 1e-8, max: 1e-8, median: 1e-8 };
+        chart.series[1].points[1].stat =
+            Summary { n: 3, mean: -1.0, std: 0.0, min: -1.0, max: -1.0, median: -1.0 };
+        let svg = render(&chart);
+        assert!(svg.contains("1e-8") || svg.contains("1e-7"), "decade ticks expected");
+        assert!(svg.contains("(log scale)"));
+        // The non-positive mean is dropped: 3 drawable points remain.
+        assert_eq!(svg.matches("<circle").count(), 3);
+    }
+
+    #[test]
+    fn categorical_x_gets_rotated_labels() {
+        let chart = Chart {
+            title: "attacks".to_string(),
+            x_label: "attack".to_string(),
+            y_label: "err".to_string(),
+            log_y: false,
+            series: vec![Series {
+                name: "agg=cgc".to_string(),
+                points: vec![
+                    Point { x: AxisValue::Cat("omniscient".to_string()), stat: stat(1.0, 0.0) },
+                    Point { x: AxisValue::Cat("alie".to_string()), stat: stat(2.0, 0.0) },
+                ],
+            }],
+        };
+        let svg = render(&chart);
+        assert!(svg.contains("rotate(-35)"));
+        assert!(svg.contains(">omniscient</text>"));
+        assert!(svg.contains(">alie</text>"));
+    }
+
+    #[test]
+    fn empty_chart_says_no_data() {
+        let chart = Chart {
+            title: "empty".to_string(),
+            x_label: "x".to_string(),
+            y_label: "y".to_string(),
+            log_y: false,
+            series: vec![],
+        };
+        let svg = render(&chart);
+        assert!(svg.contains("no plottable data"));
+        assert!(svg.ends_with("</svg>\n"));
+    }
+
+    #[test]
+    fn nice_ticks_are_round_and_cover_the_span() {
+        let t = nice_ticks(0.0, 1.0, 5);
+        assert_eq!(t.len(), 6);
+        assert!((t[1] - 0.2).abs() < 1e-9);
+        assert!((t[5] - 1.0).abs() < 1e-9);
+        assert_eq!(nice_ticks(5.0, 5.0, 5), vec![5.0]);
+        let t = nice_ticks(0.0, 100.0, 5);
+        assert_eq!(t.first(), Some(&0.0));
+        assert_eq!(t.last(), Some(&100.0));
+    }
+
+    #[test]
+    fn tick_labels_trim_and_switch_to_exponent() {
+        assert_eq!(tick_label(0.0), "0");
+        assert_eq!(tick_label(20.0), "20");
+        assert_eq!(tick_label(0.05), "0.05");
+        assert_eq!(tick_label(1.5e7), "1.5e7");
+        assert_eq!(tick_label(2e-5), "2e-5");
+    }
+}

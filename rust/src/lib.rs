@@ -38,6 +38,13 @@
 //!   --profile smoke|full` runs the same grids from the CLI (`smoke` is
 //!   the reduced-size profile CI's `bench-smoke` job runs on every pull
 //!   request);
+//! * a **figure/ablation layer** ([`figures`]): replicate statistics
+//!   across the sweep `seeds` axis (mean/std/min/max per cell, computed
+//!   in grid order), a series/facet selection layer, and a
+//!   zero-dependency CSV + SVG line-chart renderer that reproduces the
+//!   paper's Figures 2–4 end-to-end (`echo-cgc figures --fig 2|3|4
+//!   --profile smoke|full`) plus an `--axis` mini-DSL for ad-hoc
+//!   ablations — deterministic bytes at any thread count;
 //! * an **XLA/PJRT runtime** facade ([`runtime`]) for gradient computations
 //!   AOT-lowered from JAX/Pallas (`python/compile/`) as HLO text (python is
 //!   never on the request path). Currently a stub — see [`runtime`] — until
@@ -110,6 +117,7 @@ pub mod byzantine;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod figures;
 pub mod grad;
 pub mod linalg;
 pub mod metrics;

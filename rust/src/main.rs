@@ -6,7 +6,15 @@
 //! * `train`          — run one experiment; logs rounds, writes
 //!                      `results/train_<tag>.csv`
 //! * `analyze`        — print the theory constants (β, γ, ρ, r-bound, C, …)
-//! * `figures`        — regenerate Figures 1a–1d (`--which 1a|1b|1c|1d|all`)
+//! * `figures`        — reproduce the paper's figures. Measured,
+//!                      sweep-engine-backed with replicate seeds:
+//!                      `--fig 2|3|4|all --profile smoke|full`
+//!                      (writes `results/FIG_*.{svg,csv}`); ad-hoc
+//!                      ablations via the `--axis` mini-DSL
+//!                      (`--axis n=10,20,50 --axis f=0..4`, comma lists
+//!                      or inclusive integer ranges, plus `--x`,
+//!                      `--series`, `--metric`); or the closed-form
+//!                      theory Figures 1a–1d (`--which 1a|1b|1c|1d|all`)
 //! * `bench-comm`     — measured communication savings vs the raw-gradient
 //!                      baseline across σ (the §4.3 headline numbers)
 //! * `echo-rate`      — measured echo rate vs the analytic lower bound
@@ -31,6 +39,8 @@
 //! ```text
 //! echo-cgc train --n 50 --f 5 --sigma 0.05 --rounds 500
 //! echo-cgc train --d 100000 --threads auto
+//! echo-cgc figures --fig all --profile smoke --threads auto
+//! echo-cgc figures --axis n=10,20,50 --axis f=0..4 --metric comm_savings
 //! echo-cgc figures --which all
 //! echo-cgc attack-matrix --n 25 --f 2 --rounds 300
 //! echo-cgc sweep --grid comm-savings --profile smoke --threads auto
@@ -46,8 +56,11 @@ use echo_cgc::sim::Simulation;
 fn usage() -> ! {
     eprintln!(
         "usage: echo-cgc <train|analyze|figures|bench-comm|echo-rate|attack-matrix|convergence|multihop|sweep> [--key value ...]\n\
-         common flags: --n --f --b --d --rounds --sigma --attack --aggregator --seed --threads <k|auto>\n\
-         sweep flags:  --grid attack-matrix|gv-baseline|comm-savings|convergence|quick --profile smoke|full --out <path>\n\
+         common flags:  --n --f --b --d --rounds --sigma --attack --aggregator --seed --threads <k|auto>\n\
+         sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|quick --profile smoke|full --out <path>\n\
+         figures flags: --fig 2|3|4|all --profile smoke|full --out-dir <dir> (paper figures)\n\
+                        --axis key=v1,v2|a..b [--x axis] [--series axis] [--metric name] (ad-hoc ablation)\n\
+                        --which 1a|1b|1c|1d|all (closed-form theory figures)\n\
          run `echo-cgc train --n 20 --f 2 --rounds 200` for a quick start"
     );
     std::process::exit(2);
@@ -109,6 +122,22 @@ fn main() {
         }
         sweep_out = extract_flag(&mut args, "--out");
     }
+    // Figure-layer flags (`figures --fig 2|3|4`, ad-hoc `--axis` grids).
+    let is_figures = args.iter().any(|a| a == "figures");
+    let mut fig_cli = FiguresCli::default();
+    if is_figures {
+        fig_cli.fig = extract_flag(&mut args, "--fig");
+        while let Some(spec) = extract_flag(&mut args, "--axis") {
+            fig_cli.axes.push(spec);
+        }
+        fig_cli.x = extract_flag(&mut args, "--x");
+        fig_cli.series = extract_flag(&mut args, "--series");
+        fig_cli.metric = extract_flag(&mut args, "--metric");
+        fig_cli.out_dir = extract_flag(&mut args, "--out-dir");
+        if let Some(v) = extract_flag(&mut args, "--profile") {
+            profile_name = v;
+        }
+    }
     let rest = match cfg.apply_args(&args) {
         Ok(r) => r,
         Err(e) => {
@@ -121,7 +150,9 @@ fn main() {
     match cmd {
         "train" => cmd_train(&cfg),
         "analyze" => cmd_analyze(&cfg),
-        "figures" => cmd_figures(extra.first().copied().unwrap_or(&which)),
+        "figures" => {
+            cmd_figures(&cfg, extra.first().copied().unwrap_or(&which), &profile_name, &fig_cli)
+        }
         "bench-comm" => cmd_bench_comm(&cfg),
         "echo-rate" => cmd_echo_rate(&cfg),
         "attack-matrix" => cmd_attack_matrix(&cfg),
@@ -294,7 +325,133 @@ fn cmd_analyze(cfg: &ExperimentConfig) {
     );
 }
 
-fn cmd_figures(which: &str) {
+/// Flags of the `figures` subcommand that are not config keys.
+#[derive(Default)]
+struct FiguresCli {
+    fig: Option<String>,
+    axes: Vec<String>,
+    x: Option<String>,
+    series: Option<String>,
+    metric: Option<String>,
+    out_dir: Option<String>,
+}
+
+fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &FiguresCli) {
+    use echo_cgc::figures::{self, Axis, Chart, FigId, Metric, SeriesSpec};
+    use echo_cgc::sweep::{SweepGrid, SweepProfile};
+    let profile = SweepProfile::parse(profile_name).unwrap_or_else(|| {
+        eprintln!("unknown profile '{profile_name}' (expected smoke|full)");
+        std::process::exit(2);
+    });
+    let out_dir = cli.out_dir.clone().unwrap_or_else(|| String::from("results"));
+    let threads = cfg.effective_threads();
+    // Mode 1: the paper's measured figures (`--fig 2|3|4|all`). These
+    // are fixed declarations — the ad-hoc flags would be silently
+    // ignored, so reject the combination instead.
+    if let Some(figs) = &cli.fig {
+        let adhoc_flags = !cli.axes.is_empty()
+            || cli.x.is_some()
+            || cli.series.is_some()
+            || cli.metric.is_some();
+        if adhoc_flags {
+            eprintln!(
+                "--fig renders the paper's fixed grids; --axis/--x/--series/--metric \
+                 only apply to ad-hoc ablations (omit --fig)"
+            );
+            std::process::exit(2);
+        }
+        let ids: Vec<FigId> = if figs == "all" {
+            FigId::all().to_vec()
+        } else {
+            figs.split(',')
+                .map(|v| {
+                    FigId::parse(v.trim()).unwrap_or_else(|| {
+                        eprintln!("unknown figure '{v}' (expected 2|3|4|all)");
+                        std::process::exit(2);
+                    })
+                })
+                .collect()
+        };
+        for id in ids {
+            let job = figures::paper_figure(id, profile);
+            println!(
+                "figures: {} — grid '{}', {} cells × profile {} on {} threads",
+                id.stem(),
+                job.grid.name,
+                job.grid.len(),
+                profile.name(),
+                threads
+            );
+            let chart = job.run(threads);
+            let (csv_path, svg_path) = chart.write(&out_dir, id.stem()).expect("write figure");
+            println!("wrote {} + {}", csv_path.display(), svg_path.display());
+        }
+        return;
+    }
+    // Mode 2: ad-hoc ablation from the `--axis` mini-DSL.
+    if !cli.axes.is_empty() {
+        let mut base = cfg.clone();
+        base.threads = 1; // `--threads` sets cell-level parallelism
+        let mut grid = SweepGrid::new("adhoc", base);
+        grid.profile = profile;
+        if let Err(e) = figures::apply_axis_specs(&mut grid, &cli.axes) {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+        let swept = figures::swept_axes(&grid);
+        let x = match &cli.x {
+            Some(v) => Axis::parse(v).unwrap_or_else(|| {
+                eprintln!("unknown --x axis '{v}'");
+                std::process::exit(2);
+            }),
+            None => swept.first().copied().unwrap_or(Axis::N),
+        };
+        let series = match &cli.series {
+            Some(v) => Some(Axis::parse(v).unwrap_or_else(|| {
+                eprintln!("unknown --series axis '{v}'");
+                std::process::exit(2);
+            })),
+            None => swept.iter().copied().find(|a| *a != x),
+        };
+        let metric = match &cli.metric {
+            Some(v) => Metric::parse(v).unwrap_or_else(|| {
+                eprintln!("unknown --metric '{v}'");
+                std::process::exit(2);
+            }),
+            None => Metric::CommSavings,
+        };
+        let spec = SeriesSpec { metric, x, series, pins: vec![] };
+        println!(
+            "figures: ad-hoc ablation — {} cells, {} vs {} on {} threads",
+            grid.len(),
+            metric.name(),
+            x.name(),
+            threads
+        );
+        let report = grid.run(threads);
+        report
+            .write_json(format!("{out_dir}/FIG_adhoc_report.json"))
+            .expect("write ablation report");
+        let title = format!("ablation: {} vs {}", metric.name(), x.name());
+        let mut chart = Chart::from_report(&report, &spec, &title);
+        chart.log_y = matches!(metric, Metric::FinalDistSq | Metric::FinalLoss);
+        let (csv_path, svg_path) = chart.write(&out_dir, "FIG_adhoc").expect("write figure");
+        let dropped = report.failed().len();
+        if dropped > 0 {
+            println!("note: {dropped} invalid cells dropped (see FIG_adhoc_report.json)");
+        }
+        println!(
+            "wrote {} + {} + {out_dir}/FIG_adhoc_report.json",
+            csv_path.display(),
+            svg_path.display()
+        );
+        return;
+    }
+    // Mode 3 (legacy): the closed-form theory Figures 1a–1d.
+    cmd_figures_theory(which)
+}
+
+fn cmd_figures_theory(which: &str) {
     let jobs: Vec<(&str, Vec<analysis::FigPoint>, &str)> = match which {
         "1a" => vec![("1a", analysis::figure_1a(100), "sigma")],
         "1b" => vec![("1b", analysis::figure_1b(100), "mu_over_l")],

@@ -214,6 +214,18 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// [`Summary::of`] returning `None` on an empty sample instead of
+    /// panicking. The figure layer ([`crate::figures`]) drops cells whose
+    /// metric is undefined (e.g. `final_dist_sq` on a model without a
+    /// known optimum), so a replicate group can legitimately be empty.
+    pub fn of_opt(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            None
+        } else {
+            Some(Summary::of(xs))
+        }
+    }
+
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty());
         let n = xs.len();
@@ -297,6 +309,15 @@ mod tests {
     fn csv_rejects_bad_arity() {
         let mut t = CsvTable::new(&["a", "b"]);
         t.push_row(&[1.0]);
+    }
+
+    #[test]
+    fn summary_of_opt_handles_empty() {
+        assert!(Summary::of_opt(&[]).is_none());
+        let s = Summary::of_opt(&[2.0]).unwrap();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
     }
 
     #[test]

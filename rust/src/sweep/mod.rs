@@ -31,6 +31,11 @@
 //! parallelism (`base.threads`), but the presets pin inner threads to 1:
 //! for a grid of many small simulations, one cell per core is the right
 //! decomposition.
+//!
+//! The serialized schema (field meanings, grid ordering, determinism
+//! guarantees, artifact naming) is documented in `docs/bench-schema.md`;
+//! the figure/ablation layer ([`crate::figures`]) consumes these reports
+//! to render the paper's Figures 2–4.
 
 use crate::byzantine::AttackKind;
 use crate::config::{ExperimentConfig, ModelKind};

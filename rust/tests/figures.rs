@@ -1,0 +1,169 @@
+//! The figure layer's determinism and correctness contract:
+//!
+//! * the smoke-profile Fig. 2 pipeline (grid → replicate statistics →
+//!   selection → CSV/SVG) must emit **byte-identical** artifacts at any
+//!   thread count — the golden pin behind `echo-cgc figures --fig 2
+//!   --profile smoke --threads <k>`;
+//! * replicate statistics must match a hand-computed 3-seed cell;
+//! * the CSV renderer's bytes are pinned exactly for a synthetic chart.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::figures::{
+    self, Axis, AxisValue, Chart, FigId, Metric, Point, Series, SeriesSpec,
+};
+use echo_cgc::metrics::Summary;
+use echo_cgc::sweep::{SweepGrid, SweepProfile};
+
+#[test]
+fn fig2_smoke_bytes_identical_at_any_thread_count() {
+    let chart1 = figures::paper_figure(FigId::Fig2, SweepProfile::Smoke).run(1);
+    let csv1 = chart1.csv().to_string();
+    let svg1 = chart1.svg();
+    let chart8 = figures::paper_figure(FigId::Fig2, SweepProfile::Smoke).run(8);
+    assert_eq!(csv1.as_bytes(), chart8.csv().to_string().as_bytes(), "CSV differs at t=8");
+    assert_eq!(svg1.as_bytes(), chart8.svg().as_bytes(), "SVG differs at t=8");
+    // Structural sanity on the rendered artifacts.
+    assert!(csv1.starts_with("series,x,mean,std,min,max,n_seeds\n"));
+    assert!(csv1.contains("sigma=0.05"));
+    assert!(svg1.starts_with("<svg xmlns="));
+    assert!(svg1.ends_with("</svg>\n"));
+    assert!(svg1.contains("sigma=0.1"));
+    // Two σ series × the smoke grid's two n values, replicated seeds.
+    assert_eq!(chart1.series.len(), 2);
+    for s in &chart1.series {
+        assert_eq!(s.points.len(), 2);
+        for p in &s.points {
+            assert_eq!(p.stat.n, figures::replicate_seeds(SweepProfile::Smoke).len());
+            assert!(p.stat.min <= p.stat.mean && p.stat.mean <= p.stat.max);
+        }
+    }
+}
+
+#[test]
+fn replicate_stats_match_hand_computed_three_seed_cell() {
+    // One configuration, three seeds — statistics computed by the layer
+    // must equal the hand computation over the three per-seed runs.
+    let mut base = ExperimentConfig::default();
+    base.n = 10;
+    base.f = 1;
+    base.b = 1;
+    base.d = 12;
+    base.rounds = 8;
+    let mut grid = SweepGrid::new("threeseed", base);
+    grid.seeds = vec![3, 5, 9];
+    let report = grid.run(2);
+    assert_eq!(report.cells.len(), 3);
+    let cells = figures::replicates(&report);
+    assert_eq!(cells.len(), 1);
+    assert_eq!(cells[0].seeds, vec![3, 5, 9]);
+
+    // Hand computation from the raw per-cell savings.
+    let xs: Vec<f64> = report.cells.iter().map(|c| c.comm_savings).collect();
+    let mean = (xs[0] + xs[1] + xs[2]) / 3.0;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 2.0;
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+    let stat = cells[0].stat(Metric::CommSavings).unwrap();
+    assert_eq!(stat.n, 3);
+    assert!((stat.mean - mean).abs() < 1e-15, "mean {} vs {}", stat.mean, mean);
+    assert!((stat.std - var.sqrt()).abs() < 1e-15, "std {} vs {}", stat.std, var.sqrt());
+    assert_eq!(stat.min.to_bits(), min.to_bits());
+    assert_eq!(stat.max.to_bits(), max.to_bits());
+    assert!(stat.std.is_finite() && stat.std >= 0.0);
+}
+
+#[test]
+fn csv_golden_bytes_for_synthetic_chart() {
+    fn stat(n: usize, mean: f64, std: f64, min: f64, max: f64) -> Summary {
+        Summary { n, mean, std, min, max, median: mean }
+    }
+    let chart = Chart {
+        title: "golden".to_string(),
+        x_label: "n".to_string(),
+        y_label: "savings".to_string(),
+        log_y: false,
+        series: vec![
+            Series {
+                name: "sigma=0.05".to_string(),
+                points: vec![
+                    Point { x: AxisValue::Num(20.0), stat: stat(3, 0.7, 0.1, 0.6, 0.8) },
+                    Point { x: AxisValue::Num(50.0), stat: stat(3, 0.75, 0.05, 0.7, 0.8) },
+                ],
+            },
+            Series {
+                name: "attack=sign-flip".to_string(),
+                points: vec![Point {
+                    x: AxisValue::Cat("krum".to_string()),
+                    stat: stat(1, 0.5, 0.0, 0.5, 0.5),
+                }],
+            },
+        ],
+    };
+    let expected = "series,x,mean,std,min,max,n_seeds\n\
+                    sigma=0.05,20,0.7,0.1,0.6,0.8,3\n\
+                    sigma=0.05,50,0.75,0.05,0.7,0.8,3\n\
+                    attack=sign-flip,krum,0.5,0,0.5,0.5,1\n";
+    assert_eq!(chart.csv().to_string(), expected);
+    // The SVG for the same chart is deterministic and self-contained.
+    let svg = chart.svg();
+    assert_eq!(svg, chart.svg());
+    assert!(svg.contains("attack=sign-flip"));
+}
+
+#[test]
+fn adhoc_axis_grid_runs_end_to_end() {
+    // The CLI's `--axis n=10,12 --axis f=1 --axis sigma=0.03,0.08` path:
+    // build the grid via the DSL, run it, select savings vs n by σ.
+    let mut base = ExperimentConfig::default();
+    base.d = 16;
+    base.rounds = 6;
+    let mut grid = SweepGrid::new("adhoc", base);
+    let specs: Vec<String> = vec![
+        "n=10,12".to_string(),
+        "f=1".to_string(),
+        "sigma=0.03,0.08".to_string(),
+    ];
+    figures::apply_axis_specs(&mut grid, &specs).unwrap();
+    assert_eq!(grid.nfb, vec![(10, 1, 1), (12, 1, 1)]);
+    assert_eq!(figures::swept_axes(&grid), vec![Axis::N, Axis::Sigma]);
+    let report = grid.run(4);
+    let spec = SeriesSpec {
+        metric: Metric::CommSavings,
+        x: Axis::N,
+        series: Some(Axis::Sigma),
+        pins: vec![],
+    };
+    let chart = Chart::from_report(&report, &spec, "adhoc");
+    assert_eq!(chart.series.len(), 2);
+    assert!(chart.series.iter().all(|s| s.points.len() == 2));
+    assert!(chart.svg().contains("sigma=0.03"));
+}
+
+#[test]
+fn invalid_dsl_cells_drop_out_of_the_chart() {
+    // At n=10 the tail of f=0..4 violates the Lemma-4 resilience
+    // condition nµ − (3 + k*)fL > 0 (k* ≈ 1.12 ⇒ f=3, 4 fail). Those
+    // cells become error rows in the report and must vanish from the
+    // chart instead of poisoning it.
+    let mut base = ExperimentConfig::default();
+    base.d = 12;
+    base.rounds = 4;
+    let mut grid = SweepGrid::new("adhoc", base);
+    let specs: Vec<String> = vec!["n=10".to_string(), "f=0..4".to_string()];
+    figures::apply_axis_specs(&mut grid, &specs).unwrap();
+    assert_eq!(grid.len(), 5);
+    let report = grid.run(2);
+    assert_eq!(report.failed().len(), 2, "f=3,4 violate the resilience condition at n=10");
+    let spec = SeriesSpec {
+        metric: Metric::CommSavings,
+        x: Axis::F,
+        series: None,
+        pins: vec![],
+    };
+    let chart = Chart::from_report(&report, &spec, "partial");
+    assert_eq!(chart.series.len(), 1);
+    assert_eq!(chart.series[0].points.len(), 3, "only valid f values plotted");
+}

@@ -5,14 +5,18 @@
 # Usage: verify.sh [STAGE] [--smoke-bench]
 #
 #   STAGE (optional, default `all`):
-#     build-test   — cargo build --release && cargo test  (tier-1)
-#     lint         — cargo fmt --check && cargo clippy    (hygiene)
-#     smoke-bench  — the sweep-backed benches in reduced smoke mode,
-#                    emitting results/BENCH_*.json (what CI's bench-smoke
-#                    job runs — one code path for CI and local runs)
-#     all          — build-test + lint
+#     build-test    — cargo build --release && cargo test  (tier-1)
+#     lint          — cargo fmt --check, cargo clippy, cargo doc -D warnings
+#     smoke-bench   — the sweep-backed benches in reduced smoke mode,
+#                     emitting results/BENCH_*.json + results/FIG_*.{svg,csv}
+#                     (what CI's bench-smoke job runs — one code path for
+#                     CI and local runs)
+#     figures-smoke — the paper's Figures 2–4 from `echo-cgc figures`,
+#                     smoke profile (also run by CI's bench-smoke job;
+#                     artifacts land in results/FIG_*.{svg,csv})
+#     all           — build-test + lint
 #
-#   --smoke-bench  — append the smoke-bench stage to `all`.
+#   --smoke-bench  — append the smoke-bench + figures-smoke stages to `all`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,7 +24,7 @@ STAGE=""
 SMOKE=0
 for arg in "$@"; do
   case "$arg" in
-    build-test|lint|smoke-bench|all)
+    build-test|lint|smoke-bench|figures-smoke|all)
       if [ -n "$STAGE" ]; then
         echo "verify.sh: multiple stages given ('$STAGE' and '$arg') — pass one" >&2
         exit 2
@@ -47,6 +51,9 @@ run_lint() {
 
   echo "== hygiene: cargo clippy -- -D warnings =="
   cargo clippy --all-targets -- -D warnings
+
+  echo "== hygiene: cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 }
 
 run_smoke_bench() {
@@ -57,18 +64,27 @@ run_smoke_bench() {
     cargo bench --bench "$bench" -- --profile smoke
   done
   echo "-- bench artifacts:"
-  ls -l results/BENCH_*.json
+  ls -l results/BENCH_*.json results/FIG_*.svg results/FIG_*.csv
+}
+
+run_figures_smoke() {
+  echo "== figures-smoke: paper Figures 2-4, smoke profile =="
+  cargo run --release --bin echo-cgc -- figures --fig all --profile smoke --threads auto
+  echo "-- figure artifacts:"
+  ls -l results/FIG_*.svg results/FIG_*.csv
 }
 
 case "$STAGE" in
   build-test) run_build_test ;;
   lint) run_lint ;;
   smoke-bench) run_smoke_bench ;;
+  figures-smoke) run_figures_smoke ;;
   all)
     run_build_test
     run_lint
     if [ "$SMOKE" = "1" ]; then
       run_smoke_bench
+      run_figures_smoke
     fi
     ;;
 esac
