@@ -13,6 +13,7 @@
 
 use echo_cgc::bench_utils::Bencher;
 use echo_cgc::config::ExperimentConfig;
+use echo_cgc::figures::curves::{curves, CurveSpec, TraceMetric};
 use echo_cgc::figures::{Axis, AxisValue, Chart, Metric, SeriesSpec};
 use echo_cgc::metrics::CsvTable;
 use echo_cgc::sim::Simulation;
@@ -80,6 +81,21 @@ fn main() {
         Chart::from_report(&report, &spec, "empirical contraction rho vs n (sigma=0.02)");
     let (csv_path, svg_path) = chart.write("results", "FIG_convergence").unwrap();
     println!("wrote {} + {}", csv_path.display(), svg_path.display());
+
+    // True convergence curves from the same traced report (the preset's
+    // bounded per-cell trace): error vs round, one panel per n, one
+    // series per attack, σ pinned low, the ρ fit overlaid on its window.
+    let curve_spec = CurveSpec {
+        metric: TraceMetric::DistSq,
+        series: Some(Axis::Attack),
+        facet: Some(Axis::N),
+        pins: vec![(Axis::Sigma, AxisValue::Num(0.02))],
+        fit: true,
+    };
+    let fig = curves(&report, &curve_spec, "convergence curves (sigma=0.02)");
+    assert!(!fig.panels.is_empty(), "traced grid must yield curve panels");
+    let (ccsv, csvg) = fig.write("results", "FIG_convergence_curves").unwrap();
+    println!("wrote {} + {}", ccsv.display(), csvg.display());
 
     // Wall-clock: full 100-round training runs (one scale in smoke mode).
     let scales: &[(usize, usize)] = match profile {

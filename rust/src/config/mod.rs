@@ -4,6 +4,7 @@
 
 use crate::byzantine::AttackKind;
 use crate::coordinator::Aggregator;
+use crate::trace::TracePolicy;
 use crate::wire::{Encoding, IdCodec, Precision};
 
 /// Which cost model the workers train.
@@ -141,6 +142,13 @@ pub struct ExperimentConfig {
     /// at any setting (per-worker RNG streams are pre-split), so this is a
     /// pure throughput knob.
     pub threads: usize,
+    /// Per-round retention policy of the trace pipeline
+    /// ([`crate::trace`]): `Full` keeps every round (the default —
+    /// `train` CSVs and tests read the trajectory back), `Summary` keeps
+    /// scalars only (what most sweep presets use), `EveryK` keeps a
+    /// bounded decimation (what traced sweeps serialize). Scalar
+    /// outcomes are identical under every policy.
+    pub trace: TracePolicy,
 }
 
 impl Default for ExperimentConfig {
@@ -174,6 +182,7 @@ impl Default for ExperimentConfig {
             echo_enabled: true,
             topk: None,
             threads: 1,
+            trace: TracePolicy::Full,
         }
     }
 }
@@ -330,6 +339,11 @@ impl ExperimentConfig {
             "threads" | "j" => {
                 self.threads = if value == "auto" { 0 } else { parse_usize(value)? }
             }
+            "trace" => {
+                self.trace = TracePolicy::parse(value).ok_or_else(|| {
+                    format!("trace: expected summary|full|every_k=K,max=M, got '{value}'")
+                })?
+            }
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -475,6 +489,24 @@ mod tests {
         cfg.set("j", "2").unwrap();
         assert_eq!(cfg.threads, 2);
         assert!(cfg.set("threads", "bogus").is_err());
+    }
+
+    #[test]
+    fn trace_policy_parses_through_the_config_surface() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.trace, TracePolicy::Full);
+        cfg.set("trace", "summary").unwrap();
+        assert_eq!(cfg.trace, TracePolicy::Summary);
+        cfg.set("trace", "every_k=4,max=64").unwrap();
+        assert_eq!(cfg.trace, TracePolicy::EveryK { every_k: 4, max_points: 64 });
+        assert_eq!(cfg.trace.label(), "every_k=4,max=64");
+        assert!(cfg.set("trace", "bogus").is_err());
+        // And through the CLI argument surface.
+        let mut cfg = ExperimentConfig::default();
+        let args: Vec<String> =
+            ["--trace", "every_k=2,max=8"].iter().map(|s| s.to_string()).collect();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.trace, TracePolicy::EveryK { every_k: 2, max_points: 8 });
     }
 
     #[test]

@@ -92,6 +92,9 @@ pub struct ParameterServer {
     /// sharply over time (diagnostic only — the algorithm's guarantees do
     /// not depend on it).
     clip_counts: Vec<u64>,
+    /// Gradients clipped in the most recent aggregation round (the
+    /// per-round filter-decision count the trace pipeline records).
+    last_clipped: usize,
     rounds_aggregated: u64,
     /// Worker threads for the aggregation phase (norm pass + CGC sum).
     /// `1` = serial; results are bit-identical at any setting.
@@ -110,6 +113,7 @@ impl ParameterServer {
             outcomes: vec![None; n],
             exposed: BTreeSet::new(),
             clip_counts: vec![0; n],
+            last_clipped: 0,
             rounds_aggregated: 0,
             threads: 1,
         }
@@ -291,14 +295,22 @@ impl ParameterServer {
                 let grads = self.gradients();
                 cgc_sum_fused_refs(&grads, self.f, self.d, self.threads)
             };
+            self.last_clipped = clipped.len();
             for j in clipped {
                 self.clip_counts[j] += 1;
             }
             out
         } else {
+            self.last_clipped = 0;
             let grads = self.gradients();
             aggregate(self.agg, &grads, self.f)
         }
+    }
+
+    /// Gradients clipped by the CGC filter in the most recent
+    /// [`Self::aggregate_tracked`] round (0 under non-CGC rules).
+    pub fn clipped_last_round(&self) -> usize {
+        self.last_clipped
     }
 
     /// Suspicion score per worker: fraction of aggregated rounds in which

@@ -1,0 +1,688 @@
+//! True convergence curves from traced sweeps: error (or loss) vs round,
+//! rendered as a faceted multi-panel SVG plus a flat CSV.
+//!
+//! The per-cell scalar figures ([`super::Chart`]) answer "where did each
+//! configuration end up"; this module answers the question Byzantine-ML
+//! papers are judged on — *how* the error evolved. [`curves`] slices a
+//! [`SweepReport`] whose cells carry trace trajectories (see
+//! [`crate::trace::TracePolicy`]):
+//!
+//! * replicate seeds of one configuration are averaged per retained round
+//!   (decimation is a pure function of policy and round index, so the
+//!   retained rounds align across seeds);
+//! * an optional series axis splits trajectories within a panel, an
+//!   optional facet axis makes one panel per axis value, and pins filter
+//!   the rest — the same [`Axis`] vocabulary as the scalar figures;
+//! * for distance curves, the [`RhoFit`] contraction estimate is re-fit
+//!   on the averaged trajectory and overlaid as a dashed `d0·ρ̂^t` line on
+//!   exactly its fit window, labeled with ρ̂.
+//!
+//! Everything is a pure function of the report: byte-identical CSV/SVG at
+//! any thread count (pinned by `rust/tests/trace.rs`).
+
+use super::svg::{esc, log_ticks, nice_ticks, px, tick_label, DomainPool, PALETTE};
+use super::{replicate_seeds, replicates, Axis, AxisValue, DIVERGED, ReplicateCell};
+use crate::metrics::CsvTable;
+use crate::sweep::{presets, SweepGrid, SweepProfile, SweepReport};
+use crate::trace::{RhoFit, RoundEvent};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Which per-round trace column to plot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceMetric {
+    DistSq,
+    Loss,
+}
+
+impl TraceMetric {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceMetric::DistSq => "dist_sq",
+            TraceMetric::Loss => "loss",
+        }
+    }
+
+    pub fn axis_label(self) -> &'static str {
+        match self {
+            TraceMetric::DistSq => "‖w − w*‖²",
+            TraceMetric::Loss => "loss Q(w)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceMetric> {
+        Some(match s {
+            "dist_sq" | "dist" => TraceMetric::DistSq,
+            "loss" => TraceMetric::Loss,
+            _ => return None,
+        })
+    }
+
+    /// Extract the metric from one event. Undefined values drop; infinite
+    /// ones clamp to the shared [`DIVERGED`] sentinel so a blown-up
+    /// aggregator stays visible at the top of the chart.
+    fn value(self, ev: &RoundEvent) -> Option<f64> {
+        let v = match self {
+            TraceMetric::DistSq => ev.dist_sq?,
+            TraceMetric::Loss => ev.loss,
+        };
+        if v.is_nan() {
+            None
+        } else if v.is_infinite() {
+            Some(DIVERGED)
+        } else {
+            Some(v)
+        }
+    }
+}
+
+/// What to plot: a trace metric against the round axis, split into one
+/// series per value of `series`, one panel per value of `facet`, with the
+/// remaining axes pinned.
+#[derive(Clone, Debug)]
+pub struct CurveSpec {
+    pub metric: TraceMetric,
+    /// `None` ⇒ a single series named after the metric.
+    pub series: Option<Axis>,
+    /// `None` ⇒ a single panel.
+    pub facet: Option<Axis>,
+    /// Keep only replicate cells matching every pinned coordinate.
+    pub pins: Vec<(Axis, AxisValue)>,
+    /// Overlay the contraction fit on distance curves.
+    pub fit: bool,
+}
+
+/// One plotted trajectory point: the replicate mean at one retained round.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub round: usize,
+    pub value: f64,
+    /// Replicates defining the mean at this round.
+    pub n_seeds: usize,
+}
+
+/// One trajectory: a legend name, its points in round order, and the
+/// optional contraction-fit overlay `(r0, d0, r1, ρ̂)` on its window.
+#[derive(Clone, Debug)]
+pub struct CurveSeries {
+    pub name: String,
+    pub points: Vec<CurvePoint>,
+    pub fit: Option<(usize, f64, usize, f64)>,
+}
+
+/// One facet panel: a title (the facet coordinate) and its series.
+#[derive(Clone, Debug)]
+pub struct CurvePanel {
+    pub title: String,
+    pub series: Vec<CurveSeries>,
+}
+
+/// A renderable faceted figure. [`CurvesFigure::csv`] and
+/// [`CurvesFigure::svg`] are pure functions of the fields.
+#[derive(Clone, Debug)]
+pub struct CurvesFigure {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    /// Log₁₀ y scale (distance curves span many decades).
+    pub log_y: bool,
+    pub panels: Vec<CurvePanel>,
+}
+
+/// Average a replicate group's trajectories per retained round. Rounds
+/// come out ascending (BTreeMap); seeds whose trace lacks a round (or
+/// whose value is undefined there) simply do not contribute to that
+/// round's mean. Divergence is absorbing: if any seed is at the
+/// [`DIVERGED`] sentinel, the round reads as `DIVERGED` — never as a
+/// half-diverged average the sentinel-aware renderer and fit would
+/// mistake for real data.
+fn mean_trace(rc: &ReplicateCell, metric: TraceMetric) -> Vec<CurvePoint> {
+    // Per round: (sum of real values, real count, diverged count).
+    let mut acc: BTreeMap<usize, (f64, usize, usize)> = BTreeMap::new();
+    for cell in rc.samples() {
+        for ev in &cell.trace {
+            if let Some(v) = metric.value(ev) {
+                let e = acc.entry(ev.round).or_insert((0.0, 0, 0));
+                if v >= DIVERGED {
+                    e.2 += 1;
+                } else {
+                    e.0 += v;
+                    e.1 += 1;
+                }
+            }
+        }
+    }
+    acc.into_iter()
+        .map(|(round, (sum, n, n_div))| {
+            let (value, n_seeds) =
+                if n_div > 0 { (DIVERGED, n + n_div) } else { (sum / n as f64, n) };
+            CurvePoint { round, value, n_seeds }
+        })
+        .collect()
+}
+
+/// Re-fit the contraction estimate on an averaged trajectory (diverged
+/// sentinel values are excluded — they are not distances).
+fn fit_overlay(points: &[CurvePoint]) -> Option<(usize, f64, usize, f64)> {
+    let mut fit = RhoFit::default();
+    for p in points {
+        let v = if p.value >= DIVERGED { None } else { Some(p.value) };
+        fit.observe(p.round, v);
+    }
+    let rho = fit.rho()?;
+    let (r0, d0, r1) = fit.window()?;
+    Some((r0, d0, r1, rho))
+}
+
+/// Build the faceted curves figure from a traced report. Cells without a
+/// trace (summary policy, error cells) drop out; panels and series appear
+/// in first-occurrence (= grid) order. If the grid varies an axis the
+/// spec neither facets, splits on, nor pins, the first replicate group
+/// wins its (panel, series) slot — pin the extra axis to select a
+/// different slice (the same rule as [`super::select`]).
+pub fn curves(report: &SweepReport, spec: &CurveSpec, title: &str) -> CurvesFigure {
+    let cells = replicates(report);
+    let mut panels: Vec<CurvePanel> = Vec::new();
+    for rc in &cells {
+        if !spec.pins.iter().all(|(a, v)| a.value(rc) == *v) {
+            continue;
+        }
+        let points = mean_trace(rc, spec.metric);
+        if points.is_empty() {
+            continue;
+        }
+        let panel_title = match spec.facet {
+            Some(a) => format!("{}={}", a.name(), a.value(rc).label()),
+            None => spec.metric.name().to_string(),
+        };
+        let name = match spec.series {
+            Some(a) => format!("{}={}", a.name(), a.value(rc).label()),
+            None => spec.metric.name().to_string(),
+        };
+        let fit = if spec.fit && spec.metric == TraceMetric::DistSq {
+            fit_overlay(&points)
+        } else {
+            None
+        };
+        let pi = match panels.iter().position(|p| p.title == panel_title) {
+            Some(i) => i,
+            None => {
+                panels.push(CurvePanel { title: panel_title, series: Vec::new() });
+                panels.len() - 1
+            }
+        };
+        let panel = &mut panels[pi];
+        if !panel.series.iter().any(|s| s.name == name) {
+            panel.series.push(CurveSeries { name, points, fit });
+        }
+    }
+    CurvesFigure {
+        title: title.to_string(),
+        x_label: "round".to_string(),
+        y_label: spec.metric.axis_label().to_string(),
+        log_y: spec.metric == TraceMetric::DistSq,
+        panels,
+    }
+}
+
+impl CurvesFigure {
+    /// Flat CSV: one row per (panel, series, round).
+    pub fn csv(&self) -> CsvTable {
+        let mut t = CsvTable::new(&["panel", "series", "round", "value", "n_seeds"]);
+        for p in &self.panels {
+            for s in &p.series {
+                for pt in &s.points {
+                    t.push_row_mixed(vec![
+                        p.title.clone(),
+                        s.name.clone(),
+                        format!("{}", pt.round),
+                        format!("{}", pt.value),
+                        format!("{}", pt.n_seeds),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+
+    /// Self-contained faceted SVG (see [`render`]).
+    pub fn svg(&self) -> String {
+        render(self)
+    }
+
+    /// Write `<dir>/<stem>.csv` + `<dir>/<stem>.svg`, returning the paths.
+    pub fn write<P: AsRef<Path>>(&self, dir: P, stem: &str) -> io::Result<(PathBuf, PathBuf)> {
+        let dir = dir.as_ref();
+        fs::create_dir_all(dir)?;
+        let csv_path = dir.join(format!("{stem}.csv"));
+        let svg_path = dir.join(format!("{stem}.svg"));
+        self.csv().write_file(&csv_path)?;
+        fs::write(&svg_path, self.svg())?;
+        Ok((csv_path, svg_path))
+    }
+}
+
+/// A declared curves figure: the traced grid to run and how to plot it.
+#[derive(Clone, Debug)]
+pub struct CurvesJob {
+    pub grid: SweepGrid,
+    pub spec: CurveSpec,
+    pub title: String,
+}
+
+impl CurvesJob {
+    /// Execute the grid across `threads` cells at a time and render —
+    /// byte-identical output at any `threads` value.
+    pub fn run(&self, threads: usize) -> CurvesFigure {
+        let report = self.grid.run(threads);
+        curves(&report, &self.spec, &self.title)
+    }
+}
+
+/// The flagship traced figure (`echo-cgc figures --fig curves`):
+/// error-vs-round curves from the convergence preset's bounded-trace
+/// grid — one panel per network size n, one series per attack, replicate
+/// seeds averaged, σ pinned to the low-noise slice, contraction fit
+/// overlaid.
+pub fn paper_curves(profile: SweepProfile) -> CurvesJob {
+    let mut grid = presets::convergence(profile);
+    grid.name = "curves".to_string();
+    grid.seeds = replicate_seeds(profile);
+    CurvesJob {
+        grid,
+        spec: CurveSpec {
+            metric: TraceMetric::DistSq,
+            series: Some(Axis::Attack),
+            facet: Some(Axis::N),
+            pins: vec![(Axis::Sigma, AxisValue::Num(0.02))],
+            fit: true,
+        },
+        title: "Convergence curves — ‖w − w*‖² vs round (σ = 0.02)".to_string(),
+    }
+}
+
+// ---- faceted SVG rendering ----------------------------------------------
+
+const PANEL_W: f64 = 300.0;
+const PANEL_H: f64 = 170.0;
+const P_ML: f64 = 64.0;
+const P_MR: f64 = 14.0;
+const P_MT: f64 = 24.0;
+const P_MB: f64 = 34.0;
+const GAP: f64 = 12.0;
+const TITLE_H: f64 = 34.0;
+const LEGEND_H: f64 = 22.0;
+const FOOT_H: f64 = 26.0;
+
+/// Series legend order: first occurrence across panels — also the color
+/// assignment, so one series keeps one color in every panel.
+fn series_names(fig: &CurvesFigure) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for p in &fig.panels {
+        for s in &p.series {
+            if !names.contains(&s.name) {
+                names.push(s.name.clone());
+            }
+        }
+    }
+    names
+}
+
+/// Render the faceted figure as one self-contained `<svg>` document: a
+/// shared title and legend, then one panel per facet value on a grid of
+/// up to 3 columns. Panels share x and y domains so facets compare
+/// directly. Deterministic bytes (fixed geometry, palette, `{:.2}` pixel
+/// formatting).
+pub fn render(fig: &CurvesFigure) -> String {
+    let cell_w = P_ML + PANEL_W + P_MR;
+    let cell_h = P_MT + PANEL_H + P_MB;
+    let n_panels = fig.panels.len();
+    let cols = n_panels.clamp(1, 3);
+    let rows = if n_panels == 0 { 1 } else { (n_panels + cols - 1) / cols };
+    let w = GAP + cols as f64 * (cell_w + GAP);
+    let h = TITLE_H + LEGEND_H + rows as f64 * (cell_h + GAP) + FOOT_H;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{}\" height=\"{}\" \
+         viewBox=\"0 0 {} {}\" font-family=\"Helvetica, Arial, sans-serif\">",
+        px(w),
+        px(h),
+        px(w),
+        px(h)
+    );
+    let _ = writeln!(s, "<rect width=\"{}\" height=\"{}\" fill=\"#ffffff\"/>", px(w), px(h));
+    let _ = writeln!(
+        s,
+        "<text x=\"{}\" y=\"22\" text-anchor=\"middle\" font-size=\"14\" \
+         font-weight=\"600\" fill=\"#222222\">{}</text>",
+        px(w / 2.0),
+        esc(&fig.title)
+    );
+
+    // --- shared domains across panels --------------------------------
+    let log = fig.log_y;
+    let mut xmin = f64::INFINITY;
+    let mut xmax = f64::NEG_INFINITY;
+    let mut pool = DomainPool::default();
+    for panel in &fig.panels {
+        for sr in &panel.series {
+            for p in &sr.points {
+                xmin = xmin.min(p.round as f64);
+                xmax = xmax.max(p.round as f64);
+                pool.push(p.value, log);
+            }
+        }
+    }
+    let tvals = pool.finish();
+    if tvals.is_empty() || !xmin.is_finite() {
+        let _ = writeln!(
+            s,
+            "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" font-size=\"13\" \
+             fill=\"#666666\">no plottable data</text>\n</svg>",
+            px(w / 2.0),
+            px(h / 2.0)
+        );
+        return s;
+    }
+    if xmax - xmin <= 0.0 {
+        xmin -= 1.0;
+        xmax += 1.0;
+    }
+    let mut ymin = tvals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut ymax = tvals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if ymax - ymin <= 0.0 {
+        ymin -= 1.0;
+        ymax += 1.0;
+    } else {
+        let pad = 0.05 * (ymax - ymin);
+        ymin -= pad;
+        ymax += pad;
+    }
+
+    // --- legend ------------------------------------------------------
+    let names = series_names(fig);
+    for (i, name) in names.iter().enumerate() {
+        let x = GAP + 10.0 + 160.0 * i as f64;
+        let y = TITLE_H + LEGEND_H / 2.0;
+        let color = PALETTE[i % PALETTE.len()];
+        let _ = writeln!(
+            s,
+            "<line x1=\"{}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"{color}\" \
+             stroke-width=\"2\"/>",
+            px(x),
+            px(y),
+            px(x + 20.0),
+            px(y)
+        );
+        let _ = writeln!(
+            s,
+            "<text x=\"{}\" y=\"{}\" font-size=\"11\" fill=\"#333333\">{}</text>",
+            px(x + 26.0),
+            px(y + 4.0),
+            esc(name)
+        );
+    }
+
+    // --- panels ------------------------------------------------------
+    let yticks: Vec<(f64, String)> = if log {
+        log_ticks(ymin, ymax, 6)
+    } else {
+        nice_ticks(ymin, ymax, 4).into_iter().map(|t| (t, tick_label(t))).collect()
+    };
+    for (pi, panel) in fig.panels.iter().enumerate() {
+        let col = (pi % cols) as f64;
+        let row = (pi / cols) as f64;
+        let x0 = GAP + col * (cell_w + GAP) + P_ML;
+        let y0 = TITLE_H + LEGEND_H + row * (cell_h + GAP) + P_MT;
+        let sx = |v: f64| x0 + (v - xmin) / (xmax - xmin) * PANEL_W;
+        let sy = |t: f64| y0 + PANEL_H - (t - ymin) / (ymax - ymin) * PANEL_H;
+        let _ = writeln!(
+            s,
+            "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" font-size=\"12\" \
+             font-weight=\"600\" fill=\"#333333\">{}</text>",
+            px(x0 + PANEL_W / 2.0),
+            px(y0 - 8.0),
+            esc(&panel.title)
+        );
+        for (t, label) in &yticks {
+            let y = sy(*t);
+            let _ = writeln!(
+                s,
+                "<line x1=\"{}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"#e5e5e5\"/>",
+                px(x0),
+                px(y),
+                px(x0 + PANEL_W),
+                px(y)
+            );
+            let _ = writeln!(
+                s,
+                "<text x=\"{}\" y=\"{}\" text-anchor=\"end\" font-size=\"10\" \
+                 fill=\"#444444\">{}</text>",
+                px(x0 - 6.0),
+                px(y + 3.5),
+                esc(label)
+            );
+        }
+        for t in nice_ticks(xmin, xmax, 4) {
+            let x = sx(t);
+            let _ = writeln!(
+                s,
+                "<line x1=\"{}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"#999999\"/>",
+                px(x),
+                px(y0 + PANEL_H),
+                px(x),
+                px(y0 + PANEL_H + 4.0)
+            );
+            let _ = writeln!(
+                s,
+                "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" font-size=\"10\" \
+                 fill=\"#444444\">{}</text>",
+                px(x),
+                px(y0 + PANEL_H + 16.0),
+                esc(&tick_label(t))
+            );
+        }
+        let _ = writeln!(
+            s,
+            "<rect x=\"{}\" y=\"{}\" width=\"{}\" height=\"{}\" fill=\"none\" \
+             stroke=\"#999999\"/>",
+            px(x0),
+            px(y0),
+            px(PANEL_W),
+            px(PANEL_H)
+        );
+        for sr in &panel.series {
+            let ci = names.iter().position(|n| n == &sr.name).unwrap_or(0);
+            let color = PALETTE[ci % PALETTE.len()];
+            let mut pts: Vec<(f64, f64)> = Vec::new();
+            for p in &sr.points {
+                let v = p.value;
+                if !v.is_finite() || (log && v <= 0.0) {
+                    continue;
+                }
+                let t = (if log { v.log10() } else { v }).clamp(ymin, ymax);
+                pts.push((sx(p.round as f64), sy(t)));
+            }
+            if pts.len() >= 2 {
+                let mut line = String::new();
+                for (x, y) in &pts {
+                    let _ = write!(line, "{},{} ", px(*x), px(*y));
+                }
+                let _ = writeln!(
+                    s,
+                    "<polyline points=\"{}\" fill=\"none\" stroke=\"{color}\" \
+                     stroke-width=\"1.6\"/>",
+                    line.trim_end()
+                );
+            } else if pts.len() == 1 {
+                let _ = writeln!(
+                    s,
+                    "<circle cx=\"{}\" cy=\"{}\" r=\"2.5\" fill=\"{color}\"/>",
+                    px(pts[0].0),
+                    px(pts[0].1)
+                );
+            }
+            if let Some((r0, d0, r1, rho)) = sr.fit {
+                let end = d0 * rho.powf((r1 - r0) as f64);
+                let drawable =
+                    d0.is_finite() && end.is_finite() && (!log || (d0 > 0.0 && end > 0.0));
+                if drawable {
+                    let t0 = (if log { d0.log10() } else { d0 }).clamp(ymin, ymax);
+                    let t1 = (if log { end.log10() } else { end }).clamp(ymin, ymax);
+                    let _ = writeln!(
+                        s,
+                        "<line x1=\"{}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"{color}\" \
+                         stroke-width=\"1.2\" stroke-dasharray=\"5 4\" opacity=\"0.85\"/>",
+                        px(sx(r0 as f64)),
+                        px(sy(t0)),
+                        px(sx(r1 as f64)),
+                        px(sy(t1))
+                    );
+                    let _ = writeln!(
+                        s,
+                        "<text x=\"{}\" y=\"{}\" font-size=\"9\" fill=\"{color}\">\
+                         ρ̂={rho:.3}</text>",
+                        px(sx(r0 as f64) + 4.0),
+                        px(sy(t0) - 4.0)
+                    );
+                }
+            }
+        }
+    }
+
+    // --- shared axis labels ------------------------------------------
+    let _ = writeln!(
+        s,
+        "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" font-size=\"12\" \
+         fill=\"#333333\">{}</text>",
+        px(w / 2.0),
+        px(h - 8.0),
+        esc(&fig.x_label)
+    );
+    let y_label = if log {
+        format!("{} (log scale)", fig.y_label)
+    } else {
+        fig.y_label.clone()
+    };
+    let _ = writeln!(
+        s,
+        "<text transform=\"translate(14,{}) rotate(-90)\" text-anchor=\"middle\" \
+         font-size=\"12\" fill=\"#333333\">{}</text>",
+        px(TITLE_H + LEGEND_H + (h - TITLE_H - LEGEND_H - FOOT_H) / 2.0),
+        esc(&y_label)
+    );
+    s.push_str("</svg>\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(round: usize, value: f64) -> CurvePoint {
+        CurvePoint { round, value, n_seeds: 2 }
+    }
+
+    fn demo_fig() -> CurvesFigure {
+        CurvesFigure {
+            title: "demo".to_string(),
+            x_label: "round".to_string(),
+            y_label: "‖w − w*‖²".to_string(),
+            log_y: true,
+            panels: vec![
+                CurvePanel {
+                    title: "n=12".to_string(),
+                    series: vec![CurveSeries {
+                        name: "attack=omniscient".to_string(),
+                        points: vec![pt(0, 4.0), pt(5, 0.4), pt(10, 0.04)],
+                        fit: Some((0, 4.0, 10, 0.63)),
+                    }],
+                },
+                CurvePanel {
+                    title: "n=24".to_string(),
+                    series: vec![CurveSeries {
+                        name: "attack=sign-flip".to_string(),
+                        points: vec![pt(0, 2.0), pt(10, 0.02)],
+                        fit: None,
+                    }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn renders_one_panel_per_facet_with_shared_legend() {
+        let svg = render(&demo_fig());
+        assert!(svg.starts_with("<svg xmlns="));
+        assert!(svg.ends_with("</svg>\n"));
+        assert!(svg.contains(">n=12</text>"));
+        assert!(svg.contains(">n=24</text>"));
+        assert!(svg.contains("attack=omniscient"));
+        assert!(svg.contains("attack=sign-flip"));
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        // Exactly one fit overlay: dashed line + ρ̂ label.
+        assert_eq!(svg.matches("stroke-dasharray").count(), 1);
+        assert!(svg.contains("ρ̂=0.630"));
+        assert!(svg.contains("(log scale)"));
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        let a = render(&demo_fig());
+        let b = render(&demo_fig());
+        assert_eq!(a.as_bytes(), b.as_bytes());
+    }
+
+    #[test]
+    fn empty_figure_says_no_data() {
+        let fig = CurvesFigure {
+            title: "empty".to_string(),
+            x_label: "round".to_string(),
+            y_label: "y".to_string(),
+            log_y: false,
+            panels: vec![],
+        };
+        let svg = render(&fig);
+        assert!(svg.contains("no plottable data"));
+        assert!(svg.ends_with("</svg>\n"));
+    }
+
+    #[test]
+    fn csv_is_flat_and_ordered() {
+        let t = demo_fig().csv();
+        let expected = "panel,series,round,value,n_seeds\n\
+                        n=12,attack=omniscient,0,4,2\n\
+                        n=12,attack=omniscient,5,0.4,2\n\
+                        n=12,attack=omniscient,10,0.04,2\n\
+                        n=24,attack=sign-flip,0,2,2\n\
+                        n=24,attack=sign-flip,10,0.02,2\n";
+        assert_eq!(t.to_string(), expected);
+    }
+
+    #[test]
+    fn paper_curves_declares_a_traced_replicated_grid() {
+        use crate::trace::TracePolicy;
+        for profile in [SweepProfile::Smoke, SweepProfile::Full] {
+            let job = paper_curves(profile);
+            assert!(job.grid.seeds.len() >= 2, "needs replicate seeds");
+            assert!(
+                matches!(job.grid.base.trace, TracePolicy::EveryK { .. }),
+                "curves need a traced grid"
+            );
+            assert_eq!(job.spec.metric, TraceMetric::DistSq);
+            assert!(job.spec.fit);
+        }
+    }
+
+    #[test]
+    fn trace_metric_names_roundtrip() {
+        for m in [TraceMetric::DistSq, TraceMetric::Loss] {
+            assert_eq!(TraceMetric::parse(m.name()), Some(m));
+        }
+        assert_eq!(TraceMetric::parse("bogus"), None);
+    }
+}

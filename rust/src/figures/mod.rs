@@ -38,9 +38,16 @@
 //!   the Byzantine count tracks the fault tolerance (`b = f`, the
 //!   worst-case adversary the paper plots).
 //!
+//! Beyond the per-cell scalar figures, [`curves`] renders *true
+//! convergence curves* from traced sweeps (error vs round, one faceted
+//! panel per pinned axis value, the contraction fit overlaid on its
+//! window), and [`write_html_index`] emits an `index.html` gallery
+//! linking every FIG/BENCH artifact of a run.
+//!
 //! The `BENCH_*.json` / `SweepReport` schema these figures consume is
 //! documented in `docs/bench-schema.md`.
 
+pub mod curves;
 pub mod svg;
 
 use crate::byzantine::AttackKind;
@@ -48,6 +55,7 @@ use crate::config::{ExperimentConfig, ModelKind};
 use crate::coordinator::Aggregator;
 use crate::metrics::{CsvTable, Summary};
 use crate::sweep::{presets, SweepCell, SweepGrid, SweepProfile, SweepReport};
+use std::fmt::Write as _;
 use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
@@ -278,15 +286,31 @@ impl ReplicateCell {
         self.samples.len()
     }
 
+    /// The executed replicate cells (one per seed, grid order) — what the
+    /// curves layer averages trajectories over.
+    pub fn samples(&self) -> &[SweepCell] {
+        &self.samples
+    }
+
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
     /// Replicate statistics for one metric, across the seeds that define
-    /// it. `None` when no replicate defines the metric.
+    /// it. `None` when no replicate defines the metric. Divergence is
+    /// absorbing: a group with any replicate at the [`DIVERGED`] sentinel
+    /// reads as diverged (mean/max pinned to the sentinel, zero spread) —
+    /// never as a half-diverged average the sentinel-aware renderer would
+    /// mistake for real data. `min` keeps the best replicate's value.
     pub fn stat(&self, metric: Metric) -> Option<Summary> {
         let xs: Vec<f64> = self.samples.iter().filter_map(|c| metric.extract(c)).collect();
-        Summary::of_opt(&xs)
+        let mut s = Summary::of_opt(&xs)?;
+        if xs.iter().any(|&x| x >= DIVERGED) {
+            s.mean = DIVERGED;
+            s.max = DIVERGED;
+            s.std = 0.0;
+        }
+        Some(s)
     }
 }
 
@@ -722,6 +746,72 @@ pub fn apply_axis_specs(grid: &mut SweepGrid, specs: &[String]) -> Result<(), St
     Ok(())
 }
 
+/// Write `<dir>/index.html` — a gallery linking every figure and bench
+/// artifact in `dir`: `FIG_*.svg` embedded as images (with their `.csv`
+/// siblings linked), `BENCH_*.json` / `sweep_*.json` reports as a list.
+/// Names are sorted, so the page is deterministic given the directory
+/// contents. CI's `bench-smoke` job uploads it with the artifacts.
+pub fn write_html_index<P: AsRef<Path>>(dir: P) -> io::Result<PathBuf> {
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir)?;
+    let mut svgs: Vec<String> = Vec::new();
+    let mut csvs: Vec<String> = Vec::new();
+    let mut jsons: Vec<String> = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        if name.starts_with("FIG_") && name.ends_with(".svg") {
+            svgs.push(name);
+        } else if name.starts_with("FIG_") && name.ends_with(".csv") {
+            csvs.push(name);
+        } else if name.ends_with(".json")
+            && (name.starts_with("BENCH_") || name.starts_with("sweep_"))
+        {
+            jsons.push(name);
+        }
+    }
+    svgs.sort();
+    csvs.sort();
+    jsons.sort();
+    let mut html = String::new();
+    html.push_str("<!DOCTYPE html>\n<html><head><meta charset=\"utf-8\"/>\n");
+    html.push_str("<title>echo-cgc run artifacts</title>\n<style>\n");
+    html.push_str("body { font-family: Helvetica, Arial, sans-serif; margin: 24px; }\n");
+    html.push_str("figure { display: inline-block; margin: 10px; padding: 8px; ");
+    html.push_str("border: 1px solid #dddddd; }\n");
+    html.push_str("figcaption { font-size: 13px; margin-top: 6px; }\n");
+    html.push_str("</style></head><body>\n<h1>echo-cgc run artifacts</h1>\n");
+    if !svgs.is_empty() {
+        html.push_str("<h2>Figures</h2>\n");
+        for name in &svgs {
+            let stem = name.trim_end_matches(".svg");
+            let csv = format!("{stem}.csv");
+            html.push_str("<figure>\n");
+            let _ = writeln!(
+                html,
+                "<a href=\"{name}\"><img src=\"{name}\" width=\"520\" alt=\"{stem}\"/></a>"
+            );
+            let caption = if csvs.contains(&csv) {
+                format!("{stem} — <a href=\"{csv}\">csv</a>")
+            } else {
+                stem.to_string()
+            };
+            let _ = writeln!(html, "<figcaption>{caption}</figcaption>");
+            html.push_str("</figure>\n");
+        }
+    }
+    if !jsons.is_empty() {
+        html.push_str("<h2>Sweep reports</h2>\n<ul>\n");
+        for name in &jsons {
+            let _ = writeln!(html, "<li><a href=\"{name}\">{name}</a></li>");
+        }
+        html.push_str("</ul>\n");
+    }
+    html.push_str("</body></html>\n");
+    let path = dir.join("index.html");
+    fs::write(&path, html)?;
+    Ok(path)
+}
+
 fn parse_usize_list(s: &str) -> Result<Vec<usize>, String> {
     if let Some((a, b)) = s.split_once("..") {
         let lo: usize =
@@ -770,6 +860,7 @@ fn parse_named_list<T>(
 mod tests {
     use super::*;
     use crate::sim::PhaseTimings;
+    use crate::trace::TracePolicy;
 
     fn cell(n: usize, sigma: f64, seed: u64, savings: f64, dist: Option<f64>) -> SweepCell {
         SweepCell {
@@ -794,6 +885,8 @@ mod tests {
             exposed: 0,
             empirical_rho: None,
             theory_rho: Some(0.9),
+            trace_policy: TracePolicy::Summary,
+            trace: Vec::new(),
             timings: PhaseTimings::default(),
             error: None,
         }
@@ -834,6 +927,24 @@ mod tests {
         c.final_loss = f64::NAN;
         assert_eq!(Metric::FinalLoss.extract(&c), None);
         assert_eq!(Metric::FinalDistSq.extract(&c), None);
+    }
+
+    #[test]
+    fn partially_diverged_replicates_absorb_to_the_sentinel() {
+        // One converged seed + one diverged seed must read as diverged —
+        // not as a ~5e29 average that escapes the renderer's sentinel
+        // check and stretches the axis.
+        let r = report(vec![
+            cell(10, 0.05, 1, 0.5, Some(0.5)),
+            cell(10, 0.05, 2, 0.5, Some(f64::INFINITY)),
+        ]);
+        let rc = replicates(&r);
+        let s = rc[0].stat(Metric::FinalDistSq).unwrap();
+        assert_eq!(s.n, 2);
+        assert_eq!(s.mean, DIVERGED);
+        assert_eq!(s.max, DIVERGED);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 0.5, "the best replicate's value survives");
     }
 
     #[test]
@@ -955,6 +1066,27 @@ mod tests {
         assert!(apply_axis_specs(&mut grid, &["f=4..0".to_string()]).is_err());
         assert!(apply_axis_specs(&mut grid, &["attack=nope".to_string()]).is_err());
         assert!(apply_axis_specs(&mut grid, &["n=x,y".to_string()]).is_err());
+    }
+
+    #[test]
+    fn html_index_lists_artifacts_sorted() {
+        let dir = std::env::temp_dir().join(format!("echo_cgc_index_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("FIG_b.svg"), "<svg/>").unwrap();
+        fs::write(dir.join("FIG_a.svg"), "<svg/>").unwrap();
+        fs::write(dir.join("FIG_a.csv"), "x\n").unwrap();
+        fs::write(dir.join("BENCH_x.json"), "{}").unwrap();
+        fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let path = write_html_index(&dir).unwrap();
+        let html = fs::read_to_string(&path).unwrap();
+        let a = html.find("FIG_a.svg").unwrap();
+        let b = html.find("FIG_b.svg").unwrap();
+        assert!(a < b, "figures must list in sorted order");
+        assert!(html.contains("<a href=\"FIG_a.csv\">csv</a>"));
+        assert!(html.contains("BENCH_x.json"));
+        assert!(!html.contains("notes.txt"));
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

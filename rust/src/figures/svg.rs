@@ -12,7 +12,7 @@
 //! [`crate::sweep::SweepReport`] therefore renders to byte-identical SVG
 //! at any thread count (pinned by `rust/tests/figures.rs`).
 
-use super::{AxisValue, Chart};
+use super::{AxisValue, Chart, DIVERGED};
 use std::fmt::Write as _;
 
 const W: f64 = 760.0;
@@ -24,24 +24,24 @@ const MR: f64 = 170.0;
 const MT: f64 = 48.0;
 const MB: f64 = 72.0;
 
-const PALETTE: [&str; 8] = [
+pub(crate) const PALETTE: [&str; 8] = [
     "#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e", "#8c564b", "#e377c2", "#7f7f7f",
 ];
 
 /// Escape the XML-special characters of text content.
-fn esc(s: &str) -> String {
+pub(crate) fn esc(s: &str) -> String {
     s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
 }
 
 /// Pixel coordinate formatting: fixed two decimals, so equal inputs give
 /// equal bytes.
-fn px(v: f64) -> String {
+pub(crate) fn px(v: f64) -> String {
     format!("{v:.2}")
 }
 
 /// Tick label: plain decimal in a readable range, exponent notation
 /// outside it, trailing zeros trimmed.
-fn tick_label(v: f64) -> String {
+pub(crate) fn tick_label(v: f64) -> String {
     if v == 0.0 {
         return "0".to_string();
     }
@@ -55,7 +55,7 @@ fn tick_label(v: f64) -> String {
 
 /// Round ticks covering `[min, max]` with a 1/2/5·10^k step (~`target`
 /// labels). Degenerates to the single value when the span is empty.
-fn nice_ticks(min: f64, max: f64, target: usize) -> Vec<f64> {
+pub(crate) fn nice_ticks(min: f64, max: f64, target: usize) -> Vec<f64> {
     if max <= min {
         return vec![min];
     }
@@ -85,6 +85,66 @@ fn nice_ticks(min: f64, max: f64, target: usize) -> Vec<f64> {
         out.push(min);
     }
     out
+}
+
+/// Decade ticks for a log₁₀ domain, shared by both chart renderers: at
+/// most ~`max_labels` decades (stepping over decades when the span is
+/// wide), falling back to nice fractional ticks with exponent labels
+/// inside a single decade.
+pub(crate) fn log_ticks(ymin: f64, ymax: f64, max_labels: usize) -> Vec<(f64, String)> {
+    let lo = ymin.ceil() as i64;
+    let hi = ymax.floor() as i64;
+    if lo > hi {
+        return nice_ticks(ymin, ymax, (max_labels + 1) / 2)
+            .into_iter()
+            .map(|t| (t, format!("{:.1e}", 10f64.powf(t))))
+            .collect();
+    }
+    let span = (hi - lo) as usize + 1;
+    let step = ((span + max_labels - 1) / max_labels).max(1);
+    (lo..=hi)
+        .step_by(step)
+        .map(|e| {
+            let label = if e == 0 { "1".to_string() } else { format!("1e{e}") };
+            (e as f64, label)
+        })
+        .collect()
+}
+
+/// Y-domain pool shared by the chart renderers: collects candidate
+/// values, keeping values at the [`DIVERGED`] sentinel out of the axis
+/// domain — they stay drawn, clamped to the frame — unless nothing else
+/// is plottable (then the sentinel pool becomes the domain so the chart
+/// still renders).
+#[derive(Default)]
+pub(crate) struct DomainPool {
+    real: Vec<f64>,
+    diverged: Vec<f64>,
+}
+
+impl DomainPool {
+    /// Add a candidate value (pre-transform); skipped when non-finite or
+    /// non-positive on a log scale.
+    pub(crate) fn push(&mut self, v: f64, log: bool) {
+        if !v.is_finite() || (log && v <= 0.0) {
+            return;
+        }
+        let t = if log { v.log10() } else { v };
+        if v >= DIVERGED {
+            self.diverged.push(t);
+        } else {
+            self.real.push(t);
+        }
+    }
+
+    /// The domain values: the real pool, or the diverged pool when
+    /// everything diverged.
+    pub(crate) fn finish(mut self) -> Vec<f64> {
+        if self.real.is_empty() {
+            self.real.append(&mut self.diverged);
+        }
+        self.real
+    }
 }
 
 /// A point prepared for drawing: pixel x plus mean/band in the (possibly
@@ -137,7 +197,7 @@ pub fn render(chart: &Chart) -> String {
     }
     let mut xmin = f64::INFINITY;
     let mut xmax = f64::NEG_INFINITY;
-    let mut tvals: Vec<f64> = Vec::new();
+    let mut pool = DomainPool::default();
     for sr in &chart.series {
         for p in &sr.points {
             if numeric_x {
@@ -149,12 +209,11 @@ pub fn render(chart: &Chart) -> String {
             }
             let st = &p.stat;
             for v in [st.mean, st.mean - st.std, st.mean + st.std, st.min, st.max] {
-                if v.is_finite() && (!log || v > 0.0) {
-                    tvals.push(if log { v.log10() } else { v });
-                }
+                pool.push(v, log);
             }
         }
     }
+    let tvals = pool.finish();
     if tvals.is_empty() || (numeric_x && !xmin.is_finite()) {
         let _ = writeln!(
             s,
@@ -198,28 +257,7 @@ pub fn render(chart: &Chart) -> String {
 
     // --- y gridlines + ticks -----------------------------------------
     let yticks: Vec<(f64, String)> = if log {
-        let lo = ymin.ceil() as i64;
-        let hi = ymax.floor() as i64;
-        if lo > hi {
-            nice_ticks(ymin, ymax, 4)
-                .into_iter()
-                .map(|t| (t, format!("{:.1e}", 10f64.powf(t))))
-                .collect()
-        } else {
-            let span = (hi - lo) as usize + 1;
-            let step = ((span + 7) / 8).max(1);
-            (lo..=hi)
-                .step_by(step)
-                .map(|e| {
-                    let label = if e == 0 {
-                        "1".to_string()
-                    } else {
-                        format!("1e{e}")
-                    };
-                    (e as f64, label)
-                })
-                .collect()
-        }
+        log_ticks(ymin, ymax, 8)
     } else {
         nice_ticks(ymin, ymax, 5).into_iter().map(|t| (t, tick_label(t))).collect()
     };
@@ -484,6 +522,42 @@ mod tests {
         assert!(svg.contains("(log scale)"));
         // The non-positive mean is dropped: 3 drawable points remain.
         assert_eq!(svg.matches("<circle").count(), 3);
+    }
+
+    #[test]
+    fn diverged_sentinel_does_not_stretch_the_domain() {
+        let mut chart = demo_chart(true);
+        chart.series[1].points[1].stat = Summary {
+            n: 3,
+            mean: DIVERGED,
+            std: 0.0,
+            min: DIVERGED,
+            max: DIVERGED,
+            median: DIVERGED,
+        };
+        let svg = render(&chart);
+        // The diverged point is still drawn (all 4 circles), but the log
+        // axis stays at the real data's decades instead of reaching 1e30.
+        assert_eq!(svg.matches("<circle").count(), 4);
+        assert!(!svg.contains(">1e30<"), "axis must not reach the sentinel");
+        assert!(!svg.contains(">1e15<"));
+        // All-diverged charts fall back to the sentinel's own scale.
+        let mut all = demo_chart(true);
+        for sr in &mut all.series {
+            for p in &mut sr.points {
+                p.stat = Summary {
+                    n: 1,
+                    mean: DIVERGED,
+                    std: 0.0,
+                    min: DIVERGED,
+                    max: DIVERGED,
+                    median: DIVERGED,
+                };
+            }
+        }
+        let svg = render(&all);
+        assert!(!svg.contains("no plottable data"));
+        assert_eq!(svg.matches("<circle").count(), 4);
     }
 
     #[test]

@@ -38,13 +38,25 @@
 //!   --profile smoke|full` runs the same grids from the CLI (`smoke` is
 //!   the reduced-size profile CI's `bench-smoke` job runs on every pull
 //!   request);
+//! * a **round-trace observer pipeline** ([`trace`]): the round engine
+//!   emits typed per-round events (loss, `‖w − w*‖²`, echo/raw counts,
+//!   bits on air, CGC filter decisions) to pluggable sinks —
+//!   [`trace::FullTrace`], [`trace::BoundedTrace`] (every-k decimation
+//!   under a hard point cap) and [`trace::SummaryOnly`] — selected by
+//!   [`trace::TracePolicy`] (`--trace summary|full|every_k=K,max=M`).
+//!   Scalar outcomes (final loss, the [`trace::RhoFit`] contraction
+//!   estimate) are folded online and identical under every policy;
 //! * a **figure/ablation layer** ([`figures`]): replicate statistics
 //!   across the sweep `seeds` axis (mean/std/min/max per cell, computed
 //!   in grid order), a series/facet selection layer, and a
 //!   zero-dependency CSV + SVG line-chart renderer that reproduces the
 //!   paper's Figures 2–4 end-to-end (`echo-cgc figures --fig 2|3|4
-//!   --profile smoke|full`) plus an `--axis` mini-DSL for ad-hoc
-//!   ablations — deterministic bytes at any thread count;
+//!   --profile smoke|full`) plus true convergence *curves* from traced
+//!   sweeps ([`figures::curves`]: error vs round, faceted multi-panel
+//!   SVG, the contraction fit overlaid on its window — `echo-cgc figures
+//!   --fig curves`), an `--axis` mini-DSL for ad-hoc ablations, and an
+//!   HTML index page linking every artifact of a run — deterministic
+//!   bytes at any thread count;
 //! * an **XLA/PJRT runtime** facade ([`runtime`]) for gradient computations
 //!   AOT-lowered from JAX/Pallas (`python/compile/`) as HLO text (python is
 //!   never on the request path). Currently a stub — see [`runtime`] — until
@@ -129,5 +141,6 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod sweep;
+pub mod trace;
 pub mod wire;
 pub mod worker;

@@ -8,13 +8,17 @@
 //! * `analyze`        — print the theory constants (β, γ, ρ, r-bound, C, …)
 //! * `figures`        — reproduce the paper's figures. Measured,
 //!                      sweep-engine-backed with replicate seeds:
-//!                      `--fig 2|3|4|all --profile smoke|full`
-//!                      (writes `results/FIG_*.{svg,csv}`); ad-hoc
+//!                      `--fig 2|3|4|curves|all --profile smoke|full`
+//!                      (writes `results/FIG_*.{svg,csv}`; `curves` is
+//!                      the faceted error-vs-round figure from a traced
+//!                      sweep, with the contraction fit overlaid); ad-hoc
 //!                      ablations via the `--axis` mini-DSL
 //!                      (`--axis n=10,20,50 --axis f=0..4`, comma lists
 //!                      or inclusive integer ranges, plus `--x`,
 //!                      `--series`, `--metric`); or the closed-form
-//!                      theory Figures 1a–1d (`--which 1a|1b|1c|1d|all`)
+//!                      theory Figures 1a–1d (`--which 1a|1b|1c|1d|all`).
+//!                      Every run refreshes `results/index.html`, the
+//!                      gallery linking all FIG/BENCH artifacts
 //! * `bench-comm`     — measured communication savings vs the raw-gradient
 //!                      baseline across σ (the §4.3 headline numbers)
 //! * `echo-rate`      — measured echo rate vs the analytic lower bound
@@ -27,7 +31,9 @@
 //!                      override the preset's base (swept axes win for
 //!                      their own dimension), cells fan out across the
 //!                      thread pool, and the JSON report is
-//!                      byte-identical at any thread count
+//!                      byte-identical at any thread count. `--trace
+//!                      summary|full|every_k=K,max=M` sets the per-cell
+//!                      trajectory retention serialized into the report
 //!
 //! Every subcommand accepts `--threads <k>` (or `--threads auto`) to fan
 //! the round engine's computation phase across `k` worker threads —
@@ -40,10 +46,12 @@
 //! echo-cgc train --n 50 --f 5 --sigma 0.05 --rounds 500
 //! echo-cgc train --d 100000 --threads auto
 //! echo-cgc figures --fig all --profile smoke --threads auto
+//! echo-cgc figures --fig curves --profile smoke --threads auto
 //! echo-cgc figures --axis n=10,20,50 --axis f=0..4 --metric comm_savings
 //! echo-cgc figures --which all
 //! echo-cgc attack-matrix --n 25 --f 2 --rounds 300
 //! echo-cgc sweep --grid comm-savings --profile smoke --threads auto
+//! echo-cgc sweep --grid convergence --profile smoke --trace every_k=4,max=64
 //! ```
 
 use echo_cgc::analysis;
@@ -57,8 +65,9 @@ fn usage() -> ! {
     eprintln!(
         "usage: echo-cgc <train|analyze|figures|bench-comm|echo-rate|attack-matrix|convergence|multihop|sweep> [--key value ...]\n\
          common flags:  --n --f --b --d --rounds --sigma --attack --aggregator --seed --threads <k|auto>\n\
+                        --trace summary|full|every_k=K,max=M (per-round trajectory retention)\n\
          sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|quick --profile smoke|full --out <path>\n\
-         figures flags: --fig 2|3|4|all --profile smoke|full --out-dir <dir> (paper figures)\n\
+         figures flags: --fig 2|3|4|curves|all --profile smoke|full --out-dir <dir> (paper figures)\n\
                         --axis key=v1,v2|a..b [--x axis] [--series axis] [--metric name] (ad-hoc ablation)\n\
                         --which 1a|1b|1c|1d|all (closed-form theory figures)\n\
          run `echo-cgc train --n 20 --f 2 --rounds 200` for a quick start"
@@ -126,6 +135,11 @@ fn main() {
     let is_figures = args.iter().any(|a| a == "figures");
     let mut fig_cli = FiguresCli::default();
     if is_figures {
+        // Whether the user chose a trace policy explicitly (the flag is
+        // still in `args` here — the config parser consumes it later):
+        // without it, ad-hoc ablation grids pin scalar-only retention.
+        fig_cli.trace_given =
+            args.iter().any(|a| a == "--trace" || a.starts_with("--trace="));
         fig_cli.fig = extract_flag(&mut args, "--fig");
         while let Some(spec) = extract_flag(&mut args, "--axis") {
             fig_cli.axes.push(spec);
@@ -192,11 +206,12 @@ fn cmd_sweep(
     grid.base.threads = 1;
     let threads = cfg.effective_threads();
     println!(
-        "echo-cgc sweep: grid={} profile={} cells={} threads={}",
+        "echo-cgc sweep: grid={} profile={} cells={} threads={} trace={}",
         grid.name,
         profile.name(),
         grid.len(),
-        threads
+        threads,
+        grid.base.trace.label()
     );
     let report = grid.run(threads);
     println!(
@@ -291,7 +306,7 @@ fn cmd_train(cfg: &ExperimentConfig) {
     table.write_file(&path).expect("write results csv");
     println!(
         "\nfinal: loss {:.5e}, echo rate {:.1}%, comm saved {:.1}% vs raw baseline\nwrote {path}",
-        sim.records().last().unwrap().loss,
+        sim.trace().summary().final_loss,
         100.0 * sim.echo_rate(),
         100.0 * sim.comm_savings()
     );
@@ -334,6 +349,9 @@ struct FiguresCli {
     series: Option<String>,
     metric: Option<String>,
     out_dir: Option<String>,
+    /// `--trace` appeared on the command line (it is a config key, parsed
+    /// by `ExperimentConfig`; this only records that the user chose).
+    trace_given: bool,
 }
 
 fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &FiguresCli) {
@@ -360,18 +378,24 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
             );
             std::process::exit(2);
         }
-        let ids: Vec<FigId> = if figs == "all" {
-            FigId::all().to_vec()
+        let mut ids: Vec<FigId> = Vec::new();
+        let mut want_curves = false;
+        if figs == "all" {
+            ids = FigId::all().to_vec();
+            want_curves = true;
         } else {
-            figs.split(',')
-                .map(|v| {
-                    FigId::parse(v.trim()).unwrap_or_else(|| {
-                        eprintln!("unknown figure '{v}' (expected 2|3|4|all)");
-                        std::process::exit(2);
-                    })
-                })
-                .collect()
-        };
+            for v in figs.split(',') {
+                let v = v.trim();
+                if v == "curves" {
+                    want_curves = true;
+                    continue;
+                }
+                ids.push(FigId::parse(v).unwrap_or_else(|| {
+                    eprintln!("unknown figure '{v}' (expected 2|3|4|curves|all)");
+                    std::process::exit(2);
+                }));
+            }
+        }
         for id in ids {
             let job = figures::paper_figure(id, profile);
             println!(
@@ -386,12 +410,36 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
             let (csv_path, svg_path) = chart.write(&out_dir, id.stem()).expect("write figure");
             println!("wrote {} + {}", csv_path.display(), svg_path.display());
         }
+        if want_curves {
+            let job = figures::curves::paper_curves(profile);
+            println!(
+                "figures: FIG_curves — traced grid '{}' ({}), {} cells × profile {} on {} threads",
+                job.grid.name,
+                job.grid.base.trace.label(),
+                job.grid.len(),
+                profile.name(),
+                threads
+            );
+            let fig = job.run(threads);
+            let (csv_path, svg_path) =
+                fig.write(&out_dir, "FIG_curves").expect("write curves figure");
+            println!("wrote {} + {}", csv_path.display(), svg_path.display());
+        }
+        let index = figures::write_html_index(&out_dir).expect("write html index");
+        println!("wrote {}", index.display());
         return;
     }
     // Mode 2: ad-hoc ablation from the `--axis` mini-DSL.
     if !cli.axes.is_empty() {
         let mut base = cfg.clone();
         base.threads = 1; // `--threads` sets cell-level parallelism
+        if !cli.trace_given {
+            // Ad-hoc ablations plot scalar metrics; without an explicit
+            // `--trace`, don't serialize per-round trajectories into
+            // FIG_adhoc_report.json (the same scalar-only retention the
+            // sweep presets pin).
+            base.trace = echo_cgc::trace::TracePolicy::Summary;
+        }
         let mut grid = SweepGrid::new("adhoc", base);
         grid.profile = profile;
         if let Err(e) = figures::apply_axis_specs(&mut grid, &cli.axes) {
@@ -445,6 +493,8 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
             csv_path.display(),
             svg_path.display()
         );
+        let index = figures::write_html_index(&out_dir).expect("write html index");
+        println!("wrote {}", index.display());
         return;
     }
     // Mode 3 (legacy): the closed-form theory Figures 1a–1d.
@@ -489,8 +539,10 @@ fn cmd_bench_comm(cfg: &ExperimentConfig) {
             Ok(s) => s,
             Err(_) => continue,
         };
-        sim.run();
-        let rounds = sim.records().len() as u64;
+        sim.run_silent();
+        // Policy-independent round count: records() retention varies with
+        // `--trace`, the summary always sees every round.
+        let rounds = sim.trace().summary().rounds as u64;
         let bits = sim.radio().meter.total_uplink() / rounds;
         let baseline =
             echo_cgc::wire::raw_gradient_bits(sim.model().dim(), c.encoding()) * c.n as u64;
@@ -532,7 +584,7 @@ fn cmd_echo_rate(cfg: &ExperimentConfig) {
             Ok(s) => s,
             Err(_) => continue,
         };
-        sim.run();
+        sim.run_silent();
         let honest = (c.n - c.b) as f64;
         let measured = sim.echo_rate() * honest;
         let bound = (c.n as f64 * analysis::p_echo_lower(sim.r(), sigma) - 1.0).max(0.0);
@@ -599,17 +651,15 @@ fn cmd_convergence(cfg: &ExperimentConfig) {
                 Ok(s) => s,
                 Err(_) => continue,
             };
-            let recs = sim.run();
-            let d0 = recs.first().unwrap().dist_sq.unwrap();
-            // Measure ρ over the contracting prefix only (the f32 wire
-            // quantization floor stalls the distance at ~1e-14).
-            let floor = 1e-10 * d0.max(1.0);
-            let t_eff = recs
-                .iter()
-                .position(|r| r.dist_sq.unwrap() < floor)
-                .unwrap_or(recs.len());
-            let dt = recs[t_eff.saturating_sub(1)].dist_sq.unwrap().max(1e-300);
-            let emp = (dt / d0).powf(1.0 / t_eff.max(1) as f64);
+            sim.run_silent();
+            // The trace pipeline's online fit windows ρ to the contracting
+            // prefix (the f32 wire quantization floor stalls the distance
+            // at ~1e-14) and returns None on degenerate trajectories
+            // instead of panicking.
+            let emp = match sim.trace().summary().fit.rho() {
+                Some(v) => v,
+                None => continue,
+            };
             let rho = sim.realized_theory().rho(sim.eta());
             println!("{n:>6} {f:>4} {sigma:>8.3} {emp:>12.6} {rho:>12.6}");
             table.push_row(&[n as f64, f as f64, sigma, emp, rho]);

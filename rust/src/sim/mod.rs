@@ -13,6 +13,15 @@
 //! inherently ordered), and the coordinate partition preserves the serial
 //! accumulation order. `rust/tests/determinism.rs` pins this invariant.
 //! To batch *many* simulations across the same pool, see [`crate::sweep`].
+//!
+//! **Observation.** The engine does not accumulate measurements itself:
+//! each round it emits one typed [`RoundEvent`] to the trace pipeline
+//! ([`crate::trace`]), whose sink — selected by
+//! [`ExperimentConfig::trace`] — decides what is retained (everything,
+//! a bounded decimation, or scalars only). [`Simulation::records`] reads
+//! the retained window back; scalar outcomes (final loss, the empirical
+//! contraction fit) come from the sink's online summary and are identical
+//! under every retention policy.
 pub mod multihop;
 
 
@@ -27,30 +36,17 @@ use crate::model::{
 };
 use crate::radio::{RadioNetwork, TdmaSchedule};
 use crate::rng::Rng;
+use crate::trace::{RoundObserver, TraceSink};
 use crate::wire::Payload;
 use crate::worker::EchoWorker;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Per-round measurements.
-#[derive(Clone, Copy, Debug)]
-pub struct RoundRecord {
-    pub round: usize,
-    /// `Q(w^t)` (full-dataset loss at the *start* of the round).
-    pub loss: f64,
-    /// `‖w^t − w*‖²` when the optimum is known.
-    pub dist_sq: Option<f64>,
-    /// `‖∇Q(w^t)‖`.
-    pub grad_norm: f64,
-    /// Worker→server bits this round.
-    pub uplink_bits: u64,
-    /// Echo / raw frame counts among *fault-free* workers.
-    pub echo_count: usize,
-    pub raw_count: usize,
-    /// Byzantine workers exposed so far (cumulative).
-    pub exposed_cum: usize,
-}
+pub use crate::trace::RoundEvent;
+
+/// Historical name of [`RoundEvent`] — the per-round measurement record.
+pub use crate::trace::RoundEvent as RoundRecord;
 
 /// Wall-clock totals per phase (feeds the §Perf profile).
 #[derive(Clone, Copy, Debug, Default)]
@@ -78,7 +74,7 @@ pub struct Simulation {
     attack_rng: Rng,
     sched_rng: Rng,
     round: usize,
-    records: Vec<RoundRecord>,
+    trace: TraceSink,
     pub timings: PhaseTimings,
 }
 
@@ -187,7 +183,7 @@ impl Simulation {
             attack_rng: rng.split(7),
             sched_rng: rng.split(8),
             round: 0,
-            records: Vec::new(),
+            trace: TraceSink::new(cfg.trace),
             timings: PhaseTimings::default(),
             model,
             cfg: cfg.clone(),
@@ -214,8 +210,17 @@ impl Simulation {
         &self.w
     }
 
+    /// The rounds retained by the trace sink (every round under the
+    /// default [`crate::trace::TracePolicy::Full`]; a decimated window or
+    /// nothing under bounded/summary policies).
     pub fn records(&self) -> &[RoundRecord] {
-        &self.records
+        self.trace.retained()
+    }
+
+    /// The trace sink: retained rounds plus the online scalar summary
+    /// (final loss, contraction fit), defined under every policy.
+    pub fn trace(&self) -> &TraceSink {
+        &self.trace
     }
 
     pub fn radio(&self) -> &RadioNetwork {
@@ -346,18 +351,37 @@ impl Simulation {
             echo_count,
             raw_count,
             exposed_cum: self.server.exposed().len(),
+            clipped: self.server.clipped_last_round(),
         };
         self.round += 1;
-        self.records.push(rec);
+        self.trace.on_round(&rec);
         rec
     }
 
-    /// Run all configured rounds.
+    /// Run all configured rounds, returning the rounds the trace sink
+    /// retained (all of them under the default `Full` policy).
     pub fn run(&mut self) -> Vec<RoundRecord> {
+        self.run_silent();
+        self.trace.retained().to_vec()
+    }
+
+    /// Run all configured rounds without materializing a copy of the
+    /// retained window — for callers that read the sink (or the radio
+    /// meter) afterwards instead of consuming a record vector.
+    pub fn run_silent(&mut self) {
         for _ in 0..self.cfg.rounds {
             self.step();
         }
-        self.records.clone()
+    }
+
+    /// Run all configured rounds, forwarding every event to `obs` as well
+    /// as to the simulation's own policy sink — the hook for external
+    /// [`RoundObserver`] implementations.
+    pub fn run_observed(&mut self, obs: &mut dyn RoundObserver) {
+        for _ in 0..self.cfg.rounds {
+            let ev = self.step();
+            obs.on_round(&ev);
+        }
     }
 
     /// Total echo rate among fault-free workers so far.
@@ -630,5 +654,60 @@ mod tests {
             assert!(r.uplink_bits > 0);
             assert_eq!(r.echo_count + r.raw_count, cfg.n - cfg.b);
         }
+    }
+
+    #[test]
+    fn summary_policy_retains_nothing_but_matches_full_scalars() {
+        use crate::trace::{empirical_rho, TracePolicy};
+        let mut cfg = quick_cfg();
+        cfg.rounds = 40;
+        let mut full = Simulation::build(&cfg).unwrap();
+        full.run();
+        let mut cfg2 = cfg.clone();
+        cfg2.trace = TracePolicy::Summary;
+        let mut scalar = Simulation::build(&cfg2).unwrap();
+        scalar.run();
+        assert!(scalar.records().is_empty());
+        assert_eq!(full.records().len(), 40);
+        let (a, b) = (full.trace().summary(), scalar.trace().summary());
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+        assert_eq!(
+            a.fit.rho().map(f64::to_bits),
+            b.fit.rho().map(f64::to_bits),
+            "online fit must not depend on retention"
+        );
+        assert_eq!(
+            empirical_rho(full.records()).map(f64::to_bits),
+            b.fit.rho().map(f64::to_bits),
+            "offline fit over the full trace equals the online fit"
+        );
+        assert_eq!(
+            full.final_dist_sq().map(f64::to_bits),
+            scalar.final_dist_sq().map(f64::to_bits)
+        );
+    }
+
+    #[test]
+    fn external_observers_see_every_round() {
+        use crate::trace::{RoundEvent, RoundObserver};
+        struct Counter {
+            rounds: Vec<usize>,
+            bits: u64,
+        }
+        impl RoundObserver for Counter {
+            fn on_round(&mut self, ev: &RoundEvent) {
+                self.rounds.push(ev.round);
+                self.bits += ev.uplink_bits;
+            }
+        }
+        let mut cfg = quick_cfg();
+        cfg.rounds = 7;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        let mut obs = Counter { rounds: Vec::new(), bits: 0 };
+        sim.run_observed(&mut obs);
+        assert_eq!(obs.rounds, (0..7).collect::<Vec<_>>());
+        assert_eq!(obs.bits, sim.radio().meter.total_uplink());
+        // The simulation's own sink saw the same stream.
+        assert_eq!(sim.records().len(), 7);
     }
 }

@@ -18,7 +18,12 @@
 //!   result;
 //! * results collect into a typed [`SweepReport`] (per-cell echo rate,
 //!   comm savings, final distance, contraction estimate, phase timings)
-//!   with JSON/CSV serialization via [`crate::metrics`].
+//!   with JSON/CSV serialization via [`crate::metrics`]. Scalar outcomes
+//!   come from the trace pipeline's online summary ([`crate::trace`]),
+//!   and the rounds retained by the cell's
+//!   [`crate::trace::TracePolicy`] are serialized as the cell's `trace`
+//!   trajectory (empty under `Summary`, the policy most presets pin) —
+//!   what [`crate::figures::curves`] renders as true convergence curves.
 //!
 //! **Determinism contract.** [`SweepReport::to_json`] excludes wall-clock
 //! timings, and cells are ordered by grid position — so the rendered
@@ -41,9 +46,12 @@ use crate::byzantine::AttackKind;
 use crate::config::{ExperimentConfig, ModelKind};
 use crate::coordinator::Aggregator;
 use crate::metrics::{CsvTable, Json};
-use crate::sim::{PhaseTimings, RoundRecord, Simulation};
+use crate::sim::{PhaseTimings, Simulation};
+use crate::trace::{RoundEvent, TracePolicy};
 use std::io;
 use std::path::Path;
+
+pub use crate::trace::empirical_rho;
 
 /// Scale profile for a sweep: `Full` is the paper-figure size, `Smoke` a
 /// seconds-not-minutes reduction used by CI's `bench-smoke` job and
@@ -255,6 +263,11 @@ pub struct SweepCell {
     pub exposed: usize,
     pub empirical_rho: Option<f64>,
     pub theory_rho: Option<f64>,
+    /// Retention policy the cell ran under (identity, not a measurement).
+    pub trace_policy: TracePolicy,
+    /// Per-round trajectory retained by the trace sink (empty under
+    /// `TracePolicy::Summary`), serialized as parallel arrays.
+    pub trace: Vec<RoundEvent>,
     pub timings: PhaseTimings,
     pub error: Option<String>,
 }
@@ -293,6 +306,11 @@ impl SweepCell {
             ("exposed", Json::Num(self.exposed as f64)),
             ("empirical_rho", opt(self.empirical_rho)),
             ("theory_rho", opt(self.theory_rho)),
+            ("trace_policy", Json::Str(self.trace_policy.label())),
+            (
+                "trace",
+                if self.trace.is_empty() { Json::Null } else { trace_json(&self.trace) },
+            ),
             (
                 "error",
                 self.error.as_ref().map(|e| Json::Str(e.clone())).unwrap_or(Json::Null),
@@ -410,22 +428,27 @@ impl SweepReport {
     }
 }
 
-/// Geometric-mean per-round contraction of `‖wᵗ − w*‖²` over the
-/// contracting prefix (the f32 wire-quantization floor stalls the distance
-/// at ~1e-14, so rounds past the floor are excluded — the same windowing
-/// the convergence bench has always used).
-pub fn empirical_rho(recs: &[RoundRecord]) -> Option<f64> {
-    let d0 = recs.first()?.dist_sq?;
-    if d0 <= 0.0 {
-        return None;
-    }
-    let floor = 1e-10 * d0.max(1.0);
-    let t_eff = recs
-        .iter()
-        .position(|r| r.dist_sq.map_or(false, |v| v < floor))
-        .unwrap_or(recs.len());
-    let dt = recs[t_eff.saturating_sub(1)].dist_sq?.max(1e-300);
-    Some((dt / d0).powf(1.0 / t_eff.max(1) as f64))
+/// Serialize retained per-round events as parallel arrays — compact, and
+/// column-oriented like the figure layer reads them. Missing `dist_sq`
+/// entries render as `null` (as do non-finite values, per the JSON
+/// writer's contract).
+fn trace_json(events: &[RoundEvent]) -> Json {
+    let num = |f: fn(&RoundEvent) -> f64| -> Json {
+        Json::Arr(events.iter().map(|e| Json::Num(f(e))).collect())
+    };
+    let dist = Json::Arr(
+        events.iter().map(|e| e.dist_sq.map(Json::Num).unwrap_or(Json::Null)).collect(),
+    );
+    Json::obj(vec![
+        ("round", num(|e| e.round as f64)),
+        ("loss", num(|e| e.loss)),
+        ("dist_sq", dist),
+        ("uplink_bits", num(|e| e.uplink_bits as f64)),
+        ("echo", num(|e| e.echo_count as f64)),
+        ("raw", num(|e| e.raw_count as f64)),
+        ("exposed", num(|e| e.exposed_cum as f64)),
+        ("clipped", num(|e| e.clipped as f64)),
+    ])
 }
 
 /// Build + run one cell; build failures become report rows, not panics.
@@ -463,6 +486,8 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
         exposed: 0,
         empirical_rho: None,
         theory_rho: None,
+        trace_policy: cfg.trace,
+        trace: Vec::new(),
         timings: PhaseTimings::default(),
         error: None,
     };
@@ -473,16 +498,20 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
             return cell;
         }
     };
-    let recs = sim.run();
+    sim.run_silent();
+    // Scalars come from the sink's online summary, so they are identical
+    // under every retention policy — no re-derivation from records.
+    let summary = *sim.trace().summary();
     cell.d = sim.model().dim();
     cell.echo_rate = sim.echo_rate();
     cell.comm_savings = sim.comm_savings();
-    cell.final_loss = recs.last().map(|r| r.loss).unwrap_or(f64::NAN);
+    cell.final_loss = summary.final_loss;
     cell.final_dist_sq = sim.final_dist_sq();
     cell.uplink_bits_total = sim.radio().meter.total_uplink();
     cell.exposed = sim.server().exposed().len();
-    cell.empirical_rho = empirical_rho(&recs);
+    cell.empirical_rho = summary.fit.rho();
     cell.theory_rho = Some(sim.realized_theory().rho(sim.eta()));
+    cell.trace = sim.trace().points();
     cell.timings = sim.timings;
     cell
 }
@@ -503,6 +532,7 @@ pub mod presets {
         base.d = 50;
         base.sigma = 0.05;
         base.threads = 1;
+        base.trace = TracePolicy::Summary;
         base.rounds = match profile {
             SweepProfile::Full => 250,
             SweepProfile::Smoke => 60,
@@ -524,6 +554,7 @@ pub mod presets {
         base.d = 50;
         base.sigma = 0.05;
         base.threads = 1;
+        base.trace = TracePolicy::Summary;
         base.attack = AttackKind::Omniscient;
         base.rounds = match profile {
             SweepProfile::Full => 250,
@@ -541,6 +572,7 @@ pub mod presets {
         let mut base = ExperimentConfig::default();
         base.d = 200;
         base.threads = 1;
+        base.trace = TracePolicy::Summary;
         base.rounds = match profile {
             SweepProfile::Full => 40,
             SweepProfile::Smoke => 10,
@@ -556,7 +588,10 @@ pub mod presets {
     }
 
     /// Empirical vs theoretical contraction across (n, f) × σ × attack
-    /// (Theorem 9; benches/convergence.rs).
+    /// (Theorem 9; benches/convergence.rs). The only preset that carries
+    /// trajectories: a bounded every-k trace per cell, so the bench and
+    /// `echo-cgc figures --fig curves` can render true error-vs-round
+    /// convergence curves instead of final-error bars.
     pub fn convergence(profile: SweepProfile) -> SweepGrid {
         let mut base = ExperimentConfig::default();
         base.d = 60;
@@ -564,6 +599,10 @@ pub mod presets {
         base.rounds = match profile {
             SweepProfile::Full => 300,
             SweepProfile::Smoke => 80,
+        };
+        base.trace = match profile {
+            SweepProfile::Full => TracePolicy::EveryK { every_k: 4, max_points: 128 },
+            SweepProfile::Smoke => TracePolicy::EveryK { every_k: 2, max_points: 64 },
         };
         let mut grid = SweepGrid::new("convergence", base);
         grid.profile = profile;
@@ -586,6 +625,7 @@ pub mod presets {
         base.d = 30;
         base.rounds = 40;
         base.threads = 1;
+        base.trace = TracePolicy::Summary;
         let mut grid = SweepGrid::new("quick", base);
         grid.profile = SweepProfile::Smoke;
         grid.attacks = vec![AttackKind::Omniscient, AttackKind::LargeNorm];
@@ -695,8 +735,8 @@ mod tests {
     #[test]
     fn empirical_rho_windows_the_contracting_prefix() {
         // Synthetic geometric decay: rho recovered exactly.
-        let recs: Vec<RoundRecord> = (0..20)
-            .map(|t| RoundRecord {
+        let recs: Vec<RoundEvent> = (0..20)
+            .map(|t| RoundEvent {
                 round: t,
                 loss: 0.0,
                 dist_sq: Some(4.0 * 0.5f64.powi(t as i32)),
@@ -705,10 +745,34 @@ mod tests {
                 echo_count: 0,
                 raw_count: 0,
                 exposed_cum: 0,
+                clipped: 0,
             })
             .collect();
         let rho = empirical_rho(&recs).unwrap();
         assert!((rho - 0.5).abs() < 0.03, "rho {rho}");
         assert_eq!(empirical_rho(&[]), None);
+    }
+
+    #[test]
+    fn traced_cells_serialize_their_trajectory() {
+        let mut base = tiny_grid().base;
+        base.trace = TracePolicy::EveryK { every_k: 2, max_points: 16 };
+        let grid = SweepGrid::new("traced", base);
+        let report = grid.run(1);
+        let cell = &report.cells[0];
+        assert_eq!(cell.trace_policy, TracePolicy::EveryK { every_k: 2, max_points: 16 });
+        // Rounds 0,2,4,6 on the grid plus the final round 7 as the tail.
+        let rounds: Vec<usize> = cell.trace.iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![0, 2, 4, 6, 7]);
+        let json = report.to_json().to_string();
+        assert!(json.contains("\"trace_policy\":\"every_k=2,max=16\""));
+        assert!(json.contains("\"dist_sq\""));
+        // Summary-policy cells serialize a null trace.
+        let mut base = tiny_grid().base;
+        base.trace = TracePolicy::Summary;
+        let report = SweepGrid::new("scalar", base).run(1);
+        assert!(report.cells[0].trace.is_empty());
+        let json = report.to_json().to_string();
+        assert!(json.contains("\"trace\":null"));
     }
 }

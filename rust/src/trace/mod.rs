@@ -1,0 +1,530 @@
+//! The round-trace observer pipeline: typed per-round events, pluggable
+//! sinks, and the online contraction fit.
+//!
+//! The round engine ([`crate::sim::Simulation`]) emits one [`RoundEvent`]
+//! per synchronous round — loss, `‖w − w*‖²`, echo/raw frame counts, bits
+//! on air, CGC filter decisions — to a [`RoundObserver`]. Three sinks
+//! cover the retention policies an experiment needs:
+//!
+//! * [`FullTrace`] retains every event (the default — what `train` CSVs
+//!   and the engine's own tests read back);
+//! * [`BoundedTrace`] retains an every-k decimation under a hard point
+//!   cap: when the cap is hit, `k` doubles and the retained window is
+//!   re-decimated in place, so an arbitrarily long horizon keeps at most
+//!   `max_points` events (plus the final round, which always rides along
+//!   in [`TraceSink::points`]). This is the sweep engine's trajectory
+//!   capture;
+//! * [`SummaryOnly`] retains no per-round events at all.
+//!
+//! Every sink also folds a [`TraceSummary`] online — first/final loss and
+//! distance plus the [`RhoFit`] contraction estimate — so scalar outcomes
+//! (`final_loss`, `empirical_rho`) are identical under every retention
+//! policy: the summary observes each event exactly once, whether or not
+//! the event is retained.
+//!
+//! Which sink a simulation gets is chosen by [`TracePolicy`]
+//! (`ExperimentConfig::trace`; CLI `--trace summary|full|every_k=K,max=M`).
+//! Retention is a pure function of the policy and the round indices —
+//! never of wall clock or thread schedule — so traced sweep reports
+//! inherit the engine's determinism contract: byte-identical JSON at any
+//! thread count (pinned by `rust/tests/trace.rs`).
+
+/// Per-round measurements, emitted once per synchronous round.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundEvent {
+    pub round: usize,
+    /// `Q(w^t)` (full-dataset loss at the *start* of the round).
+    pub loss: f64,
+    /// `‖w^t − w*‖²` when the optimum is known.
+    pub dist_sq: Option<f64>,
+    /// `‖∇Q(w^t)‖`.
+    pub grad_norm: f64,
+    /// Worker→server bits this round.
+    pub uplink_bits: u64,
+    /// Echo / raw frame counts among *fault-free* workers.
+    pub echo_count: usize,
+    pub raw_count: usize,
+    /// Byzantine workers exposed so far (cumulative).
+    pub exposed_cum: usize,
+    /// Gradients clipped by the CGC filter this round (0 under non-CGC
+    /// aggregation rules) — the server's per-round filter decisions.
+    pub clipped: usize,
+}
+
+/// Anything that wants to see the round stream. Events arrive in round
+/// order, exactly once each.
+pub trait RoundObserver: Send {
+    fn on_round(&mut self, ev: &RoundEvent);
+}
+
+/// Default point cap for `every_k=K` policies given without `max=M`.
+pub const DEFAULT_MAX_POINTS: usize = 512;
+
+/// Per-round retention policy (`ExperimentConfig::trace`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TracePolicy {
+    /// Scalar summary only; no per-round retention.
+    Summary,
+    /// Every `every_k`-th round, at most `max_points` retained (the cap
+    /// doubles `every_k` and re-decimates — see [`BoundedTrace`]).
+    EveryK { every_k: usize, max_points: usize },
+    /// Every round (the `ExperimentConfig` default).
+    Full,
+}
+
+impl TracePolicy {
+    /// Parse `summary|off|none`, `full|all`, or a comma list of
+    /// `every_k=K` / `max=M` pairs (`every_k=4,max=128`; `max` defaults
+    /// to [`DEFAULT_MAX_POINTS`]). Zero values are rejected.
+    pub fn parse(s: &str) -> Option<TracePolicy> {
+        match s {
+            "summary" | "off" | "none" => return Some(TracePolicy::Summary),
+            "full" | "all" => return Some(TracePolicy::Full),
+            _ => {}
+        }
+        let mut every_k = 1usize;
+        let mut max_points = DEFAULT_MAX_POINTS;
+        let mut any = false;
+        for part in s.split(',') {
+            let (k, v) = part.split_once('=')?;
+            let v: usize = v.trim().parse().ok()?;
+            match k.trim() {
+                "every_k" | "k" => every_k = v,
+                "max" | "max_points" => max_points = v,
+                _ => return None,
+            }
+            any = true;
+        }
+        if !any || every_k == 0 || max_points == 0 {
+            return None;
+        }
+        Some(TracePolicy::EveryK { every_k, max_points })
+    }
+
+    /// Canonical textual form (round-trips through [`Self::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            TracePolicy::Summary => "summary".to_string(),
+            TracePolicy::Full => "full".to_string(),
+            TracePolicy::EveryK { every_k, max_points } => {
+                format!("every_k={every_k},max={max_points}")
+            }
+        }
+    }
+}
+
+/// Online fit of the per-round contraction `ρ` of `‖wᵗ − w*‖²` over the
+/// contracting prefix: the geometric mean of the per-round ratio between
+/// the first finite positive distance and the last one above the
+/// quantization floor (the f32 wire floor stalls the distance at ~1e-14,
+/// so rounds past it are excluded — the same windowing the convergence
+/// bench has always used).
+///
+/// Degenerate trajectories yield `None` instead of a garbage estimate:
+/// no finite positive distance at all (all-`None`/NaN), a single observed
+/// round, or a start already at the floor (flat-at-floor).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RhoFit {
+    start: Option<(usize, f64)>,
+    last: Option<(usize, f64)>,
+    floor: f64,
+    stalled: bool,
+}
+
+impl RhoFit {
+    /// Feed one round's `‖w − w*‖²`. Missing and non-finite values are
+    /// skipped; the first value below the floor freezes the window.
+    pub fn observe(&mut self, round: usize, dist_sq: Option<f64>) {
+        if self.stalled {
+            return;
+        }
+        let v = match dist_sq {
+            Some(v) if v.is_finite() => v,
+            _ => return,
+        };
+        match self.start {
+            None => {
+                if v > 0.0 {
+                    self.start = Some((round, v));
+                    self.last = self.start;
+                    self.floor = 1e-10 * v.max(1.0);
+                }
+            }
+            Some(_) => {
+                if v < self.floor {
+                    self.stalled = true;
+                } else {
+                    self.last = Some((round, v));
+                }
+            }
+        }
+    }
+
+    /// The fitted per-round contraction, or `None` for a degenerate
+    /// trajectory (see the type docs).
+    pub fn rho(&self) -> Option<f64> {
+        let (r0, d0) = self.start?;
+        let (r1, dt) = self.last?;
+        if r1 <= r0 || dt <= 0.0 {
+            return None;
+        }
+        let rho = (dt / d0).powf(1.0 / (r1 - r0) as f64);
+        if rho.is_finite() {
+            Some(rho)
+        } else {
+            None
+        }
+    }
+
+    /// The fit window `(first round, anchor d0, last round above the
+    /// floor)` — what the curves renderer overlays the fit on.
+    pub fn window(&self) -> Option<(usize, f64, usize)> {
+        let (r0, d0) = self.start?;
+        let (r1, _) = self.last?;
+        if r1 <= r0 {
+            None
+        } else {
+            Some((r0, d0, r1))
+        }
+    }
+}
+
+/// Geometric-mean per-round contraction of a recorded trajectory —
+/// [`RhoFit`] folded over the events. `None` for degenerate trajectories.
+pub fn empirical_rho(events: &[RoundEvent]) -> Option<f64> {
+    let mut fit = RhoFit::default();
+    for ev in events {
+        fit.observe(ev.round, ev.dist_sq);
+    }
+    fit.rho()
+}
+
+/// Scalar outcomes folded online from the round stream — identical under
+/// every retention policy (every sink feeds it every event).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSummary {
+    /// Rounds observed so far.
+    pub rounds: usize,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub first_dist_sq: Option<f64>,
+    /// Last *defined* `‖w − w*‖²` seen (measured at round start).
+    pub final_dist_sq: Option<f64>,
+    /// The online contraction fit.
+    pub fit: RhoFit,
+}
+
+impl Default for TraceSummary {
+    fn default() -> Self {
+        TraceSummary {
+            rounds: 0,
+            first_loss: f64::NAN,
+            final_loss: f64::NAN,
+            first_dist_sq: None,
+            final_dist_sq: None,
+            fit: RhoFit::default(),
+        }
+    }
+}
+
+impl TraceSummary {
+    pub fn observe(&mut self, ev: &RoundEvent) {
+        if self.rounds == 0 {
+            self.first_loss = ev.loss;
+            self.first_dist_sq = ev.dist_sq;
+        }
+        self.rounds += 1;
+        self.final_loss = ev.loss;
+        if ev.dist_sq.is_some() {
+            self.final_dist_sq = ev.dist_sq;
+        }
+        self.fit.observe(ev.round, ev.dist_sq);
+    }
+}
+
+/// Sink retaining every event.
+#[derive(Clone, Debug, Default)]
+pub struct FullTrace {
+    pub summary: TraceSummary,
+    pub events: Vec<RoundEvent>,
+}
+
+impl RoundObserver for FullTrace {
+    fn on_round(&mut self, ev: &RoundEvent) {
+        self.summary.observe(ev);
+        self.events.push(*ev);
+    }
+}
+
+/// Sink retaining only the online summary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SummaryOnly {
+    pub summary: TraceSummary,
+}
+
+impl RoundObserver for SummaryOnly {
+    fn on_round(&mut self, ev: &RoundEvent) {
+        self.summary.observe(ev);
+    }
+}
+
+/// Sink retaining an every-k decimation under a hard cap. Retention is a
+/// pure function of `(every_k, max_points)` and the round indices, so two
+/// runs of the same config retain byte-identical windows regardless of
+/// thread count.
+#[derive(Clone, Debug)]
+pub struct BoundedTrace {
+    pub summary: TraceSummary,
+    every_k: usize,
+    max_points: usize,
+    kept: Vec<RoundEvent>,
+    tail: Option<RoundEvent>,
+}
+
+impl BoundedTrace {
+    pub fn new(every_k: usize, max_points: usize) -> BoundedTrace {
+        BoundedTrace {
+            summary: TraceSummary::default(),
+            every_k: every_k.max(1),
+            max_points: max_points.max(1),
+            kept: Vec::new(),
+            tail: None,
+        }
+    }
+
+    /// The decimation stride currently in effect (doubles at the cap).
+    pub fn effective_every_k(&self) -> usize {
+        self.every_k
+    }
+}
+
+impl RoundObserver for BoundedTrace {
+    fn on_round(&mut self, ev: &RoundEvent) {
+        self.summary.observe(ev);
+        self.tail = Some(*ev);
+        // Cap: coarsen the grid (double k) and re-decimate in place until
+        // either the event no longer lands on the grid or space frees up.
+        while ev.round % self.every_k == 0 && self.kept.len() >= self.max_points {
+            self.every_k *= 2;
+            let k = self.every_k;
+            self.kept.retain(|e| e.round % k == 0);
+        }
+        if ev.round % self.every_k == 0 && self.kept.len() < self.max_points {
+            self.kept.push(*ev);
+        }
+    }
+}
+
+/// A policy-selected sink, owned by the simulation.
+#[derive(Clone, Debug)]
+pub enum TraceSink {
+    Summary(SummaryOnly),
+    Bounded(BoundedTrace),
+    Full(FullTrace),
+}
+
+impl TraceSink {
+    pub fn new(policy: TracePolicy) -> TraceSink {
+        match policy {
+            TracePolicy::Summary => TraceSink::Summary(SummaryOnly::default()),
+            TracePolicy::EveryK { every_k, max_points } => {
+                TraceSink::Bounded(BoundedTrace::new(every_k, max_points))
+            }
+            TracePolicy::Full => TraceSink::Full(FullTrace::default()),
+        }
+    }
+
+    /// The online scalar summary (defined under every policy).
+    pub fn summary(&self) -> &TraceSummary {
+        match self {
+            TraceSink::Summary(t) => &t.summary,
+            TraceSink::Bounded(t) => &t.summary,
+            TraceSink::Full(t) => &t.summary,
+        }
+    }
+
+    /// The retained event window (empty under `Summary`; decimated under
+    /// `Bounded` — use [`Self::points`] to include the final round).
+    pub fn retained(&self) -> &[RoundEvent] {
+        match self {
+            TraceSink::Summary(_) => &[],
+            TraceSink::Bounded(t) => &t.kept,
+            TraceSink::Full(t) => &t.events,
+        }
+    }
+
+    /// The retained window as an owned trajectory, with the most recent
+    /// round appended when decimation dropped it — what sweep cells
+    /// serialize and the curves renderer plots.
+    pub fn points(&self) -> Vec<RoundEvent> {
+        match self {
+            TraceSink::Summary(_) => Vec::new(),
+            TraceSink::Full(t) => t.events.clone(),
+            TraceSink::Bounded(t) => {
+                let mut out = t.kept.clone();
+                if let Some(tail) = t.tail {
+                    match out.last() {
+                        Some(e) if e.round == tail.round => {}
+                        _ => out.push(tail),
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+impl RoundObserver for TraceSink {
+    fn on_round(&mut self, ev: &RoundEvent) {
+        match self {
+            TraceSink::Summary(t) => t.on_round(ev),
+            TraceSink::Bounded(t) => t.on_round(ev),
+            TraceSink::Full(t) => t.on_round(ev),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(round: usize, dist: Option<f64>) -> RoundEvent {
+        RoundEvent {
+            round,
+            loss: round as f64,
+            dist_sq: dist,
+            grad_norm: 0.0,
+            uplink_bits: 1,
+            echo_count: 0,
+            raw_count: 0,
+            exposed_cum: 0,
+            clipped: 0,
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrips_and_rejects_garbage() {
+        for p in [
+            TracePolicy::Summary,
+            TracePolicy::Full,
+            TracePolicy::EveryK { every_k: 4, max_points: 128 },
+        ] {
+            assert_eq!(TracePolicy::parse(&p.label()), Some(p));
+        }
+        assert_eq!(
+            TracePolicy::parse("every_k=8"),
+            Some(TracePolicy::EveryK { every_k: 8, max_points: DEFAULT_MAX_POINTS })
+        );
+        assert_eq!(TracePolicy::parse("off"), Some(TracePolicy::Summary));
+        assert_eq!(TracePolicy::parse("bogus"), None);
+        assert_eq!(TracePolicy::parse("every_k=0"), None);
+        assert_eq!(TracePolicy::parse("max=0"), None);
+        assert_eq!(TracePolicy::parse("every_k=x"), None);
+        assert_eq!(TracePolicy::parse(""), None);
+    }
+
+    #[test]
+    fn bounded_trace_decimates_on_the_k_grid() {
+        let mut sink = TraceSink::new(TracePolicy::EveryK { every_k: 5, max_points: 100 });
+        for t in 0..23 {
+            sink.on_round(&ev(t, Some(1.0)));
+        }
+        let rounds: Vec<usize> = sink.retained().iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![0, 5, 10, 15, 20]);
+        // `points()` appends the final round the decimation dropped.
+        let pts: Vec<usize> = sink.points().iter().map(|e| e.round).collect();
+        assert_eq!(pts, vec![0, 5, 10, 15, 20, 22]);
+    }
+
+    #[test]
+    fn bounded_trace_cap_coarsens_the_grid() {
+        let mut sink = BoundedTrace::new(1, 8);
+        for t in 0..200 {
+            sink.on_round(&ev(t, Some(1.0)));
+        }
+        assert!(sink.kept.len() <= 8, "cap violated: {}", sink.kept.len());
+        let k = sink.effective_every_k();
+        assert!(k > 1 && k.is_power_of_two());
+        assert!(sink.kept.iter().all(|e| e.round % k == 0));
+        assert!(sink.kept.windows(2).all(|w| w[0].round < w[1].round));
+        // The summary saw every round even though few were retained.
+        assert_eq!(sink.summary.rounds, 200);
+    }
+
+    #[test]
+    fn summary_is_identical_under_every_policy() {
+        let events: Vec<RoundEvent> =
+            (0..50).map(|t| ev(t, Some(4.0 * 0.8f64.powi(t as i32)))).collect();
+        let mut sinks = [
+            TraceSink::new(TracePolicy::Summary),
+            TraceSink::new(TracePolicy::EveryK { every_k: 3, max_points: 7 }),
+            TraceSink::new(TracePolicy::Full),
+        ];
+        for sink in sinks.iter_mut() {
+            for e in &events {
+                sink.on_round(e);
+            }
+        }
+        let rho0 = sinks[0].summary().fit.rho().unwrap();
+        for sink in &sinks {
+            let s = sink.summary();
+            assert_eq!(s.rounds, 50);
+            assert_eq!(s.final_loss.to_bits(), 49.0f64.to_bits());
+            assert_eq!(s.fit.rho().unwrap().to_bits(), rho0.to_bits());
+        }
+        assert!((rho0 - 0.8).abs() < 1e-12);
+        assert!(sinks[0].retained().is_empty());
+        assert_eq!(sinks[2].retained().len(), 50);
+    }
+
+    #[test]
+    fn rho_fit_recovers_exact_geometric_decay() {
+        let events: Vec<RoundEvent> =
+            (0..20).map(|t| ev(t, Some(4.0 * 0.5f64.powi(t as i32)))).collect();
+        let rho = empirical_rho(&events).unwrap();
+        assert!((rho - 0.5).abs() < 1e-12, "rho {rho}");
+    }
+
+    #[test]
+    fn rho_fit_windows_out_the_quantization_floor() {
+        // Decay to ~1e-14, then flat: the stalled suffix must not drag
+        // the estimate down.
+        let events: Vec<RoundEvent> =
+            (0..200).map(|t| ev(t, Some((4.0 * 0.5f64.powi(t as i32)).max(1e-14)))).collect();
+        let rho = empirical_rho(&events).unwrap();
+        assert!((rho - 0.5).abs() < 0.03, "rho {rho}");
+    }
+
+    #[test]
+    fn rho_fit_is_none_for_degenerate_trajectories() {
+        assert_eq!(empirical_rho(&[]), None);
+        // Single round: no window.
+        assert_eq!(empirical_rho(&[ev(0, Some(4.0))]), None);
+        // All-missing and all-NaN distances.
+        let none: Vec<RoundEvent> = (0..5).map(|t| ev(t, None)).collect();
+        assert_eq!(empirical_rho(&none), None);
+        let nan: Vec<RoundEvent> = (0..5).map(|t| ev(t, Some(f64::NAN))).collect();
+        assert_eq!(empirical_rho(&nan), None);
+        // Flat at the floor: the start is already below its own floor.
+        let flat: Vec<RoundEvent> = (0..5).map(|t| ev(t, Some(1e-20))).collect();
+        assert_eq!(empirical_rho(&flat), None);
+        // Nonpositive start never anchors a window.
+        let zeros: Vec<RoundEvent> = (0..5).map(|t| ev(t, Some(0.0))).collect();
+        assert_eq!(empirical_rho(&zeros), None);
+    }
+
+    #[test]
+    fn rho_fit_skips_gaps_and_uses_round_distance() {
+        // Decimated observations (rounds 0, 10, 20) of a 0.9-per-round
+        // decay still recover 0.9: the exponent uses round distance.
+        let mut fit = RhoFit::default();
+        for &r in &[0usize, 10, 20] {
+            fit.observe(r, Some(100.0 * 0.9f64.powi(r as i32)));
+        }
+        let rho = fit.rho().unwrap();
+        assert!((rho - 0.9).abs() < 1e-12, "rho {rho}");
+        let (r0, d0, r1) = fit.window().unwrap();
+        assert_eq!((r0, r1), (0, 20));
+        assert_eq!(d0.to_bits(), 100.0f64.to_bits());
+    }
+}

@@ -1,0 +1,239 @@
+//! The trace pipeline's end-to-end contracts:
+//!
+//! * a traced sweep's JSON (per-cell trajectories included) is
+//!   **byte-identical** at `--threads 1` vs `8` — decimation is a pure
+//!   function of policy and round index, never of the thread schedule;
+//! * `BoundedTrace` respects its point cap at any horizon and always
+//!   carries the final round;
+//! * the curves layer renders a golden CSV from hand-built cells and
+//!   deterministic faceted artifacts from a seeded grid;
+//! * scalar outcomes are identical under every retention policy.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::figures::curves::{curves, CurveSpec, TraceMetric};
+use echo_cgc::figures::Axis;
+use echo_cgc::sim::{PhaseTimings, Simulation};
+use echo_cgc::sweep::{SweepCell, SweepGrid, SweepProfile, SweepReport};
+use echo_cgc::trace::{empirical_rho, RoundEvent, TracePolicy};
+
+fn traced_base() -> ExperimentConfig {
+    let mut base = ExperimentConfig::default();
+    base.n = 10;
+    base.f = 1;
+    base.b = 1;
+    base.d = 16;
+    base.rounds = 30;
+    base.seed = 13;
+    base.trace = TracePolicy::EveryK { every_k: 3, max_points: 8 };
+    base
+}
+
+#[test]
+fn traced_sweep_json_is_byte_identical_at_any_thread_count() {
+    let mut grid = SweepGrid::new("traced", traced_base());
+    grid.sigmas = vec![0.03, 0.08];
+    let serial = grid.run(1).to_json().to_string();
+    assert!(serial.contains("\"trace\":{"), "cells must carry trajectories");
+    assert!(serial.contains("\"dist_sq\""));
+    assert!(serial.contains("\"trace_policy\":\"every_k=3,max=8\""));
+    for threads in [2usize, 8] {
+        let par = grid.run(threads).to_json().to_string();
+        assert_eq!(serial.as_bytes(), par.as_bytes(), "threads={threads}");
+    }
+}
+
+#[test]
+fn bounded_trace_respects_cap_and_keeps_the_tail() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 10;
+    cfg.f = 1;
+    cfg.b = 1;
+    cfg.d = 12;
+    cfg.rounds = 100;
+    cfg.trace = TracePolicy::EveryK { every_k: 1, max_points: 10 };
+    let mut sim = Simulation::build(&cfg).unwrap();
+    sim.run();
+    let pts = sim.trace().points();
+    assert!(pts.len() <= 11, "cap + final-round tail, got {}", pts.len());
+    assert_eq!(pts.last().unwrap().round, 99, "final round always retained");
+    assert!(pts.windows(2).all(|w| w[0].round < w[1].round), "rounds ascend");
+    // The summary still saw every round.
+    assert_eq!(sim.trace().summary().rounds, 100);
+}
+
+#[test]
+fn retention_policy_never_changes_scalar_outcomes() {
+    let mut cfg = traced_base();
+    cfg.trace = TracePolicy::Full;
+    let mut grid_full = SweepGrid::new("g", cfg.clone());
+    grid_full.sigmas = vec![0.05];
+    cfg.trace = TracePolicy::Summary;
+    let mut grid_sum = SweepGrid::new("g", cfg);
+    grid_sum.sigmas = vec![0.05];
+    let report_full = grid_full.run(2);
+    let report_sum = grid_sum.run(2);
+    let a = &report_full.cells[0];
+    let b = &report_sum.cells[0];
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    assert_eq!(a.final_dist_sq.map(f64::to_bits), b.final_dist_sq.map(f64::to_bits));
+    assert_eq!(a.empirical_rho.map(f64::to_bits), b.empirical_rho.map(f64::to_bits));
+    assert!(!a.trace.is_empty());
+    assert!(b.trace.is_empty());
+    // The offline fit over the full trajectory equals the online one.
+    assert_eq!(empirical_rho(&a.trace).map(f64::to_bits), a.empirical_rho.map(f64::to_bits));
+}
+
+fn ev(round: usize, dist: f64) -> RoundEvent {
+    RoundEvent {
+        round,
+        loss: dist * 2.0,
+        dist_sq: Some(dist),
+        grad_norm: 0.0,
+        uplink_bits: 1,
+        echo_count: 0,
+        raw_count: 0,
+        exposed_cum: 0,
+        clipped: 0,
+    }
+}
+
+fn cell(seed: u64, attack: &'static str, trace: Vec<RoundEvent>) -> SweepCell {
+    SweepCell {
+        index: 0,
+        label: format!("c{seed}"),
+        n: 10,
+        f: 1,
+        b: 1,
+        d: 8,
+        model: "quadratic",
+        attack,
+        aggregator: "cgc",
+        sigma: 0.05,
+        seed,
+        rounds: 4,
+        echo_enabled: true,
+        echo_rate: 0.5,
+        comm_savings: 0.5,
+        final_loss: 0.1,
+        final_dist_sq: Some(0.1),
+        uplink_bits_total: 10,
+        exposed: 0,
+        empirical_rho: None,
+        theory_rho: None,
+        trace_policy: TracePolicy::Full,
+        trace,
+        timings: PhaseTimings::default(),
+        error: None,
+    }
+}
+
+fn report(cells: Vec<SweepCell>) -> SweepReport {
+    SweepReport { name: "t".to_string(), profile: SweepProfile::Smoke, cells }
+}
+
+#[test]
+fn curves_csv_golden_for_a_seeded_two_cell_grid() {
+    // Two seeds of one configuration (averaged per round) plus a second
+    // series: the exact CSV bytes are pinned.
+    let r = report(vec![
+        cell(1, "omniscient", vec![ev(0, 4.0), ev(1, 2.0), ev(2, 1.0)]),
+        cell(2, "omniscient", vec![ev(0, 2.0), ev(1, 1.0), ev(2, 0.5)]),
+        cell(1, "sign-flip", vec![ev(0, 1.0), ev(1, 1.0)]),
+    ]);
+    let spec = CurveSpec {
+        metric: TraceMetric::DistSq,
+        series: Some(Axis::Attack),
+        facet: None,
+        pins: vec![],
+        fit: false,
+    };
+    let fig = curves(&r, &spec, "golden");
+    let expected = "panel,series,round,value,n_seeds\n\
+                    dist_sq,attack=omniscient,0,3,2\n\
+                    dist_sq,attack=omniscient,1,1.5,2\n\
+                    dist_sq,attack=omniscient,2,0.75,2\n\
+                    dist_sq,attack=sign-flip,0,1,1\n\
+                    dist_sq,attack=sign-flip,1,1,1\n";
+    assert_eq!(fig.csv().to_string(), expected);
+}
+
+#[test]
+fn curves_fit_overlay_recovers_the_decay_rate() {
+    let tr: Vec<RoundEvent> = (0..20).map(|t| ev(t, 4.0 * 0.5f64.powi(t as i32))).collect();
+    let r = report(vec![cell(1, "omniscient", tr)]);
+    let spec = CurveSpec {
+        metric: TraceMetric::DistSq,
+        series: None,
+        facet: None,
+        pins: vec![],
+        fit: true,
+    };
+    let fig = curves(&r, &spec, "fit");
+    assert!(fig.log_y, "distance curves default to log y");
+    let (r0, d0, r1, rho) = fig.panels[0].series[0].fit.expect("fit window");
+    assert_eq!((r0, r1), (0, 19));
+    assert_eq!(d0.to_bits(), 4.0f64.to_bits());
+    assert!((rho - 0.5).abs() < 1e-12, "rho {rho}");
+    let svg = fig.svg();
+    assert!(svg.contains("stroke-dasharray"), "fit overlay must be dashed");
+    assert!(svg.contains("ρ̂=0.500"));
+}
+
+#[test]
+fn partially_diverged_trajectories_absorb_to_the_sentinel() {
+    // Seed 2 blows up at round 1: the averaged point must read as
+    // DIVERGED (never a half-diverged mean), and the rho fit must not
+    // anchor on it.
+    let mut blown = vec![ev(0, 4.0), ev(1, 2.0)];
+    blown[1].dist_sq = Some(f64::INFINITY);
+    let r = report(vec![
+        cell(1, "omniscient", vec![ev(0, 4.0), ev(1, 1.0)]),
+        cell(2, "omniscient", blown),
+    ]);
+    let spec = CurveSpec {
+        metric: TraceMetric::DistSq,
+        series: None,
+        facet: None,
+        pins: vec![],
+        fit: true,
+    };
+    let fig = curves(&r, &spec, "mixed");
+    let pts = &fig.panels[0].series[0].points;
+    assert_eq!(pts[0].value.to_bits(), 4.0f64.to_bits());
+    assert_eq!(pts[0].n_seeds, 2);
+    assert_eq!(pts[1].value, echo_cgc::figures::DIVERGED);
+    assert_eq!(pts[1].n_seeds, 2);
+    assert!(fig.panels[0].series[0].fit.is_none(), "fit must skip the diverged round");
+}
+
+#[test]
+fn seeded_curves_figure_is_deterministic_and_faceted() {
+    let mut base = traced_base();
+    base.rounds = 20;
+    base.trace = TracePolicy::EveryK { every_k: 2, max_points: 16 };
+    let mut grid = SweepGrid::new("curves_t", base);
+    grid.nfb = vec![(10, 1, 1), (12, 1, 1)];
+    grid.seeds = vec![1, 2];
+    let spec = CurveSpec {
+        metric: TraceMetric::DistSq,
+        series: None,
+        facet: Some(Axis::N),
+        pins: vec![],
+        fit: true,
+    };
+    let fig1 = curves(&grid.run(1), &spec, "seeded");
+    let fig8 = curves(&grid.run(8), &spec, "seeded");
+    assert_eq!(fig1.csv().to_string().as_bytes(), fig8.csv().to_string().as_bytes());
+    assert_eq!(fig1.svg().as_bytes(), fig8.svg().as_bytes());
+    // One panel per n value, in grid order, each averaging two seeds.
+    assert_eq!(fig1.panels.len(), 2);
+    assert_eq!(fig1.panels[0].title, "n=10");
+    assert_eq!(fig1.panels[1].title, "n=12");
+    for panel in &fig1.panels {
+        assert_eq!(panel.series.len(), 1);
+        assert!(panel.series[0].points.iter().all(|p| p.n_seeds == 2));
+    }
+    assert!(fig1.svg().contains(">n=10</text>"));
+}

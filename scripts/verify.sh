@@ -9,14 +9,20 @@
 #     lint          — cargo fmt --check, cargo clippy, cargo doc -D warnings
 #     smoke-bench   — the sweep-backed benches in reduced smoke mode,
 #                     emitting results/BENCH_*.json + results/FIG_*.{svg,csv}
-#                     (what CI's bench-smoke job runs — one code path for
-#                     CI and local runs)
+#                     plus the backend thread-scaling CSV (what CI's
+#                     bench-smoke job runs — one code path for CI and
+#                     local runs)
 #     figures-smoke — the paper's Figures 2–4 from `echo-cgc figures`,
 #                     smoke profile (also run by CI's bench-smoke job;
 #                     artifacts land in results/FIG_*.{svg,csv})
+#     trace-smoke   — a traced convergence sweep (`--trace`) plus the
+#                     faceted error-vs-round curves figure and the HTML
+#                     artifact index (results/FIG_curves.{svg,csv},
+#                     results/index.html)
 #     all           — build-test + lint
 #
-#   --smoke-bench  — append the smoke-bench + figures-smoke stages to `all`.
+#   --smoke-bench  — append the smoke-bench + figures-smoke + trace-smoke
+#                    stages to `all`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,7 +30,7 @@ STAGE=""
 SMOKE=0
 for arg in "$@"; do
   case "$arg" in
-    build-test|lint|smoke-bench|figures-smoke|all)
+    build-test|lint|smoke-bench|figures-smoke|trace-smoke|all)
       if [ -n "$STAGE" ]; then
         echo "verify.sh: multiple stages given ('$STAGE' and '$arg') — pass one" >&2
         exit 2
@@ -63,8 +69,22 @@ run_smoke_bench() {
     echo "-- cargo bench --bench $bench -- --profile smoke"
     cargo bench --bench "$bench" -- --profile smoke
   done
+  # Thread scaling of the computation phase (the ROADMAP headline
+  # numbers: compute_phase/d100000_n8_t{1,2,4,8} → bench_backend.csv).
+  echo "-- cargo bench --bench backend (quick mode)"
+  cargo bench --bench backend
   echo "-- bench artifacts:"
-  ls -l results/BENCH_*.json results/FIG_*.svg results/FIG_*.csv
+  ls -l results/BENCH_*.json results/FIG_*.svg results/FIG_*.csv results/bench_backend.csv
+}
+
+run_trace_smoke() {
+  echo "== trace-smoke: traced sweep + faceted convergence curves + HTML index =="
+  cargo run --release --bin echo-cgc -- sweep --grid convergence --profile smoke \
+    --trace every_k=4,max=64 --threads auto --out results/sweep_convergence_traced.json
+  cargo run --release --bin echo-cgc -- figures --fig curves --profile smoke --threads auto
+  echo "-- trace artifacts:"
+  ls -l results/sweep_convergence_traced.json results/FIG_curves.svg \
+    results/FIG_curves.csv results/index.html
 }
 
 run_figures_smoke() {
@@ -79,12 +99,14 @@ case "$STAGE" in
   lint) run_lint ;;
   smoke-bench) run_smoke_bench ;;
   figures-smoke) run_figures_smoke ;;
+  trace-smoke) run_trace_smoke ;;
   all)
     run_build_test
     run_lint
     if [ "$SMOKE" = "1" ]; then
       run_smoke_bench
       run_figures_smoke
+      run_trace_smoke
     fi
     ;;
 esac
