@@ -139,7 +139,7 @@ fn main() {
                 } else {
                     workers[slot].as_mut().unwrap().transmit()
                 };
-                let (delivered, _) = rr.broadcast(slot, slot, &frame);
+                let delivered = rr.broadcast(slot, slot, &frame).payload;
                 if slot != 0 {
                     if delivered.is_echo() {
                         echo += 1;

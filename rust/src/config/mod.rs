@@ -4,6 +4,7 @@
 
 use crate::byzantine::AttackKind;
 use crate::coordinator::Aggregator;
+use crate::radio::ChannelModel;
 use crate::trace::TracePolicy;
 use crate::wire::{Encoding, IdCodec, Precision};
 
@@ -149,6 +150,15 @@ pub struct ExperimentConfig {
     /// bounded decimation (what traced sweeps serialize). Scalar
     /// outcomes are identical under every policy.
     pub trace: TracePolicy,
+    /// The radio channel ([`crate::radio::channel`]): `Perfect` (the
+    /// paper's reliable local broadcast — the default), per-link
+    /// Bernoulli erasures, or bursty Gilbert–Elliott. CLI:
+    /// `--channel perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg`.
+    pub channel: ChannelModel,
+    /// Extra server-bound transmission attempts per frame when the
+    /// server misses it (bounded ARQ). Irrelevant under a lossless
+    /// channel (the first attempt always lands).
+    pub uplink_retries: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -183,6 +193,8 @@ impl Default for ExperimentConfig {
             topk: None,
             threads: 1,
             trace: TracePolicy::Full,
+            channel: ChannelModel::Perfect,
+            uplink_retries: 2,
         }
     }
 }
@@ -344,6 +356,15 @@ impl ExperimentConfig {
                     format!("trace: expected summary|full|every_k=K,max=M, got '{value}'")
                 })?
             }
+            "channel" => {
+                self.channel = ChannelModel::parse(value).ok_or_else(|| {
+                    format!(
+                        "channel: expected perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg \
+                         with probabilities in [0, 1], got '{value}'"
+                    )
+                })?
+            }
+            "uplink-retries" | "retries" => self.uplink_retries = parse_usize(value)?,
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -407,6 +428,7 @@ impl ExperimentConfig {
         if self.rounds == 0 {
             return Err("rounds must be positive".into());
         }
+        self.channel.validate()?;
         Ok(())
     }
 }
@@ -507,6 +529,33 @@ mod tests {
             ["--trace", "every_k=2,max=8"].iter().map(|s| s.to_string()).collect();
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.trace, TracePolicy::EveryK { every_k: 2, max_points: 8 });
+    }
+
+    #[test]
+    fn channel_parses_through_the_config_surface() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.channel, ChannelModel::Perfect);
+        assert_eq!(cfg.uplink_retries, 2);
+        cfg.set("channel", "bernoulli=0.15").unwrap();
+        assert_eq!(cfg.channel, ChannelModel::Bernoulli { p: 0.15 });
+        cfg.set("channel", "ge=0.02,0.6,0.1,0.3").unwrap();
+        assert_eq!(
+            cfg.channel,
+            ChannelModel::GilbertElliott { p_good: 0.02, p_bad: 0.6, p_gb: 0.1, p_bg: 0.3 }
+        );
+        cfg.set("uplink-retries", "4").unwrap();
+        assert_eq!(cfg.uplink_retries, 4);
+        assert!(cfg.set("channel", "bernoulli=1.5").is_err());
+        assert!(cfg.set("channel", "bogus").is_err());
+        // And through the CLI argument surface.
+        let mut cfg = ExperimentConfig::default();
+        let args: Vec<String> =
+            ["--channel", "bernoulli=0.2"].iter().map(|s| s.to_string()).collect();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.channel, ChannelModel::Bernoulli { p: 0.2 });
+        cfg.set("retries", "1").unwrap();
+        assert_eq!(cfg.uplink_retries, 1);
+        cfg.validate().unwrap();
     }
 
     #[test]

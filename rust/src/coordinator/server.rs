@@ -8,6 +8,18 @@
 //! reconstructs `g̃_j = k·A_I·x`. Malformed echoes (arity mismatch,
 //! non-finite values, self/future references) are Byzantine by the same
 //! argument. Exposed workers contribute `0⃗`.
+//!
+//! **Lossy channels weaken the exposure argument.** Under an unreliable
+//! radio ([`crate::radio::channel`]) a silent slot may be an erased frame
+//! and an echo reference to an *elapsed* slot may point at a frame the
+//! *server* missed — neither proves Byzantine behaviour. In lossy mode
+//! ([`ParameterServer::set_lossy`]) those two cases degrade to
+//! [`SlotOutcome::Lost`]: the slot contributes `0⃗` *this round* but the
+//! worker is **not** added to the exposed set. Content-provable
+//! malformations (non-finite values, arity mismatches, self references,
+//! unsorted id sets, and references to slots that have not even elapsed
+//! — no erasure explains overhearing a frame that was never on air)
+//! still expose — erasures drop frames, they never rewrite them.
 
 use super::aggregators::{aggregate, cgc_scales, Aggregator};
 use crate::linalg;
@@ -72,6 +84,22 @@ pub enum SlotOutcome {
     EchoExposed,
     /// No frame in the slot (synchrony ⇒ sender is faulty; stored 0⃗).
     Silent,
+    /// Lossy-channel casualty: the frame (or an echo's referenced basis)
+    /// never reached the server within the retransmit budget. Stored 0⃗
+    /// for this round, but **no exposure** — channel loss is not proof of
+    /// Byzantine behaviour.
+    Lost,
+}
+
+/// Verdict of the echo validity check.
+enum EchoCheck {
+    Ok,
+    /// Content-provable malformation — Byzantine under any channel.
+    Malformed,
+    /// Structurally valid but references a slot the server has no stored
+    /// gradient for — proof of lying under a reliable channel, a possible
+    /// erasure under a lossy one.
+    MissingRef,
 }
 
 /// The central parameter server.
@@ -99,6 +127,9 @@ pub struct ParameterServer {
     /// Worker threads for the aggregation phase (norm pass + CGC sum).
     /// `1` = serial; results are bit-identical at any setting.
     threads: usize,
+    /// Lossy-channel mode: silence and dangling echo references become
+    /// [`SlotOutcome::Lost`] instead of exposures (see the module docs).
+    lossy: bool,
 }
 
 impl ParameterServer {
@@ -116,7 +147,15 @@ impl ParameterServer {
             last_clipped: 0,
             rounds_aggregated: 0,
             threads: 1,
+            lossy: false,
         }
+    }
+
+    /// Switch the server's inference regime to an unreliable channel (the
+    /// round engine wires this to `ExperimentConfig::channel`): missing
+    /// frames stop being proof of Byzantine behaviour.
+    pub fn set_lossy(&mut self, lossy: bool) {
+        self.lossy = lossy;
     }
 
     /// Set the aggregation-phase thread count (a pure throughput knob —
@@ -154,6 +193,37 @@ impl ParameterServer {
         self.outcomes[j] = Some(outcome);
     }
 
+    fn mark_lost(&mut self, j: usize) {
+        self.g[j] = Some(vec![0.0; self.d]);
+        self.outcomes[j] = Some(SlotOutcome::Lost);
+    }
+
+    /// A frame the channel erased entirely (every attempt within the
+    /// retransmit budget missed the server): the slot contributes `0⃗`
+    /// this round, with no exposure.
+    pub fn on_lost(&mut self, j: usize) {
+        assert!(j < self.n);
+        assert!(self.g[j].is_none(), "slot {j} delivered twice");
+        self.mark_lost(j);
+    }
+
+    /// Does slot `i` hold a gradient an echo may reference? A `Lost` slot
+    /// does not: its stored `0⃗` is a placeholder for the aggregation, not
+    /// the frame the echoing worker actually overheard — reconstructing
+    /// against it would silently corrupt the echo. (Exposed slots also
+    /// store `0⃗`, but honest workers can never have such frames in their
+    /// span: every exposable frame is one listeners reject too.)
+    fn slot_stored(&self, i: usize) -> bool {
+        self.g[i].is_some() && self.outcomes[i] != Some(SlotOutcome::Lost)
+    }
+
+    /// Are all of `ids` slots whose gradient the server has stored (and
+    /// can honour as echo basis columns)? The round engine uses this as
+    /// the NACK check behind the honest worker's echo→raw fallback.
+    pub fn echo_refs_stored(&self, ids: &[usize]) -> bool {
+        ids.iter().all(|&i| i < self.n && self.slot_stored(i))
+    }
+
     /// Process the frame transmitted in worker `j`'s slot.
     pub fn on_frame(&mut self, j: usize, payload: &Payload) -> SlotOutcome {
         assert!(j < self.n);
@@ -173,10 +243,23 @@ impl ParameterServer {
                 SlotOutcome::Raw
             }
             Payload::Echo { k, coeffs, ids } => {
-                let valid = self.validate_echo(j, *k, coeffs, ids);
-                if !valid {
-                    self.expose(j, SlotOutcome::EchoExposed);
-                    return SlotOutcome::EchoExposed;
+                match self.validate_echo(j, *k, coeffs, ids) {
+                    EchoCheck::Ok => {}
+                    EchoCheck::Malformed => {
+                        self.expose(j, SlotOutcome::EchoExposed);
+                        return SlotOutcome::EchoExposed;
+                    }
+                    EchoCheck::MissingRef => {
+                        // Reliable channel: only a liar references an
+                        // undelivered slot. Lossy channel: the server may
+                        // simply have missed that frame.
+                        if self.lossy {
+                            self.mark_lost(j);
+                            return SlotOutcome::Lost;
+                        }
+                        self.expose(j, SlotOutcome::EchoExposed);
+                        return SlotOutcome::EchoExposed;
+                    }
                 }
                 // g̃_j = k · A_I · x over the *stored* gradients (which for
                 // echo senders are themselves reconstructions).
@@ -218,40 +301,65 @@ impl ParameterServer {
         }
     }
 
-    /// A silent slot: the synchronous model lets the server conclude the
-    /// worker is faulty (§2.1).
+    /// A silent slot. Under the reliable channel the synchronous model
+    /// lets the server conclude the worker is faulty (§2.1); under a
+    /// lossy one, silence is indistinguishable from a total erasure and
+    /// only costs the worker its round.
     pub fn on_silence(&mut self, j: usize) {
         assert!(j < self.n);
-        self.expose(j, SlotOutcome::Silent);
+        if self.lossy {
+            self.mark_lost(j);
+        } else {
+            self.expose(j, SlotOutcome::Silent);
+        }
     }
 
-    fn validate_echo(&self, j: usize, k: f64, coeffs: &[f64], ids: &[usize]) -> bool {
+    fn validate_echo(&self, j: usize, k: f64, coeffs: &[f64], ids: &[usize]) -> EchoCheck {
         if !k.is_finite() || k < 0.0 {
-            return false;
+            return EchoCheck::Malformed;
         }
         if coeffs.is_empty() || coeffs.len() != ids.len() {
-            return false;
+            return EchoCheck::Malformed;
         }
         if coeffs.iter().any(|c| !c.is_finite()) {
-            return false;
+            return EchoCheck::Malformed;
         }
         let mut prev: Option<usize> = None;
+        let mut missing = false;
         for &i in ids {
-            // The echo may only reference workers whose gradient the server
-            // has stored (G[i] ≠ ⊥). Self-references, future slots and
-            // out-of-range ids all fail this test. Duplicate / unsorted ids
-            // violate the message format (I is an ascending set, line 20).
-            if i >= self.n || i == j || self.g[i].is_none() {
-                return false;
+            // Self-references and out-of-range ids violate the message
+            // format outright, as do duplicate / unsorted ids (I is an
+            // ascending set, line 20) — provable under any channel.
+            if i >= self.n || i == j {
+                return EchoCheck::Malformed;
             }
             if let Some(p) = prev {
                 if i <= p {
-                    return false;
+                    return EchoCheck::Malformed;
                 }
             }
             prev = Some(i);
+            // A reference to a slot that has not even elapsed (G[i] = ⊥:
+            // every *elapsed* slot is filled — raw/echo/exposed/Lost all
+            // store something) is proof of lying under ANY channel: no
+            // erasure explains overhearing a frame that was never on
+            // air.
+            if self.g[i].is_none() {
+                return EchoCheck::Malformed;
+            }
+            // A reference to an elapsed slot whose frame the server
+            // itself lost is the genuinely ambiguous case: proof of
+            // lying under the reliable channel, possibly the server's
+            // own erasure under a lossy one.
+            if self.outcomes[i] == Some(SlotOutcome::Lost) {
+                missing = true;
+            }
         }
-        true
+        if missing {
+            EchoCheck::MissingRef
+        } else {
+            EchoCheck::Ok
+        }
     }
 
     /// Gradients reconstructed this round, as borrowed slices — no O(n·d)
@@ -525,5 +633,67 @@ mod tests {
         let mut s = server(2, 0, 1);
         s.on_frame(0, &Payload::Raw(vec![1.0]));
         s.on_frame(0, &Payload::Raw(vec![1.0]));
+    }
+
+    #[test]
+    fn lossy_mode_does_not_expose_missing_frames() {
+        let mut s = ParameterServer::new(4, 1, 2, Aggregator::CgcSum);
+        s.set_lossy(true);
+        s.begin_round();
+        // A frame the channel erased entirely.
+        s.on_lost(0);
+        assert_eq!(s.outcome(0), Some(SlotOutcome::Lost));
+        assert_eq!(s.stored(0), Some(&vec![0.0, 0.0]));
+        // Silence is indistinguishable from loss.
+        s.on_silence(1);
+        assert_eq!(s.outcome(1), Some(SlotOutcome::Lost));
+        s.on_frame(2, &Payload::Raw(vec![1.0, 2.0]));
+        // A dangling reference may be the server's own erasure (slot 0
+        // was lost): zero the slot, expose nobody.
+        let echo = Payload::Echo { k: 1.0, coeffs: vec![1.0, 1.0], ids: vec![0, 2] };
+        assert_eq!(s.on_frame(3, &echo), SlotOutcome::Lost);
+        assert!(s.exposed().is_empty(), "channel loss must never expose");
+        // Aggregation still works over the zero-filled slots.
+        let g = s.aggregate_tracked();
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn lossy_mode_still_exposes_provable_malformations() {
+        let mut s = ParameterServer::new(5, 1, 2, Aggregator::CgcSum);
+        s.set_lossy(true);
+        s.begin_round();
+        s.on_frame(0, &Payload::Raw(vec![1.0, 0.0]));
+        // Self-reference: content-provable regardless of the channel.
+        let self_ref = Payload::Echo { k: 1.0, coeffs: vec![1.0], ids: vec![1] };
+        assert_eq!(s.on_frame(1, &self_ref), SlotOutcome::EchoExposed);
+        // A reference to a slot that has not even elapsed (slot 4): no
+        // erasure explains overhearing a frame that was never on air —
+        // exposed even under a lossy channel.
+        let future = Payload::Echo { k: 1.0, coeffs: vec![1.0, 1.0], ids: vec![0, 4] };
+        assert_eq!(s.on_frame(2, &future), SlotOutcome::EchoExposed);
+        let bad_k = Payload::Echo { k: f64::NAN, coeffs: vec![1.0], ids: vec![0] };
+        assert_eq!(s.on_frame(3, &bad_k), SlotOutcome::EchoExposed);
+        let dup = Payload::Echo { k: 1.0, coeffs: vec![1.0, 1.0], ids: vec![0, 0] };
+        assert_eq!(s.on_frame(4, &dup), SlotOutcome::EchoExposed);
+        assert_eq!(s.exposed().len(), 4);
+    }
+
+    #[test]
+    fn echo_refs_stored_reflects_the_round_state() {
+        let mut s = server(3, 0, 2);
+        s.on_frame(0, &Payload::Raw(vec![1.0, 2.0]));
+        assert!(s.echo_refs_stored(&[0]));
+        assert!(!s.echo_refs_stored(&[0, 1]), "slot 1 not yet stored");
+        assert!(!s.echo_refs_stored(&[7]), "out of range");
+    }
+
+    #[test]
+    fn reliable_mode_unchanged_by_default() {
+        // The pre-channel exposure semantics are the default.
+        let mut s = server(2, 1, 2);
+        s.on_silence(0);
+        assert_eq!(s.outcome(0), Some(SlotOutcome::Silent));
+        assert!(s.exposed().contains(&0));
     }
 }

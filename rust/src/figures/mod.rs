@@ -32,6 +32,10 @@
 //!   selection + labels); `echo-cgc figures --fig 2|3|4 --profile
 //!   smoke|full` runs them from the CLI, and the grid benches emit
 //!   `results/FIG_*.{svg,csv}` next to their `BENCH_*.json`.
+//! * [`paper_loss`] declares the lossy-channel family (`--fig loss`):
+//!   echo rate, communication savings and final error vs. the channel
+//!   loss probability ([`Axis::Loss`]), three charts from one lossy
+//!   sweep over the shared [`crate::sweep::presets::loss_sweep`] grid.
 //! * [`apply_axis_specs`] implements the ad-hoc ablation mini-DSL
 //!   (`--axis n=10,20,50 --axis f=0..4`): comma lists or inclusive
 //!   `a..b` integer ranges per axis key. Unless `b` is given explicitly,
@@ -54,6 +58,7 @@ use crate::byzantine::AttackKind;
 use crate::config::{ExperimentConfig, ModelKind};
 use crate::coordinator::Aggregator;
 use crate::metrics::{CsvTable, Summary};
+use crate::radio::ChannelModel;
 use crate::sweep::{presets, SweepCell, SweepGrid, SweepProfile, SweepReport};
 use std::fmt::Write as _;
 use std::fs;
@@ -163,6 +168,9 @@ pub enum Axis {
     Aggregator,
     Echo,
     Model,
+    /// The channel-loss axis: numeric for Perfect (0) / Bernoulli (p),
+    /// categorical for bursty Gilbert–Elliott channels.
+    Loss,
 }
 
 impl Axis {
@@ -177,6 +185,7 @@ impl Axis {
             Axis::Aggregator => "aggregator",
             Axis::Echo => "echo",
             Axis::Model => "model",
+            Axis::Loss => "loss",
         }
     }
 
@@ -191,6 +200,7 @@ impl Axis {
             "aggregator" | "agg" => Axis::Aggregator,
             "echo" => Axis::Echo,
             "model" => Axis::Model,
+            "loss" | "channel" => Axis::Loss,
             _ => return None,
         })
     }
@@ -210,6 +220,10 @@ impl Axis {
                 AxisValue::Cat(label.to_string())
             }
             Axis::Model => AxisValue::Cat(c.model.to_string()),
+            Axis::Loss => match c.channel.loss_axis_value() {
+                Some(p) => AxisValue::Num(p),
+                None => AxisValue::Cat(c.channel.tag()),
+            },
         }
     }
 }
@@ -263,6 +277,7 @@ pub struct ReplicateCell {
     pub aggregator: &'static str,
     pub sigma: f64,
     pub echo_enabled: bool,
+    pub channel: ChannelModel,
     /// Seeds of the replicates, in grid order.
     pub seeds: Vec<u64>,
     samples: Vec<SweepCell>,
@@ -279,6 +294,7 @@ impl ReplicateCell {
             && self.aggregator == c.aggregator
             && self.sigma.to_bits() == c.sigma.to_bits()
             && self.echo_enabled == c.echo_enabled
+            && self.channel == c.channel
     }
 
     /// Number of replicate samples in the group.
@@ -342,6 +358,7 @@ pub fn replicates(report: &SweepReport) -> Vec<ReplicateCell> {
                 aggregator: c.aggregator,
                 sigma: c.sigma,
                 echo_enabled: c.echo_enabled,
+                channel: c.channel,
                 seeds: vec![c.seed],
                 samples: vec![c.clone()],
             }),
@@ -634,6 +651,70 @@ pub fn paper_figure(id: FigId, profile: SweepProfile) -> FigureJob {
     }
 }
 
+/// The loss figure family (`echo-cgc figures --fig loss`): one lossy
+/// sweep ([`presets::loss_sweep`] + replicate seeds), rendered as three
+/// charts against the loss-probability axis — echo rate, communication
+/// savings, and final error. The channel's degradation story in one run.
+#[derive(Clone, Debug)]
+pub struct LossFigureJob {
+    pub grid: SweepGrid,
+    /// `(metric, artifact stem, title, log_y)` per chart.
+    pub charts: Vec<(Metric, &'static str, &'static str, bool)>,
+}
+
+impl LossFigureJob {
+    /// Execute the grid once and render every chart from the same report
+    /// (byte-identical at any `threads` value, like every figure).
+    pub fn run(&self, threads: usize) -> (SweepReport, Vec<(Chart, &'static str)>) {
+        let report = self.grid.run(threads);
+        let charts = self
+            .charts
+            .iter()
+            .map(|&(metric, stem, title, log_y)| {
+                let spec = SeriesSpec {
+                    metric,
+                    x: Axis::Loss,
+                    series: Some(Axis::Sigma),
+                    pins: vec![],
+                };
+                let mut chart = Chart::from_report(&report, &spec, title);
+                chart.log_y = log_y;
+                (chart, stem)
+            })
+            .collect();
+        (report, charts)
+    }
+}
+
+/// Declare the loss figure at the given profile.
+pub fn paper_loss(profile: SweepProfile) -> LossFigureJob {
+    let mut grid = presets::loss_sweep(profile);
+    grid.seeds = replicate_seeds(profile);
+    LossFigureJob {
+        grid,
+        charts: vec![
+            (
+                Metric::CommSavings,
+                "FIG_loss_savings",
+                "communication savings vs channel loss probability",
+                false,
+            ),
+            (
+                Metric::EchoRate,
+                "FIG_loss_echo_rate",
+                "echo rate vs channel loss probability",
+                false,
+            ),
+            (
+                Metric::FinalDistSq,
+                "FIG_loss_error",
+                "final ‖w − w*‖² vs channel loss probability",
+                true,
+            ),
+        ],
+    }
+}
+
 /// Axes a grid actually sweeps (≥ 2 distinct values), in nesting order —
 /// the default x/series choice for ad-hoc ablations.
 pub fn swept_axes(grid: &SweepGrid) -> Vec<Axis> {
@@ -677,6 +758,9 @@ pub fn swept_axes(grid: &SweepGrid) -> Vec<Axis> {
     if grid.echo.len() > 1 {
         out.push(Axis::Echo);
     }
+    if grid.channels.len() > 1 {
+        out.push(Axis::Loss);
+    }
     out
 }
 
@@ -714,10 +798,24 @@ pub fn apply_axis_specs(grid: &mut SweepGrid, specs: &[String]) -> Result<(), St
             }
             "model" => grid.models = parse_named_list(val, ModelKind::parse, "model")?,
             "echo" => grid.echo = parse_bool_list(val)?,
+            // The loss axis takes Bernoulli erasure probabilities (0 =
+            // lossless); full channel specs (Gilbert–Elliott) go through
+            // the base config's `--channel` flag instead, because their
+            // comma-ridden syntax collides with the list separator.
+            // "channel" is the same alias Axis::parse accepts.
+            "loss" | "channel" => {
+                let ps = parse_f64_list(val)?;
+                for &p in &ps {
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("loss axis: probability {p} outside [0, 1]"));
+                    }
+                }
+                grid.channels = ps.into_iter().map(|p| ChannelModel::Bernoulli { p }).collect();
+            }
             other => {
                 return Err(format!(
                     "unknown axis '{other}' \
-                     (expected n|f|b|d|sigma|seed|attack|aggregator|model|echo)"
+                     (expected n|f|b|d|sigma|seed|attack|aggregator|model|echo|loss)"
                 ))
             }
         }
@@ -748,7 +846,8 @@ pub fn apply_axis_specs(grid: &mut SweepGrid, specs: &[String]) -> Result<(), St
 
 /// Write `<dir>/index.html` — a gallery linking every figure and bench
 /// artifact in `dir`: `FIG_*.svg` embedded as images (with their `.csv`
-/// siblings linked), `BENCH_*.json` / `sweep_*.json` reports as a list.
+/// siblings linked), `BENCH_*.json` / `sweep_*.json` / `FIG_*.json`
+/// reports as a list.
 /// Names are sorted, so the page is deterministic given the directory
 /// contents. CI's `bench-smoke` job uploads it with the artifacts.
 pub fn write_html_index<P: AsRef<Path>>(dir: P) -> io::Result<PathBuf> {
@@ -764,7 +863,9 @@ pub fn write_html_index<P: AsRef<Path>>(dir: P) -> io::Result<PathBuf> {
         } else if name.starts_with("FIG_") && name.ends_with(".csv") {
             csvs.push(name);
         } else if name.ends_with(".json")
-            && (name.starts_with("BENCH_") || name.starts_with("sweep_"))
+            && (name.starts_with("BENCH_")
+                || name.starts_with("sweep_")
+                || name.starts_with("FIG_"))
         {
             jsons.push(name);
         }
@@ -877,12 +978,14 @@ mod tests {
             seed,
             rounds: 5,
             echo_enabled: true,
+            channel: ChannelModel::Perfect,
             echo_rate: 0.5,
             comm_savings: savings,
             final_loss: 0.1,
             final_dist_sq: dist,
             uplink_bits_total: 100,
             exposed: 0,
+            channel_totals: crate::sim::ChannelTotals::default(),
             empirical_rho: None,
             theory_rho: Some(0.9),
             trace_policy: TracePolicy::Summary,
@@ -1043,6 +1146,64 @@ mod tests {
     }
 
     #[test]
+    fn loss_axis_plots_numeric_for_bernoulli_and_splits_channels() {
+        let mut a = cell(10, 0.05, 1, 0.6, None);
+        a.channel = ChannelModel::Bernoulli { p: 0.2 };
+        let b = cell(10, 0.05, 1, 0.8, None); // perfect channel
+        let r = report(vec![b, a]);
+        let rc = replicates(&r);
+        assert_eq!(rc.len(), 2, "channel is part of the replicate key");
+        let series = select(
+            &rc,
+            &SeriesSpec {
+                metric: Metric::CommSavings,
+                x: Axis::Loss,
+                series: None,
+                pins: vec![],
+            },
+        );
+        assert_eq!(series.len(), 1);
+        let xs: Vec<f64> = series[0].points.iter().map(|p| p.x.num().unwrap()).collect();
+        assert_eq!(xs, vec![0.0, 0.2], "perfect plots at 0, bernoulli at p, sorted");
+        // Gilbert–Elliott falls back to a categorical label.
+        let ge = ChannelModel::GilbertElliott { p_good: 0.0, p_bad: 0.5, p_gb: 0.1, p_bg: 0.4 };
+        let mut g = cell(10, 0.05, 1, 0.5, None);
+        g.channel = ge;
+        assert!(matches!(Axis::Loss.value(&replicates(&report(vec![g]))[0]), AxisValue::Cat(_)));
+    }
+
+    #[test]
+    fn paper_loss_declares_three_charts_over_one_grid() {
+        for profile in [SweepProfile::Smoke, SweepProfile::Full] {
+            let job = paper_loss(profile);
+            assert_eq!(job.charts.len(), 3);
+            assert!(job.grid.seeds.len() >= 2, "loss figure needs replicate seeds");
+            assert!(job.grid.channels.len() >= 3, "loss axis too small");
+            assert!(job.grid.channels[0].is_lossless(), "loss axis anchors at 0");
+            let stems: Vec<&str> = job.charts.iter().map(|c| c.1).collect();
+            assert!(stems.contains(&"FIG_loss_savings"));
+            assert!(stems.contains(&"FIG_loss_echo_rate"));
+            assert!(stems.contains(&"FIG_loss_error"));
+        }
+    }
+
+    #[test]
+    fn axis_dsl_loss_builds_bernoulli_channels() {
+        let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
+        apply_axis_specs(&mut grid, &["loss=0,0.1,0.3".to_string()]).unwrap();
+        assert_eq!(
+            grid.channels,
+            vec![
+                ChannelModel::Bernoulli { p: 0.0 },
+                ChannelModel::Bernoulli { p: 0.1 },
+                ChannelModel::Bernoulli { p: 0.3 },
+            ]
+        );
+        assert_eq!(swept_axes(&grid), vec![Axis::Loss]);
+        assert!(apply_axis_specs(&mut grid, &["loss=1.5".to_string()]).is_err());
+    }
+
+    #[test]
     fn axis_dsl_builds_cross_products() {
         let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
         let specs: Vec<String> = vec![
@@ -1077,6 +1238,7 @@ mod tests {
         fs::write(dir.join("FIG_a.svg"), "<svg/>").unwrap();
         fs::write(dir.join("FIG_a.csv"), "x\n").unwrap();
         fs::write(dir.join("BENCH_x.json"), "{}").unwrap();
+        fs::write(dir.join("FIG_loss_report.json"), "{}").unwrap();
         fs::write(dir.join("notes.txt"), "ignored").unwrap();
         let path = write_html_index(&dir).unwrap();
         let html = fs::read_to_string(&path).unwrap();
@@ -1085,6 +1247,7 @@ mod tests {
         assert!(a < b, "figures must list in sorted order");
         assert!(html.contains("<a href=\"FIG_a.csv\">csv</a>"));
         assert!(html.contains("BENCH_x.json"));
+        assert!(html.contains("FIG_loss_report.json"), "figure reports join the gallery");
         assert!(!html.contains("notes.txt"));
         let _ = fs::remove_dir_all(&dir);
     }

@@ -8,17 +8,20 @@
 //! * `analyze`        — print the theory constants (β, γ, ρ, r-bound, C, …)
 //! * `figures`        — reproduce the paper's figures. Measured,
 //!                      sweep-engine-backed with replicate seeds:
-//!                      `--fig 2|3|4|curves|all --profile smoke|full`
+//!                      `--fig 2|3|4|curves|loss|all --profile smoke|full`
 //!                      (writes `results/FIG_*.{svg,csv}`; `curves` is
 //!                      the faceted error-vs-round figure from a traced
-//!                      sweep, with the contraction fit overlaid); ad-hoc
-//!                      ablations via the `--axis` mini-DSL
-//!                      (`--axis n=10,20,50 --axis f=0..4`, comma lists
-//!                      or inclusive integer ranges, plus `--x`,
-//!                      `--series`, `--metric`); or the closed-form
-//!                      theory Figures 1a–1d (`--which 1a|1b|1c|1d|all`).
-//!                      Every run refreshes `results/index.html`, the
-//!                      gallery linking all FIG/BENCH artifacts
+//!                      sweep, with the contraction fit overlaid; `loss`
+//!                      is the lossy-channel family — echo rate, comm
+//!                      savings and final error vs. loss probability);
+//!                      ad-hoc ablations via the `--axis` mini-DSL
+//!                      (`--axis n=10,20,50 --axis f=0..4 --axis
+//!                      loss=0,0.1,0.3`, comma lists or inclusive integer
+//!                      ranges, plus `--x`, `--series`, `--metric`); or
+//!                      the closed-form theory Figures 1a–1d
+//!                      (`--which 1a|1b|1c|1d|all`). Every run refreshes
+//!                      `results/index.html`, the gallery linking all
+//!                      FIG/BENCH artifacts
 //! * `bench-comm`     — measured communication savings vs the raw-gradient
 //!                      baseline across σ (the §4.3 headline numbers)
 //! * `echo-rate`      — measured echo rate vs the analytic lower bound
@@ -41,16 +44,25 @@
 //! flag sets the *cell-level* parallelism (each cell runs serially
 //! inside).
 //!
+//! Every subcommand also accepts `--channel
+//! perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg` (the radio's loss
+//! model; `perfect` is the paper's reliable broadcast and the default)
+//! and `--uplink-retries <k>` (bounded server-bound ARQ).
+//!
 //! Examples:
 //! ```text
 //! echo-cgc train --n 50 --f 5 --sigma 0.05 --rounds 500
 //! echo-cgc train --d 100000 --threads auto
+//! echo-cgc train --n 20 --f 2 --channel bernoulli=0.2
 //! echo-cgc figures --fig all --profile smoke --threads auto
 //! echo-cgc figures --fig curves --profile smoke --threads auto
+//! echo-cgc figures --fig loss --profile smoke --threads auto
 //! echo-cgc figures --axis n=10,20,50 --axis f=0..4 --metric comm_savings
+//! echo-cgc figures --axis loss=0,0.1,0.3 --metric echo_rate
 //! echo-cgc figures --which all
 //! echo-cgc attack-matrix --n 25 --f 2 --rounds 300
 //! echo-cgc sweep --grid comm-savings --profile smoke --threads auto
+//! echo-cgc sweep --grid loss --profile smoke --threads auto
 //! echo-cgc sweep --grid convergence --profile smoke --trace every_k=4,max=64
 //! ```
 
@@ -66,8 +78,9 @@ fn usage() -> ! {
         "usage: echo-cgc <train|analyze|figures|bench-comm|echo-rate|attack-matrix|convergence|multihop|sweep> [--key value ...]\n\
          common flags:  --n --f --b --d --rounds --sigma --attack --aggregator --seed --threads <k|auto>\n\
                         --trace summary|full|every_k=K,max=M (per-round trajectory retention)\n\
-         sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|quick --profile smoke|full --out <path>\n\
-         figures flags: --fig 2|3|4|curves|all --profile smoke|full --out-dir <dir> (paper figures)\n\
+                        --channel perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg --uplink-retries <k> (lossy radio)\n\
+         sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|loss|quick --profile smoke|full --out <path>\n\
+         figures flags: --fig 2|3|4|curves|loss|all --profile smoke|full --out-dir <dir> (paper figures)\n\
                         --axis key=v1,v2|a..b [--x axis] [--series axis] [--metric name] (ad-hoc ablation)\n\
                         --which 1a|1b|1c|1d|all (closed-form theory figures)\n\
          run `echo-cgc train --n 20 --f 2 --rounds 200` for a quick start"
@@ -192,7 +205,7 @@ fn cmd_sweep(
     let mut grid = presets::by_name(grid_name, profile).unwrap_or_else(|| {
         eprintln!(
             "unknown grid '{grid_name}' \
-             (expected attack-matrix|gv-baseline|comm-savings|convergence|quick)"
+             (expected attack-matrix|gv-baseline|comm-savings|convergence|loss|quick)"
         );
         std::process::exit(2);
     });
@@ -380,9 +393,11 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
         }
         let mut ids: Vec<FigId> = Vec::new();
         let mut want_curves = false;
+        let mut want_loss = false;
         if figs == "all" {
             ids = FigId::all().to_vec();
             want_curves = true;
+            want_loss = true;
         } else {
             for v in figs.split(',') {
                 let v = v.trim();
@@ -390,8 +405,12 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                     want_curves = true;
                     continue;
                 }
+                if v == "loss" {
+                    want_loss = true;
+                    continue;
+                }
                 ids.push(FigId::parse(v).unwrap_or_else(|| {
-                    eprintln!("unknown figure '{v}' (expected 2|3|4|curves|all)");
+                    eprintln!("unknown figure '{v}' (expected 2|3|4|curves|loss|all)");
                     std::process::exit(2);
                 }));
             }
@@ -424,6 +443,25 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
             let (csv_path, svg_path) =
                 fig.write(&out_dir, "FIG_curves").expect("write curves figure");
             println!("wrote {} + {}", csv_path.display(), svg_path.display());
+        }
+        if want_loss {
+            let job = figures::paper_loss(profile);
+            println!(
+                "figures: FIG_loss — lossy grid '{}', {} cells × profile {} on {} threads",
+                job.grid.name,
+                job.grid.len(),
+                profile.name(),
+                threads
+            );
+            let (report, charts) = job.run(threads);
+            report
+                .write_json(format!("{out_dir}/FIG_loss_report.json"))
+                .expect("write loss report");
+            for (chart, stem) in charts {
+                let (csv_path, svg_path) = chart.write(&out_dir, stem).expect("write figure");
+                println!("wrote {} + {}", csv_path.display(), svg_path.display());
+            }
+            println!("wrote {out_dir}/FIG_loss_report.json");
         }
         let index = figures::write_html_index(&out_dir).expect("write html index");
         println!("wrote {}", index.display());

@@ -1,0 +1,371 @@
+//! Unreliable single-hop channel models: erasures and partial overhearing.
+//!
+//! The paper's radio (§2.1) assumes **reliable local broadcast** — every
+//! receiver hears every frame. That assumption does all the work behind
+//! Echo-CGC's headline savings (rich overheard spans ⇒ frequent echoes)
+//! *and* behind its exposure argument (a dangling echo reference is proof
+//! of Byzantine behaviour only if the referenced frame was certainly
+//! delivered). This module makes the assumption a *knob* instead of a
+//! constant: a pluggable [`ChannelModel`] decides, per
+//! `(round, slot, attempt, receiver)`, whether a transmission is heard.
+//!
+//! Three models:
+//!
+//! * [`ChannelModel::Perfect`] — the paper's reliable broadcast (the
+//!   default; behaviour and serialized artifacts are byte-identical to
+//!   the pre-channel code path);
+//! * [`ChannelModel::Bernoulli`] — iid per-link erasures with loss
+//!   probability `p`: every `(round, slot, attempt, receiver)` draw is an
+//!   independent coin, the classic memoryless erasure channel;
+//! * [`ChannelModel::GilbertElliott`] — the two-state bursty channel
+//!   (Gilbert 1960, Elliott 1963): each receiver's link sits in a *good*
+//!   or *bad* state with per-state loss probabilities `p_good` / `p_bad`,
+//!   and flips state with probabilities `p_gb` (good→bad) and `p_bg`
+//!   (bad→good) after every transmission event it observes. Bursts model
+//!   fading/interference that iid erasures cannot.
+//!
+//! **Determinism.** Erasure and state-transition draws are *pure hash
+//! functions* of `(channel seed, round, slot, attempt, receiver, salt)` —
+//! no draw consumes a shared RNG stream, so wiring a channel into the
+//! simulation perturbs no existing random sequence, and the result is
+//! bit-identical at any thread count. The Gilbert–Elliott state itself is
+//! sequential per receiver, but it only advances inside the (inherently
+//! serial) TDMA slot loop, in a fixed receiver order — the thread pool
+//! never touches it. `rust/tests/channel.rs` pins both properties plus
+//! golden Gilbert–Elliott state sequences.
+//!
+//! **Who uses it.** [`crate::radio::RadioRound::broadcast`] consults the
+//! channel per receiver and per retransmission attempt (single-hop), and
+//! [`crate::radio::multihop::MultiHopRadio`] reuses the same models for
+//! per-neighbour overhearing and relay links (multi-hop). The server
+//! downlink stays reliable: the parameter server is mains-powered and can
+//! shout; the paper's cost metric and the power-limited-device motivation
+//! are both about the worker uplink.
+
+use crate::rng::SplitMix64;
+
+/// Salt separating erasure draws from state-transition draws.
+const SALT_ERASE: u64 = 0x45_52_41_53;
+const SALT_STATE: u64 = 0x53_54_41_54;
+
+/// A configured channel: the unreliability law of the radio.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum ChannelModel {
+    /// Reliable local broadcast — the paper's §2.1 assumption.
+    #[default]
+    Perfect,
+    /// Memoryless erasures: every transmission is independently lost with
+    /// probability `p` per receiver.
+    Bernoulli { p: f64 },
+    /// Two-state bursty erasures: per-receiver Markov chain over
+    /// {good, bad} with loss probabilities `p_good`/`p_bad` and transition
+    /// probabilities `p_gb` (good→bad) / `p_bg` (bad→good), advanced once
+    /// per transmission event the link observes.
+    GilbertElliott { p_good: f64, p_bad: f64, p_gb: f64, p_bg: f64 },
+}
+
+impl ChannelModel {
+    /// Parse the CLI/config surface:
+    /// `perfect | bernoulli=p | ge=p_good,p_bad,p_gb,p_bg`.
+    /// Probabilities outside `[0, 1]` are rejected (the range check is
+    /// [`Self::validate`] — one source of truth for the domain).
+    pub fn parse(s: &str) -> Option<ChannelModel> {
+        let num = |v: &str| -> Option<f64> { v.trim().parse().ok() };
+        let model = if s == "perfect" || s == "none" {
+            ChannelModel::Perfect
+        } else if let Some(v) = s.strip_prefix("bernoulli=") {
+            ChannelModel::Bernoulli { p: num(v)? }
+        } else if let Some(v) = s.strip_prefix("ge=") {
+            let parts: Vec<&str> = v.split(',').collect();
+            if parts.len() != 4 {
+                return None;
+            }
+            ChannelModel::GilbertElliott {
+                p_good: num(parts[0])?,
+                p_bad: num(parts[1])?,
+                p_gb: num(parts[2])?,
+                p_bg: num(parts[3])?,
+            }
+        } else {
+            return None;
+        };
+        model.validate().ok()?;
+        Some(model)
+    }
+
+    /// Canonical textual form (round-trips through [`Self::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            ChannelModel::Perfect => "perfect".to_string(),
+            ChannelModel::Bernoulli { p } => format!("bernoulli={p}"),
+            ChannelModel::GilbertElliott { p_good, p_bad, p_gb, p_bg } => {
+                format!("ge={p_good},{p_bad},{p_gb},{p_bg}")
+            }
+        }
+    }
+
+    /// Filesystem/CSV-safe short tag (no `=`/`,`) for cell labels.
+    pub fn tag(&self) -> String {
+        match self {
+            ChannelModel::Perfect => "perfect".to_string(),
+            ChannelModel::Bernoulli { p } => format!("bern{p}"),
+            ChannelModel::GilbertElliott { p_good, p_bad, p_gb, p_bg } => {
+                format!("ge{p_good}-{p_bad}-{p_gb}-{p_bg}")
+            }
+        }
+    }
+
+    /// `true` when the model can never drop a frame. `Bernoulli {p: 0}`
+    /// and a Gilbert–Elliott chain that never loses are lossless: they
+    /// behave — and **serialize** — exactly like `Perfect`, which is what
+    /// keeps `--channel bernoulli=0.0` artifacts byte-identical to the
+    /// pre-channel ones (pinned by `rust/tests/channel.rs`). A GE chain
+    /// is loss-free when the good state never drops and either the bad
+    /// state never drops or is unreachable (`p_gb = 0`; every link
+    /// starts good).
+    pub fn is_lossless(&self) -> bool {
+        match *self {
+            ChannelModel::Perfect => true,
+            ChannelModel::Bernoulli { p } => p == 0.0,
+            ChannelModel::GilbertElliott { p_good, p_bad, p_gb, .. } => {
+                p_good == 0.0 && (p_bad == 0.0 || p_gb == 0.0)
+            }
+        }
+    }
+
+    /// Numeric loss coordinate for the figure layer's `loss` axis:
+    /// `Perfect` plots at 0, `Bernoulli` at `p`; the bursty model has no
+    /// single loss probability and falls back to a categorical label.
+    pub fn loss_axis_value(&self) -> Option<f64> {
+        match *self {
+            ChannelModel::Perfect => Some(0.0),
+            ChannelModel::Bernoulli { p } => Some(p),
+            ChannelModel::GilbertElliott { .. } => None,
+        }
+    }
+
+    /// Probabilities must live in `[0, 1]` (programmatic construction can
+    /// bypass [`Self::parse`]; `ExperimentConfig::validate` calls this).
+    pub fn validate(&self) -> Result<(), String> {
+        let check = |name: &str, p: f64| {
+            if (0.0..=1.0).contains(&p) {
+                Ok(())
+            } else {
+                Err(format!("channel: {name} = {p} outside [0, 1]"))
+            }
+        };
+        match *self {
+            ChannelModel::Perfect => Ok(()),
+            ChannelModel::Bernoulli { p } => check("p", p),
+            ChannelModel::GilbertElliott { p_good, p_bad, p_gb, p_bg } => {
+                check("p_good", p_good)?;
+                check("p_bad", p_bad)?;
+                check("p_gb", p_gb)?;
+                check("p_bg", p_bg)
+            }
+        }
+    }
+}
+
+/// The runtime channel: a model, a seed, and (for Gilbert–Elliott) the
+/// per-receiver link state. Receivers are indexed `0..n_receivers`; by
+/// convention the single-hop radio uses `0..n` for workers and `n` for
+/// the parameter server.
+#[derive(Clone, Debug)]
+pub struct Channel {
+    model: ChannelModel,
+    seed: u64,
+    /// Gilbert–Elliott per-receiver state (`true` = bad). Unused by the
+    /// memoryless models.
+    bad: Vec<bool>,
+}
+
+impl Channel {
+    /// Every link starts in the good state.
+    pub fn new(model: ChannelModel, seed: u64, n_receivers: usize) -> Channel {
+        Channel { model, seed, bad: vec![false; n_receivers] }
+    }
+
+    pub fn model(&self) -> ChannelModel {
+        self.model
+    }
+
+    /// Uniform draw in `[0, 1)` — a pure function of the coordinates.
+    fn draw(&self, round: u64, slot: u64, attempt: u64, receiver: u64, salt: u64) -> f64 {
+        let mut h = self.seed;
+        h ^= round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^= slot.wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+        h ^= attempt.wrapping_mul(0x1656_67B1_9E37_79F9);
+        h ^= receiver.wrapping_mul(0x27D4_EB2F_1656_67C5);
+        h ^= salt.wrapping_mul(0x94D0_49BB_1331_11EB);
+        let mut sm = SplitMix64::new(h);
+        (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Does `receiver` hear the frame transmitted at `(round, slot)` on
+    /// its `attempt`-th (re)transmission?
+    ///
+    /// For the memoryless models this is a pure function of the
+    /// coordinates. For Gilbert–Elliott the erasure is drawn from the
+    /// link's current state and the state then advances — once per call,
+    /// so callers must query links in a fixed serial order (the TDMA slot
+    /// loop does).
+    pub fn delivers(&mut self, round: usize, slot: usize, attempt: u64, receiver: usize) -> bool {
+        match self.model {
+            ChannelModel::Perfect => true,
+            ChannelModel::Bernoulli { p } => {
+                self.draw(round as u64, slot as u64, attempt, receiver as u64, SALT_ERASE) >= p
+            }
+            ChannelModel::GilbertElliott { p_good, p_bad, p_gb, p_bg } => {
+                let bad = self.bad[receiver];
+                let loss = if bad { p_bad } else { p_good };
+                let u = self.draw(round as u64, slot as u64, attempt, receiver as u64, SALT_ERASE);
+                let flip_p = if bad { p_bg } else { p_gb };
+                let t = self.draw(round as u64, slot as u64, attempt, receiver as u64, SALT_STATE);
+                if t < flip_p {
+                    self.bad[receiver] = !bad;
+                }
+                u >= loss
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_canonical_labels() {
+        for m in [
+            ChannelModel::Perfect,
+            ChannelModel::Bernoulli { p: 0.25 },
+            ChannelModel::GilbertElliott { p_good: 0.05, p_bad: 0.5, p_gb: 0.1, p_bg: 0.4 },
+        ] {
+            assert_eq!(ChannelModel::parse(&m.label()), Some(m));
+        }
+        assert_eq!(ChannelModel::parse("none"), Some(ChannelModel::Perfect));
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_out_of_range() {
+        for bad in [
+            "bogus",
+            "bernoulli=",
+            "bernoulli=1.5",
+            "bernoulli=-0.1",
+            "ge=0.1",
+            "ge=0.1,0.2,0.3",
+            "ge=0.1,0.2,0.3,1.4",
+            "ge=a,b,c,d",
+        ] {
+            assert_eq!(ChannelModel::parse(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn lossless_detection() {
+        assert!(ChannelModel::Perfect.is_lossless());
+        assert!(ChannelModel::Bernoulli { p: 0.0 }.is_lossless());
+        assert!(!ChannelModel::Bernoulli { p: 0.1 }.is_lossless());
+        assert!(ChannelModel::GilbertElliott { p_good: 0.0, p_bad: 0.0, p_gb: 0.5, p_bg: 0.5 }
+            .is_lossless());
+        assert!(!ChannelModel::GilbertElliott { p_good: 0.0, p_bad: 1.0, p_gb: 0.5, p_bg: 0.5 }
+            .is_lossless());
+        // Lossy bad state that is unreachable (p_gb = 0, links start
+        // good) never drops either.
+        assert!(ChannelModel::GilbertElliott { p_good: 0.0, p_bad: 1.0, p_gb: 0.0, p_bg: 0.5 }
+            .is_lossless());
+    }
+
+    #[test]
+    fn perfect_always_delivers() {
+        let mut ch = Channel::new(ChannelModel::Perfect, 1, 4);
+        for a in 0..10 {
+            assert!(ch.delivers(0, 0, a, 2));
+        }
+    }
+
+    #[test]
+    fn bernoulli_extremes() {
+        let mut never = Channel::new(ChannelModel::Bernoulli { p: 1.0 }, 3, 4);
+        let mut always = Channel::new(ChannelModel::Bernoulli { p: 0.0 }, 3, 4);
+        for r in 0..20 {
+            assert!(!never.delivers(r, 0, 0, 1));
+            assert!(always.delivers(r, 0, 0, 1));
+        }
+    }
+
+    #[test]
+    fn bernoulli_is_a_pure_function_of_coordinates() {
+        let mut a = Channel::new(ChannelModel::Bernoulli { p: 0.5 }, 99, 8);
+        let mut b = Channel::new(ChannelModel::Bernoulli { p: 0.5 }, 99, 8);
+        // Same coordinates, independent instances, arbitrary query order.
+        let coords: Vec<(usize, usize, u64, usize)> =
+            (0..64).map(|i| (i % 7, i % 5, (i % 3) as u64, i % 8)).collect();
+        let fwd: Vec<bool> = coords.iter().map(|&(r, s, a_, v)| a.delivers(r, s, a_, v)).collect();
+        let rev: Vec<bool> =
+            coords.iter().rev().map(|&(r, s, a_, v)| b.delivers(r, s, a_, v)).collect();
+        let rev_fwd: Vec<bool> = rev.into_iter().rev().collect();
+        assert_eq!(fwd, rev_fwd);
+        // Roughly half deliver at p = 0.5.
+        let hits = fwd.iter().filter(|&&x| x).count();
+        assert!(hits > 10 && hits < 54, "hits = {hits}");
+    }
+
+    #[test]
+    fn different_seeds_draw_differently() {
+        let mut a = Channel::new(ChannelModel::Bernoulli { p: 0.5 }, 1, 2);
+        let mut b = Channel::new(ChannelModel::Bernoulli { p: 0.5 }, 2, 2);
+        let mut differ = 0;
+        for r in 0..256 {
+            if a.delivers(r, 0, 0, 0) != b.delivers(r, 0, 0, 0) {
+                differ += 1;
+            }
+        }
+        assert!(differ > 0, "independent seeds must decorrelate the draws");
+    }
+
+    #[test]
+    fn gilbert_elliott_alternates_under_forced_flips() {
+        // p_gb = p_bg = 1 flips the state after every event; p_good = 0,
+        // p_bad = 1 makes delivery a pure function of the state. The
+        // sequence is deterministic by construction: G,B,G,B,…
+        let m = ChannelModel::GilbertElliott { p_good: 0.0, p_bad: 1.0, p_gb: 1.0, p_bg: 1.0 };
+        let mut ch = Channel::new(m, 7, 3);
+        let seq: Vec<bool> = (0..6).map(|a| ch.delivers(0, 0, a, 1)).collect();
+        assert_eq!(seq, vec![true, false, true, false, true, false]);
+        // Each receiver owns its chain: receiver 2 starts fresh in good.
+        assert!(ch.delivers(0, 0, 0, 2));
+    }
+
+    #[test]
+    fn gilbert_elliott_absorbs_into_the_bad_state() {
+        // good→bad is certain, bad→good impossible: first event delivers
+        // (good, zero loss), everything after is lost.
+        let m = ChannelModel::GilbertElliott { p_good: 0.0, p_bad: 1.0, p_gb: 1.0, p_bg: 0.0 };
+        let mut ch = Channel::new(m, 11, 2);
+        let seq: Vec<bool> = (0..5).map(|a| ch.delivers(0, 0, a, 0)).collect();
+        assert_eq!(seq, vec![true, false, false, false, false]);
+    }
+
+    #[test]
+    fn validate_catches_bad_probabilities() {
+        assert!(ChannelModel::Bernoulli { p: 1.5 }.validate().is_err());
+        assert!(ChannelModel::GilbertElliott { p_good: 0.1, p_bad: 0.2, p_gb: -0.1, p_bg: 0.5 }
+            .validate()
+            .is_err());
+        assert!(ChannelModel::Bernoulli { p: 0.3 }.validate().is_ok());
+    }
+
+    #[test]
+    fn loss_axis_values() {
+        assert_eq!(ChannelModel::Perfect.loss_axis_value(), Some(0.0));
+        assert_eq!(ChannelModel::Bernoulli { p: 0.2 }.loss_axis_value(), Some(0.2));
+        assert_eq!(
+            ChannelModel::GilbertElliott { p_good: 0.0, p_bad: 1.0, p_gb: 0.1, p_bg: 0.3 }
+                .loss_axis_value(),
+            None
+        );
+    }
+}

@@ -1,13 +1,23 @@
 //! Single-hop radio network substrate.
 //!
-//! Implements exactly the model of §2.1 of the paper:
+//! Implements the model of §2.1 of the paper, with the reliability
+//! assumption factored out into a pluggable [`channel::ChannelModel`]:
 //!
 //! * **single hop** — every node is within range of every other node and of
-//!   the parameter server; a broadcast is received by *all* of them;
-//! * **reliable local broadcast** — the channel is perfectly reliable; a
-//!   Byzantine node *cannot* send inconsistent payloads to different
-//!   receivers (everyone hears the same frame) and *cannot* spoof another
-//!   node's identity (the slot identifies the transmitter);
+//!   the parameter server; a broadcast is *on air* for all of them;
+//! * **local broadcast over a channel** — under the default
+//!   [`channel::ChannelModel::Perfect`] the channel is perfectly reliable
+//!   (the paper's assumption: everyone hears the same frame). Under a
+//!   lossy model each receiver — every listening worker *and* the
+//!   server — independently hears or misses each transmission; a frame
+//!   that is heard is always heard *consistently* (erasures, never
+//!   corruption), and a Byzantine node still cannot spoof another node's
+//!   identity (the slot identifies the transmitter);
+//! * **bounded uplink ARQ** — the server acknowledges receipt; a sender
+//!   whose frame the server missed retransmits up to the network's
+//!   configured `uplink_retries` extra times, every attempt charged
+//!   to the meter and overheard (with fresh channel draws) by listeners
+//!   who missed earlier copies;
 //! * **TDMA** — each communication round is divided into `n` slots; a
 //!   pre-determined schedule assigns exactly one transmitter per slot, so
 //!   collisions are impossible by construction. [`RadioRound`] enforces the
@@ -15,12 +25,21 @@
 //!   double transmissions in a slot panic (a model violation, not a
 //!   simulated fault);
 //! * **bit accounting** — every frame is serialized by [`crate::wire`] and
-//!   the meter charges its exact bit length; per-node and per-round
-//!   uplink/downlink counters feed the paper's communication-complexity
-//!   comparison, and an energy model (`E = bits × energy_per_bit`) feeds the
-//!   power-limited-device motivation.
+//!   the meter charges its exact bit length per attempt; per-node and
+//!   per-round uplink/downlink counters feed the paper's
+//!   communication-complexity comparison, and an energy model
+//!   (`E = bits × energy_per_bit`) feeds the power-limited-device
+//!   motivation. Receive energy is charged only to receivers that
+//!   actually heard a copy.
+//!
+//! The server **downlink stays reliable**: the parameter server is
+//! mains-powered and the paper's cost metric (and the power-limited-device
+//! motivation) is about the worker uplink.
 
+pub mod channel;
 pub mod multihop;
+
+pub use channel::{Channel, ChannelModel};
 
 use crate::wire::{bit_len, decode, encode, Encoding, Payload};
 
@@ -104,14 +123,18 @@ impl BitMeter {
         }
     }
 
-    fn charge_uplink(&mut self, sender: NodeId, bits: u64) {
+    /// Charge one transmission attempt's uplink bits to the sender.
+    /// Receive energy is charged separately per hearing receiver
+    /// ([`Self::charge_rx`]) — under a perfect channel that is everyone
+    /// but the sender, the pre-channel accounting exactly.
+    fn charge_tx(&mut self, sender: NodeId, bits: u64) {
         self.tx_bits[sender] += bits;
         self.round_uplink_bits += bits;
-        for i in 0..self.n {
-            if i != sender {
-                self.rx_bits[i] += bits;
-            }
-        }
+    }
+
+    /// Charge receive energy for one heard copy of a frame.
+    fn charge_rx(&mut self, receiver: NodeId, bits: u64) {
+        self.rx_bits[receiver] += bits;
     }
 
     fn charge_downlink(&mut self, bits: u64) {
@@ -138,6 +161,27 @@ impl BitMeter {
     }
 }
 
+/// The outcome of one slot's broadcast (primary or fallback) under the
+/// network's channel: who heard it, whether the server got it within the
+/// retransmit budget, and what it cost.
+#[derive(Clone, Debug)]
+pub struct Broadcast {
+    /// The payload as decoded by every receiver that heard any attempt
+    /// (erasure channel: a heard frame is always heard consistently).
+    pub payload: Payload,
+    /// Per-worker: did worker `i` hear at least one attempt?
+    /// `heard[sender]` is always `false` (a node does not overhear
+    /// itself).
+    pub heard: Vec<bool>,
+    /// Did the server receive the frame within the retransmit budget?
+    pub server_got: bool,
+    /// Transmissions on air (1 + retransmissions; 1 under a perfect
+    /// channel).
+    pub attempts: u64,
+    /// Total bits charged (`attempts ×` the frame's encoded bit length).
+    pub bits: u64,
+}
+
 /// The radio channel for one communication round.
 ///
 /// Constructed by [`RadioNetwork::begin_round`]; enforces that slots are
@@ -147,18 +191,29 @@ impl BitMeter {
 pub struct RadioRound<'a> {
     net: &'a mut RadioNetwork,
     next_slot: usize,
+    /// Transmission attempts consumed inside the current slot (primary
+    /// attempts + retransmissions + fallback attempts) — the channel's
+    /// `attempt` coordinate continues across a slot's fallback so no two
+    /// transmissions share a draw.
+    slot_attempts: u64,
+    /// Did the most recently elapsed slot carry a primary broadcast?
+    /// (Only then may a fallback follow; a silent slot clears it.)
+    last_slot_broadcast: bool,
 }
 
 impl<'a> RadioRound<'a> {
-    /// Broadcast `payload` in slot `slot`. Returns the payload *as decoded
-    /// by the receivers* — identical for all receivers (reliable local
-    /// broadcast) — plus its bit cost.
+    /// Broadcast `payload` in slot `slot`. Consults the network's
+    /// [`ChannelModel`] per receiver and per attempt: the sender
+    /// retransmits (fresh draws, fresh bit charges) until the server
+    /// receives the frame or the retransmit budget is exhausted. Under
+    /// the default perfect channel this is a single transmission heard by
+    /// everyone — the pre-channel behaviour exactly.
     ///
     /// Panics if `slot` is out of order or the transmitter does not own it:
     /// those are violations of the TDMA model itself (which even Byzantine
     /// nodes cannot commit — the schedule is enforced by the jam-resistant
     /// MAC, §2.1), so they are simulator bugs, not simulated behaviours.
-    pub fn broadcast(&mut self, slot: usize, sender: NodeId, payload: &Payload) -> (Payload, u64) {
+    pub fn broadcast(&mut self, slot: usize, sender: NodeId, payload: &Payload) -> Broadcast {
         assert_eq!(slot, self.next_slot, "slot used out of order");
         assert_eq!(
             sender,
@@ -167,12 +222,61 @@ impl<'a> RadioRound<'a> {
             self.net.schedule.owner(slot)
         );
         self.next_slot += 1;
+        self.slot_attempts = 0;
+        self.last_slot_broadcast = true;
+        self.transmit(slot, sender, payload)
+    }
+
+    /// A second transmission in the *same* slot, immediately after
+    /// [`Self::broadcast`] — the worker's fall-back-to-raw path when the
+    /// server missed (or could not reconstruct) its echo. Charged like any
+    /// broadcast; channel draws continue the slot's attempt sequence.
+    pub fn fallback(&mut self, slot: usize, sender: NodeId, payload: &Payload) -> Broadcast {
+        assert!(
+            slot + 1 == self.next_slot && self.last_slot_broadcast,
+            "fallback must immediately follow its slot's broadcast"
+        );
+        assert_eq!(
+            sender,
+            self.net.schedule.owner(slot),
+            "node {sender} transmitted in slot {slot} owned by {}",
+            self.net.schedule.owner(slot)
+        );
+        // One fallback per slot: a second call is a simulator bug.
+        self.last_slot_broadcast = false;
+        self.transmit(slot, sender, payload)
+    }
+
+    fn transmit(&mut self, slot: usize, sender: NodeId, payload: &Payload) -> Broadcast {
         let enc = self.net.encoding;
         let bytes = encode(payload, enc);
-        let bits = (bytes.len() as u64) * 8;
-        self.net.meter.charge_uplink(sender, bits);
+        let bits1 = (bytes.len() as u64) * 8;
+        let n = self.net.schedule.n_slots();
+        let round = self.net.round;
+        let budget = 1 + self.net.uplink_retries as u64;
+        let mut heard = vec![false; n];
+        let mut server_got = false;
+        let mut attempts = 0u64;
+        let mut bits = 0u64;
+        while attempts < budget && !server_got {
+            let a = self.slot_attempts;
+            self.slot_attempts += 1;
+            attempts += 1;
+            self.net.meter.charge_tx(sender, bits1);
+            bits += bits1;
+            for (r, h) in heard.iter_mut().enumerate() {
+                if r != sender && self.net.channel.delivers(round, slot, a, r) {
+                    *h = true;
+                    // Receive energy per heard copy (a retransmission a
+                    // listener hears again still costs it energy).
+                    self.net.meter.charge_rx(r, bits1);
+                }
+            }
+            // The server is receiver id `n` on the channel.
+            server_got = self.net.channel.delivers(round, slot, a, n);
+        }
         let delivered = decode(&bytes, enc).expect("self-encoded frame must decode");
-        (delivered, bits)
+        Broadcast { payload: delivered, heard, server_got, attempts, bits }
     }
 
     /// A worker may stay silent in its slot (a crash-style fault). The slot
@@ -181,6 +285,7 @@ impl<'a> RadioRound<'a> {
     pub fn silence(&mut self, slot: usize) {
         assert_eq!(slot, self.next_slot, "slot used out of order");
         self.next_slot += 1;
+        self.last_slot_broadcast = false;
     }
 
     /// Number of slots consumed so far.
@@ -204,29 +309,69 @@ impl<'a> RadioRound<'a> {
             "round finished with unused slots"
         );
         self.net.meter.end_round();
+        self.net.round += 1;
     }
 }
 
-/// The single-hop radio network: schedule + encoding + meters.
+/// The single-hop radio network: schedule + encoding + channel + meters.
 #[derive(Debug)]
 pub struct RadioNetwork {
     pub schedule: TdmaSchedule,
     pub encoding: Encoding,
     pub meter: BitMeter,
+    channel: Channel,
+    /// Extra server-bound transmission attempts a sender may spend per
+    /// frame when the server misses it (0 extra under a perfect channel
+    /// anyway — the first attempt always lands).
+    uplink_retries: usize,
+    /// Round counter — the channel's `round` coordinate (advanced by
+    /// [`RadioRound::finish`]).
+    round: usize,
 }
 
 impl RadioNetwork {
+    /// A perfectly reliable network — the paper's §2.1 radio.
     pub fn new(n: usize, encoding: Encoding) -> Self {
-        Self { schedule: TdmaSchedule::identity(n), encoding, meter: BitMeter::new(n) }
+        Self::with_channel(n, encoding, ChannelModel::Perfect, 0, 0)
+    }
+
+    /// A network whose broadcasts traverse `model`, deterministically
+    /// seeded by `seed` (receivers `0..n` are the workers, `n` the
+    /// server). `retries` bounds the per-frame uplink retransmissions.
+    pub fn with_channel(
+        n: usize,
+        encoding: Encoding,
+        model: ChannelModel,
+        seed: u64,
+        retries: usize,
+    ) -> Self {
+        Self {
+            schedule: TdmaSchedule::identity(n),
+            encoding,
+            meter: BitMeter::new(n),
+            channel: Channel::new(model, seed, n + 1),
+            uplink_retries: retries,
+            round: 0,
+        }
     }
 
     pub fn with_schedule(schedule: TdmaSchedule, encoding: Encoding) -> Self {
         let n = schedule.n_slots();
-        Self { schedule, encoding, meter: BitMeter::new(n) }
+        let mut net = Self::with_channel(n, encoding, ChannelModel::Perfect, 0, 0);
+        net.schedule = schedule;
+        net
     }
 
     pub fn n(&self) -> usize {
         self.schedule.n_slots()
+    }
+
+    pub fn channel_model(&self) -> ChannelModel {
+        self.channel.model()
+    }
+
+    pub fn uplink_retries(&self) -> usize {
+        self.uplink_retries
     }
 
     /// Server downlink broadcast of the parameter (computation phase step 1).
@@ -243,7 +388,7 @@ impl RadioNetwork {
 
     /// Open the communication phase of a round.
     pub fn begin_round(&mut self) -> RadioRound<'_> {
-        RadioRound { net: self, next_slot: 0 }
+        RadioRound { net: self, next_slot: 0, slot_attempts: 0, last_slot_broadcast: false }
     }
 
     /// Bit cost a frame *would* have (used by attacks sizing their frames).
@@ -265,9 +410,13 @@ mod tests {
     fn slots_in_order_and_metered() {
         let mut net = RadioNetwork::new(3, Encoding::default());
         let mut round = net.begin_round();
-        let (p0, b0) = round.broadcast(0, 0, &raw(1.0, 10));
-        assert_eq!(p0.kind(), "raw");
-        let (_, b1) = round.broadcast(1, 1, &raw(2.0, 10));
+        let bc0 = round.broadcast(0, 0, &raw(1.0, 10));
+        assert_eq!(bc0.payload.kind(), "raw");
+        assert!(bc0.server_got);
+        assert_eq!(bc0.attempts, 1);
+        assert_eq!(bc0.heard, vec![false, true, true]);
+        let b0 = bc0.bits;
+        let b1 = round.broadcast(1, 1, &raw(2.0, 10)).bits;
         round.silence(2);
         round.finish();
         assert_eq!(net.meter.tx_bits[0], b0);
@@ -315,7 +464,7 @@ mod tests {
         let mut net = RadioNetwork::new(2, enc);
         let mut round = net.begin_round();
         let g = vec![0.1, 0.2, 0.3];
-        let (delivered, _) = round.broadcast(0, 0, &Payload::Raw(g.clone()));
+        let delivered = round.broadcast(0, 0, &Payload::Raw(g.clone())).payload;
         round.silence(1);
         round.finish();
         if let Payload::Raw(dg) = delivered {
@@ -370,5 +519,74 @@ mod tests {
         round.finish();
         let e = net.meter.tx_energy_joules(1e-9);
         assert!((e - net.meter.tx_bits[0] as f64 * 1e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn total_loss_exhausts_the_retransmit_budget() {
+        // p = 1: nobody ever hears anything; the sender burns every
+        // attempt and pays for all of them, receivers pay nothing.
+        let blackout = ChannelModel::Bernoulli { p: 1.0 };
+        let mut net = RadioNetwork::with_channel(3, Encoding::default(), blackout, 9, 2);
+        let mut round = net.begin_round();
+        let bc = round.broadcast(0, 0, &raw(1.0, 10));
+        assert!(!bc.server_got);
+        assert_eq!(bc.attempts, 3, "1 primary + 2 retries");
+        assert_eq!(bc.heard, vec![false, false, false]);
+        round.silence(1);
+        round.silence(2);
+        round.finish();
+        assert_eq!(net.meter.tx_bits[0], bc.bits);
+        assert_eq!(bc.bits % 3, 0, "three equal attempts");
+        assert_eq!(net.meter.rx_bits[1], 0, "unheard frames cost no rx energy");
+    }
+
+    #[test]
+    fn zero_loss_bernoulli_matches_perfect_accounting() {
+        let mk = |model| {
+            let mut net = RadioNetwork::with_channel(3, Encoding::default(), model, 5, 2);
+            let mut round = net.begin_round();
+            let bc = round.broadcast(0, 0, &raw(1.0, 16));
+            round.silence(1);
+            round.silence(2);
+            round.finish();
+            let rx = net.meter.rx_bits.clone();
+            (bc.attempts, bc.heard, bc.server_got, net.meter.tx_bits[0], rx)
+        };
+        assert_eq!(mk(ChannelModel::Perfect), mk(ChannelModel::Bernoulli { p: 0.0 }));
+    }
+
+    #[test]
+    fn fallback_transmits_in_the_same_slot() {
+        let mut net = RadioNetwork::new(2, Encoding::default());
+        let mut round = net.begin_round();
+        let echo = Payload::Echo { k: 1.0, coeffs: vec![1.0], ids: vec![1] };
+        let bc = round.broadcast(0, 0, &echo);
+        assert!(bc.server_got);
+        let fb = round.fallback(0, 0, &raw(2.0, 8));
+        assert!(fb.server_got);
+        assert_eq!(fb.payload.kind(), "raw");
+        round.silence(1);
+        round.finish();
+        assert_eq!(net.meter.tx_bits[0], bc.bits + fb.bits);
+    }
+
+    #[test]
+    #[should_panic(expected = "fallback must immediately follow")]
+    fn fallback_out_of_slot_panics() {
+        let mut net = RadioNetwork::new(2, Encoding::default());
+        let mut round = net.begin_round();
+        round.broadcast(0, 0, &raw(1.0, 4));
+        round.silence(1);
+        round.fallback(0, 0, &raw(1.0, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "fallback must immediately follow")]
+    fn fallback_after_silence_panics() {
+        // A silent slot had no primary broadcast to fall back from.
+        let mut net = RadioNetwork::new(2, Encoding::default());
+        let mut round = net.begin_round();
+        round.silence(0);
+        round.fallback(0, 0, &raw(1.0, 4));
     }
 }

@@ -21,6 +21,7 @@
 //!   are authenticated and consistent (we inherit [3, 14]'s guarantees at
 //!   the link layer, as the paper does for single hop).
 
+use super::channel::{Channel, ChannelModel};
 use crate::rng::Rng;
 use crate::wire::{decode, encode, Encoding, Payload};
 
@@ -146,19 +147,33 @@ impl Topology {
 /// Delivery result of one multi-hop broadcast.
 #[derive(Clone, Debug)]
 pub struct Delivery {
-    /// The decoded frame (identical for all receivers — reliable broadcast
-    /// per link).
+    /// The decoded frame (identical for every receiver that heard a copy
+    /// — erasures drop frames, they never corrupt them).
     pub frame: Payload,
     /// Which workers overheard at least one transmission of this frame.
     pub heard_by: Vec<bool>,
-    /// Total bits transmitted (original + all relays).
+    /// Total bits transmitted (original + relays + retransmissions).
     pub bits: u64,
-    /// Number of transmissions (1 + relays).
+    /// Number of transmissions (path length under a perfect channel;
+    /// more with per-hop ARQ retries).
     pub transmissions: usize,
+    /// Did the frame survive every relay hop to the server? Always true
+    /// under a perfect channel; under a lossy one a hop whose ARQ budget
+    /// is exhausted strands the frame.
+    pub reached_server: bool,
 }
 
 /// The multi-hop radio: frames are flooded up the BFS tree; every
 /// transmission is overheard by the transmitter's neighbourhood.
+///
+/// Shares the single-hop [`ChannelModel`] (the issue's "rebase the ad-hoc
+/// loss onto the same channel"): each hop's link to the next relay uses
+/// stop-and-wait ARQ bounded by `retries` extra attempts, and every
+/// attempt is independently overheard by the transmitter's neighbours
+/// under fresh per-receiver channel draws. Draws are keyed by a
+/// monotonically increasing broadcast counter (the channel's `round`
+/// coordinate) plus the transmitting node (its `slot`), so the whole
+/// relay cascade is a pure function of the seed.
 #[derive(Clone, Debug)]
 pub struct MultiHopRadio {
     pub topo: Topology,
@@ -170,38 +185,90 @@ pub struct MultiHopRadio {
     pub single_hop_bits: u64,
     /// Per-node transmit bits (origin + relays it carried).
     pub tx_bits: Vec<u64>,
+    channel: Channel,
+    retries: usize,
+    /// Broadcast counter — the channel's `round` key.
+    event: usize,
 }
 
 impl MultiHopRadio {
+    /// A perfectly reliable multi-hop radio (the pre-channel behaviour).
     pub fn new(topo: Topology, encoding: Encoding) -> Self {
+        Self::with_channel(topo, encoding, ChannelModel::Perfect, 0, 0)
+    }
+
+    /// A multi-hop radio over `model`, deterministically seeded
+    /// (receivers `0..n` are workers, `n` the server).
+    pub fn with_channel(
+        topo: Topology,
+        encoding: Encoding,
+        model: ChannelModel,
+        seed: u64,
+        retries: usize,
+    ) -> Self {
         let n = topo.n_workers();
-        Self { topo, encoding, total_bits: 0, single_hop_bits: 0, tx_bits: vec![0; n] }
+        Self {
+            channel: Channel::new(model, seed, n + 1),
+            retries,
+            event: 0,
+            topo,
+            encoding,
+            total_bits: 0,
+            single_hop_bits: 0,
+            tx_bits: vec![0; n],
+        }
     }
 
     /// Worker `w` broadcasts `frame`; it is relayed along the BFS path to
-    /// the server. Every relay transmission is overheard by that relay's
-    /// neighbours.
+    /// the server. Every (re)transmission is overheard by that relay's
+    /// neighbours per the channel's draws; the relay link itself uses
+    /// bounded per-hop ARQ.
     pub fn broadcast(&mut self, w: usize, frame: &Payload) -> Delivery {
         let n = self.topo.n_workers();
         let bytes = encode(frame, self.encoding);
         let bits1 = (bytes.len() as u64) * 8;
         let decoded = decode(&bytes, self.encoding).expect("self-encoded frame decodes");
+        let ev = self.event;
+        self.event += 1;
 
         let path = self.topo.path_to_server(w);
         let mut heard = vec![false; n];
+        let mut bits = 0u64;
+        let mut transmissions = 0usize;
+        let mut reached_server = true;
+        let budget = 1 + self.retries as u64;
         for &tx in &path {
-            self.tx_bits[tx] += bits1;
-            for &nb in &self.topo.adj[tx] {
-                if nb < n {
-                    heard[nb] = true;
+            let parent = self.topo.parent[tx];
+            let mut link_up = false;
+            let mut attempt = 0u64;
+            while attempt < budget && !link_up {
+                transmissions += 1;
+                self.tx_bits[tx] += bits1;
+                bits += bits1;
+                // Neighbours overhear this attempt; the parent's draw
+                // doubles as the relay-link delivery (one ear per node).
+                let mut parent_heard = parent == self.topo.server_id()
+                    && self.channel.delivers(ev, tx, attempt, n);
+                for &nb in &self.topo.adj[tx] {
+                    if nb < n && self.channel.delivers(ev, tx, attempt, nb) {
+                        heard[nb] = true;
+                        if nb == parent {
+                            parent_heard = true;
+                        }
+                    }
                 }
+                link_up = parent_heard;
+                attempt += 1;
+            }
+            if !link_up {
+                reached_server = false;
+                break;
             }
         }
         heard[w] = false; // a node does not overhear itself
-        let bits = bits1 * path.len() as u64;
         self.total_bits += bits;
         self.single_hop_bits += bits1;
-        Delivery { frame: decoded, heard_by: heard, bits, transmissions: path.len() }
+        Delivery { frame: decoded, heard_by: heard, bits, transmissions, reached_server }
     }
 }
 
@@ -252,6 +319,43 @@ mod tests {
         assert!(d.heard_by[2] && d.heard_by[1] && d.heard_by[0]);
         assert!(d.heard_by[4]); // neighbour of 3 on the line
         assert!(!d.heard_by[3]); // not itself
+    }
+
+    #[test]
+    fn perfect_channel_relays_exactly_once_per_hop() {
+        let t = Topology::line(4, 1.0);
+        let mut radio = MultiHopRadio::new(t, Encoding::default());
+        let d = radio.broadcast(3, &Payload::Raw(vec![1.0; 16]));
+        assert!(d.reached_server);
+        assert_eq!(d.transmissions, 4);
+    }
+
+    #[test]
+    fn blackout_channel_strands_the_frame_at_the_first_hop() {
+        let t = Topology::line(4, 1.0);
+        let blackout = ChannelModel::Bernoulli { p: 1.0 };
+        let mut radio = MultiHopRadio::with_channel(t, Encoding::default(), blackout, 3, 2);
+        let d = radio.broadcast(3, &Payload::Raw(vec![1.0; 16]));
+        assert!(!d.reached_server);
+        assert_eq!(d.transmissions, 3, "the first hop burns its full ARQ budget");
+        assert!(d.heard_by.iter().all(|&h| !h), "nobody hears anything at p = 1");
+    }
+
+    #[test]
+    fn lossy_multihop_is_deterministic_per_seed() {
+        let enc = Encoding::default();
+        let model = ChannelModel::Bernoulli { p: 0.4 };
+        let run = || {
+            let t = Topology::line(6, 1.0);
+            let mut radio = MultiHopRadio::with_channel(t, enc, model, 77, 1);
+            let mut log = Vec::new();
+            for w in [5usize, 3, 4, 2] {
+                let d = radio.broadcast(w, &Payload::Raw(vec![1.0; 8]));
+                log.push((d.reached_server, d.transmissions, d.heard_by));
+            }
+            (log, radio.total_bits)
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -14,6 +14,19 @@
 //! accumulation order. `rust/tests/determinism.rs` pins this invariant.
 //! To batch *many* simulations across the same pool, see [`crate::sweep`].
 //!
+//! **Channel.** The radio is pluggable ([`crate::radio::channel`]): under
+//! a lossy [`crate::radio::ChannelModel`] each broadcast reaches each
+//! listener (and the server) per deterministic per-link erasure draws.
+//! A listener that missed a raw frame simply has a gap in its overheard
+//! span and echoes against a smaller basis; an honest echo the server
+//! missed — or cannot reconstruct because *it* missed a referenced raw —
+//! triggers a same-slot raw fallback whose extra bits are charged to the
+//! meter; a frame that never reaches the server within the bounded
+//! retransmit budget leaves the slot [`crate::coordinator::SlotOutcome::Lost`]
+//! (zeroed, never exposed). All channel draws are pure functions of
+//! `(seed, round, slot, attempt, receiver)`, so the engine's
+//! bit-identical-at-any-thread-count contract is unchanged.
+//!
 //! **Observation.** The engine does not accumulate measurements itself:
 //! each round it emits one typed [`RoundEvent`] to the trace pipeline
 //! ([`crate::trace`]), whose sink — selected by
@@ -27,7 +40,7 @@ pub mod multihop;
 
 use crate::byzantine::{Attack, AttackCtx};
 use crate::config::{ExperimentConfig, ModelKind};
-use crate::coordinator::ParameterServer;
+use crate::coordinator::{ParameterServer, SlotOutcome};
 use crate::data;
 use crate::grad::{GradientBackend, NativeBackend};
 use crate::linalg;
@@ -56,6 +69,24 @@ pub struct PhaseTimings {
     pub agg_ns: u128,
 }
 
+/// Cumulative channel casualties over a run (all 0 under the perfect
+/// channel — what [`crate::sweep`] serializes for lossy cells).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChannelTotals {
+    /// (listener, frame) pairs an honest listener missed.
+    pub dropped_frames: u64,
+    /// Server-bound ARQ attempts beyond the first.
+    pub retransmits: u64,
+    /// Echo→raw fallback transmissions by honest workers.
+    pub fallbacks: u64,
+    /// Slots the server scored [`SlotOutcome::Lost`]: the frame never
+    /// reached it within the retransmit budget, or a (Byzantine) echo
+    /// arrived referencing frames the server never delivered — either
+    /// way it aggregated `0⃗` there. Silent slots are not counted (no
+    /// frame was ever on air).
+    pub lost_slots: u64,
+}
+
 /// A fully-wired experiment.
 pub struct Simulation {
     pub cfg: ExperimentConfig,
@@ -76,6 +107,17 @@ pub struct Simulation {
     round: usize,
     trace: TraceSink,
     pub timings: PhaseTimings,
+    channel_totals: ChannelTotals,
+    /// Transmission attempts an all-raw baseline would have spent under
+    /// the *same* channel draws — the denominator of [`Self::comm_savings`].
+    /// Server-delivery draws are payload-independent, so a baseline raw
+    /// frame in a slot stops at exactly the attempt the real primary
+    /// broadcast stopped at (exact for memoryless channels; for bursty
+    /// ones, fallback transmissions advance the burst state in ways the
+    /// baseline would not — a documented approximation). Silent slots
+    /// count 1. Equals `rounds × n` under the perfect channel, keeping
+    /// the pre-channel savings arithmetic bit-for-bit.
+    baseline_attempts: u64,
 }
 
 impl Simulation {
@@ -169,12 +211,25 @@ impl Simulation {
 
         let mut server = ParameterServer::new(cfg.n, cfg.f, d, cfg.aggregator);
         server.set_threads(cfg.effective_threads());
+        server.set_lossy(!cfg.channel.is_lossless());
+        // The channel seed is a pure function of the experiment seed (no
+        // RNG draw is consumed deriving it), so wiring a channel in — or
+        // switching between lossless models — perturbs no existing
+        // random stream: `--channel perfect` stays byte-identical to the
+        // pre-channel engine (pinned by rust/tests/channel.rs).
+        let radio = RadioNetwork::with_channel(
+            cfg.n,
+            cfg.encoding(),
+            cfg.channel,
+            cfg.seed ^ 0xC4A7_7E11_0C0D_E5ED,
+            cfg.uplink_retries,
+        );
         Ok(Simulation {
             server,
             workers,
             backends,
             attacks,
-            radio: RadioNetwork::new(cfg.n, cfg.encoding()),
+            radio,
             w: w0,
             eta,
             r,
@@ -185,6 +240,8 @@ impl Simulation {
             round: 0,
             trace: TraceSink::new(cfg.trace),
             timings: PhaseTimings::default(),
+            channel_totals: ChannelTotals::default(),
+            baseline_attempts: 0,
             model,
             cfg: cfg.clone(),
         })
@@ -225,6 +282,11 @@ impl Simulation {
 
     pub fn radio(&self) -> &RadioNetwork {
         &self.radio
+    }
+
+    /// Cumulative channel casualties (all 0 under the perfect channel).
+    pub fn channel_totals(&self) -> ChannelTotals {
+        self.channel_totals
     }
 
     pub fn server(&self) -> &ParameterServer {
@@ -281,6 +343,9 @@ impl Simulation {
         let mut overheard: Vec<(usize, Payload)> = Vec::with_capacity(cfg_n);
         let mut echo_count = 0usize;
         let mut raw_count = 0usize;
+        let mut dropped_frames = 0usize;
+        let mut retransmits = 0usize;
+        let mut fallbacks = 0usize;
         {
             let mut round = self.radio.begin_round();
             for slot in 0..cfg_n {
@@ -315,25 +380,110 @@ impl Simulation {
                     None => {
                         round.silence(slot);
                         self.server.on_silence(owner);
+                        self.baseline_attempts += 1;
                     }
                     Some(p) => {
-                        let (delivered, _bits) = round.broadcast(slot, owner, &p);
-                        if !self.attacks.contains_key(&owner) {
-                            match &delivered {
+                        let honest = !self.attacks.contains_key(&owner);
+                        let bc = round.broadcast(slot, owner, &p);
+                        // What an all-raw baseline would have spent here:
+                        // the server draws are payload-independent, so it
+                        // stops at exactly this primary's attempt count.
+                        self.baseline_attempts += bc.attempts;
+                        retransmits += (bc.attempts - 1) as usize;
+                        dropped_frames += note_listeners(&mut self.workers, owner, &bc.heard);
+                        if honest {
+                            match &bc.payload {
                                 Payload::Echo { .. } => echo_count += 1,
                                 _ => raw_count += 1,
                             }
                         }
-                        self.server.on_frame(owner, &delivered);
                         if self.cfg.echo_enabled {
-                            overhear_fan_out(&mut self.workers, owner, &delivered, threads);
+                            overhear_fan_out(
+                                &mut self.workers,
+                                owner,
+                                &bc.payload,
+                                &bc.heard,
+                                threads,
+                            );
                         }
-                        overheard.push((owner, delivered));
+                        // Honest echo the server missed (uplink erasure)
+                        // or cannot reconstruct (it missed a referenced
+                        // raw): the synchronous ACK/NACK lets the worker
+                        // fall back to its raw gradient in the same slot,
+                        // extra bits charged to the meter.
+                        let needs_fallback = honest
+                            && match &bc.payload {
+                                Payload::Echo { ids, .. } => {
+                                    !bc.server_got || !self.server.echo_refs_stored(ids)
+                                }
+                                _ => false,
+                            };
+                        // The server's verdict is the authority on Lost
+                        // slots: a frame can be lost on the uplink, or
+                        // (a Byzantine echo) arrive yet reference frames
+                        // the server never delivered — both end Lost.
+                        // `aired` is the slot's final on-air payload for
+                        // the omniscient attack context: after a
+                        // fallback that is the raw frame, exactly what
+                        // honest listeners had a chance to overhear.
+                        let (outcome, aired) = if needs_fallback {
+                            let g = self.workers[owner]
+                                .as_mut()
+                                .unwrap()
+                                .take_gradient()
+                                .expect("echo transmit retains the gradient");
+                            let fb = round.fallback(slot, owner, &Payload::Raw(g));
+                            fallbacks += 1;
+                            // The slot was ultimately served by a raw
+                            // broadcast: reclassify it so echo_rate (the
+                            // loss figure's headline metric) counts echo
+                            // *deliveries*, not echo attempts. The
+                            // attempt itself stays visible as the
+                            // `fallbacks` field.
+                            echo_count -= 1;
+                            raw_count += 1;
+                            let stats = &mut self.workers[owner].as_mut().unwrap().stats;
+                            stats.echo_rounds -= 1;
+                            stats.raw_rounds += 1;
+                            retransmits += (fb.attempts - 1) as usize;
+                            dropped_frames += note_listeners(&mut self.workers, owner, &fb.heard);
+                            if self.cfg.echo_enabled {
+                                overhear_fan_out(
+                                    &mut self.workers,
+                                    owner,
+                                    &fb.payload,
+                                    &fb.heard,
+                                    threads,
+                                );
+                            }
+                            let out = if fb.server_got {
+                                self.server.on_frame(owner, &fb.payload)
+                            } else {
+                                self.server.on_lost(owner);
+                                SlotOutcome::Lost
+                            };
+                            (out, fb.payload)
+                        } else {
+                            let out = if bc.server_got {
+                                self.server.on_frame(owner, &bc.payload)
+                            } else {
+                                self.server.on_lost(owner);
+                                SlotOutcome::Lost
+                            };
+                            (out, bc.payload)
+                        };
+                        if outcome == SlotOutcome::Lost {
+                            self.channel_totals.lost_slots += 1;
+                        }
+                        overheard.push((owner, aired));
                     }
                 }
             }
             round.finish();
         }
+        self.channel_totals.dropped_frames += dropped_frames as u64;
+        self.channel_totals.retransmits += retransmits as u64;
+        self.channel_totals.fallbacks += fallbacks as u64;
         self.timings.comm_ns += t1.elapsed().as_nanos();
 
         // ---- Aggregation phase -------------------------------------------------
@@ -352,6 +502,9 @@ impl Simulation {
             raw_count,
             exposed_cum: self.server.exposed().len(),
             clipped: self.server.clipped_last_round(),
+            dropped_frames,
+            retransmits,
+            fallbacks,
         };
         self.round += 1;
         self.trace.on_round(&rec);
@@ -400,7 +553,14 @@ impl Simulation {
 
     /// Fraction of uplink bits saved relative to the all-raw baseline
     /// (every worker broadcasting its full gradient every round — what
-    /// Krum/CGC/prior algorithms cost on this radio).
+    /// Krum/CGC/prior algorithms cost on this radio). On a lossy channel
+    /// the baseline pays the same per-slot ARQ attempts the real run's
+    /// primary broadcasts did (the server draws are payload-independent),
+    /// so the metric isolates the echo mechanism's savings instead of
+    /// charging common retransmission overhead against it — an all-raw
+    /// run measures exactly 0 savings at any loss rate. Under the
+    /// perfect channel this degenerates to `rounds × n × raw_bits`, the
+    /// pre-channel arithmetic bit-for-bit.
     pub fn comm_savings(&self) -> f64 {
         let rounds = self.radio.meter.uplink_history.len() as u64;
         if rounds == 0 {
@@ -408,7 +568,7 @@ impl Simulation {
         }
         let raw_bits =
             crate::wire::raw_gradient_bits(self.model.dim(), self.cfg.encoding());
-        let baseline = rounds * self.cfg.n as u64 * raw_bits;
+        let baseline = self.baseline_attempts * raw_bits;
         1.0 - self.radio.meter.total_uplink() as f64 / baseline as f64
     }
 
@@ -436,8 +596,31 @@ impl Simulation {
     }
 }
 
-/// Deliver one broadcast frame to every other fault-free worker, fanning
-/// the span updates across up to `threads` scoped threads (shared helper:
+/// Update the per-worker heard/missed statistics for one broadcast and
+/// return how many honest listeners missed it (the round's
+/// `dropped_frames` contribution — always 0 under the perfect channel).
+fn note_listeners(workers: &mut [Option<EchoWorker>], owner: usize, heard: &[bool]) -> usize {
+    let mut dropped = 0usize;
+    for (i, slot) in workers.iter_mut().enumerate() {
+        if i == owner {
+            continue;
+        }
+        if let Some(wk) = slot.as_mut() {
+            if heard[i] {
+                wk.stats.frames_heard += 1;
+            } else {
+                wk.stats.frames_missed += 1;
+                dropped += 1;
+            }
+        }
+    }
+    dropped
+}
+
+/// Deliver one broadcast frame to every fault-free worker that actually
+/// heard it (`heard` is the channel's per-receiver delivery mask — all
+/// true except the sender under the perfect channel), fanning the span
+/// updates across up to `threads` scoped threads (shared helper:
 /// [`crate::par::scoped_for_each`]). Each listener's
 /// [`EchoWorker::overhear`] touches only its own projector state, so the
 /// fan-out is embarrassingly parallel and involves no RNG — the result is
@@ -446,6 +629,7 @@ fn overhear_fan_out(
     workers: &mut [Option<EchoWorker>],
     owner: usize,
     delivered: &Payload,
+    heard: &[bool],
     threads: usize,
 ) {
     // Only raw gradients can extend a span (Algorithm 1, line 27):
@@ -457,7 +641,7 @@ fn overhear_fan_out(
     }
     let mut listeners: Vec<&mut EchoWorker> = Vec::with_capacity(workers.len());
     for (i, slot) in workers.iter_mut().enumerate() {
-        if i == owner {
+        if i == owner || !heard[i] {
             continue;
         }
         if let Some(wk) = slot.as_mut() {

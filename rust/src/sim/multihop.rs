@@ -9,7 +9,12 @@
 //!   can hear), so `R_j` varies across the network and echo rates drop
 //!   with sparsity;
 //! * the server's echo validation is unchanged — it validates references
-//!   against what *it* received, and the exposure argument carries over.
+//!   against what *it* received, and the exposure argument carries over;
+//! * the link layer shares the single-hop [`crate::radio::ChannelModel`]
+//!   (`ExperimentConfig::channel`): relay links use bounded per-hop ARQ,
+//!   neighbour overhearing is per-draw lossy, and a frame stranded by an
+//!   exhausted hop leaves its slot `Lost` at the server (zeroed, never
+//!   exposed — the lossy regime of [`crate::coordinator::ParameterServer`]).
 
 use crate::byzantine::{Attack, AttackCtx};
 use crate::config::ExperimentConfig;
@@ -92,11 +97,22 @@ impl MultiHopSimulation {
         let mut srng = Rng::new(cfg.seed ^ 0x5EED_0002);
         let w0 = model.initial_w(&mut srng);
         let worker_rngs: Vec<Rng> = (0..cfg.n).map(|i| srng.split(200 + i as u64)).collect();
+        let mut server = ParameterServer::new(cfg.n, cfg.f, d, cfg.aggregator);
+        server.set_lossy(!cfg.channel.is_lossless());
+        // Pure-function seed derivation: no RNG draw consumed (the
+        // perfect-channel stream stays byte-identical to pre-channel).
+        let radio = MultiHopRadio::with_channel(
+            topo,
+            cfg.encoding(),
+            cfg.channel,
+            cfg.seed ^ 0xC4A7_7E11_0C0D_E5EE,
+            cfg.uplink_retries,
+        );
         Ok(Self {
-            server: ParameterServer::new(cfg.n, cfg.f, d, cfg.aggregator),
+            server,
             workers,
             attacks,
-            radio: MultiHopRadio::new(topo, cfg.encoding()),
+            radio,
             w: w0,
             eta,
             worker_rngs,
@@ -172,7 +188,13 @@ impl MultiHopSimulation {
                             raw += 1;
                         }
                     }
-                    self.server.on_frame(slot, &delivery.frame);
+                    if delivery.reached_server {
+                        self.server.on_frame(slot, &delivery.frame);
+                    } else {
+                        // The relay chain broke within its ARQ budget:
+                        // the slot is a channel casualty, not a fault.
+                        self.server.on_lost(slot);
+                    }
                     for i in 0..n {
                         if delivery.heard_by[i] {
                             if let Some(w) = self.workers[i].as_mut() {
@@ -295,6 +317,21 @@ mod tests {
         let mut sim = MultiHopSimulation::build_on(&c, topo, 1.0).unwrap();
         let recs = sim.run();
         assert!(sim.final_dist_sq().unwrap() < recs.first().unwrap().dist_sq.unwrap() * 0.1);
+    }
+
+    #[test]
+    fn lossy_multihop_still_converges() {
+        use crate::radio::ChannelModel;
+        let mut c = cfg();
+        c.channel = ChannelModel::Bernoulli { p: 0.1 };
+        c.rounds = 250;
+        let mut sim = MultiHopSimulation::build(&c, 0.6).unwrap();
+        let recs = sim.run();
+        let first = recs.first().unwrap().dist_sq.unwrap();
+        let last = sim.final_dist_sq().unwrap();
+        assert!(last < first * 0.2, "lossy multihop diverged: {first} -> {last}");
+        // Channel loss never exposes anybody.
+        assert!(sim.server.exposed().is_empty());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! * [`SweepGrid`] declares a cross-product of [`ExperimentConfig`]
 //!   variations over typed axes — `(n, f, b)` triples (varied jointly
 //!   because validity couples them), σ, d, model, attack, aggregator,
-//!   echo on/off, and seed;
+//!   echo on/off, radio channel (the loss axis), and seed;
 //! * [`SweepGrid::run`] executes every cell across the shared scoped
 //!   thread pool ([`crate::par`]). Each cell is an independent
 //!   `Simulation` whose RNG streams are derived solely from its own
@@ -46,7 +46,8 @@ use crate::byzantine::AttackKind;
 use crate::config::{ExperimentConfig, ModelKind};
 use crate::coordinator::Aggregator;
 use crate::metrics::{CsvTable, Json};
-use crate::sim::{PhaseTimings, Simulation};
+use crate::radio::ChannelModel;
+use crate::sim::{ChannelTotals, PhaseTimings, Simulation};
 use crate::trace::{RoundEvent, TracePolicy};
 use std::io;
 use std::path::Path;
@@ -120,7 +121,8 @@ pub fn auto_threads() -> usize {
 /// A declarative grid of experiment variations. Empty axes fall back to
 /// the base config's value; non-empty axes multiply into a cross-product
 /// enumerated in a fixed nesting order (outermost → innermost): `nfb`,
-/// `models`, `sigmas`, `dims`, `attacks`, `aggregators`, `echo`, `seeds`.
+/// `models`, `sigmas`, `dims`, `attacks`, `aggregators`, `echo`,
+/// `channels`, `seeds`.
 #[derive(Clone, Debug)]
 pub struct SweepGrid {
     pub name: String,
@@ -135,6 +137,9 @@ pub struct SweepGrid {
     pub attacks: Vec<AttackKind>,
     pub aggregators: Vec<Aggregator>,
     pub echo: Vec<bool>,
+    /// The loss axis: radio channel models
+    /// ([`crate::radio::ChannelModel`]).
+    pub channels: Vec<ChannelModel>,
     pub seeds: Vec<u64>,
 }
 
@@ -151,6 +156,7 @@ impl SweepGrid {
             attacks: Vec::new(),
             aggregators: Vec::new(),
             echo: Vec::new(),
+            channels: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -171,6 +177,7 @@ impl SweepGrid {
         let attacks = axis(&self.attacks, self.base.attack);
         let aggs = axis(&self.aggregators, self.base.aggregator);
         let echoes = axis(&self.echo, self.base.echo_enabled);
+        let channels = axis(&self.channels, self.base.channel);
         let seeds = axis(&self.seeds, self.base.seed);
         let mut out = Vec::new();
         for &(n, f, b) in &nfb {
@@ -180,19 +187,22 @@ impl SweepGrid {
                         for &attack in &attacks {
                             for &agg in &aggs {
                                 for &echo in &echoes {
-                                    for &seed in &seeds {
-                                        let mut cfg = self.base.clone();
-                                        cfg.n = n;
-                                        cfg.f = f;
-                                        cfg.b = b;
-                                        cfg.model = model;
-                                        cfg.sigma = sigma;
-                                        cfg.d = d;
-                                        cfg.attack = attack;
-                                        cfg.aggregator = agg;
-                                        cfg.echo_enabled = echo;
-                                        cfg.seed = seed;
-                                        out.push(cfg);
+                                    for &channel in &channels {
+                                        for &seed in &seeds {
+                                            let mut cfg = self.base.clone();
+                                            cfg.n = n;
+                                            cfg.f = f;
+                                            cfg.b = b;
+                                            cfg.model = model;
+                                            cfg.sigma = sigma;
+                                            cfg.d = d;
+                                            cfg.attack = attack;
+                                            cfg.aggregator = agg;
+                                            cfg.echo_enabled = echo;
+                                            cfg.channel = channel;
+                                            cfg.seed = seed;
+                                            out.push(cfg);
+                                        }
                                     }
                                 }
                             }
@@ -255,12 +265,18 @@ pub struct SweepCell {
     pub seed: u64,
     pub rounds: usize,
     pub echo_enabled: bool,
+    /// The radio channel the cell ran over (the `loss` axis coordinate).
+    pub channel: ChannelModel,
     pub echo_rate: f64,
     pub comm_savings: f64,
     pub final_loss: f64,
     pub final_dist_sq: Option<f64>,
     pub uplink_bits_total: u64,
     pub exposed: usize,
+    /// Cumulative channel casualties (all 0 under a lossless channel;
+    /// serialized only for lossy cells, which keeps lossless reports
+    /// byte-identical to pre-channel artifacts).
+    pub channel_totals: ChannelTotals,
     pub empirical_rho: Option<f64>,
     pub theory_rho: Option<f64>,
     /// Retention policy the cell ran under (identity, not a measurement).
@@ -316,6 +332,17 @@ impl SweepCell {
                 self.error.as_ref().map(|e| Json::Str(e.clone())).unwrap_or(Json::Null),
             ),
         ];
+        // Channel identity + casualty totals ride along only for lossy
+        // cells: a lossless cell (perfect, bernoulli=0.0, zero-loss GE)
+        // serializes the exact pre-channel schema, byte for byte — the
+        // backward-compatibility contract pinned by rust/tests/channel.rs.
+        if !self.channel.is_lossless() {
+            pairs.push(("channel", Json::Str(self.channel.label())));
+            pairs.push(("dropped_frames", Json::Num(self.channel_totals.dropped_frames as f64)));
+            pairs.push(("retransmits", Json::Num(self.channel_totals.retransmits as f64)));
+            pairs.push(("fallbacks", Json::Num(self.channel_totals.fallbacks as f64)));
+            pairs.push(("lost_slots", Json::Num(self.channel_totals.lost_slots as f64)));
+        }
         if include_timings {
             pairs.push(("grad_ns", Json::Num(self.timings.grad_ns as f64)));
             pairs.push(("comm_ns", Json::Num(self.timings.comm_ns as f64)));
@@ -387,12 +414,17 @@ impl SweepReport {
             "seed",
             "rounds",
             "echo_enabled",
+            "channel",
             "echo_rate",
             "comm_savings",
             "final_loss",
             "final_dist_sq",
             "uplink_bits_total",
             "exposed",
+            "dropped_frames",
+            "retransmits",
+            "fallbacks",
+            "lost_slots",
             "empirical_rho",
             "theory_rho",
             "error",
@@ -413,12 +445,17 @@ impl SweepReport {
                 format!("{}", c.seed),
                 format!("{}", c.rounds),
                 format!("{}", c.echo_enabled),
+                c.channel.tag(),
                 format!("{}", c.echo_rate),
                 format!("{}", c.comm_savings),
                 format!("{}", c.final_loss),
                 opt(c.final_dist_sq),
                 format!("{}", c.uplink_bits_total),
                 format!("{}", c.exposed),
+                format!("{}", c.channel_totals.dropped_frames),
+                format!("{}", c.channel_totals.retransmits),
+                format!("{}", c.channel_totals.fallbacks),
+                format!("{}", c.channel_totals.lost_slots),
                 opt(c.empirical_rho),
                 opt(c.theory_rho),
                 c.error.clone().unwrap_or_default(),
@@ -431,7 +468,9 @@ impl SweepReport {
 /// Serialize retained per-round events as parallel arrays — compact, and
 /// column-oriented like the figure layer reads them. Missing `dist_sq`
 /// entries render as `null` (as do non-finite values, per the JSON
-/// writer's contract).
+/// writer's contract). The channel-casualty columns (`dropped`,
+/// `retransmits`, `fallbacks`) appear only when any round recorded one —
+/// lossless traces keep the exact pre-channel schema.
 fn trace_json(events: &[RoundEvent]) -> Json {
     let num = |f: fn(&RoundEvent) -> f64| -> Json {
         Json::Arr(events.iter().map(|e| Json::Num(f(e))).collect())
@@ -439,7 +478,7 @@ fn trace_json(events: &[RoundEvent]) -> Json {
     let dist = Json::Arr(
         events.iter().map(|e| e.dist_sq.map(Json::Num).unwrap_or(Json::Null)).collect(),
     );
-    Json::obj(vec![
+    let mut pairs = vec![
         ("round", num(|e| e.round as f64)),
         ("loss", num(|e| e.loss)),
         ("dist_sq", dist),
@@ -448,21 +487,36 @@ fn trace_json(events: &[RoundEvent]) -> Json {
         ("raw", num(|e| e.raw_count as f64)),
         ("exposed", num(|e| e.exposed_cum as f64)),
         ("clipped", num(|e| e.clipped as f64)),
-    ])
+    ];
+    let lossy =
+        events.iter().any(|e| e.dropped_frames > 0 || e.retransmits > 0 || e.fallbacks > 0);
+    if lossy {
+        pairs.push(("dropped", num(|e| e.dropped_frames as f64)));
+        pairs.push(("retransmits", num(|e| e.retransmits as f64)));
+        pairs.push(("fallbacks", num(|e| e.fallbacks as f64)));
+    }
+    Json::obj(pairs)
 }
 
 /// Build + run one cell; build failures become report rows, not panics.
 fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
     // `run_tag()` covers model/n/f/attack; extend it with the remaining
-    // swept axes so every cell in a grid gets a distinct label.
+    // swept axes so every cell in a grid gets a distinct label. The
+    // channel suffix appears only for lossy cells (label stability for
+    // the pre-channel artifact names).
     let label = format!(
-        "{}_{}_sigma{}_d{}_seed{}{}",
+        "{}_{}_sigma{}_d{}_seed{}{}{}",
         cfg.run_tag(),
         cfg.aggregator.name(),
         cfg.sigma,
         cfg.d,
         cfg.seed,
-        if cfg.echo_enabled { "" } else { "_noecho" }
+        if cfg.echo_enabled { String::new() } else { "_noecho".to_string() },
+        if cfg.channel.is_lossless() {
+            String::new()
+        } else {
+            format!("_{}", cfg.channel.tag())
+        }
     );
     let mut cell = SweepCell {
         index: 0,
@@ -478,12 +532,14 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
         seed: cfg.seed,
         rounds: cfg.rounds,
         echo_enabled: cfg.echo_enabled,
+        channel: cfg.channel,
         echo_rate: f64::NAN,
         comm_savings: f64::NAN,
         final_loss: f64::NAN,
         final_dist_sq: None,
         uplink_bits_total: 0,
         exposed: 0,
+        channel_totals: ChannelTotals::default(),
         empirical_rho: None,
         theory_rho: None,
         trace_policy: cfg.trace,
@@ -509,6 +565,7 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
     cell.final_dist_sq = sim.final_dist_sq();
     cell.uplink_bits_total = sim.radio().meter.total_uplink();
     cell.exposed = sim.server().exposed().len();
+    cell.channel_totals = sim.channel_totals();
     cell.empirical_rho = summary.fit.rho();
     cell.theory_rho = Some(sim.realized_theory().rho(sim.eta()));
     cell.trace = sim.trace().points();
@@ -616,6 +673,37 @@ pub mod presets {
         grid
     }
 
+    /// Echo rate / comm savings / final error vs. channel loss
+    /// probability — the lossy-overhearing scenario family
+    /// (`echo-cgc figures --fig loss`, `echo-cgc sweep --grid loss`).
+    /// The loss axis is Bernoulli-erasure probabilities (0 = the paper's
+    /// reliable broadcast), so the figure's x axis is numeric; bursty
+    /// Gilbert–Elliott channels are reachable through `--channel` /
+    /// `--axis loss=…` ablations.
+    pub fn loss_sweep(profile: SweepProfile) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.n = 20;
+        base.f = 2;
+        base.b = 2;
+        base.d = 100;
+        base.threads = 1;
+        base.trace = TracePolicy::Summary;
+        base.attack = AttackKind::Omniscient;
+        base.rounds = match profile {
+            SweepProfile::Full => 120,
+            SweepProfile::Smoke => 40,
+        };
+        let mut grid = SweepGrid::new("loss", base);
+        grid.profile = profile;
+        let ps: &[f64] = match profile {
+            SweepProfile::Full => &[0.0, 0.05, 0.1, 0.2, 0.3, 0.4],
+            SweepProfile::Smoke => &[0.0, 0.1, 0.3],
+        };
+        grid.channels = ps.iter().map(|&p| ChannelModel::Bernoulli { p }).collect();
+        grid.sigmas = vec![0.05, 0.10];
+        grid
+    }
+
     /// Tiny demonstration grid (`echo-cgc sweep --grid quick`).
     pub fn quick() -> SweepGrid {
         let mut base = ExperimentConfig::default();
@@ -640,6 +728,7 @@ pub mod presets {
             "gv-baseline" | "gv_baseline" => gv_baseline(profile),
             "comm-savings" | "comm_savings" => comm_savings(profile),
             "convergence" => convergence(profile),
+            "loss" | "loss-sweep" | "loss_sweep" => loss_sweep(profile),
             "quick" => quick(),
             _ => return None,
         })
@@ -725,11 +814,51 @@ mod tests {
 
     #[test]
     fn presets_resolve_by_name() {
-        for name in ["attack-matrix", "gv-baseline", "comm-savings", "convergence", "quick"] {
+        for name in
+            ["attack-matrix", "gv-baseline", "comm-savings", "convergence", "loss", "quick"]
+        {
             let grid = presets::by_name(name, SweepProfile::Smoke).unwrap();
             assert!(grid.len() >= 2, "{name} should sweep something");
         }
         assert!(presets::by_name("nope", SweepProfile::Smoke).is_none());
+    }
+
+    #[test]
+    fn channel_axis_multiplies_into_the_cross_product() {
+        let mut grid = tiny_grid();
+        grid.channels = vec![ChannelModel::Perfect, ChannelModel::Bernoulli { p: 0.2 }];
+        // 2 sigmas × 2 aggregators × 2 channels.
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 8);
+        // Channel is inner relative to aggregator, outer relative to seed.
+        assert_eq!(cells[0].channel, ChannelModel::Perfect);
+        assert_eq!(cells[1].channel, ChannelModel::Bernoulli { p: 0.2 });
+        assert_eq!(cells[2].channel, ChannelModel::Perfect);
+    }
+
+    #[test]
+    fn lossy_cells_serialize_channel_and_casualties() {
+        let mut base = tiny_grid().base;
+        base.rounds = 6;
+        let mut grid = SweepGrid::new("lossy", base);
+        grid.channels = vec![ChannelModel::Perfect, ChannelModel::Bernoulli { p: 0.4 }];
+        let report = grid.run(1);
+        assert_eq!(report.cells.len(), 2);
+        let json = report.to_json().to_string();
+        // Exactly the lossy cell carries the channel fields.
+        assert_eq!(json.matches("\"channel\":").count(), 1);
+        assert!(json.contains("\"channel\":\"bernoulli=0.4\""));
+        assert!(json.contains("\"dropped_frames\""));
+        let lossy = &report.cells[1];
+        assert!(lossy.channel_totals.dropped_frames > 0, "p=0.4 must drop something");
+        assert!(lossy.label.ends_with("_bern0.4"), "label = {}", lossy.label);
+        let perfect = &report.cells[0];
+        assert_eq!(perfect.channel_totals.dropped_frames, 0);
+        assert!(!perfect.label.contains("bern"));
+        // The CSV always carries the channel column.
+        let csv = report.csv().to_string();
+        assert!(csv.contains(",channel,"));
+        assert!(csv.contains(",bern0.4,"));
     }
 
     #[test]
@@ -746,6 +875,9 @@ mod tests {
                 raw_count: 0,
                 exposed_cum: 0,
                 clipped: 0,
+                dropped_frames: 0,
+                retransmits: 0,
+                fallbacks: 0,
             })
             .collect();
         let rho = empirical_rho(&recs).unwrap();

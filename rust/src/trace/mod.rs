@@ -41,7 +41,9 @@ pub struct RoundEvent {
     pub grad_norm: f64,
     /// Worker→server bits this round.
     pub uplink_bits: u64,
-    /// Echo / raw frame counts among *fault-free* workers.
+    /// Echo / raw frame counts among *fault-free* workers, classified by
+    /// what ultimately served the slot: an echo that fell back to raw on
+    /// a lossy uplink counts as raw (the attempt is in `fallbacks`).
     pub echo_count: usize,
     pub raw_count: usize,
     /// Byzantine workers exposed so far (cumulative).
@@ -49,6 +51,15 @@ pub struct RoundEvent {
     /// Gradients clipped by the CGC filter this round (0 under non-CGC
     /// aggregation rules) — the server's per-round filter decisions.
     pub clipped: usize,
+    /// Channel casualties this round: (listener, frame) pairs an honest
+    /// listener missed on the lossy radio. 0 under the perfect channel.
+    pub dropped_frames: usize,
+    /// Uplink retransmissions this round (server-bound ARQ attempts
+    /// beyond the first). 0 under the perfect channel.
+    pub retransmits: usize,
+    /// Echo→raw fallbacks this round (the server missed, or could not
+    /// reconstruct, an honest echo). 0 under the perfect channel.
+    pub fallbacks: usize,
 }
 
 /// Anything that wants to see the round stream. Events arrive in round
@@ -399,6 +410,9 @@ mod tests {
             raw_count: 0,
             exposed_cum: 0,
             clipped: 0,
+            dropped_frames: 0,
+            retransmits: 0,
+            fallbacks: 0,
         }
     }
 

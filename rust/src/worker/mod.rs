@@ -52,6 +52,12 @@ pub struct WorkerStats {
     pub raw_rounds: u64,
     /// Sum over rounds of `|R_j|` at transmit time.
     pub span_sizes: u64,
+    /// Frames this worker actually heard / missed on the (possibly
+    /// lossy) channel — what "partial overhearing" did to its basis.
+    /// Maintained by the round engine; `frames_missed` stays 0 under the
+    /// perfect channel.
+    pub frames_heard: u64,
+    pub frames_missed: u64,
 }
 
 impl WorkerStats {
@@ -139,9 +145,12 @@ impl EchoWorker {
     ///
     /// Consumes the round's local gradient: on the raw branch it moves
     /// straight into the frame (no O(d) clone), so [`Self::local_gradient`]
-    /// returns `None` after transmitting. The projection itself writes into
-    /// the worker's reusable echo buffer — the whole decision allocates
-    /// only the O(s) coefficient/id vectors of an echo frame.
+    /// returns `None` after transmitting. On the *echo* branch the
+    /// gradient is retained — under a lossy channel the worker may still
+    /// need it for the fall-back-to-raw retransmission when the server
+    /// misses (or cannot reconstruct) the echo. The projection itself
+    /// writes into the worker's reusable echo buffer — the whole decision
+    /// allocates only the O(s) coefficient/id vectors of an echo frame.
     pub fn transmit(&mut self) -> Payload {
         let g = self.grad.take().expect("begin_round before transmit");
         self.transmitted = true;
@@ -165,6 +174,9 @@ impl EchoWorker {
                 let sorted_ids: Vec<usize> = order.iter().map(|&i| ids[i]).collect();
                 let sorted_coeffs: Vec<f64> = order.iter().map(|&i| pr.coeffs[i]).collect();
                 self.stats.echo_rounds += 1;
+                // Keep the gradient for a potential raw fallback (lossy
+                // uplink); dropped at the next `begin_round` otherwise.
+                self.grad = Some(g);
                 return Payload::Echo { k, coeffs: sorted_coeffs, ids: sorted_ids };
             }
         }
@@ -172,12 +184,21 @@ impl EchoWorker {
         Payload::Raw(g)
     }
 
-    /// The local gradient of the current round (test/diagnostic access and
-    /// the raw-broadcast baselines). `None` before [`Self::begin_round`]
-    /// and after [`Self::transmit`] (which moves the gradient into the
-    /// frame).
+    /// The local gradient of the current round (test/diagnostic access,
+    /// the raw-broadcast baselines, and the lossy-channel raw fallback).
+    /// `None` before [`Self::begin_round`] and after a *raw*
+    /// [`Self::transmit`] (which moves the gradient into the frame); an
+    /// echo transmit retains it.
     pub fn local_gradient(&self) -> Option<&[f64]> {
         self.grad.as_deref()
+    }
+
+    /// Move the retained gradient out (the lossy-channel raw fallback:
+    /// the frame takes the buffer, no O(d) clone — the gradient is dead
+    /// for the rest of the round anyway). `None` whenever
+    /// [`Self::local_gradient`] would be.
+    pub fn take_gradient(&mut self) -> Option<Vec<f64>> {
+        self.grad.take()
     }
 }
 
@@ -257,6 +278,22 @@ mod tests {
         } else {
             panic!("expected echo");
         }
+    }
+
+    #[test]
+    fn echo_transmit_retains_the_gradient_for_fallback() {
+        let d = 3;
+        let mut w = worker(d, 0.5);
+        let g = vec![2.0, 0.0, 0.0];
+        w.begin_round(g.clone());
+        w.overhear(0, &Payload::Raw(vec![1.0, 0.0, 0.0]));
+        assert!(w.transmit().is_echo());
+        assert_eq!(w.local_gradient(), Some(&g[..]), "echo keeps g for the raw fallback");
+        // A raw transmit still moves the gradient into the frame.
+        let mut w2 = worker(d, 0.5);
+        w2.begin_round(g);
+        assert!(!w2.transmit().is_echo());
+        assert_eq!(w2.local_gradient(), None);
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! The channel model's end-to-end contracts:
+//!
+//! * **backward compatibility** — `--channel perfect`, `bernoulli=0.0`
+//!   and a zero-loss Gilbert–Elliott produce **byte-identical** sweep
+//!   JSON (no channel fields serialized), at any thread count: the
+//!   pre-channel artifact schema and values are preserved exactly;
+//! * **determinism** — lossy sweeps are byte-identical at `--threads 1`
+//!   vs `8`, and the lossy round engine is bit-identical serial vs
+//!   threaded (channel draws are pure functions of
+//!   `(seed, round, slot, attempt, receiver)`);
+//! * **semantics** — loss shrinks overheard spans (echo rate drops),
+//!   honest workers are never exposed by channel loss, a total blackout
+//!   freezes training without crashing, and the retransmit/fallback
+//!   accounting shows up in the trace.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use echo_cgc::byzantine::AttackKind;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::radio::ChannelModel;
+use echo_cgc::sim::Simulation;
+use echo_cgc::sweep::SweepGrid;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 12;
+    cfg.f = 1;
+    cfg.b = 1;
+    cfg.d = 24;
+    cfg.rounds = 25;
+    cfg.sigma = 0.05;
+    cfg.seed = 11;
+    cfg
+}
+
+fn grid_with(channel: ChannelModel) -> SweepGrid {
+    let mut base = base_cfg();
+    base.channel = channel;
+    let mut grid = SweepGrid::new("chan", base);
+    grid.sigmas = vec![0.03, 0.08];
+    grid.attacks = vec![AttackKind::Omniscient, AttackKind::LargeNorm];
+    grid
+}
+
+#[test]
+fn lossless_channels_are_byte_identical_to_perfect_at_any_thread_count() {
+    // The backward-compatibility pin: wiring the channel in must not
+    // change a single byte of a lossless report — same engine behaviour
+    // (no RNG stream perturbed), same serialized schema (no channel
+    // fields), regardless of thread count.
+    let perfect = grid_with(ChannelModel::Perfect).run(1).to_json().to_string();
+    assert!(!perfect.contains("\"channel\""), "lossless cells serialize no channel field");
+    assert!(!perfect.contains("\"dropped_frames\""));
+    let bern0 = grid_with(ChannelModel::Bernoulli { p: 0.0 }).run(8).to_json().to_string();
+    assert_eq!(perfect.as_bytes(), bern0.as_bytes());
+    let ge0 = ChannelModel::GilbertElliott { p_good: 0.0, p_bad: 0.0, p_gb: 0.3, p_bg: 0.3 };
+    let ge = grid_with(ge0).run(4).to_json().to_string();
+    assert_eq!(perfect.as_bytes(), ge.as_bytes());
+}
+
+#[test]
+fn lossy_sweep_json_is_byte_identical_at_any_thread_count() {
+    let grid = grid_with(ChannelModel::Bernoulli { p: 0.2 });
+    let serial = grid.run(1).to_json().to_string();
+    assert!(serial.contains("\"channel\":\"bernoulli=0.2\""));
+    assert!(serial.contains("\"dropped_frames\""));
+    for threads in [2usize, 8] {
+        let par = grid.run(threads).to_json().to_string();
+        assert_eq!(serial.as_bytes(), par.as_bytes(), "threads={threads}");
+    }
+}
+
+#[test]
+fn lossy_engine_matches_serial_bitwise() {
+    let mut cfg = base_cfg();
+    cfg.channel = ChannelModel::Bernoulli { p: 0.25 };
+    let mut serial = Simulation::build(&cfg).unwrap();
+    let ra = serial.run();
+    let mut cfg4 = cfg.clone();
+    cfg4.threads = 4;
+    let mut par = Simulation::build(&cfg4).unwrap();
+    let rb = par.run();
+    for (x, y) in ra.iter().zip(rb.iter()) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        assert_eq!(x.uplink_bits, y.uplink_bits);
+        assert_eq!(x.echo_count, y.echo_count);
+        assert_eq!(x.dropped_frames, y.dropped_frames);
+        assert_eq!(x.retransmits, y.retransmits);
+        assert_eq!(x.fallbacks, y.fallbacks);
+    }
+    assert_eq!(serial.current_w(), par.current_w());
+    let (a, b) = (serial.channel_totals(), par.channel_totals());
+    assert_eq!(a.dropped_frames, b.dropped_frames);
+    assert_eq!(a.lost_slots, b.lost_slots);
+}
+
+#[test]
+fn lossy_channel_drops_frames_and_still_converges() {
+    let mut cfg = base_cfg();
+    cfg.f = 0;
+    cfg.b = 0;
+    cfg.attack = AttackKind::None;
+    cfg.rounds = 400;
+    cfg.d = 30;
+    cfg.channel = ChannelModel::Bernoulli { p: 0.1 };
+    let mut sim = Simulation::build(&cfg).unwrap();
+    let recs = sim.run();
+    let totals = sim.channel_totals();
+    assert!(totals.dropped_frames > 0, "p=0.1 must drop frames");
+    let first = recs.first().unwrap().dist_sq.unwrap();
+    let last = sim.final_dist_sq().unwrap();
+    assert!(last < first * 1e-2, "lossy run failed to converge: {first} → {last}");
+    // Channel loss never exposes an honest worker.
+    assert!(sim.server().exposed().is_empty());
+    // The trace carries the casualty columns.
+    assert!(recs.iter().map(|r| r.dropped_frames).sum::<usize>() > 0);
+}
+
+#[test]
+fn heavy_loss_degrades_the_echo_rate() {
+    // Smaller overheard spans ⇒ fewer echo opportunities. σ is small so
+    // the perfect channel echoes frequently.
+    let mut cfg = base_cfg();
+    cfg.n = 16;
+    cfg.sigma = 0.02;
+    cfg.rounds = 60;
+    let mut perfect = Simulation::build(&cfg).unwrap();
+    perfect.run_silent();
+    let mut lossy_cfg = cfg.clone();
+    lossy_cfg.channel = ChannelModel::Bernoulli { p: 0.7 };
+    let mut lossy = Simulation::build(&lossy_cfg).unwrap();
+    lossy.run_silent();
+    assert!(perfect.echo_rate() > 0.2, "perfect-channel echo rate {}", perfect.echo_rate());
+    assert!(
+        lossy.echo_rate() < perfect.echo_rate(),
+        "loss must shrink spans: lossy {} vs perfect {}",
+        lossy.echo_rate(),
+        perfect.echo_rate()
+    );
+    assert_eq!(perfect.channel_totals().dropped_frames, 0);
+    assert!(lossy.channel_totals().dropped_frames > 0);
+}
+
+#[test]
+fn blackout_channel_freezes_training_without_crashing() {
+    // p = 1: nothing is ever delivered. Every slot is Lost at the
+    // server (zeroed, nobody exposed), every transmission burns its
+    // full ARQ budget, spans stay empty (all-raw decisions), and w
+    // never moves.
+    let mut cfg = base_cfg();
+    cfg.f = 0;
+    cfg.b = 0;
+    cfg.attack = AttackKind::None;
+    cfg.rounds = 6;
+    cfg.channel = ChannelModel::Bernoulli { p: 1.0 };
+    cfg.uplink_retries = 2;
+    let mut sim = Simulation::build(&cfg).unwrap();
+    let recs = sim.run();
+    let totals = sim.channel_totals();
+    assert_eq!(totals.lost_slots, (cfg.n * cfg.rounds) as u64);
+    assert_eq!(sim.server().exposed().len(), 0);
+    assert_eq!(sim.echo_rate(), 0.0, "empty spans can never echo");
+    // Per round: every honest transmission is retransmitted to the
+    // budget (2 retries each), nobody hears anything.
+    for r in &recs {
+        assert_eq!(r.echo_count, 0);
+        assert_eq!(r.raw_count, cfg.n);
+        assert_eq!(r.retransmits, cfg.n * 2);
+        assert_eq!(r.dropped_frames, cfg.n * (cfg.n - 1));
+        assert_eq!(r.fallbacks, 0);
+    }
+    // All-zero aggregates ⇒ w is frozen: the distance never changes.
+    let d0 = recs.first().unwrap().dist_sq.unwrap();
+    let d_last = sim.final_dist_sq().unwrap();
+    assert_eq!(d0.to_bits(), d_last.to_bits(), "w must not move under total blackout");
+}
+
+#[test]
+fn retransmits_and_fallbacks_are_accounted() {
+    // Moderate loss with echoes in play: over enough rounds the ARQ
+    // and the echo→raw fallback both fire, and their bits show up in
+    // the meter (lossy runs cost MORE than the loss-free run of the
+    // same config — retransmissions are not free).
+    let mut cfg = base_cfg();
+    cfg.sigma = 0.02; // frequent echoes ⇒ fallback opportunities
+    cfg.rounds = 120;
+    cfg.channel = ChannelModel::Bernoulli { p: 0.3 };
+    let mut sim = Simulation::build(&cfg).unwrap();
+    sim.run_silent();
+    let totals = sim.channel_totals();
+    assert!(totals.retransmits > 0, "p=0.3 must trigger ARQ");
+    assert!(totals.fallbacks > 0, "p=0.3 over 120 echo-heavy rounds must trigger fallbacks");
+    assert!(totals.dropped_frames > 0);
+}
+
+#[test]
+fn all_raw_baseline_saves_exactly_zero_at_any_loss_rate() {
+    // comm_savings charges the baseline the same per-slot ARQ attempts
+    // the run's primary broadcasts spent, so an all-raw run (echo
+    // disabled, no Byzantine frames) measures exactly 0 savings — loss
+    // overhead common to every algorithm is not misattributed to the
+    // echo mechanism.
+    for p in [0.0, 0.2, 0.5] {
+        let mut cfg = base_cfg();
+        cfg.f = 0;
+        cfg.b = 0;
+        cfg.attack = AttackKind::None;
+        cfg.echo_enabled = false;
+        cfg.rounds = 20;
+        cfg.channel = ChannelModel::Bernoulli { p };
+        let mut sim = Simulation::build(&cfg).unwrap();
+        sim.run_silent();
+        assert_eq!(sim.comm_savings().to_bits(), 0.0f64.to_bits(), "p={p}");
+    }
+}
+
+#[test]
+fn gilbert_elliott_runs_end_to_end_and_is_deterministic() {
+    let mut cfg = base_cfg();
+    cfg.channel = ChannelModel::GilbertElliott { p_good: 0.02, p_bad: 0.6, p_gb: 0.1, p_bg: 0.3 };
+    cfg.rounds = 40;
+    let run = || {
+        let mut sim = Simulation::build(&cfg).unwrap();
+        sim.run_silent();
+        let t = sim.channel_totals();
+        (t.dropped_frames, t.retransmits, t.lost_slots, sim.final_dist_sq().map(f64::to_bits))
+    };
+    let a = run();
+    assert!(a.0 > 0, "bursty channel must drop frames");
+    assert_eq!(a, run(), "same seed ⇒ same casualties, bit for bit");
+}

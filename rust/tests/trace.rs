@@ -96,6 +96,9 @@ fn ev(round: usize, dist: f64) -> RoundEvent {
         raw_count: 0,
         exposed_cum: 0,
         clipped: 0,
+        dropped_frames: 0,
+        retransmits: 0,
+        fallbacks: 0,
     }
 }
 
@@ -114,12 +117,14 @@ fn cell(seed: u64, attack: &'static str, trace: Vec<RoundEvent>) -> SweepCell {
         seed,
         rounds: 4,
         echo_enabled: true,
+        channel: echo_cgc::radio::ChannelModel::Perfect,
         echo_rate: 0.5,
         comm_savings: 0.5,
         final_loss: 0.1,
         final_dist_sq: Some(0.1),
         uplink_bits_total: 10,
         exposed: 0,
+        channel_totals: echo_cgc::sim::ChannelTotals::default(),
         empirical_rho: None,
         theory_rho: None,
         trace_policy: TracePolicy::Full,

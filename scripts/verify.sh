@@ -12,8 +12,9 @@
 #                     plus the backend thread-scaling CSV (what CI's
 #                     bench-smoke job runs — one code path for CI and
 #                     local runs)
-#     figures-smoke — the paper's Figures 2–4 from `echo-cgc figures`,
-#                     smoke profile (also run by CI's bench-smoke job;
+#     figures-smoke — the paper's Figures 2–4 plus the lossy-channel
+#                     FIG_loss family from `echo-cgc figures`, smoke
+#                     profile (also run by CI's bench-smoke job;
 #                     artifacts land in results/FIG_*.{svg,csv})
 #     trace-smoke   — a traced convergence sweep (`--trace`) plus the
 #                     faceted error-vs-round curves figure and the HTML
@@ -88,10 +89,13 @@ run_trace_smoke() {
 }
 
 run_figures_smoke() {
-  echo "== figures-smoke: paper Figures 2-4, smoke profile =="
+  echo "== figures-smoke: paper Figures 2-4 + loss family, smoke profile =="
   cargo run --release --bin echo-cgc -- figures --fig all --profile smoke --threads auto
-  echo "-- figure artifacts:"
-  ls -l results/FIG_*.svg results/FIG_*.csv
+  echo "-- figure artifacts (loss-family files listed explicitly so a"
+  echo "   missing FIG_loss artifact fails the stage, not just the glob):"
+  ls -l results/FIG_*.svg results/FIG_*.csv \
+    results/FIG_loss_savings.svg results/FIG_loss_echo_rate.svg \
+    results/FIG_loss_error.svg results/FIG_loss_report.json
 }
 
 case "$STAGE" in
