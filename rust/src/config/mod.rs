@@ -411,6 +411,75 @@ impl ExperimentConfig {
         Ok(())
     }
 
+    /// Serialize every field as `key = value` lines [`Self::apply_file`]
+    /// parses back to an identical config — how `echo-cgc swarm` ships the
+    /// experiment config to the node processes it spawns (the parity
+    /// contract needs each node to rebuild bit-identical RNG streams from
+    /// the same config). `f` is emitted before `b` because setting `f`
+    /// clamps `b`; `r`/`eta` are omitted when auto-derived (the default).
+    pub fn to_config_string(&self) -> String {
+        let mut out = String::new();
+        let mut kv = |k: &str, v: String| {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(&v);
+            out.push('\n');
+        };
+        kv("n", self.n.to_string());
+        kv("f", self.f.to_string());
+        kv("b", self.b.to_string());
+        kv("rounds", self.rounds.to_string());
+        kv("d", self.d.to_string());
+        kv("model", self.model.name().to_string());
+        kv("mu", self.mu.to_string());
+        kv("l", self.l.to_string());
+        kv("sigma", self.sigma.to_string());
+        kv("dataset-m", self.dataset_m.to_string());
+        kv("batch", self.batch.to_string());
+        kv("noise", self.noise.to_string());
+        kv("lambda", self.lambda.to_string());
+        kv("classes", self.classes.to_string());
+        if let Some(r) = self.r {
+            kv("r", r.to_string());
+        }
+        kv("r-frac", self.r_frac.to_string());
+        if let Some(eta) = self.eta {
+            kv("eta", eta.to_string());
+        }
+        kv("eps-li", self.eps_li.to_string());
+        kv("seed", self.seed.to_string());
+        kv("attack", self.attack.name().to_string());
+        kv("byz-placement", self.byz_placement.name().to_string());
+        kv("aggregator", self.aggregator.name().to_string());
+        kv(
+            "precision",
+            match self.precision {
+                Precision::F32 => "f32",
+                Precision::F64 => "f64",
+            }
+            .to_string(),
+        );
+        kv(
+            "id-codec",
+            match self.id_codec {
+                IdCodec::Varint => "varint",
+                IdCodec::FixedU16 => "u16",
+            }
+            .to_string(),
+        );
+        kv("shuffle-slots", self.shuffle_slots.to_string());
+        kv("echo", self.echo_enabled.to_string());
+        kv("topk", self.topk.map_or_else(|| "off".to_string(), |k| k.to_string()));
+        kv(
+            "threads",
+            if self.threads == 0 { "auto".to_string() } else { self.threads.to_string() },
+        );
+        kv("trace", self.trace.label());
+        kv("channel", self.channel.label());
+        kv("uplink-retries", self.uplink_retries.to_string());
+        out
+    }
+
     /// Sanity-check invariants (called by `Simulation::build`).
     pub fn validate(&self) -> Result<(), String> {
         if self.n == 0 {
@@ -556,6 +625,33 @@ mod tests {
         cfg.set("retries", "1").unwrap();
         assert_eq!(cfg.uplink_retries, 1);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn config_string_round_trips() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 9;
+        cfg.f = 1;
+        cfg.b = 1;
+        cfg.rounds = 17;
+        cfg.seed = 1234;
+        cfg.sigma = 0.025;
+        cfg.attack = AttackKind::SignFlip;
+        cfg.aggregator = Aggregator::TrimmedMean;
+        cfg.precision = Precision::F64;
+        cfg.id_codec = IdCodec::FixedU16;
+        cfg.topk = Some(5);
+        cfg.threads = 0;
+        cfg.trace = TracePolicy::EveryK { every_k: 4, max_points: 64 };
+        cfg.channel = ChannelModel::Bernoulli { p: 0.15 };
+        cfg.r = Some(0.3);
+        let mut back = ExperimentConfig::default();
+        back.apply_file(&cfg.to_config_string()).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+        // And the default itself survives the trip.
+        let mut back = ExperimentConfig::default();
+        back.apply_file(&ExperimentConfig::default().to_config_string()).unwrap();
+        assert_eq!(format!("{:?}", ExperimentConfig::default()), format!("{back:?}"));
     }
 
     #[test]

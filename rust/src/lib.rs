@@ -57,6 +57,16 @@
 //!   --fig curves`), an `--axis` mini-DSL for ad-hoc ablations, and an
 //!   HTML index page linking every artifact of a run — deterministic
 //!   bytes at any thread count;
+//! * a **transport-generic round engine** with a **real-node TCP
+//!   deployment mode** ([`net`]): the same [`sim::Simulation`] drives
+//!   either the in-memory radio or a fleet of real worker processes over
+//!   `std::net` sockets behind the [`sim::Transport`] seam. The server
+//!   rebroadcasts every uplink frame so workers overhear echoes exactly
+//!   as on the radio; `echo-cgc node` runs one endpoint, `echo-cgc
+//!   swarm` deploys n local node processes over loopback and measures
+//!   wall-clock round latency (rounds/sec, p50/p99) — with a per-round
+//!   trace bit-identical to the in-memory sim for the same config (see
+//!   `docs/node-mode.md`);
 //! * an **XLA/PJRT runtime** facade ([`runtime`]) for gradient computations
 //!   AOT-lowered from JAX/Pallas (`python/compile/`) as HLO text (python is
 //!   never on the request path). Currently a stub — see [`runtime`] — until
@@ -134,6 +144,7 @@ pub mod grad;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod par;
 pub mod prop;
 pub mod radio;

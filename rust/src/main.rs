@@ -37,6 +37,19 @@
 //!                      byte-identical at any thread count. `--trace
 //!                      summary|full|every_k=K,max=M` sets the per-cell
 //!                      trajectory retention serialized into the report
+//! * `node`           — one real endpoint of a TCP deployment: `--listen
+//!                      ADDR` runs the parameter server, `--id K --peers
+//!                      ADDR` runs worker `K` against the server at
+//!                      `ADDR`. All processes must share the same config
+//!                      (`--config` / flags); `--deadline-ms` bounds how
+//!                      long the server waits on any one slot
+//! * `swarm`          — deploy server + n worker `node` processes over
+//!                      loopback TCP, run all configured rounds, verify
+//!                      the round trace against the in-memory sim
+//!                      (`--parity off` to skip) and write wall-clock
+//!                      latency (rounds/sec, p50/p99) to
+//!                      `results/BENCH_swarm_latency.csv` (`--out` to
+//!                      relocate)
 //!
 //! Every subcommand accepts `--threads <k>` (or `--threads auto`) to fan
 //! the round engine's computation phase across `k` worker threads —
@@ -64,6 +77,9 @@
 //! echo-cgc sweep --grid comm-savings --profile smoke --threads auto
 //! echo-cgc sweep --grid loss --profile smoke --threads auto
 //! echo-cgc sweep --grid convergence --profile smoke --trace every_k=4,max=64
+//! echo-cgc swarm --n 8 --f 1 --rounds 20
+//! echo-cgc node --listen 0.0.0.0:7700 --n 4 --f 1 --seed 3
+//! echo-cgc node --id 0 --peers 10.0.0.1:7700 --n 4 --f 1 --seed 3
 //! ```
 
 use echo_cgc::analysis;
@@ -75,7 +91,7 @@ use echo_cgc::sim::Simulation;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: echo-cgc <train|analyze|figures|bench-comm|echo-rate|attack-matrix|convergence|multihop|sweep> [--key value ...]\n\
+        "usage: echo-cgc <train|analyze|figures|bench-comm|echo-rate|attack-matrix|convergence|multihop|sweep|node|swarm> [--key value ...]\n\
          common flags:  --n --f --b --d --rounds --sigma --attack --aggregator --seed --threads <k|auto>\n\
                         --trace summary|full|every_k=K,max=M (per-round trajectory retention)\n\
                         --channel perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg --uplink-retries <k> (lossy radio)\n\
@@ -83,6 +99,8 @@ fn usage() -> ! {
          figures flags: --fig 2|3|4|curves|loss|all --profile smoke|full --out-dir <dir> (paper figures)\n\
                         --axis key=v1,v2|a..b [--x axis] [--series axis] [--metric name] (ad-hoc ablation)\n\
                         --which 1a|1b|1c|1d|all (closed-form theory figures)\n\
+         node flags:    --listen ADDR (server) | --id K --peers ADDR (worker); --deadline-ms <ms>\n\
+         swarm flags:   --deadline-ms <ms> --out <csv-path> --parity on|off\n\
          run `echo-cgc train --n 20 --f 2 --rounds 200` for a quick start"
     );
     std::process::exit(2);
@@ -99,6 +117,74 @@ fn extract_flag(args: &mut Vec<String>, flag: &str) -> Option<String> {
     let value = args[pos + 1].clone();
     args.drain(pos..=pos + 1);
     Some(value)
+}
+
+/// Which extra (non-config) flags each subcommand accepts. One shared
+/// table instead of per-subcommand ad-hoc scans: a new subcommand adds a
+/// row here, and a tabled flag given to the *wrong* subcommand produces
+/// an error naming both, instead of falling through to the config parser
+/// as an unknown key.
+const SUBCOMMAND_FLAGS: &[(&str, &[&str])] = &[
+    ("sweep", &["--grid", "--profile", "--out"]),
+    (
+        "figures",
+        &["--fig", "--axis", "--x", "--series", "--metric", "--out-dir", "--profile", "--which"],
+    ),
+    ("node", &["--id", "--listen", "--peers", "--deadline-ms", "--die-after"]),
+    ("swarm", &["--deadline-ms", "--out", "--parity"]),
+];
+
+/// The active subcommand's extracted flag values (in command-line order;
+/// repeatable flags like `--axis` keep every occurrence).
+struct SubFlags {
+    cmd: Option<&'static str>,
+    values: Vec<(&'static str, String)>,
+}
+
+impl SubFlags {
+    fn get(&self, flag: &str) -> Option<String> {
+        self.values.iter().find(|(f, _)| *f == flag).map(|(_, v)| v.clone())
+    }
+
+    fn get_all(&self, flag: &str) -> Vec<String> {
+        self.values.iter().filter(|(f, _)| *f == flag).map(|(_, v)| v.clone()).collect()
+    }
+}
+
+/// Split the active subcommand's own flags out of `args`, leaving the
+/// config flags (and the subcommand word itself) behind. Exits with a
+/// pointed error when a flag from the table is used under a subcommand
+/// that does not accept it.
+fn split_subcommand_flags(args: &mut Vec<String>) -> SubFlags {
+    let cmd = SUBCOMMAND_FLAGS
+        .iter()
+        .map(|(c, _)| *c)
+        .find(|c| args.iter().any(|a| a == c));
+    let mut values = Vec::new();
+    if let Some(active) = cmd {
+        let known = SUBCOMMAND_FLAGS.iter().find(|(c, _)| *c == active).unwrap().1;
+        for &flag in known {
+            while let Some(v) = extract_flag(args, flag) {
+                values.push((flag, v));
+            }
+        }
+    }
+    // Anything from the table still present belongs to a different
+    // subcommand — name the owner and the offender.
+    for a in args.iter() {
+        if let Some((owner, _)) =
+            SUBCOMMAND_FLAGS.iter().find(|(_, flags)| flags.contains(&a.as_str()))
+        {
+            match cmd {
+                Some(active) => {
+                    eprintln!("{a} is a `{owner}` flag; subcommand `{active}` does not accept it")
+                }
+                None => eprintln!("{a} is a `{owner}` flag; no subcommand given"),
+            }
+            std::process::exit(2);
+        }
+    }
+    SubFlags { cmd, values }
 }
 
 fn main() {
@@ -121,54 +207,34 @@ fn main() {
         }
         args.drain(pos..=pos + 1);
     }
-    // `--which` belongs to the figures subcommand, not the config.
-    let mut which = String::from("all");
-    if let Some(pos) = args.iter().position(|a| a == "--which") {
-        if pos + 1 < args.len() {
-            which = args[pos + 1].clone();
-            args.drain(pos..=pos + 1);
-        }
-    }
-    // Sweep-specific flags — extracted only when the sweep subcommand is
-    // present, so other subcommands still reject them as unknown keys.
-    let is_sweep = args.iter().any(|a| a == "sweep");
-    let mut grid_name = String::from("quick");
-    let mut profile_name = String::from("full");
-    let mut sweep_out = None;
-    if is_sweep {
-        if let Some(v) = extract_flag(&mut args, "--grid") {
-            grid_name = v;
-        }
-        if let Some(v) = extract_flag(&mut args, "--profile") {
-            profile_name = v;
-        }
-        sweep_out = extract_flag(&mut args, "--out");
-    }
-    // Figure-layer flags (`figures --fig 2|3|4`, ad-hoc `--axis` grids).
-    let is_figures = args.iter().any(|a| a == "figures");
+    // Whether the user chose a trace policy explicitly (the flag is a
+    // config key, consumed by the config parser below): without it,
+    // ad-hoc figure ablations pin scalar-only retention.
+    let trace_given = args.iter().any(|a| a == "--trace" || a.starts_with("--trace="));
+    // The active subcommand's own (non-config) flags, via the shared
+    // table — other subcommands reject them by name.
+    let sub = split_subcommand_flags(&mut args);
+    let which = sub.get("--which").unwrap_or_else(|| String::from("all"));
+    let grid_name = sub.get("--grid").unwrap_or_else(|| String::from("quick"));
+    let profile_name = sub.get("--profile").unwrap_or_else(|| String::from("full"));
+    let sweep_out = sub.get("--out").filter(|_| sub.cmd == Some("sweep"));
     let mut fig_cli = FiguresCli::default();
-    if is_figures {
-        // Whether the user chose a trace policy explicitly (the flag is
-        // still in `args` here — the config parser consumes it later):
-        // without it, ad-hoc ablation grids pin scalar-only retention.
-        fig_cli.trace_given =
-            args.iter().any(|a| a == "--trace" || a.starts_with("--trace="));
-        fig_cli.fig = extract_flag(&mut args, "--fig");
-        while let Some(spec) = extract_flag(&mut args, "--axis") {
-            fig_cli.axes.push(spec);
-        }
-        fig_cli.x = extract_flag(&mut args, "--x");
-        fig_cli.series = extract_flag(&mut args, "--series");
-        fig_cli.metric = extract_flag(&mut args, "--metric");
-        fig_cli.out_dir = extract_flag(&mut args, "--out-dir");
-        if let Some(v) = extract_flag(&mut args, "--profile") {
-            profile_name = v;
-        }
+    if sub.cmd == Some("figures") {
+        fig_cli.trace_given = trace_given;
+        fig_cli.fig = sub.get("--fig");
+        fig_cli.axes = sub.get_all("--axis");
+        fig_cli.x = sub.get("--x");
+        fig_cli.series = sub.get("--series");
+        fig_cli.metric = sub.get("--metric");
+        fig_cli.out_dir = sub.get("--out-dir");
     }
     let rest = match cfg.apply_args(&args) {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("error: {e}");
+            match sub.cmd {
+                Some(c) => eprintln!("error in `{c}` arguments: {e}"),
+                None => eprintln!("error: {e}"),
+            }
             std::process::exit(2);
         }
     };
@@ -186,8 +252,226 @@ fn main() {
         "convergence" => cmd_convergence(&cfg),
         "multihop" => cmd_multihop(&cfg),
         "sweep" => cmd_sweep(&cfg, &args, &grid_name, &profile_name, sweep_out),
+        "node" => cmd_node(&cfg, &sub),
+        "swarm" => cmd_swarm(&cfg, &sub),
         _ => usage(),
     }
+}
+
+/// Parse `--deadline-ms` (per-slot server read bound; must cover one
+/// worker's gradient computation).
+fn node_deadline(sub: &SubFlags) -> std::time::Duration {
+    let ms = match sub.get("--deadline-ms") {
+        Some(v) => v.parse::<u64>().unwrap_or_else(|_| {
+            eprintln!("--deadline-ms needs an integer millisecond count, got '{v}'");
+            std::process::exit(2);
+        }),
+        None => 10_000,
+    };
+    std::time::Duration::from_millis(ms.max(1))
+}
+
+fn cmd_node(cfg: &ExperimentConfig, sub: &SubFlags) {
+    use echo_cgc::net::{run_server_on, run_worker, NodeOpts};
+    let deadline = node_deadline(sub);
+    match (sub.get("--listen"), sub.get("--id")) {
+        (Some(addr), None) => {
+            let listener = std::net::TcpListener::bind(&addr).unwrap_or_else(|e| {
+                eprintln!("cannot listen on {addr}: {e}");
+                std::process::exit(1);
+            });
+            println!(
+                "echo-cgc node (server): listening on {addr}, waiting for {} workers …",
+                cfg.n
+            );
+            let report = run_server_on(listener, cfg, deadline).unwrap_or_else(|e| {
+                eprintln!("server failed: {e}");
+                std::process::exit(1);
+            });
+            print_swarm_report(cfg, &report);
+        }
+        (None, Some(id)) => {
+            let id: usize = id.parse().unwrap_or_else(|_| {
+                eprintln!("--id needs a worker index in 0..{}", cfg.n);
+                std::process::exit(2);
+            });
+            let server = sub.get("--peers").unwrap_or_else(|| {
+                eprintln!("worker mode needs --peers <server-addr>");
+                std::process::exit(2);
+            });
+            let mut opts = NodeOpts::new(id, server, cfg.clone());
+            // Fault-injection hook (used by the swarm robustness checks):
+            // exit silently after this many complete rounds.
+            opts.die_after_rounds = sub.get("--die-after").map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    eprintln!("--die-after needs a round count");
+                    std::process::exit(2);
+                })
+            });
+            if let Err(e) = run_worker(opts) {
+                eprintln!("worker {id} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        _ => {
+            eprintln!("node needs either --listen ADDR (server) or --id K --peers ADDR (worker)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_swarm_report(cfg: &ExperimentConfig, report: &echo_cgc::net::SwarmReport) {
+    println!(
+        "{} rounds over TCP: {:.1} rounds/s, round latency p50 {:.2} ms / p99 {:.2} ms / max {:.2} ms",
+        report.rounds(),
+        report.rounds_per_sec(),
+        report.p50_ms(),
+        report.p99_ms(),
+        report.max_ms()
+    );
+    println!(
+        "echo rate {:.1}%, comm saved {:.1}%, {} uplink bits, {} lost slots, {} of {} byzantine exposed",
+        100.0 * report.echo_rate,
+        100.0 * report.comm_savings,
+        report.total_uplink_bits(),
+        report.lost_slots,
+        report.exposed,
+        cfg.b
+    );
+}
+
+fn cmd_swarm(cfg: &ExperimentConfig, sub: &SubFlags) {
+    use echo_cgc::net::{compare_rounds, run_server_on, validate_node_cfg};
+    let deadline = node_deadline(sub);
+    let parity = match sub.get("--parity").as_deref() {
+        None | Some("on") => true,
+        Some("off") => false,
+        Some(v) => {
+            eprintln!("--parity takes on|off, got '{v}'");
+            std::process::exit(2);
+        }
+    };
+    let out = sub
+        .get("--out")
+        .unwrap_or_else(|| String::from("results/BENCH_swarm_latency.csv"));
+    if let Err(e) = validate_node_cfg(cfg) {
+        eprintln!("config error: {e}");
+        std::process::exit(2);
+    }
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap_or_else(|e| {
+        eprintln!("cannot bind loopback: {e}");
+        std::process::exit(1);
+    });
+    let local = listener.local_addr().expect("loopback listener has an address");
+    let addr = local.to_string();
+    println!(
+        "echo-cgc swarm: server on {addr}, spawning {} worker node processes (n={} f={} b={} rounds={})",
+        cfg.n,
+        cfg.n,
+        cfg.f,
+        cfg.b,
+        cfg.rounds
+    );
+    // Children get the *entire* effective config through a temp file —
+    // the one-source-of-truth handoff that makes their RNG streams
+    // bit-identical to the server's wiring.
+    let cfg_path =
+        std::env::temp_dir().join(format!("echo-cgc-swarm-{}.conf", std::process::id()));
+    std::fs::write(&cfg_path, cfg.to_config_string()).unwrap_or_else(|e| {
+        eprintln!("cannot write {}: {e}", cfg_path.display());
+        std::process::exit(1);
+    });
+    let exe = std::env::current_exe().unwrap_or_else(|e| {
+        eprintln!("cannot locate own binary: {e}");
+        std::process::exit(1);
+    });
+    let mut children = Vec::with_capacity(cfg.n);
+    for id in 0..cfg.n {
+        let child = std::process::Command::new(&exe)
+            .arg("node")
+            .args(["--id", &id.to_string()])
+            .args(["--peers", &addr])
+            .arg("--config")
+            .arg(&cfg_path)
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .unwrap_or_else(|e| {
+                eprintln!("cannot spawn worker {id}: {e}");
+                std::process::exit(1);
+            });
+        children.push(child);
+    }
+    let report = run_server_on(listener, cfg, deadline);
+    for c in &mut children {
+        match &report {
+            // Clean finish: the server sent Shutdown, workers exit on
+            // their own.
+            Ok(_) => {
+                let _ = c.wait();
+            }
+            Err(_) => {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&cfg_path);
+    let report = report.unwrap_or_else(|e| {
+        eprintln!("swarm failed: {e}");
+        std::process::exit(1);
+    });
+    print_swarm_report(cfg, &report);
+    if parity {
+        // The contract: the deployment's round trace is bit-identical to
+        // the in-memory sim's for the same config.
+        let mut sim = Simulation::build(cfg).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        });
+        for swarm_ev in &report.events {
+            let mem_ev = sim.step();
+            if let Err(e) = compare_rounds(&mem_ev, swarm_ev) {
+                eprintln!("PARITY FAILURE (swarm diverged from in-memory sim): {e}");
+                std::process::exit(1);
+            }
+        }
+        println!(
+            "parity: all {} rounds bit-identical to the in-memory simulation",
+            report.rounds()
+        );
+    }
+    let mut table = CsvTable::new(&[
+        "n",
+        "f",
+        "b",
+        "rounds",
+        "rounds_per_sec",
+        "p50_ms",
+        "p99_ms",
+        "mean_ms",
+        "max_ms",
+        "total_uplink_bits",
+        "echo_rate",
+        "comm_savings",
+        "lost_slots",
+    ]);
+    table.push_row(&[
+        cfg.n as f64,
+        cfg.f as f64,
+        cfg.b as f64,
+        report.rounds() as f64,
+        report.rounds_per_sec(),
+        report.p50_ms(),
+        report.p99_ms(),
+        report.mean_ms(),
+        report.max_ms(),
+        report.total_uplink_bits() as f64,
+        report.echo_rate,
+        report.comm_savings,
+        report.lost_slots as f64,
+    ]);
+    table.write_file(&out).expect("write swarm latency csv");
+    println!("wrote {out}");
 }
 
 fn cmd_sweep(

@@ -202,6 +202,19 @@ impl CsvTable {
     }
 }
 
+/// Linear-interpolated `p`-th percentile of a sample (`p` in `[0, 100]`;
+/// `percentile(xs, 50.0)` equals [`Summary::of`]'s median). Feeds the
+/// swarm latency benchmark (p50/p99 round wall-clock).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of an empty sample");
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
+}
+
 /// Descriptive statistics over a sample.
 #[derive(Clone, Copy, Debug)]
 pub struct Summary {
@@ -318,6 +331,18 @@ mod tests {
         assert_eq!(s.n, 1);
         assert_eq!(s.mean, 2.0);
         assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates_and_matches_median() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - Summary::of(&xs).median).abs() < 1e-12);
+        // p99 of 100 evenly spaced samples sits between the top two.
+        let big: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert!((percentile(&big, 99.0) - 98.01).abs() < 1e-9);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
     }
 
     #[test]

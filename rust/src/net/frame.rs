@@ -1,0 +1,322 @@
+//! Length-prefixed TCP framing for node mode.
+//!
+//! Every message on a node-mode socket is one *net frame*:
+//!
+//! ```text
+//! frame := len:u32le body            // len = body length in bytes
+//! body  := tag:u8 fields
+//! ```
+//!
+//! Gradient-bearing frames carry the [`crate::wire`]-encoded payload
+//! bytes verbatim as the trailing field — the radio wire codec stays the
+//! single source of truth for payload bits (and for the bit meter: the
+//! net transport charges `8 ×` the payload length, never the TCP framing
+//! overhead, so node-mode bit counts equal the in-memory radio's).
+//!
+//! | tag | frame | fields |
+//! |-----|-------|--------|
+//! | `0x01` | `Hello` | `id:u32` |
+//! | `0x02` | `Downlink` | `round:u32` + payload bytes |
+//! | `0x03` | `Uplink` | `round:u32 slot:u32` + payload bytes |
+//! | `0x04` | `SilentSlot` | `round:u32 slot:u32` |
+//! | `0x05` | `Overheard` | `round:u32 slot:u32 sender:u32` + payload bytes |
+//! | `0x06` | `SlotEmpty` | `round:u32 slot:u32 sender:u32 lost:u8` |
+//! | `0x07` | `FallbackReq` | `round:u32 slot:u32` |
+//! | `0x08` | `Shutdown` | — |
+//!
+//! Decoding is total: any byte sequence produces `Ok` or a typed
+//! [`FrameError`], never a panic — `rust/tests/net_frames.rs` fuzzes
+//! this. Length prefixes above [`MAX_FRAME_BYTES`] are rejected *before*
+//! any allocation, so a hostile prefix cannot OOM the server.
+
+use std::io::{Read, Write};
+
+/// Upper bound on one frame's body (64 MiB ≈ a 16M-coordinate f32
+/// gradient — far above any config this crate runs). Oversized length
+/// prefixes error out before allocating.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+const TAG_HELLO: u8 = 0x01;
+const TAG_DOWNLINK: u8 = 0x02;
+const TAG_UPLINK: u8 = 0x03;
+const TAG_SILENT: u8 = 0x04;
+const TAG_OVERHEARD: u8 = 0x05;
+const TAG_SLOT_EMPTY: u8 = 0x06;
+const TAG_FALLBACK_REQ: u8 = 0x07;
+const TAG_SHUTDOWN: u8 = 0x08;
+
+/// One message on a node-mode TCP socket.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetFrame {
+    /// Worker handshake: "I am worker `id`" (sent once after connect).
+    Hello { id: usize },
+    /// Server → all workers: the round's parameter broadcast
+    /// (`bytes` = wire-encoded [`crate::wire::Payload::Param`]).
+    Downlink { round: usize, bytes: Vec<u8> },
+    /// Worker → server: the frame transmitted in the worker's TDMA slot
+    /// (primary broadcast, or the raw fallback after a `FallbackReq`).
+    Uplink { round: usize, slot: usize, bytes: Vec<u8> },
+    /// Worker → server: the worker deliberately stays silent in its slot
+    /// (a crash-style fault the attack chose — still a protocol message,
+    /// so the server can tell deliberate silence from a dead peer).
+    SilentSlot { round: usize, slot: usize },
+    /// Server → other workers: the slot's *final* on-air payload,
+    /// rebroadcast so workers overhear it (single-hop radio semantics).
+    /// Exactly one `Overheard`/`SlotEmpty` notice is sent per slot, and
+    /// after a fallback it carries the raw bytes, matching what listeners
+    /// of the in-memory radio ultimately act on.
+    Overheard { round: usize, slot: usize, sender: usize, bytes: Vec<u8> },
+    /// Server → other workers: nothing usable aired in the slot.
+    /// `lost = false`: deliberate silence. `lost = true`: the slot timed
+    /// out or carried an undecodable frame (scored
+    /// [`crate::coordinator::SlotOutcome::Lost`], never exposed).
+    SlotEmpty { round: usize, slot: usize, sender: usize, lost: bool },
+    /// Server → slot owner: your echo was unusable — retransmit raw in
+    /// the same slot (the synchronous NACK of the in-memory engine).
+    FallbackReq { round: usize, slot: usize },
+    /// Server → all workers: the run is over, exit cleanly.
+    Shutdown,
+}
+
+/// Errors from [`read_frame`] / [`NetFrame::decode_body`].
+#[derive(Debug)]
+pub enum FrameError {
+    /// Socket-level failure (includes read timeouts and EOF).
+    Io(std::io::Error),
+    /// Length prefix exceeds [`MAX_FRAME_BYTES`].
+    Oversized(u32),
+    /// Unknown frame tag.
+    BadTag(u8),
+    /// Body ended before its fields did.
+    Truncated,
+    /// Fixed-size frame carried extra bytes.
+    Trailing(usize),
+}
+
+impl FrameError {
+    /// Did the underlying read time out (the socket's read deadline
+    /// elapsed)? `WouldBlock` vs `TimedOut` is platform-dependent.
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            self,
+            FrameError::Io(e) if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        )
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "io: {e}"),
+            FrameError::Oversized(n) => {
+                write!(f, "frame length {n} exceeds {MAX_FRAME_BYTES} bytes")
+            }
+            FrameError::BadTag(t) => write!(f, "unknown net frame tag {t:#x}"),
+            FrameError::Truncated => write!(f, "truncated net frame"),
+            FrameError::Trailing(n) => write!(f, "{n} trailing bytes in net frame"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: usize) {
+    buf.extend_from_slice(&(v as u32).to_le_bytes());
+}
+
+fn get_u32(buf: &[u8], pos: &mut usize) -> Result<usize, FrameError> {
+    let end = pos.checked_add(4).ok_or(FrameError::Truncated)?;
+    let bytes = buf.get(*pos..end).ok_or(FrameError::Truncated)?;
+    *pos = end;
+    Ok(u32::from_le_bytes(bytes.try_into().unwrap()) as usize)
+}
+
+fn get_u8(buf: &[u8], pos: &mut usize) -> Result<u8, FrameError> {
+    let b = *buf.get(*pos).ok_or(FrameError::Truncated)?;
+    *pos += 1;
+    Ok(b)
+}
+
+impl NetFrame {
+    /// Serialize the frame body (everything after the length prefix).
+    pub fn encode_body(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            NetFrame::Hello { id } => {
+                out.push(TAG_HELLO);
+                put_u32(&mut out, *id);
+            }
+            NetFrame::Downlink { round, bytes } => {
+                out.push(TAG_DOWNLINK);
+                put_u32(&mut out, *round);
+                out.extend_from_slice(bytes);
+            }
+            NetFrame::Uplink { round, slot, bytes } => {
+                out.push(TAG_UPLINK);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *slot);
+                out.extend_from_slice(bytes);
+            }
+            NetFrame::SilentSlot { round, slot } => {
+                out.push(TAG_SILENT);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *slot);
+            }
+            NetFrame::Overheard { round, slot, sender, bytes } => {
+                out.push(TAG_OVERHEARD);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *slot);
+                put_u32(&mut out, *sender);
+                out.extend_from_slice(bytes);
+            }
+            NetFrame::SlotEmpty { round, slot, sender, lost } => {
+                out.push(TAG_SLOT_EMPTY);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *slot);
+                put_u32(&mut out, *sender);
+                out.push(u8::from(*lost));
+            }
+            NetFrame::FallbackReq { round, slot } => {
+                out.push(TAG_FALLBACK_REQ);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *slot);
+            }
+            NetFrame::Shutdown => out.push(TAG_SHUTDOWN),
+        }
+        out
+    }
+
+    /// Parse a frame body. Total: every input yields `Ok` or a typed
+    /// error, never a panic.
+    pub fn decode_body(buf: &[u8]) -> Result<NetFrame, FrameError> {
+        let mut pos = 0usize;
+        let tag = get_u8(buf, &mut pos)?;
+        let frame = match tag {
+            TAG_HELLO => NetFrame::Hello { id: get_u32(buf, &mut pos)? },
+            TAG_DOWNLINK => {
+                let round = get_u32(buf, &mut pos)?;
+                NetFrame::Downlink { round, bytes: buf[pos..].to_vec() }
+            }
+            TAG_UPLINK => {
+                let round = get_u32(buf, &mut pos)?;
+                let slot = get_u32(buf, &mut pos)?;
+                NetFrame::Uplink { round, slot, bytes: buf[pos..].to_vec() }
+            }
+            TAG_SILENT => {
+                let round = get_u32(buf, &mut pos)?;
+                let slot = get_u32(buf, &mut pos)?;
+                NetFrame::SilentSlot { round, slot }
+            }
+            TAG_OVERHEARD => {
+                let round = get_u32(buf, &mut pos)?;
+                let slot = get_u32(buf, &mut pos)?;
+                let sender = get_u32(buf, &mut pos)?;
+                NetFrame::Overheard { round, slot, sender, bytes: buf[pos..].to_vec() }
+            }
+            TAG_SLOT_EMPTY => {
+                let round = get_u32(buf, &mut pos)?;
+                let slot = get_u32(buf, &mut pos)?;
+                let sender = get_u32(buf, &mut pos)?;
+                let lost = get_u8(buf, &mut pos)? != 0;
+                NetFrame::SlotEmpty { round, slot, sender, lost }
+            }
+            TAG_FALLBACK_REQ => {
+                let round = get_u32(buf, &mut pos)?;
+                let slot = get_u32(buf, &mut pos)?;
+                NetFrame::FallbackReq { round, slot }
+            }
+            TAG_SHUTDOWN => NetFrame::Shutdown,
+            t => return Err(FrameError::BadTag(t)),
+        };
+        // Variable-length frames consumed the tail above; fixed-size ones
+        // must end exactly where their fields do.
+        match &frame {
+            NetFrame::Downlink { .. } | NetFrame::Uplink { .. } | NetFrame::Overheard { .. } => {}
+            _ if pos != buf.len() => return Err(FrameError::Trailing(buf.len() - pos)),
+            _ => {}
+        }
+        Ok(frame)
+    }
+}
+
+/// Write one length-prefixed frame and flush it.
+pub fn write_frame<W: Write>(w: &mut W, frame: &NetFrame) -> std::io::Result<()> {
+    let body = frame.encode_body();
+    debug_assert!(body.len() <= MAX_FRAME_BYTES);
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame. A read timeout mid-frame leaves the
+/// stream unusable (bytes may have been consumed) — callers treat any
+/// error here as fatal for the connection.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<NetFrame, FrameError> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes);
+    if len as usize > MAX_FRAME_BYTES {
+        return Err(FrameError::Oversized(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    NetFrame::decode_body(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: NetFrame) {
+        let body = f.encode_body();
+        assert_eq!(NetFrame::decode_body(&body).unwrap(), f);
+        // And through the stream layer.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let mut cursor = &buf[..];
+        assert_eq!(read_frame(&mut cursor).unwrap(), f);
+        assert!(cursor.is_empty(), "stream fully consumed");
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        round_trip(NetFrame::Hello { id: 7 });
+        round_trip(NetFrame::Downlink { round: 3, bytes: vec![1, 2, 3] });
+        round_trip(NetFrame::Uplink { round: 0, slot: 5, bytes: vec![] });
+        round_trip(NetFrame::SilentSlot { round: 9, slot: 2 });
+        round_trip(NetFrame::Overheard { round: 1, slot: 0, sender: 0, bytes: vec![0xff; 64] });
+        round_trip(NetFrame::SlotEmpty { round: 4, slot: 3, sender: 3, lost: true });
+        round_trip(NetFrame::SlotEmpty { round: 4, slot: 3, sender: 3, lost: false });
+        round_trip(NetFrame::FallbackReq { round: 2, slot: 1 });
+        round_trip(NetFrame::Shutdown);
+    }
+
+    #[test]
+    fn oversized_prefix_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 8]);
+        let mut cursor = &buf[..];
+        assert!(matches!(read_frame(&mut cursor), Err(FrameError::Oversized(_))));
+    }
+
+    #[test]
+    fn truncated_and_trailing_bodies_error() {
+        assert!(matches!(NetFrame::decode_body(&[]), Err(FrameError::Io(_) | FrameError::Truncated)));
+        // Hello with only 2 of 4 id bytes.
+        assert!(matches!(NetFrame::decode_body(&[0x01, 1, 2]), Err(FrameError::Truncated)));
+        // Shutdown with trailing garbage.
+        assert!(matches!(NetFrame::decode_body(&[0x08, 0]), Err(FrameError::Trailing(1))));
+        // Unknown tag.
+        assert!(matches!(NetFrame::decode_body(&[0xEE]), Err(FrameError::BadTag(0xEE))));
+    }
+}

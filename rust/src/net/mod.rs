@@ -1,0 +1,68 @@
+//! Real-node deployment over TCP (`echo-cgc node` / `echo-cgc swarm`).
+//!
+//! The in-memory engine simulates the single-hop radio; this module runs
+//! the *same* round engine ([`crate::sim::Simulation`]) against real
+//! worker processes on `std::net` sockets, behind the
+//! [`crate::sim::Transport`] seam:
+//!
+//! * [`frame`] — length-prefixed TCP framing ([`frame::NetFrame`]); the
+//!   gradient payloads inside are [`crate::wire`]-encoded verbatim, so
+//!   bit accounting matches the radio exactly;
+//! * [`server`] — [`NetServerTransport`]: the server resolves each TDMA
+//!   slot by reading the slot owner's socket, then *rebroadcasts* the
+//!   frame to every other worker — overhearing, the physical primitive
+//!   Echo-CGC exploits, reproduced as a server relay (a single-hop star
+//!   is exactly a broadcast domain with the server in the middle);
+//! * [`worker`] — the node process: builds the identical
+//!   [`crate::sim::Wiring`] from the shared config (bit-identical RNG
+//!   streams), computes gradients locally, echoes off overheard frames;
+//! * [`swarm`] — drive a full n-worker deployment over loopback and
+//!   collect wall-clock round latencies next to the usual round trace.
+//!
+//! **Parity contract.** For a config node mode accepts, a swarm run's
+//! per-round trace (loss, bits, echo/raw counts, exposures) is
+//! bit-identical to [`crate::sim::Simulation::build`]`+run` — pinned by
+//! `rust/tests/swarm.rs`. Wall-clock latency is the one thing the sim
+//! cannot measure and the one thing excluded from the contract.
+//!
+//! **Fault semantics.** A dead or wedged worker must never hang the
+//! server: every slot read carries the round deadline, and a slot that
+//! produces no usable frame in time is scored
+//! [`crate::coordinator::SlotOutcome::Lost`] — zeroed, never exposed
+//! (silence over an unreliable link is not Byzantine proof; the PR 5
+//! lossy-regime rule). See `docs/node-mode.md`.
+
+pub mod frame;
+pub mod server;
+pub mod swarm;
+pub mod worker;
+
+pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME_BYTES, NetFrame};
+pub use server::{accept_workers, NetServerTransport};
+pub use swarm::{
+    compare_rounds, run_server_on, run_swarm_threads, run_swarm_threads_with, SwarmReport,
+};
+pub use worker::{run_worker, NodeOpts};
+
+use crate::config::ExperimentConfig;
+
+/// Reject configs whose semantics node mode cannot reproduce.
+///
+/// Node mode pins the identity TDMA schedule (workers derive their slot
+/// from their id; a shuffled schedule would need a per-round schedule
+/// broadcast the protocol does not carry) and a perfect channel (the
+/// erasure models live in the in-memory radio; TCP delivers reliably, so
+/// a lossy run over sockets would silently measure the wrong thing).
+pub fn validate_node_cfg(cfg: &ExperimentConfig) -> Result<(), String> {
+    cfg.validate()?;
+    if cfg.shuffle_slots {
+        return Err("node mode requires the identity TDMA schedule (shuffle-slots = false)".into());
+    }
+    if !matches!(cfg.channel, crate::radio::ChannelModel::Perfect) {
+        return Err(format!(
+            "node mode runs over reliable TCP; channel model '{}' is sim-only (use --channel perfect)",
+            cfg.channel.label()
+        ));
+    }
+    Ok(())
+}

@@ -1,0 +1,344 @@
+//! Server side of node mode: accept the worker fleet, then drive the
+//! round engine's slot loop off real sockets.
+//!
+//! [`NetServerTransport`] implements [`Transport`] with
+//! `hosts_workers() == false`: the engine skips the computation phase
+//! entirely and this transport resolves each TDMA slot by reading one
+//! frame from the slot owner's socket, charging the bit meter exactly as
+//! the radio would (payload bits only — TCP framing is free, like the
+//! radio's PHY preamble), and rebroadcasting the frame to every other
+//! worker so they overhear it.
+//!
+//! **Lock-step relay.** Every slot produces exactly one notice —
+//! [`NetFrame::Overheard`] with the slot's final on-air bytes, or
+//! [`NetFrame::SlotEmpty`] — relayed to every worker except the sender.
+//! The notice is buffered and flushed at the *start* of the next slot's
+//! resolution (or at round end), which is what makes the pipeline
+//! deadlock-free: the owner of slot `s+1` is waiting for slot `s`'s
+//! notice before transmitting, and receives it just as the server turns
+//! to read slot `s+1`. A same-slot raw fallback *replaces* the buffered
+//! notice, so listeners only ever see the slot's final payload — exactly
+//! what the in-memory engine's overhear fan-out delivers.
+//!
+//! **Dead peers.** Any read timeout, protocol violation, or disconnect on
+//! a worker's socket marks that connection dead permanently (a partial
+//! read leaves a TCP stream unframeable, so there is nothing to salvage),
+//! and every one of its remaining slots resolves
+//! [`SlotResolution::Lost`] without waiting. A cleanly framed but
+//! undecodable payload is the one non-fatal failure: the frame boundary
+//! held, so the connection survives — the slot is still Lost (and
+//! charged nothing: garbage the radio could not even decode never counts
+//! as gradient bits).
+
+use super::frame::{read_frame, write_frame, NetFrame};
+use crate::radio::{BitMeter, Broadcast, TdmaSchedule};
+use crate::sim::{Outgoing, SlotResolution, Transport};
+use crate::wire::{decode, encode, Encoding, Payload};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Wait for all `n` workers to connect and introduce themselves.
+///
+/// Each accepted socket must open with [`NetFrame::Hello`]; duplicate or
+/// out-of-range ids are a deployment error (not a tolerated fault — the
+/// fleet roster is trusted, Byzantine behaviour starts *after* the
+/// handshake, as in the paper's known-membership model). Returns the
+/// connections indexed by worker id.
+pub fn accept_workers(
+    listener: &TcpListener,
+    n: usize,
+    wait: Duration,
+) -> Result<Vec<TcpStream>, String> {
+    listener.set_nonblocking(true).map_err(|e| format!("listener nonblocking: {e}"))?;
+    let mut conns: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    let start = Instant::now();
+    let mut got = 0usize;
+    while got < n {
+        match listener.accept() {
+            Ok((mut stream, peer)) => {
+                stream.set_nonblocking(false).map_err(|e| format!("{peer}: blocking: {e}"))?;
+                stream.set_nodelay(true).map_err(|e| format!("{peer}: nodelay: {e}"))?;
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(10)))
+                    .map_err(|e| format!("{peer}: timeout: {e}"))?;
+                match read_frame(&mut stream) {
+                    Ok(NetFrame::Hello { id }) if id < n && conns[id].is_none() => {
+                        conns[id] = Some(stream);
+                        got += 1;
+                    }
+                    Ok(NetFrame::Hello { id }) => {
+                        return Err(format!(
+                            "worker id {id} from {peer} is {}",
+                            if id < n { "already connected" } else { "out of range" }
+                        ));
+                    }
+                    Ok(f) => return Err(format!("{peer}: expected Hello, got {f:?}")),
+                    Err(e) => return Err(format!("{peer}: handshake failed: {e}")),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if start.elapsed() > wait {
+                    return Err(format!("only {got}/{n} workers connected within {wait:?}"));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(format!("accept failed: {e}")),
+        }
+    }
+    Ok(conns.into_iter().map(|c| c.unwrap()).collect())
+}
+
+/// The slot notice buffered between resolutions (see module docs).
+struct PendingNotice {
+    sender: usize,
+    frame: NetFrame,
+}
+
+/// The networked server transport: `n` worker sockets, the radio's bit
+/// meter, and the lock-step rebroadcast relay.
+pub struct NetServerTransport {
+    /// Worker connections by id; `None` = dead (its slots resolve Lost).
+    conns: Vec<Option<TcpStream>>,
+    meter: BitMeter,
+    enc: Encoding,
+    n: usize,
+    round: usize,
+    /// Per-slot read deadline — the bound that keeps a dead or wedged
+    /// worker from hanging the round.
+    deadline: Duration,
+    pending: Option<PendingNotice>,
+}
+
+impl NetServerTransport {
+    /// Wrap an accepted, id-ordered worker fleet. `deadline` bounds every
+    /// per-slot read (it must cover a worker's gradient computation —
+    /// the slot-0 read starts as soon as the downlink is out).
+    pub fn new(conns: Vec<TcpStream>, enc: Encoding, deadline: Duration) -> Self {
+        let n = conns.len();
+        let conns = conns
+            .into_iter()
+            .map(|c| {
+                // A failed option set degrades to a blocking socket; the
+                // deadline is then only best-effort, never a wrong result.
+                let _ = c.set_read_timeout(Some(deadline));
+                let _ = c.set_nodelay(true);
+                Some(c)
+            })
+            .collect();
+        Self { conns, meter: BitMeter::new(n), enc, n, round: 0, deadline, pending: None }
+    }
+
+    /// Workers still connected.
+    pub fn live_workers(&self) -> usize {
+        self.conns.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Tell every surviving worker the run is over.
+    pub fn shutdown(&mut self) {
+        for i in 0..self.n {
+            self.send_to(i, &NetFrame::Shutdown);
+        }
+    }
+
+    /// Write `frame` to worker `i`; a write failure kills the connection.
+    fn send_to(&mut self, i: usize, frame: &NetFrame) {
+        if let Some(c) = self.conns[i].as_mut() {
+            if write_frame(c, frame).is_err() {
+                self.conns[i] = None;
+            }
+        }
+    }
+
+    /// Relay the previous slot's buffered notice to everyone but its
+    /// sender (a node never overhears itself).
+    fn flush_pending(&mut self) {
+        if let Some(PendingNotice { sender, frame }) = self.pending.take() {
+            for i in 0..self.n {
+                if i != sender {
+                    self.send_to(i, &frame);
+                }
+            }
+        }
+    }
+
+    fn buffer_notice(&mut self, sender: usize, frame: NetFrame) {
+        self.pending = Some(PendingNotice { sender, frame });
+    }
+
+    /// Charge one on-air frame like the radio does: tx bits to the
+    /// sender, rx bits to every live listener, and report who heard it.
+    fn charge_air(&mut self, sender: usize, bits: u64) -> Vec<bool> {
+        self.meter.charge_tx(sender, bits);
+        let mut heard = vec![false; self.n];
+        for (i, h) in heard.iter_mut().enumerate() {
+            if i != sender && self.conns[i].is_some() {
+                *h = true;
+                self.meter.charge_rx(i, bits);
+            }
+        }
+        heard
+    }
+
+    /// Read the slot owner's next frame, expecting an uplink or a
+    /// deliberate-silence marker for exactly this (round, slot).
+    fn read_slot_frame(&mut self, slot: usize, sender: usize) -> SlotRead {
+        let Some(conn) = self.conns[sender].as_mut() else {
+            return SlotRead::Dead;
+        };
+        match read_frame(conn) {
+            Ok(NetFrame::Uplink { round, slot: s, bytes })
+                if round == self.round && s == slot =>
+            {
+                SlotRead::Uplink(bytes)
+            }
+            Ok(NetFrame::SilentSlot { round, slot: s }) if round == self.round && s == slot => {
+                SlotRead::Silent
+            }
+            // Anything else — timeout, disconnect, or a frame from the
+            // wrong position in the protocol — leaves the stream
+            // unsynchronized: kill the connection.
+            _ => {
+                self.conns[sender] = None;
+                SlotRead::Dead
+            }
+        }
+    }
+}
+
+enum SlotRead {
+    Uplink(Vec<u8>),
+    Silent,
+    Dead,
+}
+
+impl Transport for NetServerTransport {
+    fn hosts_workers(&self) -> bool {
+        false
+    }
+
+    fn owner(&self, slot: usize) -> usize {
+        // Node mode pins the paper's identity schedule: slot i = worker i.
+        slot
+    }
+
+    fn set_schedule(&mut self, _schedule: TdmaSchedule) {
+        // validate_node_cfg rejects shuffle_slots before a swarm starts.
+        panic!("node mode pins the identity TDMA schedule");
+    }
+
+    fn downlink(&mut self, w: &[f64]) -> Vec<f64> {
+        let p = Payload::Param(w.to_vec());
+        let bytes = encode(&p, self.enc);
+        self.meter.charge_downlink((bytes.len() as u64) * 8);
+        let frame = NetFrame::Downlink { round: self.round, bytes: bytes.clone() };
+        for i in 0..self.n {
+            self.send_to(i, &frame);
+        }
+        // The engine advances w from the same decode the workers see —
+        // wire quantization is physically real on both transports.
+        match decode(&bytes, self.enc).expect("self-encoded frame must decode") {
+            Payload::Param(v) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    fn begin_round(&mut self) {}
+
+    fn resolve_slot(&mut self, slot: usize, sender: usize, outgoing: Outgoing) -> SlotResolution {
+        assert!(
+            matches!(outgoing, Outgoing::Remote),
+            "networked transport resolves remote slots only"
+        );
+        assert_eq!(sender, slot, "identity schedule: slot {slot} belongs to worker {slot}");
+        self.flush_pending();
+        let round = self.round;
+        match self.read_slot_frame(slot, sender) {
+            SlotRead::Dead => {
+                self.buffer_notice(
+                    sender,
+                    NetFrame::SlotEmpty { round, slot, sender, lost: true },
+                );
+                SlotResolution::Lost
+            }
+            SlotRead::Silent => {
+                self.buffer_notice(
+                    sender,
+                    NetFrame::SlotEmpty { round, slot, sender, lost: false },
+                );
+                SlotResolution::Silent
+            }
+            SlotRead::Uplink(bytes) => match decode(&bytes, self.enc) {
+                Ok(payload) => {
+                    let bits = (bytes.len() as u64) * 8;
+                    let heard = self.charge_air(sender, bits);
+                    self.buffer_notice(sender, NetFrame::Overheard { round, slot, sender, bytes });
+                    SlotResolution::Aired(Broadcast {
+                        payload,
+                        heard,
+                        server_got: true,
+                        attempts: 1,
+                        bits,
+                    })
+                }
+                Err(_) => {
+                    // Cleanly framed garbage: the stream is still in
+                    // sync, so the peer survives — but the slot carried
+                    // nothing the radio model could decode. Lost.
+                    self.buffer_notice(
+                        sender,
+                        NetFrame::SlotEmpty { round, slot, sender, lost: true },
+                    );
+                    SlotResolution::Lost
+                }
+            },
+        }
+    }
+
+    fn fallback(&mut self, slot: usize, sender: usize, payload: Option<Payload>) -> Broadcast {
+        assert!(payload.is_none(), "networked fallback is requested from the remote worker");
+        let round = self.round;
+        self.send_to(sender, &NetFrame::FallbackReq { round, slot });
+        if let SlotRead::Uplink(bytes) = self.read_slot_frame(slot, sender) {
+            if let Ok(p) = decode(&bytes, self.enc) {
+                let bits = (bytes.len() as u64) * 8;
+                let heard = self.charge_air(sender, bits);
+                // The raw fallback replaces the echo as the slot's final
+                // on-air payload — listeners see only the replacement.
+                self.buffer_notice(sender, NetFrame::Overheard { round, slot, sender, bytes });
+                return Broadcast { payload: p, heard, server_got: true, attempts: 1, bits };
+            }
+            self.conns[sender] = None;
+        }
+        // Dead or unusable: the engine scores the slot Lost off
+        // `server_got = false`; listeners are told the slot is empty.
+        self.buffer_notice(sender, NetFrame::SlotEmpty { round, slot, sender, lost: true });
+        Broadcast {
+            payload: Payload::Raw(Vec::new()),
+            heard: vec![false; self.n],
+            server_got: false,
+            attempts: 1,
+            bits: 0,
+        }
+    }
+
+    fn finish_round(&mut self) {
+        self.flush_pending();
+        self.meter.end_round();
+        self.round += 1;
+    }
+
+    fn meter(&self) -> &BitMeter {
+        &self.meter
+    }
+}
+
+impl std::fmt::Debug for NetServerTransport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetServerTransport")
+            .field("n", &self.n)
+            .field("round", &self.round)
+            .field("live", &self.live_workers())
+            .field("deadline", &self.deadline)
+            .finish()
+    }
+}

@@ -1,0 +1,182 @@
+//! Drive a full node-mode deployment and measure it.
+//!
+//! The server half ([`run_server_on`]) is what `echo-cgc swarm` and the
+//! `node --listen` server mode share: accept the fleet, run the generic
+//! round engine over [`NetServerTransport`], and collect per-round
+//! wall-clock latencies next to the usual round trace. The thread-based
+//! harness ([`run_swarm_threads`]) runs server + workers in one process
+//! over loopback — the parity and robustness tests live on it
+//! (`rust/tests/swarm.rs`); the CLI spawns real processes instead.
+
+use super::server::{accept_workers, NetServerTransport};
+use super::validate_node_cfg;
+use super::worker::{run_worker, NodeOpts};
+use crate::config::ExperimentConfig;
+use crate::metrics::percentile;
+use crate::sim::{RoundEvent, Simulation, Wiring};
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+/// Everything a swarm run produced: the round trace (bit-comparable to
+/// the in-memory sim's), wall-clock latencies (the one thing the sim
+/// cannot measure), and the headline scalars.
+#[derive(Clone, Debug)]
+pub struct SwarmReport {
+    pub events: Vec<RoundEvent>,
+    /// Wall-clock duration of each round, milliseconds.
+    pub latencies_ms: Vec<f64>,
+    pub echo_rate: f64,
+    pub comm_savings: f64,
+    /// Slots the server scored Lost (dead peers; 0 in a healthy swarm).
+    pub lost_slots: u64,
+    /// Byzantine workers exposed by round end (cumulative).
+    pub exposed: usize,
+}
+
+impl SwarmReport {
+    pub fn rounds(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn total_uplink_bits(&self) -> u64 {
+        self.events.iter().map(|e| e.uplink_bits).sum()
+    }
+
+    pub fn rounds_per_sec(&self) -> f64 {
+        let total_ms: f64 = self.latencies_ms.iter().sum();
+        if total_ms <= 0.0 {
+            0.0
+        } else {
+            self.latencies_ms.len() as f64 / (total_ms / 1e3)
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 99.0)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.latencies_ms.iter().sum::<f64>() / self.latencies_ms.len().max(1) as f64
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.latencies_ms.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Accept `cfg.n` workers on `listener`, run all configured rounds, shut
+/// the fleet down, and report. `deadline` bounds every per-slot read.
+pub fn run_server_on(
+    listener: TcpListener,
+    cfg: &ExperimentConfig,
+    deadline: Duration,
+) -> Result<SwarmReport, String> {
+    validate_node_cfg(cfg)?;
+    let wiring = Wiring::native(cfg)?;
+    let conns = accept_workers(&listener, cfg.n, Duration::from_secs(60))?;
+    let transport = NetServerTransport::new(conns, cfg.encoding(), deadline);
+    let mut sim = Simulation::from_wiring(cfg, wiring, transport);
+    let mut events = Vec::with_capacity(cfg.rounds);
+    let mut latencies_ms = Vec::with_capacity(cfg.rounds);
+    for _ in 0..cfg.rounds {
+        let t = Instant::now();
+        let rec = sim.step();
+        latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        events.push(rec);
+    }
+    sim.transport_mut().shutdown();
+    Ok(SwarmReport {
+        echo_rate: sim.echo_rate(),
+        comm_savings: sim.comm_savings(),
+        lost_slots: sim.channel_totals().lost_slots,
+        exposed: sim.server().exposed().len(),
+        events,
+        latencies_ms,
+    })
+}
+
+/// Run a whole swarm — server plus `cfg.n` worker nodes — as threads of
+/// this process over loopback TCP. `die_after[i] = Some(k)` makes worker
+/// `i` exit after `k` complete rounds (fault injection); pass `&[]` for
+/// a healthy fleet.
+pub fn run_swarm_threads_with(
+    cfg: &ExperimentConfig,
+    deadline: Duration,
+    die_after: &[Option<usize>],
+) -> Result<SwarmReport, String> {
+    validate_node_cfg(cfg)?;
+    assert!(
+        die_after.is_empty() || die_after.len() == cfg.n,
+        "die_after must be empty or have one entry per worker"
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind loopback: {e}"))?;
+    let local = listener.local_addr().map_err(|e| format!("local addr: {e}"))?;
+    let addr = local.to_string();
+    let mut handles = Vec::with_capacity(cfg.n);
+    for id in 0..cfg.n {
+        let mut opts = NodeOpts::new(id, addr.clone(), cfg.clone());
+        opts.die_after_rounds = die_after.get(id).copied().flatten();
+        handles.push(std::thread::spawn(move || run_worker(opts)));
+    }
+    let report = run_server_on(listener, cfg, deadline);
+    let mut worker_err: Option<String> = None;
+    for (id, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                worker_err.get_or_insert(format!("worker {id}: {e}"));
+            }
+            Err(_) => {
+                worker_err.get_or_insert(format!("worker {id} panicked"));
+            }
+        }
+    }
+    match (report, worker_err) {
+        (Ok(r), None) => Ok(r),
+        // A server-side failure usually cascades into worker errors —
+        // report the root cause.
+        (Err(e), _) => Err(e),
+        (Ok(_), Some(e)) => Err(e),
+    }
+}
+
+/// [`run_swarm_threads_with`] for a healthy fleet.
+pub fn run_swarm_threads(
+    cfg: &ExperimentConfig,
+    deadline: Duration,
+) -> Result<SwarmReport, String> {
+    run_swarm_threads_with(cfg, deadline, &[])
+}
+
+/// Field-by-field comparison of two round records (floats by bit
+/// pattern) — the parity check between a swarm run and the in-memory
+/// sim. Returns which field diverged, for actionable test failures.
+pub fn compare_rounds(a: &RoundEvent, b: &RoundEvent) -> Result<(), String> {
+    fn bits(x: Option<f64>) -> Option<u64> {
+        x.map(f64::to_bits)
+    }
+    let fields: [(&str, bool); 12] = [
+        ("round", a.round == b.round),
+        ("loss", a.loss.to_bits() == b.loss.to_bits()),
+        ("dist_sq", bits(a.dist_sq) == bits(b.dist_sq)),
+        ("grad_norm", a.grad_norm.to_bits() == b.grad_norm.to_bits()),
+        ("uplink_bits", a.uplink_bits == b.uplink_bits),
+        ("echo_count", a.echo_count == b.echo_count),
+        ("raw_count", a.raw_count == b.raw_count),
+        ("exposed_cum", a.exposed_cum == b.exposed_cum),
+        ("clipped", a.clipped == b.clipped),
+        ("dropped_frames", a.dropped_frames == b.dropped_frames),
+        ("retransmits", a.retransmits == b.retransmits),
+        ("fallbacks", a.fallbacks == b.fallbacks),
+    ];
+    for (name, eq) in fields {
+        if !eq {
+            return Err(format!("round {}: field '{name}' diverged: {a:?} vs {b:?}", a.round));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,296 @@
+//! The node process: one Echo-CGC worker over TCP.
+//!
+//! A node derives *everything* from the shared [`ExperimentConfig`]: it
+//! builds the same [`Wiring`] the in-memory engine would (bit-identical
+//! RNG streams — each worker's gradient stream is pre-split, so a
+//! process that only consumes its own stream computes exactly the
+//! gradient the sim's worker `i` would). Per round it:
+//!
+//! 1. reads the parameter [`NetFrame::Downlink`], computes its local
+//!    stochastic gradient;
+//! 2. walks the TDMA slots in order — transmitting
+//!    [`NetFrame::Uplink`]/[`NetFrame::SilentSlot`] in its own slot,
+//!    and in every other slot reading that slot's rebroadcast notice
+//!    ([`NetFrame::Overheard`] / [`NetFrame::SlotEmpty`]) to feed its
+//!    span projector, exactly as overhearing feeds it on the radio;
+//! 3. answers [`NetFrame::FallbackReq`] (the server could not use its
+//!    echo) with its retained raw gradient, at whatever read position
+//!    the request arrives — for the last slot of a round that is while
+//!    already waiting on the next downlink.
+//!
+//! **Byzantine nodes.** A node whose id is Byzantine under the config
+//! runs the attack locally. Attack omniscience (true gradient, all
+//! honest gradients) is recomputed from the shared wiring, and the
+//! *shared* attack RNG stream is kept aligned across every Byzantine
+//! process by replaying each Byzantine slot's attack draw in slot order
+//! — each process makes the same calls in the same order, so all of
+//! them (and the in-memory engine) agree on every attack frame.
+
+use super::frame::{read_frame, write_frame, NetFrame};
+use super::validate_node_cfg;
+use crate::byzantine::AttackCtx;
+use crate::config::ExperimentConfig;
+use crate::sim::Wiring;
+use crate::wire::{decode, encode, Encoding, Payload};
+use crate::worker::EchoWorker;
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// How a node reaches its server and when (for tests) it should die.
+pub struct NodeOpts {
+    /// Worker id = TDMA slot in `0..cfg.n`.
+    pub id: usize,
+    /// Server address, e.g. `127.0.0.1:7700`.
+    pub server: String,
+    pub cfg: ExperimentConfig,
+    /// Bounded startup retry: connection attempts before giving up
+    /// (linear backoff, 50 ms × attempt, capped at 1 s).
+    pub connect_attempts: u32,
+    /// Fault-injection hook: exit cleanly after this many *complete*
+    /// rounds, so robustness tests can watch the server score the
+    /// node's remaining slots Lost without hanging.
+    pub die_after_rounds: Option<usize>,
+}
+
+impl NodeOpts {
+    pub fn new(id: usize, server: impl Into<String>, cfg: ExperimentConfig) -> Self {
+        Self { id, server: server.into(), cfg, connect_attempts: 40, die_after_rounds: None }
+    }
+}
+
+fn connect_with_retry(addr: &str, attempts: u32) -> Result<TcpStream, String> {
+    let mut last = String::from("no attempt made");
+    for a in 0..attempts.max(1) {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = e.to_string(),
+        }
+        std::thread::sleep(Duration::from_millis((50 * (a as u64 + 1)).min(1000)));
+    }
+    Err(format!("could not reach server at {addr} after {attempts} attempts: {last}"))
+}
+
+/// What [`next_frame`] hands the round loop.
+enum Ctl {
+    Frame(NetFrame),
+    Shutdown,
+}
+
+/// Read the next protocol frame, transparently servicing the messages
+/// that can arrive at *any* read position: [`NetFrame::FallbackReq`] for
+/// this node's slot (answered with the retained raw gradient) and
+/// [`NetFrame::Shutdown`].
+fn next_frame(
+    stream: &mut TcpStream,
+    enc: Encoding,
+    me: usize,
+    worker: &mut Option<EchoWorker>,
+) -> Result<Ctl, String> {
+    loop {
+        match read_frame(stream) {
+            Ok(NetFrame::Shutdown) => return Ok(Ctl::Shutdown),
+            Ok(NetFrame::FallbackReq { round, slot }) => {
+                if slot != me {
+                    return Err(format!("worker {me}: fallback requested for slot {slot}"));
+                }
+                let w = worker.as_mut().ok_or_else(|| {
+                    format!("worker {me}: fallback requested from a Byzantine node")
+                })?;
+                let g = w
+                    .take_gradient()
+                    .ok_or_else(|| format!("worker {me}: no retained gradient for fallback"))?;
+                // The slot is ultimately served raw — reclassify, as the
+                // in-memory engine does for its hosted workers.
+                w.stats.echo_rounds -= 1;
+                w.stats.raw_rounds += 1;
+                let bytes = encode(&Payload::Raw(g), enc);
+                write_frame(stream, &NetFrame::Uplink { round, slot, bytes })
+                    .map_err(|e| format!("worker {me}: fallback uplink failed: {e}"))?;
+            }
+            Ok(f) => return Ok(Ctl::Frame(f)),
+            Err(e) => return Err(format!("worker {me}: read failed: {e}")),
+        }
+    }
+}
+
+/// Run one worker node to completion (server shutdown, configured death,
+/// or a protocol error).
+pub fn run_worker(opts: NodeOpts) -> Result<(), String> {
+    let cfg = &opts.cfg;
+    validate_node_cfg(cfg)?;
+    let me = opts.id;
+    if me >= cfg.n {
+        return Err(format!("worker id {me} out of range for n = {}", cfg.n));
+    }
+    let n = cfg.n;
+    let enc = cfg.encoding();
+    let threads = cfg.effective_threads();
+
+    let Wiring {
+        model,
+        workers,
+        mut backends,
+        mut attacks,
+        byz_ids,
+        mut worker_rngs,
+        mut attack_rng,
+        ..
+    } = Wiring::native(cfg)?;
+    let is_byz = byz_ids.contains(&me);
+    let mut worker: Option<EchoWorker> =
+        workers.into_iter().nth(me).expect("worker vector has n slots");
+    assert_eq!(worker.is_none(), is_byz, "worker state exists exactly for fault-free ids");
+
+    let mut stream = connect_with_retry(&opts.server, opts.connect_attempts)?;
+    stream.set_nodelay(true).map_err(|e| format!("worker {me}: nodelay: {e}"))?;
+    // Generous: the server paces the protocol; this only bounds how long
+    // a node lingers if the server itself dies.
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .map_err(|e| format!("worker {me}: timeout: {e}"))?;
+    write_frame(&mut stream, &NetFrame::Hello { id: me })
+        .map_err(|e| format!("worker {me}: hello failed: {e}"))?;
+
+    let mut rounds_done = 0usize;
+    loop {
+        // ---- Downlink --------------------------------------------------
+        let frame = match next_frame(&mut stream, enc, me, &mut worker)? {
+            Ctl::Shutdown => return Ok(()),
+            Ctl::Frame(f) => f,
+        };
+        let (round, w_recv) = match frame {
+            NetFrame::Downlink { round, bytes } => match decode(&bytes, enc) {
+                Ok(Payload::Param(v)) => (round, v),
+                other => return Err(format!("worker {me}: bad downlink payload: {other:?}")),
+            },
+            f => return Err(format!("worker {me}: expected downlink, got {f:?}")),
+        };
+
+        // ---- Computation ----------------------------------------------
+        let mut true_grad = Vec::new();
+        let mut honest_grads: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+        let mut overheard: Vec<(usize, Payload)> = Vec::new();
+        if is_byz {
+            // Omniscience: recompute every honest gradient (their RNG
+            // streams are pre-split and shared via the config) and the
+            // true gradient — the in-memory attack inputs exactly.
+            let grads =
+                crate::grad::parallel_gradients(&mut backends, &mut worker_rngs, &w_recv, threads);
+            true_grad = model.full_gradient(&w_recv);
+            for (i, g) in grads {
+                honest_grads.insert(i, g);
+            }
+        } else {
+            let g = backends[me]
+                .as_mut()
+                .expect("fault-free id has a gradient backend")
+                .gradient(&w_recv, &mut worker_rngs[me]);
+            worker.as_mut().unwrap().begin_round(g);
+        }
+
+        // ---- Slots in order -------------------------------------------
+        for slot in 0..n {
+            if slot == me {
+                let outgoing: Option<Payload> = if is_byz {
+                    let ctx = AttackCtx {
+                        id: me,
+                        w: &w_recv,
+                        true_grad: &true_grad,
+                        honest_grads: &honest_grads,
+                        overheard: &overheard,
+                        n,
+                        f: cfg.f,
+                        round,
+                    };
+                    attacks.get_mut(&me).unwrap().frame(&ctx, &mut attack_rng)
+                } else {
+                    let w = worker.as_mut().unwrap();
+                    Some(if let Some(k) = cfg.topk {
+                        w.stats.raw_rounds += 1;
+                        crate::wire::top_k_sparsify(w.local_gradient().unwrap(), k)
+                    } else if cfg.echo_enabled {
+                        w.transmit()
+                    } else {
+                        w.stats.raw_rounds += 1;
+                        Payload::Raw(w.local_gradient().unwrap().to_vec())
+                    })
+                };
+                match outgoing {
+                    Some(p) => {
+                        let bytes = encode(&p, enc);
+                        if is_byz {
+                            // Our own slot's on-air payload, as decoded by
+                            // receivers — later attacks may reference it.
+                            if let Ok(dp) = decode(&bytes, enc) {
+                                overheard.push((me, dp));
+                            }
+                        }
+                        write_frame(&mut stream, &NetFrame::Uplink { round, slot, bytes })
+                            .map_err(|e| format!("worker {me}: uplink failed: {e}"))?;
+                    }
+                    None => write_frame(&mut stream, &NetFrame::SilentSlot { round, slot })
+                        .map_err(|e| format!("worker {me}: silence marker failed: {e}"))?,
+                }
+                continue;
+            }
+            // Someone else's slot: wait for its rebroadcast notice.
+            let frame = match next_frame(&mut stream, enc, me, &mut worker)? {
+                Ctl::Shutdown => return Ok(()),
+                Ctl::Frame(f) => f,
+            };
+            let (sender, aired_bytes) = match frame {
+                NetFrame::Overheard { round: r, slot: s, sender, bytes }
+                    if r == round && s == slot && sender == slot =>
+                {
+                    (sender, Some(bytes))
+                }
+                NetFrame::SlotEmpty { round: r, slot: s, sender, lost: _ }
+                    if r == round && s == slot && sender == slot =>
+                {
+                    (sender, None)
+                }
+                f => return Err(format!("worker {me}: expected slot {slot} notice, got {f:?}")),
+            };
+            if is_byz {
+                // Keep the shared attack RNG stream aligned: replay the
+                // sender's attack draw whether or not its frame survived
+                // (every Byzantine process makes the same calls in the
+                // same order, so all agree on every attack frame).
+                if let Some(att) = attacks.get_mut(&sender) {
+                    let ctx = AttackCtx {
+                        id: sender,
+                        w: &w_recv,
+                        true_grad: &true_grad,
+                        honest_grads: &honest_grads,
+                        overheard: &overheard,
+                        n,
+                        f: cfg.f,
+                        round,
+                    };
+                    let _ = att.frame(&ctx, &mut attack_rng);
+                }
+                if let Some(bytes) = aired_bytes {
+                    if let Ok(p) = decode(&bytes, enc) {
+                        overheard.push((sender, p));
+                    }
+                }
+            } else if let Some(bytes) = aired_bytes {
+                if let Ok(p) = decode(&bytes, enc) {
+                    let w = worker.as_mut().unwrap();
+                    w.stats.frames_heard += 1;
+                    if cfg.echo_enabled {
+                        w.overhear(sender, &p);
+                    }
+                }
+            }
+        }
+
+        rounds_done += 1;
+        if opts.die_after_rounds == Some(rounds_done) {
+            // Fault injection: vanish without a goodbye — the server must
+            // degrade our remaining slots to Lost, never hang.
+            return Ok(());
+        }
+    }
+}

@@ -127,17 +127,17 @@ impl BitMeter {
     /// Receive energy is charged separately per hearing receiver
     /// ([`Self::charge_rx`]) — under a perfect channel that is everyone
     /// but the sender, the pre-channel accounting exactly.
-    fn charge_tx(&mut self, sender: NodeId, bits: u64) {
+    pub(crate) fn charge_tx(&mut self, sender: NodeId, bits: u64) {
         self.tx_bits[sender] += bits;
         self.round_uplink_bits += bits;
     }
 
     /// Charge receive energy for one heard copy of a frame.
-    fn charge_rx(&mut self, receiver: NodeId, bits: u64) {
+    pub(crate) fn charge_rx(&mut self, receiver: NodeId, bits: u64) {
         self.rx_bits[receiver] += bits;
     }
 
-    fn charge_downlink(&mut self, bits: u64) {
+    pub(crate) fn charge_downlink(&mut self, bits: u64) {
         self.downlink_bits += bits;
         for i in 0..self.n {
             self.rx_bits[i] += bits;
@@ -182,14 +182,16 @@ pub struct Broadcast {
     pub bits: u64,
 }
 
-/// The radio channel for one communication round.
-///
-/// Constructed by [`RadioNetwork::begin_round`]; enforces that slots are
-/// used in schedule order, each exactly once. Every broadcast is
-/// encode→decode round-tripped so that wire quantization (e.g. f32
-/// gradients) is physically real in the simulation.
-pub struct RadioRound<'a> {
-    net: &'a mut RadioNetwork,
+/// The slot-sequencing state of one communication round: which slot is
+/// next, how many transmission attempts the current slot has consumed,
+/// and whether a fallback may still follow. Factored out of
+/// [`RadioRound`] so the transport layer ([`crate::sim::RadioTransport`])
+/// can drive the *same* transmit/silence/finish bodies without holding a
+/// borrow of the network across the whole round — both paths share one
+/// implementation, which is what keeps the in-memory engine byte-identical
+/// across the transport refactor.
+#[derive(Debug)]
+pub struct SlotCursor {
     next_slot: usize,
     /// Transmission attempts consumed inside the current slot (primary
     /// attempts + retransmissions + fallback attempts) — the channel's
@@ -199,6 +201,135 @@ pub struct RadioRound<'a> {
     /// Did the most recently elapsed slot carry a primary broadcast?
     /// (Only then may a fallback follow; a silent slot clears it.)
     last_slot_broadcast: bool,
+}
+
+impl SlotCursor {
+    /// A cursor at the start of a round (no slots consumed).
+    pub fn new() -> Self {
+        Self { next_slot: 0, slot_attempts: 0, last_slot_broadcast: false }
+    }
+
+    /// See [`RadioRound::broadcast`].
+    pub fn broadcast(
+        &mut self,
+        net: &mut RadioNetwork,
+        slot: usize,
+        sender: NodeId,
+        payload: &Payload,
+    ) -> Broadcast {
+        assert_eq!(slot, self.next_slot, "slot used out of order");
+        assert_eq!(
+            sender,
+            net.schedule.owner(slot),
+            "node {sender} transmitted in slot {slot} owned by {}",
+            net.schedule.owner(slot)
+        );
+        self.next_slot += 1;
+        self.slot_attempts = 0;
+        self.last_slot_broadcast = true;
+        self.transmit(net, slot, sender, payload)
+    }
+
+    /// See [`RadioRound::fallback`].
+    pub fn fallback(
+        &mut self,
+        net: &mut RadioNetwork,
+        slot: usize,
+        sender: NodeId,
+        payload: &Payload,
+    ) -> Broadcast {
+        assert!(
+            slot + 1 == self.next_slot && self.last_slot_broadcast,
+            "fallback must immediately follow its slot's broadcast"
+        );
+        assert_eq!(
+            sender,
+            net.schedule.owner(slot),
+            "node {sender} transmitted in slot {slot} owned by {}",
+            net.schedule.owner(slot)
+        );
+        // One fallback per slot: a second call is a simulator bug.
+        self.last_slot_broadcast = false;
+        self.transmit(net, slot, sender, payload)
+    }
+
+    fn transmit(
+        &mut self,
+        net: &mut RadioNetwork,
+        slot: usize,
+        sender: NodeId,
+        payload: &Payload,
+    ) -> Broadcast {
+        let enc = net.encoding;
+        let bytes = encode(payload, enc);
+        let bits1 = (bytes.len() as u64) * 8;
+        let n = net.schedule.n_slots();
+        let round = net.round;
+        let budget = 1 + net.uplink_retries as u64;
+        let mut heard = vec![false; n];
+        let mut server_got = false;
+        let mut attempts = 0u64;
+        let mut bits = 0u64;
+        while attempts < budget && !server_got {
+            let a = self.slot_attempts;
+            self.slot_attempts += 1;
+            attempts += 1;
+            net.meter.charge_tx(sender, bits1);
+            bits += bits1;
+            for (r, h) in heard.iter_mut().enumerate() {
+                if r != sender && net.channel.delivers(round, slot, a, r) {
+                    *h = true;
+                    // Receive energy per heard copy (a retransmission a
+                    // listener hears again still costs it energy).
+                    net.meter.charge_rx(r, bits1);
+                }
+            }
+            // The server is receiver id `n` on the channel.
+            server_got = net.channel.delivers(round, slot, a, n);
+        }
+        let delivered = decode(&bytes, enc).expect("self-encoded frame must decode");
+        Broadcast { payload: delivered, heard, server_got, attempts, bits }
+    }
+
+    /// See [`RadioRound::silence`].
+    pub fn silence(&mut self, slot: usize) {
+        assert_eq!(slot, self.next_slot, "slot used out of order");
+        self.next_slot += 1;
+        self.last_slot_broadcast = false;
+    }
+
+    /// Number of slots consumed so far.
+    pub fn slots_used(&self) -> usize {
+        self.next_slot
+    }
+
+    /// See [`RadioRound::finish`] (the cursor variant resets itself so it
+    /// can be reused for the next round).
+    pub fn finish(&mut self, net: &mut RadioNetwork) {
+        assert_eq!(self.next_slot, net.schedule.n_slots(), "round finished with unused slots");
+        net.meter.end_round();
+        net.round += 1;
+        *self = Self::new();
+    }
+}
+
+impl Default for SlotCursor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The radio channel for one communication round.
+///
+/// Constructed by [`RadioNetwork::begin_round`]; enforces that slots are
+/// used in schedule order, each exactly once. Every broadcast is
+/// encode→decode round-tripped so that wire quantization (e.g. f32
+/// gradients) is physically real in the simulation. A thin borrow-holding
+/// wrapper over [`SlotCursor`], which carries the actual slot-sequencing
+/// logic.
+pub struct RadioRound<'a> {
+    net: &'a mut RadioNetwork,
+    cur: SlotCursor,
 }
 
 impl<'a> RadioRound<'a> {
@@ -214,17 +345,7 @@ impl<'a> RadioRound<'a> {
     /// nodes cannot commit — the schedule is enforced by the jam-resistant
     /// MAC, §2.1), so they are simulator bugs, not simulated behaviours.
     pub fn broadcast(&mut self, slot: usize, sender: NodeId, payload: &Payload) -> Broadcast {
-        assert_eq!(slot, self.next_slot, "slot used out of order");
-        assert_eq!(
-            sender,
-            self.net.schedule.owner(slot),
-            "node {sender} transmitted in slot {slot} owned by {}",
-            self.net.schedule.owner(slot)
-        );
-        self.next_slot += 1;
-        self.slot_attempts = 0;
-        self.last_slot_broadcast = true;
-        self.transmit(slot, sender, payload)
+        self.cur.broadcast(self.net, slot, sender, payload)
     }
 
     /// A second transmission in the *same* slot, immediately after
@@ -232,65 +353,19 @@ impl<'a> RadioRound<'a> {
     /// server missed (or could not reconstruct) its echo. Charged like any
     /// broadcast; channel draws continue the slot's attempt sequence.
     pub fn fallback(&mut self, slot: usize, sender: NodeId, payload: &Payload) -> Broadcast {
-        assert!(
-            slot + 1 == self.next_slot && self.last_slot_broadcast,
-            "fallback must immediately follow its slot's broadcast"
-        );
-        assert_eq!(
-            sender,
-            self.net.schedule.owner(slot),
-            "node {sender} transmitted in slot {slot} owned by {}",
-            self.net.schedule.owner(slot)
-        );
-        // One fallback per slot: a second call is a simulator bug.
-        self.last_slot_broadcast = false;
-        self.transmit(slot, sender, payload)
-    }
-
-    fn transmit(&mut self, slot: usize, sender: NodeId, payload: &Payload) -> Broadcast {
-        let enc = self.net.encoding;
-        let bytes = encode(payload, enc);
-        let bits1 = (bytes.len() as u64) * 8;
-        let n = self.net.schedule.n_slots();
-        let round = self.net.round;
-        let budget = 1 + self.net.uplink_retries as u64;
-        let mut heard = vec![false; n];
-        let mut server_got = false;
-        let mut attempts = 0u64;
-        let mut bits = 0u64;
-        while attempts < budget && !server_got {
-            let a = self.slot_attempts;
-            self.slot_attempts += 1;
-            attempts += 1;
-            self.net.meter.charge_tx(sender, bits1);
-            bits += bits1;
-            for (r, h) in heard.iter_mut().enumerate() {
-                if r != sender && self.net.channel.delivers(round, slot, a, r) {
-                    *h = true;
-                    // Receive energy per heard copy (a retransmission a
-                    // listener hears again still costs it energy).
-                    self.net.meter.charge_rx(r, bits1);
-                }
-            }
-            // The server is receiver id `n` on the channel.
-            server_got = self.net.channel.delivers(round, slot, a, n);
-        }
-        let delivered = decode(&bytes, enc).expect("self-encoded frame must decode");
-        Broadcast { payload: delivered, heard, server_got, attempts, bits }
+        self.cur.fallback(self.net, slot, sender, payload)
     }
 
     /// A worker may stay silent in its slot (a crash-style fault). The slot
     /// still elapses; the server observes the absence (synchrony ⇒ it can
     /// identify the worker as faulty, §2.1).
     pub fn silence(&mut self, slot: usize) {
-        assert_eq!(slot, self.next_slot, "slot used out of order");
-        self.next_slot += 1;
-        self.last_slot_broadcast = false;
+        self.cur.silence(slot)
     }
 
     /// Number of slots consumed so far.
     pub fn slots_used(&self) -> usize {
-        self.next_slot
+        self.cur.slots_used()
     }
 
     /// Transmitter of `slot` under the network's schedule (convenience so
@@ -302,14 +377,8 @@ impl<'a> RadioRound<'a> {
 
     /// Finish the round; panics if slots remain unused (every slot must be
     /// either transmitted in or explicitly silent).
-    pub fn finish(self) {
-        assert_eq!(
-            self.next_slot,
-            self.net.schedule.n_slots(),
-            "round finished with unused slots"
-        );
-        self.net.meter.end_round();
-        self.net.round += 1;
+    pub fn finish(mut self) {
+        self.cur.finish(self.net)
     }
 }
 
@@ -388,7 +457,7 @@ impl RadioNetwork {
 
     /// Open the communication phase of a round.
     pub fn begin_round(&mut self) -> RadioRound<'_> {
-        RadioRound { net: self, next_slot: 0, slot_attempts: 0, last_slot_broadcast: false }
+        RadioRound { net: self, cur: SlotCursor::new() }
     }
 
     /// Bit cost a frame *would* have (used by attacks sizing their frames).

@@ -36,7 +36,9 @@
 //! contraction fit) come from the sink's online summary and are identical
 //! under every retention policy.
 pub mod multihop;
+pub mod transport;
 
+pub use transport::{Outgoing, RadioTransport, SlotResolution, Transport};
 
 use crate::byzantine::{Attack, AttackCtx};
 use crate::config::{ExperimentConfig, ModelKind};
@@ -87,65 +89,37 @@ pub struct ChannelTotals {
     pub lost_slots: u64,
 }
 
-/// A fully-wired experiment.
-pub struct Simulation {
-    pub cfg: ExperimentConfig,
-    model: Arc<dyn CostModel>,
-    server: ParameterServer,
+/// Everything an experiment needs *except* its transport: model, server,
+/// workers, attacks and the RNG streams. Splitting the wiring from the
+/// transport lets [`Simulation::from_wiring`] pair the same experiment
+/// with either the in-memory radio or a networked server transport
+/// ([`crate::net::NetServerTransport`]). The RNG consumption order here
+/// is part of the determinism contract — initial `w`, then the per-worker
+/// streams, then the attack and schedule streams — so a node process that
+/// builds its own `Wiring::native` from the same config derives
+/// bit-identical streams to the in-memory engine.
+pub struct Wiring {
+    pub model: Arc<dyn CostModel>,
+    pub server: ParameterServer,
     /// Fault-free workers (`None` at Byzantine ids).
-    workers: Vec<Option<EchoWorker>>,
-    backends: Vec<Option<Box<dyn GradientBackend>>>,
-    attacks: BTreeMap<usize, Box<dyn Attack>>,
-    radio: RadioNetwork,
-    w: Vec<f64>,
-    eta: f64,
-    r: f64,
-    byz_ids: Vec<usize>,
-    worker_rngs: Vec<Rng>,
-    attack_rng: Rng,
-    sched_rng: Rng,
-    round: usize,
-    trace: TraceSink,
-    pub timings: PhaseTimings,
-    channel_totals: ChannelTotals,
-    /// Transmission attempts an all-raw baseline would have spent under
-    /// the *same* channel draws — the denominator of [`Self::comm_savings`].
-    /// Server-delivery draws are payload-independent, so a baseline raw
-    /// frame in a slot stops at exactly the attempt the real primary
-    /// broadcast stopped at (exact for memoryless channels; for bursty
-    /// ones, fallback transmissions advance the burst state in ways the
-    /// baseline would not — a documented approximation). Silent slots
-    /// count 1. Equals `rounds × n` under the perfect channel, keeping
-    /// the pre-channel savings arithmetic bit-for-bit.
-    baseline_attempts: u64,
+    pub workers: Vec<Option<EchoWorker>>,
+    pub backends: Vec<Option<Box<dyn GradientBackend>>>,
+    pub attacks: BTreeMap<usize, Box<dyn Attack>>,
+    pub w0: Vec<f64>,
+    pub eta: f64,
+    pub r: f64,
+    pub byz_ids: Vec<usize>,
+    pub worker_rngs: Vec<Rng>,
+    pub attack_rng: Rng,
+    pub sched_rng: Rng,
 }
 
-impl Simulation {
-    /// Build the model described by the config (shared by examples/tests).
-    pub fn build_model(cfg: &ExperimentConfig, rng: &mut Rng) -> Arc<dyn CostModel> {
-        match cfg.model {
-            ModelKind::Quadratic => {
-                Arc::new(GaussianQuadratic::new(cfg.d, cfg.mu, cfg.l, cfg.sigma, rng))
-            }
-            ModelKind::Ridge => {
-                let ds = data::make_linreg(cfg.d, cfg.dataset_m, cfg.noise, rng);
-                Arc::new(RidgeRegression::new(ds, cfg.lambda, cfg.batch, rng))
-            }
-            ModelKind::Logistic => {
-                let ds = data::make_logreg(cfg.d, cfg.dataset_m, 1.0, rng);
-                Arc::new(LogisticRegression::new(ds, cfg.lambda, cfg.batch, rng))
-            }
-            ModelKind::Softmax => {
-                let ds = data::make_blobs(cfg.d, cfg.dataset_m, cfg.classes, 3.0, rng);
-                Arc::new(SoftmaxRegression::new(ds, cfg.classes, cfg.lambda, cfg.batch, rng))
-            }
-        }
-    }
-
-    /// Wire the experiment with native (pure-rust) gradient backends.
-    pub fn build(cfg: &ExperimentConfig) -> Result<Simulation, String> {
+impl Wiring {
+    /// Wire the experiment with native (pure-rust) gradient backends —
+    /// the RNG path of [`Simulation::build`] exactly.
+    pub fn native(cfg: &ExperimentConfig) -> Result<Wiring, String> {
         let mut rng = Rng::new(cfg.seed);
-        let model = Self::build_model(cfg, &mut rng);
+        let model = Simulation::build_model(cfg, &mut rng);
         let backends: Vec<Option<Box<dyn GradientBackend>>> = {
             let byz = cfg.byz_placement.place(cfg.n, cfg.b, &mut rng.split(1));
             (0..cfg.n)
@@ -159,18 +133,17 @@ impl Simulation {
                 })
                 .collect()
         };
-        Self::build_with(cfg, model, backends)
+        Self::with_backends(cfg, model, backends)
     }
 
-    /// Wire the experiment with explicit per-worker backends (`None` slots
-    /// become Byzantine). Used by the XLA-backend examples and tests.
-    /// `model` is still needed for loss/optimum measurement; with an XLA
-    /// backend it should be the numerically-equivalent native model.
-    pub fn build_with(
+    /// Wire the experiment with explicit per-worker backends (`None`
+    /// slots become Byzantine) — the RNG path of
+    /// [`Simulation::build_with`] exactly.
+    pub fn with_backends(
         cfg: &ExperimentConfig,
         model: Arc<dyn CostModel>,
         backends: Vec<Option<Box<dyn GradientBackend>>>,
-    ) -> Result<Simulation, String> {
+    ) -> Result<Wiring, String> {
         cfg.validate()?;
         assert_eq!(backends.len(), cfg.n);
         let byz_ids: Vec<usize> =
@@ -212,39 +185,167 @@ impl Simulation {
         let mut server = ParameterServer::new(cfg.n, cfg.f, d, cfg.aggregator);
         server.set_threads(cfg.effective_threads());
         server.set_lossy(!cfg.channel.is_lossless());
-        // The channel seed is a pure function of the experiment seed (no
-        // RNG draw is consumed deriving it), so wiring a channel in — or
-        // switching between lossless models — perturbs no existing
-        // random stream: `--channel perfect` stays byte-identical to the
-        // pre-channel engine (pinned by rust/tests/channel.rs).
-        let radio = RadioNetwork::with_channel(
-            cfg.n,
-            cfg.encoding(),
-            cfg.channel,
-            cfg.seed ^ 0xC4A7_7E11_0C0D_E5ED,
-            cfg.uplink_retries,
-        );
-        Ok(Simulation {
+        Ok(Wiring {
+            model,
             server,
             workers,
             backends,
             attacks,
-            radio,
-            w: w0,
+            w0,
             eta,
             r,
             byz_ids,
             worker_rngs,
             attack_rng: rng.split(7),
             sched_rng: rng.split(8),
+        })
+    }
+}
+
+/// The radio network an [`ExperimentConfig`] describes. The channel seed
+/// is a pure function of the experiment seed (no RNG draw is consumed
+/// deriving it), so wiring a channel in — or switching between lossless
+/// models — perturbs no existing random stream: `--channel perfect`
+/// stays byte-identical to the pre-channel engine (pinned by
+/// rust/tests/channel.rs).
+fn radio_for(cfg: &ExperimentConfig) -> RadioNetwork {
+    RadioNetwork::with_channel(
+        cfg.n,
+        cfg.encoding(),
+        cfg.channel,
+        cfg.seed ^ 0xC4A7_7E11_0C0D_E5ED,
+        cfg.uplink_retries,
+    )
+}
+
+/// A fully-wired experiment, generic over its communication substrate
+/// (defaults to the in-memory radio — `Simulation` without parameters is
+/// exactly the pre-trait engine).
+pub struct Simulation<T: Transport = RadioTransport> {
+    pub cfg: ExperimentConfig,
+    model: Arc<dyn CostModel>,
+    server: ParameterServer,
+    /// Fault-free workers (`None` at Byzantine ids). Idle when the
+    /// transport does not host workers (remote processes own their own).
+    workers: Vec<Option<EchoWorker>>,
+    backends: Vec<Option<Box<dyn GradientBackend>>>,
+    attacks: BTreeMap<usize, Box<dyn Attack>>,
+    transport: T,
+    w: Vec<f64>,
+    eta: f64,
+    r: f64,
+    byz_ids: Vec<usize>,
+    worker_rngs: Vec<Rng>,
+    attack_rng: Rng,
+    sched_rng: Rng,
+    round: usize,
+    trace: TraceSink,
+    pub timings: PhaseTimings,
+    channel_totals: ChannelTotals,
+    /// Transmission attempts an all-raw baseline would have spent under
+    /// the *same* channel draws — the denominator of [`Self::comm_savings`].
+    /// Server-delivery draws are payload-independent, so a baseline raw
+    /// frame in a slot stops at exactly the attempt the real primary
+    /// broadcast stopped at (exact for memoryless channels; for bursty
+    /// ones, fallback transmissions advance the burst state in ways the
+    /// baseline would not — a documented approximation). Silent slots
+    /// count 1. Equals `rounds × n` under the perfect channel, keeping
+    /// the pre-channel savings arithmetic bit-for-bit.
+    baseline_attempts: u64,
+    /// Cumulative honest echo/raw slot classifications — the echo-rate
+    /// numerator/denominator when the transport does not host workers
+    /// (remote workers keep their own [`crate::worker::WorkerStats`]).
+    cum_echo: u64,
+    cum_raw: u64,
+}
+
+impl Simulation {
+    /// Build the model described by the config (shared by examples/tests).
+    pub fn build_model(cfg: &ExperimentConfig, rng: &mut Rng) -> Arc<dyn CostModel> {
+        match cfg.model {
+            ModelKind::Quadratic => {
+                Arc::new(GaussianQuadratic::new(cfg.d, cfg.mu, cfg.l, cfg.sigma, rng))
+            }
+            ModelKind::Ridge => {
+                let ds = data::make_linreg(cfg.d, cfg.dataset_m, cfg.noise, rng);
+                Arc::new(RidgeRegression::new(ds, cfg.lambda, cfg.batch, rng))
+            }
+            ModelKind::Logistic => {
+                let ds = data::make_logreg(cfg.d, cfg.dataset_m, 1.0, rng);
+                Arc::new(LogisticRegression::new(ds, cfg.lambda, cfg.batch, rng))
+            }
+            ModelKind::Softmax => {
+                let ds = data::make_blobs(cfg.d, cfg.dataset_m, cfg.classes, 3.0, rng);
+                Arc::new(SoftmaxRegression::new(ds, cfg.classes, cfg.lambda, cfg.batch, rng))
+            }
+        }
+    }
+
+    /// Wire the experiment with native (pure-rust) gradient backends.
+    pub fn build(cfg: &ExperimentConfig) -> Result<Simulation, String> {
+        let wiring = Wiring::native(cfg)?;
+        Ok(Self::from_wiring(cfg, wiring, RadioTransport::new(radio_for(cfg))))
+    }
+
+    /// Wire the experiment with explicit per-worker backends (`None` slots
+    /// become Byzantine). Used by the XLA-backend examples and tests.
+    /// `model` is still needed for loss/optimum measurement; with an XLA
+    /// backend it should be the numerically-equivalent native model.
+    pub fn build_with(
+        cfg: &ExperimentConfig,
+        model: Arc<dyn CostModel>,
+        backends: Vec<Option<Box<dyn GradientBackend>>>,
+    ) -> Result<Simulation, String> {
+        let wiring = Wiring::with_backends(cfg, model, backends)?;
+        Ok(Self::from_wiring(cfg, wiring, RadioTransport::new(radio_for(cfg))))
+    }
+
+    /// The underlying radio network (schedule, meter, channel).
+    pub fn radio(&self) -> &RadioNetwork {
+        self.transport.radio()
+    }
+}
+
+impl<T: Transport> Simulation<T> {
+    /// Pair a [`Wiring`] with a transport. This is how the networked
+    /// server engine is assembled ([`crate::net::swarm`]); the default
+    /// in-memory constructors ([`Simulation::build`] /
+    /// [`Simulation::build_with`]) route through here too.
+    pub fn from_wiring(cfg: &ExperimentConfig, wiring: Wiring, transport: T) -> Simulation<T> {
+        Simulation {
+            server: wiring.server,
+            workers: wiring.workers,
+            backends: wiring.backends,
+            attacks: wiring.attacks,
+            transport,
+            w: wiring.w0,
+            eta: wiring.eta,
+            r: wiring.r,
+            byz_ids: wiring.byz_ids,
+            worker_rngs: wiring.worker_rngs,
+            attack_rng: wiring.attack_rng,
+            sched_rng: wiring.sched_rng,
             round: 0,
             trace: TraceSink::new(cfg.trace),
             timings: PhaseTimings::default(),
             channel_totals: ChannelTotals::default(),
             baseline_attempts: 0,
-            model,
+            cum_echo: 0,
+            cum_raw: 0,
+            model: wiring.model,
             cfg: cfg.clone(),
-        })
+        }
+    }
+
+    /// The communication substrate.
+    pub fn transport(&self) -> &T {
+        &self.transport
+    }
+
+    /// Mutable access to the substrate (e.g. to shut a networked
+    /// transport down after the final round).
+    pub fn transport_mut(&mut self) -> &mut T {
+        &mut self.transport
     }
 
     pub fn model(&self) -> &Arc<dyn CostModel> {
@@ -280,10 +381,6 @@ impl Simulation {
         &self.trace
     }
 
-    pub fn radio(&self) -> &RadioNetwork {
-        &self.radio
-    }
-
     /// Cumulative channel casualties (all 0 under the perfect channel).
     pub fn channel_totals(&self) -> ChannelTotals {
         self.channel_totals
@@ -297,6 +394,9 @@ impl Simulation {
     pub fn step(&mut self) -> RoundRecord {
         let cfg_n = self.cfg.n;
         let threads = self.cfg.effective_threads();
+        // Does this engine host the workers in-process (in-memory radio),
+        // or do remote node processes own them (networked server)?
+        let hosts = self.transport.hosts_workers();
         // Pre-update measurements at w^t.
         let loss = self.model.loss(&self.w);
         let full_grad_at_w = self.model.full_gradient(&self.w);
@@ -309,143 +409,165 @@ impl Simulation {
         // Server broadcasts w^t; workers compute local stochastic gradients
         // on the *received* (possibly f32-quantized) parameter, fanned out
         // across the thread pool (bit-identical at any thread count: each
-        // worker consumes its own pre-split RNG stream).
+        // worker consumes its own pre-split RNG stream). On a networked
+        // transport the remote processes do all of this themselves.
         let t0 = Instant::now();
-        let w_recv = self.radio.downlink(&self.w);
-        let grads = crate::grad::parallel_gradients(
-            &mut self.backends,
-            &mut self.worker_rngs,
-            &w_recv,
-            threads,
-        );
-        // Omniscient adversaries know the true gradient at the received w
-        // and every honest gradient. Both are pure attack inputs, and the
-        // true gradient costs a full O(d·m) dataset pass — so materialize
-        // them only when at least one attack is wired.
-        let have_attacks = !self.attacks.is_empty();
-        let true_grad =
-            if have_attacks { self.model.full_gradient(&w_recv) } else { Vec::new() };
+        let w_recv = self.transport.downlink(&self.w);
+        let mut true_grad = Vec::new();
         let mut honest_grads: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
-        for (i, g) in grads {
+        if hosts {
+            let grads = crate::grad::parallel_gradients(
+                &mut self.backends,
+                &mut self.worker_rngs,
+                &w_recv,
+                threads,
+            );
+            // Omniscient adversaries know the true gradient at the received w
+            // and every honest gradient. Both are pure attack inputs, and the
+            // true gradient costs a full O(d·m) dataset pass — so materialize
+            // them only when at least one attack is wired.
+            let have_attacks = !self.attacks.is_empty();
             if have_attacks {
-                honest_grads.insert(i, g.clone());
+                true_grad = self.model.full_gradient(&w_recv);
             }
-            self.workers[i].as_mut().unwrap().begin_round(g);
+            for (i, g) in grads {
+                if have_attacks {
+                    honest_grads.insert(i, g.clone());
+                }
+                self.workers[i].as_mut().unwrap().begin_round(g);
+            }
         }
         self.timings.grad_ns += t0.elapsed().as_nanos();
 
         // ---- Communication phase -----------------------------------------------
         let t1 = Instant::now();
         if self.cfg.shuffle_slots {
-            self.radio.schedule = TdmaSchedule::shuffled(cfg_n, &mut self.sched_rng);
+            self.transport.set_schedule(TdmaSchedule::shuffled(cfg_n, &mut self.sched_rng));
         }
         self.server.begin_round();
+        self.transport.begin_round();
         let mut overheard: Vec<(usize, Payload)> = Vec::with_capacity(cfg_n);
         let mut echo_count = 0usize;
         let mut raw_count = 0usize;
         let mut dropped_frames = 0usize;
         let mut retransmits = 0usize;
         let mut fallbacks = 0usize;
-        {
-            let mut round = self.radio.begin_round();
-            for slot in 0..cfg_n {
-                let owner = round.owner(slot);
-                let frame: Option<Payload> = if let Some(att) = self.attacks.get_mut(&owner) {
-                    let ctx = AttackCtx {
-                        id: owner,
-                        w: &w_recv,
-                        true_grad: &true_grad,
-                        honest_grads: &honest_grads,
-                        overheard: &overheard,
-                        n: cfg_n,
-                        f: self.cfg.f,
-                        round: self.round,
-                    };
-                    att.frame(&ctx, &mut self.attack_rng)
-                } else {
-                    let w = self.workers[owner].as_mut().unwrap();
-                    if let Some(k) = self.cfg.topk {
-                        // eSGD-style baseline: top-k sparsified gradient.
-                        w.stats.raw_rounds += 1;
-                        Some(crate::wire::top_k_sparsify(w.local_gradient().unwrap(), k))
-                    } else if self.cfg.echo_enabled {
-                        Some(w.transmit())
-                    } else {
-                        // Gupta–Vaidya CGC baseline: raw broadcast always.
-                        w.stats.raw_rounds += 1;
-                        Some(Payload::Raw(w.local_gradient().unwrap().to_vec()))
-                    }
+        for slot in 0..cfg_n {
+            let owner = self.transport.owner(slot);
+            let outgoing: Outgoing = if !hosts {
+                // The slot owner is a remote process: the transport reads
+                // its frame off the wire (or times the slot out).
+                Outgoing::Remote
+            } else if let Some(att) = self.attacks.get_mut(&owner) {
+                let ctx = AttackCtx {
+                    id: owner,
+                    w: &w_recv,
+                    true_grad: &true_grad,
+                    honest_grads: &honest_grads,
+                    overheard: &overheard,
+                    n: cfg_n,
+                    f: self.cfg.f,
+                    round: self.round,
                 };
-                match frame {
-                    None => {
-                        round.silence(slot);
-                        self.server.on_silence(owner);
-                        self.baseline_attempts += 1;
-                    }
-                    Some(p) => {
-                        let honest = !self.attacks.contains_key(&owner);
-                        let bc = round.broadcast(slot, owner, &p);
-                        // What an all-raw baseline would have spent here:
-                        // the server draws are payload-independent, so it
-                        // stops at exactly this primary's attempt count.
-                        self.baseline_attempts += bc.attempts;
-                        retransmits += (bc.attempts - 1) as usize;
+                match att.frame(&ctx, &mut self.attack_rng) {
+                    Some(p) => Outgoing::Frame(p),
+                    None => Outgoing::Silence,
+                }
+            } else {
+                let w = self.workers[owner].as_mut().unwrap();
+                if let Some(k) = self.cfg.topk {
+                    // eSGD-style baseline: top-k sparsified gradient.
+                    w.stats.raw_rounds += 1;
+                    Outgoing::Frame(crate::wire::top_k_sparsify(w.local_gradient().unwrap(), k))
+                } else if self.cfg.echo_enabled {
+                    Outgoing::Frame(w.transmit())
+                } else {
+                    // Gupta–Vaidya CGC baseline: raw broadcast always.
+                    w.stats.raw_rounds += 1;
+                    Outgoing::Frame(Payload::Raw(w.local_gradient().unwrap().to_vec()))
+                }
+            };
+            let honest = !self.attacks.contains_key(&owner);
+            match self.transport.resolve_slot(slot, owner, outgoing) {
+                SlotResolution::Silent => {
+                    self.server.on_silence(owner);
+                    self.baseline_attempts += 1;
+                }
+                SlotResolution::Lost => {
+                    // Networked transports only: the frame never
+                    // materialized within the round deadline. Lossy-regime
+                    // semantics — zero the slot, never expose.
+                    self.server.on_lost(owner);
+                    self.baseline_attempts += 1;
+                    self.channel_totals.lost_slots += 1;
+                }
+                SlotResolution::Aired(bc) => {
+                    // What an all-raw baseline would have spent here:
+                    // the server draws are payload-independent, so it
+                    // stops at exactly this primary's attempt count.
+                    self.baseline_attempts += bc.attempts;
+                    retransmits += (bc.attempts - 1) as usize;
+                    if hosts {
                         dropped_frames += note_listeners(&mut self.workers, owner, &bc.heard);
-                        if honest {
-                            match &bc.payload {
-                                Payload::Echo { .. } => echo_count += 1,
-                                _ => raw_count += 1,
+                    }
+                    if honest {
+                        match &bc.payload {
+                            Payload::Echo { .. } => echo_count += 1,
+                            _ => raw_count += 1,
+                        }
+                    }
+                    if hosts && self.cfg.echo_enabled {
+                        overhear_fan_out(&mut self.workers, owner, &bc.payload, &bc.heard, threads);
+                    }
+                    // Honest echo the server missed (uplink erasure)
+                    // or cannot reconstruct (it missed a referenced
+                    // raw): the synchronous ACK/NACK lets the worker
+                    // fall back to its raw gradient in the same slot,
+                    // extra bits charged to the meter.
+                    let needs_fallback = honest
+                        && match &bc.payload {
+                            Payload::Echo { ids, .. } => {
+                                !bc.server_got || !self.server.echo_refs_stored(ids)
                             }
-                        }
-                        if self.cfg.echo_enabled {
-                            overhear_fan_out(
-                                &mut self.workers,
-                                owner,
-                                &bc.payload,
-                                &bc.heard,
-                                threads,
-                            );
-                        }
-                        // Honest echo the server missed (uplink erasure)
-                        // or cannot reconstruct (it missed a referenced
-                        // raw): the synchronous ACK/NACK lets the worker
-                        // fall back to its raw gradient in the same slot,
-                        // extra bits charged to the meter.
-                        let needs_fallback = honest
-                            && match &bc.payload {
-                                Payload::Echo { ids, .. } => {
-                                    !bc.server_got || !self.server.echo_refs_stored(ids)
-                                }
-                                _ => false,
-                            };
-                        // The server's verdict is the authority on Lost
-                        // slots: a frame can be lost on the uplink, or
-                        // (a Byzantine echo) arrive yet reference frames
-                        // the server never delivered — both end Lost.
-                        // `aired` is the slot's final on-air payload for
-                        // the omniscient attack context: after a
-                        // fallback that is the raw frame, exactly what
-                        // honest listeners had a chance to overhear.
-                        let (outcome, aired) = if needs_fallback {
-                            let g = self.workers[owner]
-                                .as_mut()
-                                .unwrap()
-                                .take_gradient()
-                                .expect("echo transmit retains the gradient");
-                            let fb = round.fallback(slot, owner, &Payload::Raw(g));
-                            fallbacks += 1;
-                            // The slot was ultimately served by a raw
-                            // broadcast: reclassify it so echo_rate (the
-                            // loss figure's headline metric) counts echo
-                            // *deliveries*, not echo attempts. The
-                            // attempt itself stays visible as the
-                            // `fallbacks` field.
-                            echo_count -= 1;
-                            raw_count += 1;
+                            _ => false,
+                        };
+                    // The server's verdict is the authority on Lost
+                    // slots: a frame can be lost on the uplink, or
+                    // (a Byzantine echo) arrive yet reference frames
+                    // the server never delivered — both end Lost.
+                    // `aired` is the slot's final on-air payload for
+                    // the omniscient attack context: after a
+                    // fallback that is the raw frame, exactly what
+                    // honest listeners had a chance to overhear.
+                    let (outcome, aired) = if needs_fallback {
+                        let g = if hosts {
+                            Some(Payload::Raw(
+                                self.workers[owner]
+                                    .as_mut()
+                                    .unwrap()
+                                    .take_gradient()
+                                    .expect("echo transmit retains the gradient"),
+                            ))
+                        } else {
+                            None
+                        };
+                        let fb = self.transport.fallback(slot, owner, g);
+                        fallbacks += 1;
+                        // The slot was ultimately served by a raw
+                        // broadcast: reclassify it so echo_rate (the
+                        // loss figure's headline metric) counts echo
+                        // *deliveries*, not echo attempts. The
+                        // attempt itself stays visible as the
+                        // `fallbacks` field.
+                        echo_count -= 1;
+                        raw_count += 1;
+                        if hosts {
                             let stats = &mut self.workers[owner].as_mut().unwrap().stats;
                             stats.echo_rounds -= 1;
                             stats.raw_rounds += 1;
-                            retransmits += (fb.attempts - 1) as usize;
+                        }
+                        retransmits += (fb.attempts - 1) as usize;
+                        if hosts {
                             dropped_frames += note_listeners(&mut self.workers, owner, &fb.heard);
                             if self.cfg.echo_enabled {
                                 overhear_fan_out(
@@ -456,31 +578,31 @@ impl Simulation {
                                     threads,
                                 );
                             }
-                            let out = if fb.server_got {
-                                self.server.on_frame(owner, &fb.payload)
-                            } else {
-                                self.server.on_lost(owner);
-                                SlotOutcome::Lost
-                            };
-                            (out, fb.payload)
-                        } else {
-                            let out = if bc.server_got {
-                                self.server.on_frame(owner, &bc.payload)
-                            } else {
-                                self.server.on_lost(owner);
-                                SlotOutcome::Lost
-                            };
-                            (out, bc.payload)
-                        };
-                        if outcome == SlotOutcome::Lost {
-                            self.channel_totals.lost_slots += 1;
                         }
-                        overheard.push((owner, aired));
+                        let out = if fb.server_got {
+                            self.server.on_frame(owner, &fb.payload)
+                        } else {
+                            self.server.on_lost(owner);
+                            SlotOutcome::Lost
+                        };
+                        (out, fb.payload)
+                    } else {
+                        let out = if bc.server_got {
+                            self.server.on_frame(owner, &bc.payload)
+                        } else {
+                            self.server.on_lost(owner);
+                            SlotOutcome::Lost
+                        };
+                        (out, bc.payload)
+                    };
+                    if outcome == SlotOutcome::Lost {
+                        self.channel_totals.lost_slots += 1;
                     }
+                    overheard.push((owner, aired));
                 }
             }
-            round.finish();
         }
+        self.transport.finish_round();
         self.channel_totals.dropped_frames += dropped_frames as u64;
         self.channel_totals.retransmits += retransmits as u64;
         self.channel_totals.fallbacks += fallbacks as u64;
@@ -497,7 +619,7 @@ impl Simulation {
             loss,
             dist_sq,
             grad_norm: linalg::norm(&full_grad_at_w),
-            uplink_bits: *self.radio.meter.uplink_history.last().unwrap(),
+            uplink_bits: *self.transport.meter().uplink_history.last().unwrap(),
             echo_count,
             raw_count,
             exposed_cum: self.server.exposed().len(),
@@ -507,6 +629,8 @@ impl Simulation {
             fallbacks,
         };
         self.round += 1;
+        self.cum_echo += echo_count as u64;
+        self.cum_raw += raw_count as u64;
         self.trace.on_round(&rec);
         rec
     }
@@ -537,13 +661,23 @@ impl Simulation {
         }
     }
 
-    /// Total echo rate among fault-free workers so far.
+    /// Total echo rate among fault-free workers so far. When the engine
+    /// hosts the workers this reads their [`crate::worker::WorkerStats`]
+    /// (the pre-trait arithmetic exactly); on a networked transport the
+    /// remote workers own those stats, so the engine's per-slot
+    /// classification counters stand in — the same honest echo/raw split,
+    /// accumulated server-side.
     pub fn echo_rate(&self) -> f64 {
-        let (mut e, mut r) = (0u64, 0u64);
-        for w in self.workers.iter().flatten() {
-            e += w.stats.echo_rounds;
-            r += w.stats.raw_rounds;
-        }
+        let (e, r) = if self.transport.hosts_workers() {
+            let (mut e, mut r) = (0u64, 0u64);
+            for w in self.workers.iter().flatten() {
+                e += w.stats.echo_rounds;
+                r += w.stats.raw_rounds;
+            }
+            (e, r)
+        } else {
+            (self.cum_echo, self.cum_raw)
+        };
         if e + r == 0 {
             0.0
         } else {
@@ -562,14 +696,15 @@ impl Simulation {
     /// perfect channel this degenerates to `rounds × n × raw_bits`, the
     /// pre-channel arithmetic bit-for-bit.
     pub fn comm_savings(&self) -> f64 {
-        let rounds = self.radio.meter.uplink_history.len() as u64;
+        let meter = self.transport.meter();
+        let rounds = meter.uplink_history.len() as u64;
         if rounds == 0 {
             return 0.0;
         }
         let raw_bits =
             crate::wire::raw_gradient_bits(self.model.dim(), self.cfg.encoding());
         let baseline = self.baseline_attempts * raw_bits;
-        1.0 - self.radio.meter.total_uplink() as f64 / baseline as f64
+        1.0 - meter.total_uplink() as f64 / baseline as f64
     }
 
     /// Final squared distance to the optimum (if known).

@@ -1,0 +1,172 @@
+//! The transport seam behind the round engine.
+//!
+//! [`Transport`] is what lets one [`crate::sim::Simulation`] drive two
+//! very different substrates:
+//!
+//! * [`RadioTransport`] — the in-memory single-hop radio
+//!   ([`crate::radio`]): the engine hosts the workers itself, each slot's
+//!   payload is synthesized in-process, and semantics / channel model /
+//!   bit metering are byte-identical to the pre-trait engine (pinned by
+//!   the determinism, sweep, trace and channel tests).
+//! * [`crate::net::NetServerTransport`] — real worker processes over
+//!   TCP: the engine runs server-side only, each slot's payload arrives
+//!   as a length-prefixed frame on the slot owner's socket, and the
+//!   server rebroadcasts it so the other workers "overhear" it exactly
+//!   as the single-hop radio model requires (see `docs/node-mode.md`).
+//!
+//! The engine asks [`Transport::hosts_workers`] to decide whether the
+//! computation phase (gradients, spans, attack synthesis) runs locally;
+//! everything downstream of the slot loop — aggregation, metrics, trace
+//! events — is transport-agnostic.
+
+use crate::radio::{BitMeter, Broadcast, RadioNetwork, SlotCursor, TdmaSchedule};
+use crate::wire::Payload;
+
+/// What the round engine wants on air in a TDMA slot.
+#[derive(Debug)]
+pub enum Outgoing {
+    /// The payload originates at a remote worker process; the transport
+    /// must obtain it off the wire itself.
+    Remote,
+    /// A locally synthesized frame (honest worker or in-process attack).
+    Frame(Payload),
+    /// Deliberate silence (a crash-style fault an attack chose).
+    Silence,
+}
+
+/// How one TDMA slot resolved.
+#[derive(Debug)]
+pub enum SlotResolution {
+    /// A frame went on air: who heard it, whether the server got it, and
+    /// what it cost.
+    Aired(Broadcast),
+    /// The slot elapsed in deliberate silence; the server observes the
+    /// absence (synchrony makes deliberate silence provable).
+    Silent,
+    /// Networked transports only: the slot owner's frame never
+    /// materialized within the round deadline (dead peer, undecodable
+    /// frame). Lossy-regime semantics: the server zeroes the slot and
+    /// never exposes — silence over an unreliable link is not Byzantine
+    /// proof.
+    Lost,
+}
+
+/// One communication substrate under the round engine.
+///
+/// Implementations must preserve the TDMA contract the engine relies on:
+/// slots resolve strictly in order, one resolution per slot, and a
+/// [`Transport::fallback`] may only immediately follow the slot it
+/// belongs to.
+pub trait Transport {
+    /// Does the engine host the workers in-process? `true` for the
+    /// in-memory radio (the engine computes gradients, builds spans and
+    /// synthesizes each slot's payload); `false` for a networked server
+    /// (remote processes do all of that — the engine only resolves
+    /// slots and aggregates).
+    fn hosts_workers(&self) -> bool;
+
+    /// Transmitter of `slot` under the current schedule.
+    fn owner(&self, slot: usize) -> usize;
+
+    /// Install a new TDMA schedule (per-round slot shuffling). Networked
+    /// transports may reject this — node mode pins the identity
+    /// schedule.
+    fn set_schedule(&mut self, schedule: TdmaSchedule);
+
+    /// Server downlink broadcast of the parameter; returns the payload
+    /// as decoded by the workers (wire quantization is physically real
+    /// on both transports).
+    fn downlink(&mut self, w: &[f64]) -> Vec<f64>;
+
+    /// Open the communication phase of a round.
+    fn begin_round(&mut self);
+
+    /// Resolve one TDMA slot. `outgoing` is what the engine wants on
+    /// air: a locally synthesized frame, deliberate silence, or
+    /// [`Outgoing::Remote`] when the payload must come from the slot
+    /// owner's process.
+    fn resolve_slot(&mut self, slot: usize, sender: usize, outgoing: Outgoing) -> SlotResolution;
+
+    /// Same-slot raw fallback, immediately after [`Self::resolve_slot`]
+    /// aired an echo the server could not use. `payload` is the sender's
+    /// raw gradient when the engine hosts the workers; `None` when the
+    /// transport must request it from the remote worker.
+    fn fallback(&mut self, slot: usize, sender: usize, payload: Option<Payload>) -> Broadcast;
+
+    /// Close the round (archives the round's uplink bits).
+    fn finish_round(&mut self);
+
+    /// The transport's bit meter (uplink history, per-node energy).
+    fn meter(&self) -> &BitMeter;
+}
+
+/// The in-memory transport: the single-hop radio network driven through
+/// a [`SlotCursor`] — the exact transmit/silence/finish bodies the
+/// pre-trait engine ran, so behaviour (channel draws, metering, panics)
+/// is byte-identical.
+#[derive(Debug)]
+pub struct RadioTransport {
+    net: RadioNetwork,
+    cur: SlotCursor,
+}
+
+impl RadioTransport {
+    pub fn new(net: RadioNetwork) -> Self {
+        Self { net, cur: SlotCursor::new() }
+    }
+
+    /// The underlying radio network (schedule, meter, channel).
+    pub fn radio(&self) -> &RadioNetwork {
+        &self.net
+    }
+}
+
+impl Transport for RadioTransport {
+    fn hosts_workers(&self) -> bool {
+        true
+    }
+
+    fn owner(&self, slot: usize) -> usize {
+        self.net.schedule.owner(slot)
+    }
+
+    fn set_schedule(&mut self, schedule: TdmaSchedule) {
+        self.net.schedule = schedule;
+    }
+
+    fn downlink(&mut self, w: &[f64]) -> Vec<f64> {
+        self.net.downlink(w)
+    }
+
+    fn begin_round(&mut self) {
+        self.cur = SlotCursor::new();
+    }
+
+    fn resolve_slot(&mut self, slot: usize, sender: usize, outgoing: Outgoing) -> SlotResolution {
+        match outgoing {
+            Outgoing::Frame(p) => {
+                SlotResolution::Aired(self.cur.broadcast(&mut self.net, slot, sender, &p))
+            }
+            Outgoing::Silence => {
+                self.cur.silence(slot);
+                SlotResolution::Silent
+            }
+            Outgoing::Remote => {
+                unreachable!("in-memory transport hosts its workers; no remote slots")
+            }
+        }
+    }
+
+    fn fallback(&mut self, slot: usize, sender: usize, payload: Option<Payload>) -> Broadcast {
+        let p = payload.expect("in-memory fallback carries the sender's raw gradient");
+        self.cur.fallback(&mut self.net, slot, sender, &p)
+    }
+
+    fn finish_round(&mut self) {
+        self.cur.finish(&mut self.net);
+    }
+
+    fn meter(&self) -> &BitMeter {
+        &self.net.meter
+    }
+}

@@ -1,0 +1,117 @@
+//! Loopback swarm integration: a real TCP deployment (server + n worker
+//! nodes as threads of this process) must reproduce the in-memory sim's
+//! per-round record sequence bit for bit, and a worker dying mid-run
+//! must degrade its slots to Lost — never hang the server, never count
+//! as Byzantine proof (lossy-regime semantics).
+#![allow(clippy::field_reassign_with_default)]
+
+use echo_cgc::byzantine::AttackKind;
+use echo_cgc::config::ExperimentConfig;
+use echo_cgc::net::{compare_rounds, run_swarm_threads, run_swarm_threads_with};
+use echo_cgc::sim::Simulation;
+use std::time::Duration;
+
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 6;
+    cfg.f = 1;
+    cfg.b = 1;
+    cfg.d = 16;
+    cfg.rounds = 12;
+    cfg.sigma = 0.05;
+    cfg.seed = 17;
+    cfg
+}
+
+/// Generous per-slot deadline: CI machines stall, and a slow slot must
+/// not be misread as a dead worker in the healthy-fleet tests.
+const DEADLINE: Duration = Duration::from_secs(20);
+
+#[test]
+fn swarm_matches_in_memory_sim_bit_for_bit() {
+    let cfg = base();
+    let report = run_swarm_threads(&cfg, DEADLINE).expect("swarm run");
+    assert_eq!(report.events.len(), cfg.rounds);
+    assert!(report.latencies_ms.len() == cfg.rounds && report.rounds_per_sec() > 0.0);
+    let mut sim = Simulation::build(&cfg).expect("sim");
+    for ev in &report.events {
+        let mem = sim.step();
+        compare_rounds(&mem, ev).expect("parity");
+    }
+    // The derived scalars ride on the same integers, so they agree too.
+    assert_eq!(report.echo_rate.to_bits(), sim.echo_rate().to_bits());
+    assert_eq!(report.comm_savings.to_bits(), sim.comm_savings().to_bits());
+    assert_eq!(report.lost_slots, 0, "healthy loopback fleet loses nothing");
+    assert_eq!(report.exposed, sim.server().exposed().len());
+}
+
+#[test]
+fn swarm_parity_holds_for_silent_byzantine_nodes() {
+    // Silence is the attack that exercises the SilentSlot/SlotEmpty
+    // protocol path — and under a perfect channel it is Byzantine-provable.
+    let mut cfg = base();
+    cfg.attack = AttackKind::Silent;
+    cfg.rounds = 8;
+    let report = run_swarm_threads(&cfg, DEADLINE).expect("swarm run");
+    let mut sim = Simulation::build(&cfg).expect("sim");
+    let mut last_exposed = 0;
+    for ev in &report.events {
+        let mem = sim.step();
+        compare_rounds(&mem, ev).expect("parity");
+        last_exposed = mem.exposed_cum;
+    }
+    assert_eq!(report.exposed, cfg.b, "deliberate silence exposes the attacker");
+    assert_eq!(last_exposed, cfg.b);
+}
+
+#[test]
+fn swarm_parity_holds_without_echoes() {
+    // Gupta–Vaidya baseline: every slot raw — exercises the pure
+    // Uplink/Overheard relay with no fallback traffic.
+    let mut cfg = base();
+    cfg.echo_enabled = false;
+    cfg.rounds = 6;
+    let report = run_swarm_threads(&cfg, DEADLINE).expect("swarm run");
+    let mut sim = Simulation::build(&cfg).expect("sim");
+    for ev in &report.events {
+        let mem = sim.step();
+        compare_rounds(&mem, ev).expect("parity");
+    }
+    assert_eq!(report.echo_rate, 0.0);
+}
+
+#[test]
+fn dead_worker_degrades_to_lost_slots_without_hanging() {
+    let mut cfg = base();
+    cfg.b = 0; // all-honest fleet; the fault is a crash, not an attack
+    cfg.rounds = 10;
+    let died_after = 3usize;
+    let victim = 2usize;
+    let mut die = vec![None; cfg.n];
+    die[victim] = Some(died_after);
+    // Short deadline: EOF makes the dead slot resolve instantly, but if
+    // the server ever *waited* on the corpse this bounds the test.
+    let report =
+        run_swarm_threads_with(&cfg, Duration::from_secs(5), &die).expect("swarm survives");
+    assert_eq!(report.events.len(), cfg.rounds, "server finishes every round");
+    // One lost slot per round from the death onward — and silence from a
+    // dead peer is never Byzantine proof.
+    assert_eq!(report.lost_slots, (cfg.rounds - died_after) as u64);
+    assert_eq!(report.exposed, 0, "Lost slots must not expose anyone");
+    for ev in &report.events {
+        let live_slots = if ev.round < died_after { cfg.n } else { cfg.n - 1 };
+        assert_eq!(
+            ev.echo_count + ev.raw_count,
+            live_slots,
+            "round {}: aired slots",
+            ev.round
+        );
+    }
+    // Rounds before the death match the in-memory sim exactly; the crash
+    // itself has no in-memory counterpart (the sim's fleet is immortal).
+    let mut sim = Simulation::build(&cfg).expect("sim");
+    for ev in &report.events[..died_after] {
+        let mem = sim.step();
+        compare_rounds(&mem, ev).expect("pre-death parity");
+    }
+}

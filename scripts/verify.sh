@@ -20,10 +20,15 @@
 #                     faceted error-vs-round curves figure and the HTML
 #                     artifact index (results/FIG_curves.{svg,csv},
 #                     results/index.html)
+#     swarm-smoke   — a real loopback TCP deployment (`echo-cgc swarm`,
+#                     n=8 f=1, 20 rounds): n worker processes + server,
+#                     per-round parity against the in-memory sim, and the
+#                     wall-clock latency benchmark
+#                     (results/BENCH_swarm_latency.csv)
 #     all           — build-test + lint
 #
 #   --smoke-bench  — append the smoke-bench + figures-smoke + trace-smoke
-#                    stages to `all`.
+#                    + swarm-smoke stages to `all`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -31,7 +36,7 @@ STAGE=""
 SMOKE=0
 for arg in "$@"; do
   case "$arg" in
-    build-test|lint|smoke-bench|figures-smoke|trace-smoke|all)
+    build-test|lint|smoke-bench|figures-smoke|trace-smoke|swarm-smoke|all)
       if [ -n "$STAGE" ]; then
         echo "verify.sh: multiple stages given ('$STAGE' and '$arg') — pass one" >&2
         exit 2
@@ -88,6 +93,16 @@ run_trace_smoke() {
     results/FIG_curves.csv results/index.html
 }
 
+run_swarm_smoke() {
+  echo "== swarm-smoke: loopback TCP deployment, parity vs the in-memory sim =="
+  # The swarm subcommand exits non-zero on any worker failure, a missed
+  # round, or a parity divergence — the assertions live in the binary.
+  cargo run --release --bin echo-cgc -- swarm --n 8 --f 1 --b 1 --d 32 --rounds 20
+  echo "-- swarm latency benchmark:"
+  ls -l results/BENCH_swarm_latency.csv
+  cat results/BENCH_swarm_latency.csv
+}
+
 run_figures_smoke() {
   echo "== figures-smoke: paper Figures 2-4 + loss family, smoke profile =="
   cargo run --release --bin echo-cgc -- figures --fig all --profile smoke --threads auto
@@ -104,6 +119,7 @@ case "$STAGE" in
   smoke-bench) run_smoke_bench ;;
   figures-smoke) run_figures_smoke ;;
   trace-smoke) run_trace_smoke ;;
+  swarm-smoke) run_swarm_smoke ;;
   all)
     run_build_test
     run_lint
@@ -111,6 +127,7 @@ case "$STAGE" in
       run_smoke_bench
       run_figures_smoke
       run_trace_smoke
+      run_swarm_smoke
     fi
     ;;
 esac
