@@ -53,6 +53,7 @@
 
 pub mod curves;
 pub mod svg;
+pub mod swarm;
 
 use crate::byzantine::AttackKind;
 use crate::config::{ExperimentConfig, ModelKind};

@@ -1,0 +1,190 @@
+//! The swarm latency panel (`echo-cgc figures --fig swarm`).
+//!
+//! Unlike every other figure, this one does not run a sweep: wall-clock
+//! round latency only exists where real sockets do, so the data source
+//! is `BENCH_swarm_latency.csv` as written by `echo-cgc swarm`
+//! (typically an `--n-sweep 8,32,128` run — CI's swarm-smoke job keeps
+//! the trajectory). The CSV is parsed by *header name*, so column order
+//! is free to evolve; rows sharing an `(n, d)` cell fold into
+//! [`Summary`] statistics exactly like replicate seeds do elsewhere.
+//!
+//! Two charts come out: `FIG_swarm_latency` (p50/p99 round latency vs
+//! n) and `FIG_swarm_throughput` (rounds per second vs n), with one
+//! series per gradient dimension when the bench swept `d` too.
+
+use super::{AxisValue, Chart, Point, Series};
+use crate::metrics::Summary;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One data row of the latency CSV, keyed by header name.
+type Row = BTreeMap<String, f64>;
+
+/// Parse a headered all-numeric CSV. Errors name the row/column, so a
+/// truncated artifact fails loudly instead of plotting nonsense.
+pub fn read_rows<P: AsRef<Path>>(path: P) -> Result<Vec<Row>, String> {
+    let path = path.as_ref();
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header: Vec<String> = lines
+        .next()
+        .ok_or_else(|| format!("{}: empty csv", path.display()))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != header.len() {
+            return Err(format!(
+                "{}: row {} has {} fields, header has {}",
+                path.display(),
+                i + 2,
+                fields.len(),
+                header.len()
+            ));
+        }
+        let mut row = Row::new();
+        for (h, v) in header.iter().zip(fields) {
+            let x: f64 = v
+                .trim()
+                .parse()
+                .map_err(|e| format!("{}: row {}, column {h}: {e}", path.display(), i + 2))?;
+            row.insert(h.clone(), x);
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        return Err(format!("{}: no data rows", path.display()));
+    }
+    Ok(rows)
+}
+
+/// One chart series: `col` vs n, rows sharing an n folded into stats.
+fn build_series(rows: &[&Row], col: &str, name: String) -> Series {
+    let mut by_n: Vec<(f64, Vec<f64>)> = Vec::new();
+    for r in rows {
+        let (Some(&n), Some(&v)) = (r.get("n"), r.get(col)) else { continue };
+        match by_n.iter_mut().find(|(x, _)| x.to_bits() == n.to_bits()) {
+            Some((_, vs)) => vs.push(v),
+            None => by_n.push((n, vec![v])),
+        }
+    }
+    by_n.sort_by(|a, b| a.0.total_cmp(&b.0));
+    Series {
+        name,
+        points: by_n
+            .into_iter()
+            .map(|(n, vs)| Point { x: AxisValue::Num(n), stat: Summary::of(&vs) })
+            .collect(),
+    }
+}
+
+/// Render the latency + throughput charts from a swarm bench CSV.
+/// `(chart, artifact stem)` pairs, like [`super::LossFigureJob::run`].
+pub fn swarm_charts<P: AsRef<Path>>(csv: P) -> Result<Vec<(Chart, &'static str)>, String> {
+    let path = csv.as_ref();
+    let rows = read_rows(path)?;
+    for col in ["n", "p50_ms", "p99_ms", "rounds_per_sec"] {
+        if !rows[0].contains_key(col) {
+            return Err(format!("{}: missing column '{col}'", path.display()));
+        }
+    }
+    // Pre-`d`-column CSVs (one fixed dimension) plot as a single slice.
+    let mut ds: Vec<f64> = Vec::new();
+    for r in &rows {
+        if let Some(&d) = r.get("d") {
+            if !ds.iter().any(|x| x.to_bits() == d.to_bits()) {
+                ds.push(d);
+            }
+        }
+    }
+    let mut latency = Chart {
+        title: "swarm round latency vs n (loopback TCP)".to_string(),
+        x_label: "n".to_string(),
+        y_label: "round latency (ms)".to_string(),
+        log_y: false,
+        series: Vec::new(),
+    };
+    let mut throughput = Chart {
+        title: "swarm throughput vs n (loopback TCP)".to_string(),
+        x_label: "n".to_string(),
+        y_label: "rounds per second".to_string(),
+        log_y: false,
+        series: Vec::new(),
+    };
+    if ds.len() > 1 {
+        for &d in &ds {
+            let sub: Vec<&Row> =
+                rows.iter().filter(|r| r.get("d").map(|x| x.to_bits()) == Some(d.to_bits())).collect();
+            latency.series.push(build_series(&sub, "p50_ms", format!("p50 d={d}")));
+            latency.series.push(build_series(&sub, "p99_ms", format!("p99 d={d}")));
+            throughput.series.push(build_series(&sub, "rounds_per_sec", format!("d={d}")));
+        }
+    } else {
+        let all: Vec<&Row> = rows.iter().collect();
+        latency.series.push(build_series(&all, "p50_ms", "p50".to_string()));
+        latency.series.push(build_series(&all, "p99_ms", "p99".to_string()));
+        throughput.series.push(build_series(&all, "rounds_per_sec", "rounds/s".to_string()));
+    }
+    Ok(vec![(latency, "FIG_swarm_latency"), (throughput, "FIG_swarm_throughput")])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(name: &str, contents: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("echo_cgc_{name}_{}.csv", std::process::id()));
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn charts_fold_rows_and_sort_by_n() {
+        let p = write_tmp(
+            "swarm_fig",
+            "n,f,b,d,rounds,rounds_per_sec,p50_ms,p99_ms,mean_ms,max_ms,total_uplink_bits,echo_rate,comm_savings,lost_slots\n\
+             32,1,1,32,10,50,20,25,21,30,100,0.5,0.4,0\n\
+             8,1,1,32,10,200,5,6,5,8,100,0.5,0.4,0\n\
+             8,1,1,64,10,150,7,9,8,11,100,0.5,0.4,0\n",
+        );
+        let charts = swarm_charts(&p).unwrap();
+        assert_eq!(charts.len(), 2);
+        let (latency, stem) = &charts[0];
+        assert_eq!(*stem, "FIG_swarm_latency");
+        // Two d values × {p50, p99} = 4 series.
+        assert_eq!(latency.series.len(), 4);
+        let p50_d32 = latency.series.iter().find(|s| s.name == "p50 d=32").unwrap();
+        let xs: Vec<f64> = p50_d32.points.iter().map(|pt| pt.x.num().unwrap()).collect();
+        assert_eq!(xs, vec![8.0, 32.0], "points sorted by n");
+        let (throughput, stem) = &charts[1];
+        assert_eq!(*stem, "FIG_swarm_throughput");
+        assert_eq!(throughput.series.len(), 2);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn legacy_csv_without_d_column_still_renders() {
+        let p = write_tmp(
+            "swarm_fig_legacy",
+            "n,f,b,rounds,rounds_per_sec,p50_ms,p99_ms,mean_ms,max_ms,total_uplink_bits,echo_rate,comm_savings,lost_slots\n\
+             8,1,1,10,200,5,6,5,8,100,0.5,0.4,0\n",
+        );
+        let charts = swarm_charts(&p).unwrap();
+        assert_eq!(charts[0].0.series.len(), 2, "single slice: p50 + p99");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn malformed_csv_errors_with_position() {
+        let p = write_tmp("swarm_fig_bad", "n,p50_ms,p99_ms,rounds_per_sec\n8,oops,6,200\n");
+        let err = swarm_charts(&p).unwrap_err();
+        assert!(err.contains("row 2"), "error names the row: {err}");
+        let missing = write_tmp("swarm_fig_missing", "n,p50_ms\n8,5\n");
+        assert!(swarm_charts(&missing).unwrap_err().contains("missing column"));
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(&missing);
+    }
+}

@@ -8,12 +8,15 @@
 //! * `analyze`        — print the theory constants (β, γ, ρ, r-bound, C, …)
 //! * `figures`        — reproduce the paper's figures. Measured,
 //!                      sweep-engine-backed with replicate seeds:
-//!                      `--fig 2|3|4|curves|loss|all --profile smoke|full`
+//!                      `--fig 2|3|4|curves|loss|swarm|all --profile
+//!                      smoke|full`
 //!                      (writes `results/FIG_*.{svg,csv}`; `curves` is
 //!                      the faceted error-vs-round figure from a traced
 //!                      sweep, with the contraction fit overlaid; `loss`
 //!                      is the lossy-channel family — echo rate, comm
-//!                      savings and final error vs. loss probability);
+//!                      savings and final error vs. loss probability;
+//!                      `swarm` renders the measured swarm bench CSV
+//!                      into latency/throughput-vs-n panels);
 //!                      ad-hoc ablations via the `--axis` mini-DSL
 //!                      (`--axis n=10,20,50 --axis f=0..4 --axis
 //!                      loss=0,0.1,0.3`, comma lists or inclusive integer
@@ -41,15 +44,19 @@
 //!                      ADDR` runs the parameter server, `--id K --peers
 //!                      ADDR` runs worker `K` against the server at
 //!                      `ADDR`. All processes must share the same config
-//!                      (`--config` / flags); `--deadline-ms` bounds how
-//!                      long the server waits on any one slot
+//!                      (`--config` / flags); `--deadline-ms` bounds one
+//!                      whole round (downlink through tail digests), not
+//!                      each slot hop
 //! * `swarm`          — deploy server + n worker `node` processes over
 //!                      loopback TCP, run all configured rounds, verify
 //!                      the round trace against the in-memory sim
 //!                      (`--parity off` to skip) and write wall-clock
 //!                      latency (rounds/sec, p50/p99) to
 //!                      `results/BENCH_swarm_latency.csv` (`--out` to
-//!                      relocate)
+//!                      relocate). `--n-sweep 8,32,128` (and optionally
+//!                      `--d-sweep`) runs the whole deployment once per
+//!                      cell and emits one CSV row each — the scaling
+//!                      bench behind `figures --fig swarm`
 //!
 //! Every subcommand accepts `--threads <k>` (or `--threads auto`) to fan
 //! the round engine's computation phase across `k` worker threads —
@@ -78,6 +85,8 @@
 //! echo-cgc sweep --grid loss --profile smoke --threads auto
 //! echo-cgc sweep --grid convergence --profile smoke --trace every_k=4,max=64
 //! echo-cgc swarm --n 8 --f 1 --rounds 20
+//! echo-cgc swarm --n-sweep 8,32,128 --f 1 --d 32 --rounds 10
+//! echo-cgc figures --fig swarm
 //! echo-cgc node --listen 0.0.0.0:7700 --n 4 --f 1 --seed 3
 //! echo-cgc node --id 0 --peers 10.0.0.1:7700 --n 4 --f 1 --seed 3
 //! ```
@@ -96,11 +105,11 @@ fn usage() -> ! {
                         --trace summary|full|every_k=K,max=M (per-round trajectory retention)\n\
                         --channel perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg --uplink-retries <k> (lossy radio)\n\
          sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|loss|quick --profile smoke|full --out <path>\n\
-         figures flags: --fig 2|3|4|curves|loss|all --profile smoke|full --out-dir <dir> (paper figures)\n\
+         figures flags: --fig 2|3|4|curves|loss|swarm|all --profile smoke|full --out-dir <dir> (paper figures)\n\
                         --axis key=v1,v2|a..b [--x axis] [--series axis] [--metric name] (ad-hoc ablation)\n\
                         --which 1a|1b|1c|1d|all (closed-form theory figures)\n\
-         node flags:    --listen ADDR (server) | --id K --peers ADDR (worker); --deadline-ms <ms>\n\
-         swarm flags:   --deadline-ms <ms> --out <csv-path> --parity on|off\n\
+         node flags:    --listen ADDR (server) | --id K --peers ADDR (worker); --deadline-ms <ms> (per round)\n\
+         swarm flags:   --n-sweep n1,n2,.. --d-sweep d1,d2,.. --deadline-ms <ms> --out <csv-path> --parity on|off\n\
          run `echo-cgc train --n 20 --f 2 --rounds 200` for a quick start"
     );
     std::process::exit(2);
@@ -131,7 +140,7 @@ const SUBCOMMAND_FLAGS: &[(&str, &[&str])] = &[
         &["--fig", "--axis", "--x", "--series", "--metric", "--out-dir", "--profile", "--which"],
     ),
     ("node", &["--id", "--listen", "--peers", "--deadline-ms", "--die-after"]),
-    ("swarm", &["--deadline-ms", "--out", "--parity"]),
+    ("swarm", &["--deadline-ms", "--out", "--parity", "--n-sweep", "--d-sweep"]),
 ];
 
 /// The active subcommand's extracted flag values (in command-line order;
@@ -258,17 +267,31 @@ fn main() {
     }
 }
 
-/// Parse `--deadline-ms` (per-slot server read bound; must cover one
-/// worker's gradient computation).
+/// Parse `--deadline-ms` (the per-*round* budget: one whole round —
+/// downlink, every slot, tail digests — must finish inside it, gradient
+/// computation included; a stalled peer costs at most one deadline).
 fn node_deadline(sub: &SubFlags) -> std::time::Duration {
     let ms = match sub.get("--deadline-ms") {
         Some(v) => v.parse::<u64>().unwrap_or_else(|_| {
             eprintln!("--deadline-ms needs an integer millisecond count, got '{v}'");
             std::process::exit(2);
         }),
-        None => 10_000,
+        None => 30_000,
     };
     std::time::Duration::from_millis(ms.max(1))
+}
+
+/// Parse a `--n-sweep`/`--d-sweep` comma list of positive integers.
+fn parse_sweep_list(flag: &str, v: &str) -> Vec<usize> {
+    let vals: Option<Vec<usize>> =
+        v.split(',').map(|p| p.trim().parse::<usize>().ok().filter(|&x| x > 0)).collect();
+    match vals {
+        Some(xs) if !xs.is_empty() => xs,
+        _ => {
+            eprintln!("{flag} needs a comma list of positive integers, got '{v}'");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn cmd_node(cfg: &ExperimentConfig, sub: &SubFlags) {
@@ -341,7 +364,7 @@ fn print_swarm_report(cfg: &ExperimentConfig, report: &echo_cgc::net::SwarmRepor
 }
 
 fn cmd_swarm(cfg: &ExperimentConfig, sub: &SubFlags) {
-    use echo_cgc::net::{compare_rounds, run_server_on, validate_node_cfg};
+    use echo_cgc::net::{check_digest_bound, validate_node_cfg};
     let deadline = node_deadline(sub);
     let parity = match sub.get("--parity").as_deref() {
         None | Some("on") => true,
@@ -354,10 +377,82 @@ fn cmd_swarm(cfg: &ExperimentConfig, sub: &SubFlags) {
     let out = sub
         .get("--out")
         .unwrap_or_else(|| String::from("results/BENCH_swarm_latency.csv"));
-    if let Err(e) = validate_node_cfg(cfg) {
-        eprintln!("config error: {e}");
-        std::process::exit(2);
+    // `--n-sweep 8,32,128` (and `--d-sweep`) runs the whole deployment
+    // once per (n, d) cell; without them the sweep is the single
+    // configured cell.
+    let ns = match sub.get("--n-sweep") {
+        Some(v) => parse_sweep_list("--n-sweep", &v),
+        None => vec![cfg.n],
+    };
+    let ds = match sub.get("--d-sweep") {
+        Some(v) => parse_sweep_list("--d-sweep", &v),
+        None => vec![cfg.d],
+    };
+    // Fail every cell's config check before deploying the first one — a
+    // bad tail cell must not discard minutes of earlier measurement.
+    let mut cells = Vec::with_capacity(ds.len() * ns.len());
+    for &d in &ds {
+        for &n in &ns {
+            let mut c = cfg.clone();
+            c.n = n;
+            c.d = d;
+            if let Err(e) =
+                validate_node_cfg(&c).and_then(|()| check_digest_bound(c.n, c.d, c.encoding()))
+            {
+                eprintln!("config error (n={n}, d={d}): {e}");
+                std::process::exit(2);
+            }
+            cells.push(c);
+        }
     }
+    let mut table = CsvTable::new(&[
+        "n",
+        "f",
+        "b",
+        "d",
+        "rounds",
+        "rounds_per_sec",
+        "p50_ms",
+        "p99_ms",
+        "mean_ms",
+        "max_ms",
+        "total_uplink_bits",
+        "echo_rate",
+        "comm_savings",
+        "lost_slots",
+    ]);
+    for c in &cells {
+        let report = run_swarm_cell(c, deadline, parity);
+        table.push_row(&[
+            c.n as f64,
+            c.f as f64,
+            c.b as f64,
+            c.d as f64,
+            report.rounds() as f64,
+            report.rounds_per_sec(),
+            report.p50_ms(),
+            report.p99_ms(),
+            report.mean_ms(),
+            report.max_ms(),
+            report.total_uplink_bits() as f64,
+            report.echo_rate,
+            report.comm_savings,
+            report.lost_slots as f64,
+        ]);
+    }
+    table.write_file(&out).expect("write swarm latency csv");
+    println!("wrote {out} ({} rows)", cells.len());
+}
+
+/// Deploy one swarm cell — spawn `cfg.n` real worker processes against a
+/// loopback server, run every round, optionally replay the in-memory sim
+/// for the bit-level parity check — and return the measured report.
+fn run_swarm_cell(
+    cfg: &ExperimentConfig,
+    deadline: std::time::Duration,
+    parity: bool,
+) -> echo_cgc::net::SwarmReport {
+    use echo_cgc::net::{compare_rounds, run_server_on};
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap_or_else(|e| {
         eprintln!("cannot bind loopback: {e}");
         std::process::exit(1);
@@ -365,18 +460,24 @@ fn cmd_swarm(cfg: &ExperimentConfig, sub: &SubFlags) {
     let local = listener.local_addr().expect("loopback listener has an address");
     let addr = local.to_string();
     println!(
-        "echo-cgc swarm: server on {addr}, spawning {} worker node processes (n={} f={} b={} rounds={})",
+        "echo-cgc swarm: server on {addr}, spawning {} worker node processes (n={} f={} b={} d={} rounds={})",
         cfg.n,
         cfg.n,
         cfg.f,
         cfg.b,
+        cfg.d,
         cfg.rounds
     );
     // Children get the *entire* effective config through a temp file —
     // the one-source-of-truth handoff that makes their RNG streams
-    // bit-identical to the server's wiring.
-    let cfg_path =
-        std::env::temp_dir().join(format!("echo-cgc-swarm-{}.conf", std::process::id()));
+    // bit-identical to the server's wiring. Cell-unique name: sweep cells
+    // run back-to-back and must not read each other's config.
+    let cfg_path = std::env::temp_dir().join(format!(
+        "echo-cgc-swarm-{}-n{}-d{}.conf",
+        std::process::id(),
+        cfg.n,
+        cfg.d
+    ));
     std::fs::write(&cfg_path, cfg.to_config_string()).unwrap_or_else(|e| {
         eprintln!("cannot write {}: {e}", cfg_path.display());
         std::process::exit(1);
@@ -440,38 +541,7 @@ fn cmd_swarm(cfg: &ExperimentConfig, sub: &SubFlags) {
             report.rounds()
         );
     }
-    let mut table = CsvTable::new(&[
-        "n",
-        "f",
-        "b",
-        "rounds",
-        "rounds_per_sec",
-        "p50_ms",
-        "p99_ms",
-        "mean_ms",
-        "max_ms",
-        "total_uplink_bits",
-        "echo_rate",
-        "comm_savings",
-        "lost_slots",
-    ]);
-    table.push_row(&[
-        cfg.n as f64,
-        cfg.f as f64,
-        cfg.b as f64,
-        report.rounds() as f64,
-        report.rounds_per_sec(),
-        report.p50_ms(),
-        report.p99_ms(),
-        report.mean_ms(),
-        report.max_ms(),
-        report.total_uplink_bits() as f64,
-        report.echo_rate,
-        report.comm_savings,
-        report.lost_slots as f64,
-    ]);
-    table.write_file(&out).expect("write swarm latency csv");
-    println!("wrote {out}");
+    report
 }
 
 fn cmd_sweep(
@@ -678,10 +748,21 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
         let mut ids: Vec<FigId> = Vec::new();
         let mut want_curves = false;
         let mut want_loss = false;
+        let mut want_swarm = false;
+        let swarm_csv = format!("{out_dir}/BENCH_swarm_latency.csv");
         if figs == "all" {
             ids = FigId::all().to_vec();
             want_curves = true;
             want_loss = true;
+            // The swarm panel renders a measured bench CSV rather than
+            // running a sweep — under `all` it is opportunistic, under an
+            // explicit `--fig swarm` a missing CSV is an error.
+            want_swarm = std::path::Path::new(&swarm_csv).exists();
+            if !want_swarm {
+                println!(
+                    "note: skipping FIG_swarm — no {swarm_csv} (run `echo-cgc swarm` first)"
+                );
+            }
         } else {
             for v in figs.split(',') {
                 let v = v.trim();
@@ -693,8 +774,12 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                     want_loss = true;
                     continue;
                 }
+                if v == "swarm" {
+                    want_swarm = true;
+                    continue;
+                }
                 ids.push(FigId::parse(v).unwrap_or_else(|| {
-                    eprintln!("unknown figure '{v}' (expected 2|3|4|curves|loss|all)");
+                    eprintln!("unknown figure '{v}' (expected 2|3|4|curves|loss|swarm|all)");
                     std::process::exit(2);
                 }));
             }
@@ -746,6 +831,20 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                 println!("wrote {} + {}", csv_path.display(), svg_path.display());
             }
             println!("wrote {out_dir}/FIG_loss_report.json");
+        }
+        if want_swarm {
+            let charts = figures::swarm::swarm_charts(&swarm_csv).unwrap_or_else(|e| {
+                eprintln!(
+                    "error: {e}\n(run `echo-cgc swarm --n-sweep 8,32,128 --rounds 10` to \
+                     produce the bench CSV)"
+                );
+                std::process::exit(2);
+            });
+            println!("figures: FIG_swarm — measured swarm bench from {swarm_csv}");
+            for (chart, stem) in charts {
+                let (csv_path, svg_path) = chart.write(&out_dir, stem).expect("write figure");
+                println!("wrote {} + {}", csv_path.display(), svg_path.display());
+            }
         }
         let index = figures::write_html_index(&out_dir).expect("write html index");
         println!("wrote {}", index.display());

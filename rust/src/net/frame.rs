@@ -19,15 +19,29 @@
 //! | `0x02` | `Downlink` | `round:u32` + payload bytes |
 //! | `0x03` | `Uplink` | `round:u32 slot:u32` + payload bytes |
 //! | `0x04` | `SilentSlot` | `round:u32 slot:u32` |
-//! | `0x05` | `Overheard` | `round:u32 slot:u32 sender:u32` + payload bytes |
-//! | `0x06` | `SlotEmpty` | `round:u32 slot:u32 sender:u32 lost:u8` |
 //! | `0x07` | `FallbackReq` | `round:u32 slot:u32` |
 //! | `0x08` | `Shutdown` | — |
+//! | `0x09` | `RoundDigest` | `round:u32 start:u32 count:u32` + `count` entries |
+//!
+//! ```text
+//! entry := slot:u32 kind:u8 payload?
+//!   kind 0 = Silent  (deliberate silence — Byzantine-provable)
+//!   kind 1 = Lost    (nothing usable aired; never exposes)
+//!   kind 2 = Aired   (len:u32 + the slot's final on-air payload bytes)
+//! ```
+//!
+//! Tags `0x05`/`0x06` (the per-slot `Overheard`/`SlotEmpty` notices of
+//! the retired lock-step relay) are retired: a round's slot outcomes now
+//! ride in [`NetFrame::RoundDigest`] batches — O(n) relay frames per
+//! round instead of O(n²). They stay unassigned so an old binary on the
+//! wire fails loudly (`BadTag`) instead of misparsing.
 //!
 //! Decoding is total: any byte sequence produces `Ok` or a typed
 //! [`FrameError`], never a panic — `rust/tests/net_frames.rs` fuzzes
 //! this. Length prefixes above [`MAX_FRAME_BYTES`] are rejected *before*
-//! any allocation, so a hostile prefix cannot OOM the server.
+//! any allocation, so a hostile prefix cannot OOM the server; a digest's
+//! `count` field is validated against the bytes actually present before
+//! any entry vector grows.
 
 use std::io::{Read, Write};
 
@@ -40,10 +54,44 @@ const TAG_HELLO: u8 = 0x01;
 const TAG_DOWNLINK: u8 = 0x02;
 const TAG_UPLINK: u8 = 0x03;
 const TAG_SILENT: u8 = 0x04;
-const TAG_OVERHEARD: u8 = 0x05;
-const TAG_SLOT_EMPTY: u8 = 0x06;
+// 0x05 / 0x06 retired (per-slot Overheard / SlotEmpty of the lock-step
+// relay, replaced by RoundDigest); kept unassigned on purpose.
 const TAG_FALLBACK_REQ: u8 = 0x07;
 const TAG_SHUTDOWN: u8 = 0x08;
+const TAG_ROUND_DIGEST: u8 = 0x09;
+
+const ENTRY_SILENT: u8 = 0;
+const ENTRY_LOST: u8 = 1;
+const ENTRY_AIRED: u8 = 2;
+
+/// Minimum encoded size of one digest entry (`slot:u32 kind:u8`) — the
+/// bound that lets [`NetFrame::decode_body`] reject an inflated `count`
+/// field before growing any vector.
+const MIN_ENTRY_BYTES: usize = 5;
+
+/// How one TDMA slot of a round ultimately resolved, as relayed inside a
+/// [`NetFrame::RoundDigest`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum DigestSlot {
+    /// The slot's *final* on-air payload (after any same-slot raw
+    /// fallback) — `crate::wire`-encoded bytes, verbatim.
+    Aired(Vec<u8>),
+    /// The owner deliberately stayed silent (Byzantine-provable under a
+    /// perfect channel).
+    Silent,
+    /// Nothing usable aired: the owner is dead, timed out, or sent an
+    /// undecodable payload. Scored `Lost`, never exposed.
+    Lost,
+}
+
+/// One slot's outcome inside a [`NetFrame::RoundDigest`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct DigestEntry {
+    /// The TDMA slot (= worker id under the identity schedule node mode
+    /// pins).
+    pub slot: usize,
+    pub outcome: DigestSlot,
+}
 
 /// One message on a node-mode TCP socket.
 #[derive(Clone, Debug, PartialEq)]
@@ -60,17 +108,17 @@ pub enum NetFrame {
     /// (a crash-style fault the attack chose — still a protocol message,
     /// so the server can tell deliberate silence from a dead peer).
     SilentSlot { round: usize, slot: usize },
-    /// Server → other workers: the slot's *final* on-air payload,
-    /// rebroadcast so workers overhear it (single-hop radio semantics).
-    /// Exactly one `Overheard`/`SlotEmpty` notice is sent per slot, and
-    /// after a fallback it carries the raw bytes, matching what listeners
-    /// of the in-memory radio ultimately act on.
-    Overheard { round: usize, slot: usize, sender: usize, bytes: Vec<u8> },
-    /// Server → other workers: nothing usable aired in the slot.
-    /// `lost = false`: deliberate silence. `lost = true`: the slot timed
-    /// out or carried an undecodable frame (scored
-    /// [`crate::coordinator::SlotOutcome::Lost`], never exposed).
-    SlotEmpty { round: usize, slot: usize, sender: usize, lost: bool },
+    /// Server → one worker: a batch of resolved slot outcomes for
+    /// `round`, covering the contiguous slot range starting at `start`
+    /// (entry `k` describes slot `start + k`). Each round a worker gets
+    /// exactly two digests: the *window* digest (`start = 0`, slots
+    /// before its own — the overhears its echo may span) sent just
+    /// before its own slot opens, and the *tail* digest (`start = own
+    /// slot + 1`, the rest of the round) sent at round end. `Aired`
+    /// entries carry the slot's final on-air payload (raw fallback
+    /// included), matching what listeners of the in-memory radio
+    /// ultimately act on — O(n) relay frames per round.
+    RoundDigest { round: usize, start: usize, entries: Vec<DigestEntry> },
     /// Server → slot owner: your echo was unusable — retransmit raw in
     /// the same slot (the synchronous NACK of the in-memory engine).
     FallbackReq { round: usize, slot: usize },
@@ -91,6 +139,8 @@ pub enum FrameError {
     Truncated,
     /// Fixed-size frame carried extra bytes.
     Trailing(usize),
+    /// A digest entry's `kind` byte was none of Silent/Lost/Aired.
+    BadEntryKind(u8),
 }
 
 impl FrameError {
@@ -117,6 +167,9 @@ impl std::fmt::Display for FrameError {
             FrameError::BadTag(t) => write!(f, "unknown net frame tag {t:#x}"),
             FrameError::Truncated => write!(f, "truncated net frame"),
             FrameError::Trailing(n) => write!(f, "{n} trailing bytes in net frame"),
+            FrameError::BadEntryKind(k) => {
+                write!(f, "unknown digest entry kind {k:#x}")
+            }
         }
     }
 }
@@ -171,19 +224,23 @@ impl NetFrame {
                 put_u32(&mut out, *round);
                 put_u32(&mut out, *slot);
             }
-            NetFrame::Overheard { round, slot, sender, bytes } => {
-                out.push(TAG_OVERHEARD);
+            NetFrame::RoundDigest { round, start, entries } => {
+                out.push(TAG_ROUND_DIGEST);
                 put_u32(&mut out, *round);
-                put_u32(&mut out, *slot);
-                put_u32(&mut out, *sender);
-                out.extend_from_slice(bytes);
-            }
-            NetFrame::SlotEmpty { round, slot, sender, lost } => {
-                out.push(TAG_SLOT_EMPTY);
-                put_u32(&mut out, *round);
-                put_u32(&mut out, *slot);
-                put_u32(&mut out, *sender);
-                out.push(u8::from(*lost));
+                put_u32(&mut out, *start);
+                put_u32(&mut out, entries.len());
+                for e in entries {
+                    put_u32(&mut out, e.slot);
+                    match &e.outcome {
+                        DigestSlot::Silent => out.push(ENTRY_SILENT),
+                        DigestSlot::Lost => out.push(ENTRY_LOST),
+                        DigestSlot::Aired(bytes) => {
+                            out.push(ENTRY_AIRED);
+                            put_u32(&mut out, bytes.len());
+                            out.extend_from_slice(bytes);
+                        }
+                    }
+                }
             }
             NetFrame::FallbackReq { round, slot } => {
                 out.push(TAG_FALLBACK_REQ);
@@ -216,18 +273,36 @@ impl NetFrame {
                 let slot = get_u32(buf, &mut pos)?;
                 NetFrame::SilentSlot { round, slot }
             }
-            TAG_OVERHEARD => {
+            TAG_ROUND_DIGEST => {
                 let round = get_u32(buf, &mut pos)?;
-                let slot = get_u32(buf, &mut pos)?;
-                let sender = get_u32(buf, &mut pos)?;
-                NetFrame::Overheard { round, slot, sender, bytes: buf[pos..].to_vec() }
-            }
-            TAG_SLOT_EMPTY => {
-                let round = get_u32(buf, &mut pos)?;
-                let slot = get_u32(buf, &mut pos)?;
-                let sender = get_u32(buf, &mut pos)?;
-                let lost = get_u8(buf, &mut pos)? != 0;
-                NetFrame::SlotEmpty { round, slot, sender, lost }
+                let start = get_u32(buf, &mut pos)?;
+                let count = get_u32(buf, &mut pos)?;
+                // Each entry occupies ≥ MIN_ENTRY_BYTES, so a hostile
+                // `count` larger than the bytes actually present is
+                // rejected here — before any vector grows.
+                if count > buf.len().saturating_sub(pos) / MIN_ENTRY_BYTES {
+                    return Err(FrameError::Truncated);
+                }
+                let mut entries = Vec::with_capacity(count.min(4096));
+                for _ in 0..count {
+                    let slot = get_u32(buf, &mut pos)?;
+                    let outcome = match get_u8(buf, &mut pos)? {
+                        ENTRY_SILENT => DigestSlot::Silent,
+                        ENTRY_LOST => DigestSlot::Lost,
+                        ENTRY_AIRED => {
+                            let len = get_u32(buf, &mut pos)?;
+                            let end =
+                                pos.checked_add(len).ok_or(FrameError::Truncated)?;
+                            let bytes =
+                                buf.get(pos..end).ok_or(FrameError::Truncated)?.to_vec();
+                            pos = end;
+                            DigestSlot::Aired(bytes)
+                        }
+                        k => return Err(FrameError::BadEntryKind(k)),
+                    };
+                    entries.push(DigestEntry { slot, outcome });
+                }
+                NetFrame::RoundDigest { round, start, entries }
             }
             TAG_FALLBACK_REQ => {
                 let round = get_u32(buf, &mut pos)?;
@@ -237,10 +312,11 @@ impl NetFrame {
             TAG_SHUTDOWN => NetFrame::Shutdown,
             t => return Err(FrameError::BadTag(t)),
         };
-        // Variable-length frames consumed the tail above; fixed-size ones
-        // must end exactly where their fields do.
+        // Tail-absorbing frames consumed the rest above; everything else
+        // (digests included — their length is fully determined by the
+        // entry count) must end exactly where its fields do.
         match &frame {
-            NetFrame::Downlink { .. } | NetFrame::Uplink { .. } | NetFrame::Overheard { .. } => {}
+            NetFrame::Downlink { .. } | NetFrame::Uplink { .. } => {}
             _ if pos != buf.len() => return Err(FrameError::Trailing(buf.len() - pos)),
             _ => {}
         }
@@ -248,12 +324,31 @@ impl NetFrame {
     }
 }
 
+/// Serialize a [`NetFrame::RoundDigest`] body without building the enum
+/// (the server assembles digests incrementally from borrowed entries).
+pub fn digest_body(round: usize, start: usize, entries: &[DigestEntry]) -> Vec<u8> {
+    NetFrame::RoundDigest { round, start, entries: entries.to_vec() }.encode_body()
+}
+
 /// Write one length-prefixed frame and flush it.
 pub fn write_frame<W: Write>(w: &mut W, frame: &NetFrame) -> std::io::Result<()> {
-    let body = frame.encode_body();
-    debug_assert!(body.len() <= MAX_FRAME_BYTES);
+    write_frame_body(w, &frame.encode_body())
+}
+
+/// Write a pre-encoded frame body with its length prefix and flush. A
+/// body above [`MAX_FRAME_BYTES`] is an `InvalidData` error — the peer
+/// would reject the prefix anyway, so fail on the sending side instead
+/// of poisoning the stream (this kills one connection, never the
+/// server; `check_digest_bound` rejects configs that could get here).
+pub fn write_frame_body<W: Write>(w: &mut W, body: &[u8]) -> std::io::Result<()> {
+    if body.len() > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame body of {} bytes exceeds MAX_FRAME_BYTES", body.len()),
+        ));
+    }
     w.write_all(&(body.len() as u32).to_le_bytes())?;
-    w.write_all(&body)?;
+    w.write_all(body)?;
     w.flush()
 }
 
@@ -293,11 +388,72 @@ mod tests {
         round_trip(NetFrame::Downlink { round: 3, bytes: vec![1, 2, 3] });
         round_trip(NetFrame::Uplink { round: 0, slot: 5, bytes: vec![] });
         round_trip(NetFrame::SilentSlot { round: 9, slot: 2 });
-        round_trip(NetFrame::Overheard { round: 1, slot: 0, sender: 0, bytes: vec![0xff; 64] });
-        round_trip(NetFrame::SlotEmpty { round: 4, slot: 3, sender: 3, lost: true });
-        round_trip(NetFrame::SlotEmpty { round: 4, slot: 3, sender: 3, lost: false });
+        round_trip(NetFrame::RoundDigest { round: 1, start: 0, entries: vec![] });
+        round_trip(NetFrame::RoundDigest {
+            round: 4,
+            start: 2,
+            entries: vec![
+                DigestEntry { slot: 2, outcome: DigestSlot::Aired(vec![0xff; 64]) },
+                DigestEntry { slot: 3, outcome: DigestSlot::Silent },
+                DigestEntry { slot: 4, outcome: DigestSlot::Lost },
+                DigestEntry { slot: 5, outcome: DigestSlot::Aired(vec![]) },
+            ],
+        });
         round_trip(NetFrame::FallbackReq { round: 2, slot: 1 });
         round_trip(NetFrame::Shutdown);
+    }
+
+    #[test]
+    fn digest_body_matches_enum_encoding() {
+        let entries = vec![
+            DigestEntry { slot: 0, outcome: DigestSlot::Aired(vec![1, 2]) },
+            DigestEntry { slot: 1, outcome: DigestSlot::Lost },
+        ];
+        let via_helper = digest_body(6, 0, &entries);
+        let via_enum =
+            NetFrame::RoundDigest { round: 6, start: 0, entries }.encode_body();
+        assert_eq!(via_helper, via_enum);
+    }
+
+    #[test]
+    fn hostile_digest_count_rejected_before_allocating() {
+        // A digest claiming u32::MAX entries but carrying none must fail
+        // on the count gate, not by growing a vector.
+        let mut body = vec![TAG_ROUND_DIGEST];
+        body.extend_from_slice(&1u32.to_le_bytes()); // round
+        body.extend_from_slice(&0u32.to_le_bytes()); // start
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // count
+        assert!(matches!(NetFrame::decode_body(&body), Err(FrameError::Truncated)));
+    }
+
+    #[test]
+    fn digest_bad_entry_kind_is_typed() {
+        let f = NetFrame::RoundDigest {
+            round: 0,
+            start: 0,
+            entries: vec![DigestEntry { slot: 0, outcome: DigestSlot::Silent }],
+        };
+        let mut body = f.encode_body();
+        let kind_at = body.len() - 1;
+        body[kind_at] = 0x7f;
+        assert!(matches!(NetFrame::decode_body(&body), Err(FrameError::BadEntryKind(0x7f))));
+    }
+
+    #[test]
+    fn digest_trailing_bytes_error() {
+        let mut body =
+            NetFrame::RoundDigest { round: 0, start: 0, entries: vec![] }.encode_body();
+        body.push(0xAB);
+        assert!(matches!(NetFrame::decode_body(&body), Err(FrameError::Trailing(1))));
+    }
+
+    #[test]
+    fn oversized_body_fails_on_the_sending_side() {
+        let mut sink = Vec::new();
+        let huge = vec![0u8; MAX_FRAME_BYTES + 1];
+        let err = write_frame_body(&mut sink, &huge).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(sink.is_empty(), "nothing hits the stream on oversize");
     }
 
     #[test]

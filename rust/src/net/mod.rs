@@ -9,10 +9,12 @@
 //!   gradient payloads inside are [`crate::wire`]-encoded verbatim, so
 //!   bit accounting matches the radio exactly;
 //! * [`server`] — [`NetServerTransport`]: the server resolves each TDMA
-//!   slot by reading the slot owner's socket, then *rebroadcasts* the
-//!   frame to every other worker — overhearing, the physical primitive
-//!   Echo-CGC exploits, reproduced as a server relay (a single-hop star
-//!   is exactly a broadcast domain with the server in the middle);
+//!   slot by reading the slot owner's socket and relays what aired as
+//!   batched per-round [`frame::NetFrame::RoundDigest`] frames —
+//!   overhearing, the physical primitive Echo-CGC exploits, reproduced
+//!   as a server relay (a single-hop star is exactly a broadcast domain
+//!   with the server in the middle) at O(n) relay frames per round, the
+//!   round bounded by one deadline rather than n per-slot deadlines;
 //! * [`worker`] — the node process: builds the identical
 //!   [`crate::sim::Wiring`] from the shared config (bit-identical RNG
 //!   streams), computes gradients locally, echoes off overheard frames;
@@ -37,10 +39,14 @@ pub mod server;
 pub mod swarm;
 pub mod worker;
 
-pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME_BYTES, NetFrame};
+pub use frame::{
+    digest_body, read_frame, write_frame, write_frame_body, DigestEntry, DigestSlot, FrameError,
+    MAX_FRAME_BYTES, NetFrame,
+};
 pub use server::{accept_workers, NetServerTransport};
 pub use swarm::{
-    compare_rounds, run_server_on, run_swarm_threads, run_swarm_threads_with, SwarmReport,
+    compare_rounds, run_server_on, run_swarm_threads, run_swarm_threads_faulty,
+    run_swarm_threads_with, SwarmReport,
 };
 pub use worker::{run_worker, NodeOpts};
 
@@ -62,6 +68,27 @@ pub fn validate_node_cfg(cfg: &ExperimentConfig) -> Result<(), String> {
         return Err(format!(
             "node mode runs over reliable TCP; channel model '{}' is sim-only (use --channel perfect)",
             cfg.channel.label()
+        ));
+    }
+    Ok(())
+}
+
+/// Reject `(n, d)` combinations whose worst-case round digest could not
+/// fit in one frame.
+///
+/// A window/tail digest aggregates up to `n − 1` slot outcomes; if every
+/// slot aired a raw gradient, its body is `13` header bytes plus
+/// `9 + ⌈raw bits / 8⌉` per entry. Failing here — at startup, with a
+/// pointed message — beats discovering mid-round that
+/// [`frame::write_frame_body`] refuses the digest and one connection
+/// dies per round.
+pub fn check_digest_bound(n: usize, d: usize, enc: crate::wire::Encoding) -> Result<(), String> {
+    let per_entry = 9 + crate::wire::raw_gradient_bits(d, enc).div_ceil(8) as usize;
+    let worst = 13 + n.saturating_sub(1) * per_entry;
+    if worst > MAX_FRAME_BYTES {
+        return Err(format!(
+            "n = {n}, d = {d} can produce a {worst}-byte round digest, above the \
+             {MAX_FRAME_BYTES}-byte frame cap — shrink d (or n), or use a more compact --encoding"
         ));
     }
     Ok(())

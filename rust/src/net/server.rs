@@ -9,16 +9,33 @@
 //! radio's PHY preamble), and rebroadcasting the frame to every other
 //! worker so they overhear it.
 //!
-//! **Lock-step relay.** Every slot produces exactly one notice —
-//! [`NetFrame::Overheard`] with the slot's final on-air bytes, or
-//! [`NetFrame::SlotEmpty`] — relayed to every worker except the sender.
-//! The notice is buffered and flushed at the *start* of the next slot's
-//! resolution (or at round end), which is what makes the pipeline
-//! deadlock-free: the owner of slot `s+1` is waiting for slot `s`'s
-//! notice before transmitting, and receives it just as the server turns
-//! to read slot `s+1`. A same-slot raw fallback *replaces* the buffered
-//! notice, so listeners only ever see the slot's final payload — exactly
-//! what the in-memory engine's overhear fan-out delivers.
+//! **Batched digest relay.** The server accumulates each slot's final
+//! outcome in a per-round [`DigestEntry`] list and sends every worker
+//! exactly two [`NetFrame::RoundDigest`] frames per round — O(n) relay
+//! frames instead of the retired lock-step relay's O(n²) per-slot
+//! notices:
+//!
+//! * the **window digest** (`start = 0`, slots `0..i`) goes to worker
+//!   `i` at the start of its own slot's resolution — everything its
+//!   echo is allowed to span (the span projector freezes at transmit,
+//!   so later slots cannot matter for its broadcast);
+//! * the **tail digest** (`start = i+1`, the rest of the round) goes
+//!   out at round end, so Byzantine replicas can replay the omniscient
+//!   attack draws of every slot with the full round context.
+//!
+//! A same-slot raw fallback *replaces* the slot's entry before any
+//! digest carrying it is built, so listeners only ever see the slot's
+//! final payload — exactly what the in-memory engine's overhear fan-out
+//! delivers.
+//!
+//! **Async slot windows.** The pipeline never blocks slot `s+1` on a
+//! fan-out for slot `s`: worker `i` sits blocked on its window digest
+//! while earlier slots resolve, the server writes that one frame and
+//! immediately turns to read `i`'s uplink. The `deadline` bounds the
+//! *round*, not each slot hop — every read's socket timeout is the
+//! budget remaining since `begin_round`, so a stalled round costs at
+//! most `deadline` (plus a 1 ms floor per remaining slot, since zero
+//! read timeouts are not representable), not `n × deadline`.
 //!
 //! **Dead peers.** Any read timeout, protocol violation, or disconnect on
 //! a worker's socket marks that connection dead permanently (a partial
@@ -30,7 +47,9 @@
 //! charged nothing: garbage the radio could not even decode never counts
 //! as gradient bits).
 
-use super::frame::{read_frame, write_frame, NetFrame};
+use super::frame::{
+    digest_body, read_frame, write_frame, write_frame_body, DigestEntry, DigestSlot, NetFrame,
+};
 use crate::radio::{BitMeter, Broadcast, TdmaSchedule};
 use crate::sim::{Outgoing, SlotResolution, Transport};
 use crate::wire::{decode, encode, Encoding, Payload};
@@ -88,14 +107,8 @@ pub fn accept_workers(
     Ok(conns.into_iter().map(|c| c.unwrap()).collect())
 }
 
-/// The slot notice buffered between resolutions (see module docs).
-struct PendingNotice {
-    sender: usize,
-    frame: NetFrame,
-}
-
 /// The networked server transport: `n` worker sockets, the radio's bit
-/// meter, and the lock-step rebroadcast relay.
+/// meter, and the batched round-digest relay.
 pub struct NetServerTransport {
     /// Worker connections by id; `None` = dead (its slots resolve Lost).
     conns: Vec<Option<TcpStream>>,
@@ -103,16 +116,22 @@ pub struct NetServerTransport {
     enc: Encoding,
     n: usize,
     round: usize,
-    /// Per-slot read deadline — the bound that keeps a dead or wedged
-    /// worker from hanging the round.
+    /// Per-*round* budget — the bound that keeps a dead or wedged worker
+    /// from hanging the run. Every socket read's timeout is the budget
+    /// remaining since the round started (1 ms floor).
     deadline: Duration,
-    pending: Option<PendingNotice>,
+    /// When the current round's clock started (reset by `begin_round`).
+    round_start: Instant,
+    /// The round's resolved slots so far, in slot order; `entries[s]`
+    /// is slot `s`'s *final* outcome (a raw fallback replaces the echo
+    /// entry before any digest carrying it is built).
+    entries: Vec<DigestEntry>,
 }
 
 impl NetServerTransport {
-    /// Wrap an accepted, id-ordered worker fleet. `deadline` bounds every
-    /// per-slot read (it must cover a worker's gradient computation —
-    /// the slot-0 read starts as soon as the downlink is out).
+    /// Wrap an accepted, id-ordered worker fleet. `deadline` is the
+    /// per-round budget (it must cover every worker's gradient
+    /// computation plus the whole slot walk).
     pub fn new(conns: Vec<TcpStream>, enc: Encoding, deadline: Duration) -> Self {
         let n = conns.len();
         let conns = conns
@@ -125,7 +144,16 @@ impl NetServerTransport {
                 Some(c)
             })
             .collect();
-        Self { conns, meter: BitMeter::new(n), enc, n, round: 0, deadline, pending: None }
+        Self {
+            conns,
+            meter: BitMeter::new(n),
+            enc,
+            n,
+            round: 0,
+            deadline,
+            round_start: Instant::now(),
+            entries: Vec::with_capacity(n),
+        }
     }
 
     /// Workers still connected.
@@ -149,20 +177,24 @@ impl NetServerTransport {
         }
     }
 
-    /// Relay the previous slot's buffered notice to everyone but its
-    /// sender (a node never overhears itself).
-    fn flush_pending(&mut self) {
-        if let Some(PendingNotice { sender, frame }) = self.pending.take() {
-            for i in 0..self.n {
-                if i != sender {
-                    self.send_to(i, &frame);
-                }
+    /// Write a pre-encoded frame body to worker `i`; a write failure
+    /// (including an over-`MAX_FRAME_BYTES` digest) kills the connection
+    /// — one peer, never the server.
+    fn send_body_to(&mut self, i: usize, body: &[u8]) {
+        if let Some(c) = self.conns[i].as_mut() {
+            if write_frame_body(c, body).is_err() {
+                self.conns[i] = None;
             }
         }
     }
 
-    fn buffer_notice(&mut self, sender: usize, frame: NetFrame) {
-        self.pending = Some(PendingNotice { sender, frame });
+    /// The round budget still unspent, floored at 1 ms (zero-duration
+    /// socket timeouts are rejected by std, and a zero would mean
+    /// "block forever" — the opposite of what the deadline is for).
+    fn slot_timeout(&self) -> Duration {
+        self.deadline
+            .saturating_sub(self.round_start.elapsed())
+            .max(Duration::from_millis(1))
     }
 
     /// Charge one on-air frame like the radio does: tx bits to the
@@ -180,11 +212,14 @@ impl NetServerTransport {
     }
 
     /// Read the slot owner's next frame, expecting an uplink or a
-    /// deliberate-silence marker for exactly this (round, slot).
+    /// deliberate-silence marker for exactly this (round, slot). The
+    /// read's timeout is the round budget remaining right now.
     fn read_slot_frame(&mut self, slot: usize, sender: usize) -> SlotRead {
+        let budget = self.slot_timeout();
         let Some(conn) = self.conns[sender].as_mut() else {
             return SlotRead::Dead;
         };
+        let _ = conn.set_read_timeout(Some(budget));
         match read_frame(conn) {
             Ok(NetFrame::Uplink { round, slot: s, bytes })
                 if round == self.round && s == slot =>
@@ -242,7 +277,12 @@ impl Transport for NetServerTransport {
         }
     }
 
-    fn begin_round(&mut self) {}
+    fn begin_round(&mut self) {
+        // The round clock starts here — right after the downlink goes
+        // out, while workers are computing gradients.
+        self.round_start = Instant::now();
+        self.entries.clear();
+    }
 
     fn resolve_slot(&mut self, slot: usize, sender: usize, outgoing: Outgoing) -> SlotResolution {
         assert!(
@@ -250,48 +290,41 @@ impl Transport for NetServerTransport {
             "networked transport resolves remote slots only"
         );
         assert_eq!(sender, slot, "identity schedule: slot {slot} belongs to worker {slot}");
-        self.flush_pending();
-        let round = self.round;
-        match self.read_slot_frame(slot, sender) {
-            SlotRead::Dead => {
-                self.buffer_notice(
-                    sender,
-                    NetFrame::SlotEmpty { round, slot, sender, lost: true },
-                );
-                SlotResolution::Lost
-            }
-            SlotRead::Silent => {
-                self.buffer_notice(
-                    sender,
-                    NetFrame::SlotEmpty { round, slot, sender, lost: false },
-                );
-                SlotResolution::Silent
-            }
+        assert_eq!(self.entries.len(), slot, "slots resolve in order");
+        // Unblock the owner: its window digest (slots 0..slot, every
+        // overhear its echo may span). Everyone else keeps waiting —
+        // their windows go out when their own slots open.
+        let window = digest_body(self.round, 0, &self.entries);
+        self.send_body_to(sender, &window);
+        let outcome = match self.read_slot_frame(slot, sender) {
+            SlotRead::Dead => (DigestSlot::Lost, SlotResolution::Lost),
+            SlotRead::Silent => (DigestSlot::Silent, SlotResolution::Silent),
             SlotRead::Uplink(bytes) => match decode(&bytes, self.enc) {
                 Ok(payload) => {
                     let bits = (bytes.len() as u64) * 8;
                     let heard = self.charge_air(sender, bits);
-                    self.buffer_notice(sender, NetFrame::Overheard { round, slot, sender, bytes });
-                    SlotResolution::Aired(Broadcast {
-                        payload,
-                        heard,
-                        server_got: true,
-                        attempts: 1,
-                        bits,
-                    })
+                    (
+                        DigestSlot::Aired(bytes),
+                        SlotResolution::Aired(Broadcast {
+                            payload,
+                            heard,
+                            server_got: true,
+                            attempts: 1,
+                            bits,
+                        }),
+                    )
                 }
                 Err(_) => {
                     // Cleanly framed garbage: the stream is still in
                     // sync, so the peer survives — but the slot carried
                     // nothing the radio model could decode. Lost.
-                    self.buffer_notice(
-                        sender,
-                        NetFrame::SlotEmpty { round, slot, sender, lost: true },
-                    );
-                    SlotResolution::Lost
+                    (DigestSlot::Lost, SlotResolution::Lost)
                 }
             },
-        }
+        };
+        let (digest, resolution) = outcome;
+        self.entries.push(DigestEntry { slot, outcome: digest });
+        resolution
     }
 
     fn fallback(&mut self, slot: usize, sender: usize, payload: Option<Payload>) -> Broadcast {
@@ -303,15 +336,16 @@ impl Transport for NetServerTransport {
                 let bits = (bytes.len() as u64) * 8;
                 let heard = self.charge_air(sender, bits);
                 // The raw fallback replaces the echo as the slot's final
-                // on-air payload — listeners see only the replacement.
-                self.buffer_notice(sender, NetFrame::Overheard { round, slot, sender, bytes });
+                // outcome *before* any digest carrying this slot is
+                // built — listeners only ever see the replacement.
+                self.entries[slot] = DigestEntry { slot, outcome: DigestSlot::Aired(bytes) };
                 return Broadcast { payload: p, heard, server_got: true, attempts: 1, bits };
             }
             self.conns[sender] = None;
         }
         // Dead or unusable: the engine scores the slot Lost off
-        // `server_got = false`; listeners are told the slot is empty.
-        self.buffer_notice(sender, NetFrame::SlotEmpty { round, slot, sender, lost: true });
+        // `server_got = false`; the digests tell listeners it's empty.
+        self.entries[slot] = DigestEntry { slot, outcome: DigestSlot::Lost };
         Broadcast {
             payload: Payload::Raw(Vec::new()),
             heard: vec![false; self.n],
@@ -322,7 +356,15 @@ impl Transport for NetServerTransport {
     }
 
     fn finish_round(&mut self) {
-        self.flush_pending();
+        // Tail digests: worker i gets slots i+1..n (it saw 0..i in its
+        // window and aired slot i itself). Every worker is blocked on
+        // this read, so the writes cannot deadlock against uplinks.
+        debug_assert_eq!(self.entries.len(), self.n, "every slot resolved");
+        for i in 0..self.n {
+            let body =
+                digest_body(self.round, i + 1, self.entries.get(i + 1..).unwrap_or(&[]));
+            self.send_body_to(i, &body);
+        }
         self.meter.end_round();
         self.round += 1;
     }

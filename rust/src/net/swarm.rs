@@ -9,8 +9,8 @@
 //! (`rust/tests/swarm.rs`); the CLI spawns real processes instead.
 
 use super::server::{accept_workers, NetServerTransport};
-use super::validate_node_cfg;
 use super::worker::{run_worker, NodeOpts};
+use super::{check_digest_bound, validate_node_cfg};
 use crate::config::ExperimentConfig;
 use crate::metrics::percentile;
 use crate::sim::{RoundEvent, Simulation, Wiring};
@@ -69,13 +69,16 @@ impl SwarmReport {
 }
 
 /// Accept `cfg.n` workers on `listener`, run all configured rounds, shut
-/// the fleet down, and report. `deadline` bounds every per-slot read.
+/// the fleet down, and report. `deadline` is the per-*round* budget: the
+/// bound on one whole round (downlink through tail digests), not on each
+/// slot hop.
 pub fn run_server_on(
     listener: TcpListener,
     cfg: &ExperimentConfig,
     deadline: Duration,
 ) -> Result<SwarmReport, String> {
     validate_node_cfg(cfg)?;
+    check_digest_bound(cfg.n, cfg.d, cfg.encoding())?;
     let wiring = Wiring::native(cfg)?;
     let conns = accept_workers(&listener, cfg.n, Duration::from_secs(60))?;
     let transport = NetServerTransport::new(conns, cfg.encoding(), deadline);
@@ -101,18 +104,22 @@ pub fn run_server_on(
 
 /// Run a whole swarm — server plus `cfg.n` worker nodes — as threads of
 /// this process over loopback TCP. `die_after[i] = Some(k)` makes worker
-/// `i` exit after `k` complete rounds (fault injection); pass `&[]` for
-/// a healthy fleet.
-pub fn run_swarm_threads_with(
+/// `i` exit after `k` complete rounds and `wedge_after[i] = Some(k)`
+/// makes it wedge (socket left open, no further frames) after `k` rounds
+/// (fault injection); pass `&[]` for a healthy fleet.
+pub fn run_swarm_threads_faulty(
     cfg: &ExperimentConfig,
     deadline: Duration,
     die_after: &[Option<usize>],
+    wedge_after: &[Option<usize>],
 ) -> Result<SwarmReport, String> {
     validate_node_cfg(cfg)?;
-    assert!(
-        die_after.is_empty() || die_after.len() == cfg.n,
-        "die_after must be empty or have one entry per worker"
-    );
+    for (name, v) in [("die_after", die_after), ("wedge_after", wedge_after)] {
+        assert!(
+            v.is_empty() || v.len() == cfg.n,
+            "{name} must be empty or have one entry per worker"
+        );
+    }
     let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind loopback: {e}"))?;
     let local = listener.local_addr().map_err(|e| format!("local addr: {e}"))?;
     let addr = local.to_string();
@@ -120,6 +127,7 @@ pub fn run_swarm_threads_with(
     for id in 0..cfg.n {
         let mut opts = NodeOpts::new(id, addr.clone(), cfg.clone());
         opts.die_after_rounds = die_after.get(id).copied().flatten();
+        opts.wedge_after_rounds = wedge_after.get(id).copied().flatten();
         handles.push(std::thread::spawn(move || run_worker(opts)));
     }
     let report = run_server_on(listener, cfg, deadline);
@@ -142,6 +150,15 @@ pub fn run_swarm_threads_with(
         (Err(e), _) => Err(e),
         (Ok(_), Some(e)) => Err(e),
     }
+}
+
+/// [`run_swarm_threads_faulty`] with only exit-style faults.
+pub fn run_swarm_threads_with(
+    cfg: &ExperimentConfig,
+    deadline: Duration,
+    die_after: &[Option<usize>],
+) -> Result<SwarmReport, String> {
+    run_swarm_threads_faulty(cfg, deadline, die_after, &[])
 }
 
 /// [`run_swarm_threads_with`] for a healthy fleet.

@@ -8,12 +8,17 @@
 //!
 //! 1. reads the parameter [`NetFrame::Downlink`], computes its local
 //!    stochastic gradient;
-//! 2. walks the TDMA slots in order — transmitting
-//!    [`NetFrame::Uplink`]/[`NetFrame::SilentSlot`] in its own slot,
-//!    and in every other slot reading that slot's rebroadcast notice
-//!    ([`NetFrame::Overheard`] / [`NetFrame::SlotEmpty`]) to feed its
-//!    span projector, exactly as overhearing feeds it on the radio;
-//! 3. answers [`NetFrame::FallbackReq`] (the server could not use its
+//! 2. reads its **window digest** — one [`NetFrame::RoundDigest`]
+//!    batching the final outcomes of every slot before its own — and
+//!    absorbs the `Aired` payloads into its span projector, exactly as
+//!    overhearing feeds it on the radio (the projector freezes at
+//!    transmit, so this is every overhear that can matter);
+//! 3. transmits [`NetFrame::Uplink`]/[`NetFrame::SilentSlot`] in its
+//!    own slot;
+//! 4. reads its **tail digest** (the rest of the round's slots) — a
+//!    no-op for honest state, but it keeps Byzantine replicas' shared
+//!    attack RNG stream aligned (see below) and paces the round;
+//! 5. answers [`NetFrame::FallbackReq`] (the server could not use its
 //!    echo) with its retained raw gradient, at whatever read position
 //!    the request arrives — for the last slot of a round that is while
 //!    already waiting on the next downlink.
@@ -26,10 +31,11 @@
 //! — each process makes the same calls in the same order, so all of
 //! them (and the in-memory engine) agree on every attack frame.
 
-use super::frame::{read_frame, write_frame, NetFrame};
-use super::validate_node_cfg;
-use crate::byzantine::AttackCtx;
+use super::frame::{read_frame, write_frame, DigestEntry, DigestSlot, NetFrame};
+use super::{check_digest_bound, validate_node_cfg};
+use crate::byzantine::{Attack, AttackCtx};
 use crate::config::ExperimentConfig;
+use crate::rng::Rng;
 use crate::sim::Wiring;
 use crate::wire::{decode, encode, Encoding, Payload};
 use crate::worker::EchoWorker;
@@ -51,11 +57,23 @@ pub struct NodeOpts {
     /// rounds, so robustness tests can watch the server score the
     /// node's remaining slots Lost without hanging.
     pub die_after_rounds: Option<usize>,
+    /// Fault-injection hook: after this many complete rounds, *wedge* —
+    /// leak the socket (no FIN, no further frames) and return. Unlike
+    /// `die_after_rounds` the server sees no EOF, only silence, so this
+    /// exercises the round-deadline timeout path specifically.
+    pub wedge_after_rounds: Option<usize>,
 }
 
 impl NodeOpts {
     pub fn new(id: usize, server: impl Into<String>, cfg: ExperimentConfig) -> Self {
-        Self { id, server: server.into(), cfg, connect_attempts: 40, die_after_rounds: None }
+        Self {
+            id,
+            server: server.into(),
+            cfg,
+            connect_attempts: 40,
+            die_after_rounds: None,
+            wedge_after_rounds: None,
+        }
     }
 }
 
@@ -75,6 +93,82 @@ fn connect_with_retry(addr: &str, attempts: u32) -> Result<TcpStream, String> {
 enum Ctl {
     Frame(NetFrame),
     Shutdown,
+}
+
+/// Everything a node needs to absorb one digest's slot outcomes — the
+/// per-round borrow bundle shared by the window and tail digests.
+struct Absorb<'a> {
+    me: usize,
+    round: usize,
+    n: usize,
+    f: usize,
+    enc: Encoding,
+    echo_enabled: bool,
+    w_recv: &'a [f64],
+    true_grad: &'a [f64],
+    honest_grads: &'a BTreeMap<usize, Vec<f64>>,
+    /// Aired payloads so far this round, in slot order — the Byzantine
+    /// omniscient attack context, grown as entries are absorbed.
+    overheard: &'a mut Vec<(usize, Payload)>,
+    attacks: &'a mut BTreeMap<usize, Box<dyn Attack>>,
+    attack_rng: &'a mut Rng,
+    worker: &'a mut Option<EchoWorker>,
+}
+
+impl Absorb<'_> {
+    /// Absorb a digest covering slots `start..start + entries.len()`, in
+    /// slot order. For a Byzantine node this replays each Byzantine
+    /// slot's attack draw (aligning the shared attack RNG stream with
+    /// every other Byzantine process and the in-memory engine) before
+    /// pushing the slot's aired payload into the attack context; for an
+    /// honest node it feeds the span projector, exactly as the retired
+    /// per-slot notices did.
+    fn digest(&mut self, start: usize, entries: &[DigestEntry]) -> Result<(), String> {
+        for (k, e) in entries.iter().enumerate() {
+            let slot = start + k;
+            if e.slot != slot {
+                return Err(format!(
+                    "worker {}: digest entry {k} covers slot {} (expected {slot})",
+                    self.me, e.slot
+                ));
+            }
+            let aired_bytes = match &e.outcome {
+                DigestSlot::Aired(bytes) => Some(bytes),
+                DigestSlot::Silent | DigestSlot::Lost => None,
+            };
+            if let Some(att) = self.attacks.get_mut(&slot) {
+                // Replay the sender's attack draw whether or not its
+                // frame survived — every Byzantine process makes the
+                // same calls in the same order.
+                let ctx = AttackCtx {
+                    id: slot,
+                    w: self.w_recv,
+                    true_grad: self.true_grad,
+                    honest_grads: self.honest_grads,
+                    overheard: &*self.overheard,
+                    n: self.n,
+                    f: self.f,
+                    round: self.round,
+                };
+                let _ = att.frame(&ctx, self.attack_rng);
+            }
+            if let Some(w) = self.worker.as_mut() {
+                if let Some(bytes) = aired_bytes {
+                    if let Ok(p) = decode(bytes, self.enc) {
+                        w.stats.frames_heard += 1;
+                        if self.echo_enabled {
+                            w.overhear(slot, &p);
+                        }
+                    }
+                }
+            } else if let Some(bytes) = aired_bytes {
+                if let Ok(p) = decode(bytes, self.enc) {
+                    self.overheard.push((slot, p));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Read the next protocol frame, transparently servicing the messages
@@ -141,6 +235,20 @@ pub fn run_worker(opts: NodeOpts) -> Result<(), String> {
     let mut worker: Option<EchoWorker> =
         workers.into_iter().nth(me).expect("worker vector has n slots");
     assert_eq!(worker.is_none(), is_byz, "worker state exists exactly for fault-free ids");
+    if !is_byz {
+        // Bounded per-process memory at swarm scale: an honest node only
+        // ever computes *its own* gradient (Byzantine omniscience is the
+        // one thing that needs the full backend fleet), and it never
+        // replays attack draws — drop everything else now so n = 100s of
+        // processes do not each hold n workers' worth of state.
+        for (i, b) in backends.iter_mut().enumerate() {
+            if i != me {
+                *b = None;
+            }
+        }
+        attacks.clear();
+    }
+    check_digest_bound(n, cfg.d, enc)?;
 
     let mut stream = connect_with_retry(&opts.server, opts.connect_attempts)?;
     stream.set_nodelay(true).map_err(|e| format!("worker {me}: nodelay: {e}"))?;
@@ -189,100 +297,88 @@ pub fn run_worker(opts: NodeOpts) -> Result<(), String> {
             worker.as_mut().unwrap().begin_round(g);
         }
 
-        // ---- Slots in order -------------------------------------------
-        for slot in 0..n {
-            if slot == me {
-                let outgoing: Option<Payload> = if is_byz {
-                    let ctx = AttackCtx {
-                        id: me,
-                        w: &w_recv,
-                        true_grad: &true_grad,
-                        honest_grads: &honest_grads,
-                        overheard: &overheard,
-                        n,
-                        f: cfg.f,
-                        round,
-                    };
-                    attacks.get_mut(&me).unwrap().frame(&ctx, &mut attack_rng)
-                } else {
-                    let w = worker.as_mut().unwrap();
-                    Some(if let Some(k) = cfg.topk {
-                        w.stats.raw_rounds += 1;
-                        crate::wire::top_k_sparsify(w.local_gradient().unwrap(), k)
-                    } else if cfg.echo_enabled {
-                        w.transmit()
-                    } else {
-                        w.stats.raw_rounds += 1;
-                        Payload::Raw(w.local_gradient().unwrap().to_vec())
-                    })
-                };
-                match outgoing {
-                    Some(p) => {
-                        let bytes = encode(&p, enc);
-                        if is_byz {
-                            // Our own slot's on-air payload, as decoded by
-                            // receivers — later attacks may reference it.
-                            if let Ok(dp) = decode(&bytes, enc) {
-                                overheard.push((me, dp));
-                            }
-                        }
-                        write_frame(&mut stream, &NetFrame::Uplink { round, slot, bytes })
-                            .map_err(|e| format!("worker {me}: uplink failed: {e}"))?;
-                    }
-                    None => write_frame(&mut stream, &NetFrame::SilentSlot { round, slot })
-                        .map_err(|e| format!("worker {me}: silence marker failed: {e}"))?,
-                }
-                continue;
+        // ---- Window digest: every slot before ours ---------------------
+        // Blocks until the server opens our slot — this one read is the
+        // whole synchronization point of the async-window protocol.
+        let mut absorb = Absorb {
+            me,
+            round,
+            n,
+            f: cfg.f,
+            enc,
+            echo_enabled: cfg.echo_enabled,
+            w_recv: &w_recv,
+            true_grad: &true_grad,
+            honest_grads: &honest_grads,
+            overheard: &mut overheard,
+            attacks: &mut attacks,
+            attack_rng: &mut attack_rng,
+            worker: &mut worker,
+        };
+        match next_frame(&mut stream, enc, me, absorb.worker)? {
+            Ctl::Shutdown => return Ok(()),
+            Ctl::Frame(NetFrame::RoundDigest { round: r, start: 0, entries })
+                if r == round && entries.len() == me =>
+            {
+                absorb.digest(0, &entries)?;
             }
-            // Someone else's slot: wait for its rebroadcast notice.
-            let frame = match next_frame(&mut stream, enc, me, &mut worker)? {
-                Ctl::Shutdown => return Ok(()),
-                Ctl::Frame(f) => f,
+            Ctl::Frame(f) => {
+                return Err(format!("worker {me}: expected window digest, got {f:?}"))
+            }
+        }
+
+        // ---- Our slot --------------------------------------------------
+        let outgoing: Option<Payload> = if is_byz {
+            let ctx = AttackCtx {
+                id: me,
+                w: &w_recv,
+                true_grad: &true_grad,
+                honest_grads: &honest_grads,
+                overheard: &*absorb.overheard,
+                n,
+                f: cfg.f,
+                round,
             };
-            let (sender, aired_bytes) = match frame {
-                NetFrame::Overheard { round: r, slot: s, sender, bytes }
-                    if r == round && s == slot && sender == slot =>
-                {
-                    (sender, Some(bytes))
-                }
-                NetFrame::SlotEmpty { round: r, slot: s, sender, lost: _ }
-                    if r == round && s == slot && sender == slot =>
-                {
-                    (sender, None)
-                }
-                f => return Err(format!("worker {me}: expected slot {slot} notice, got {f:?}")),
-            };
-            if is_byz {
-                // Keep the shared attack RNG stream aligned: replay the
-                // sender's attack draw whether or not its frame survived
-                // (every Byzantine process makes the same calls in the
-                // same order, so all agree on every attack frame).
-                if let Some(att) = attacks.get_mut(&sender) {
-                    let ctx = AttackCtx {
-                        id: sender,
-                        w: &w_recv,
-                        true_grad: &true_grad,
-                        honest_grads: &honest_grads,
-                        overheard: &overheard,
-                        n,
-                        f: cfg.f,
-                        round,
-                    };
-                    let _ = att.frame(&ctx, &mut attack_rng);
-                }
-                if let Some(bytes) = aired_bytes {
-                    if let Ok(p) = decode(&bytes, enc) {
-                        overheard.push((sender, p));
+            absorb.attacks.get_mut(&me).unwrap().frame(&ctx, absorb.attack_rng)
+        } else {
+            let w = absorb.worker.as_mut().unwrap();
+            Some(if let Some(k) = cfg.topk {
+                w.stats.raw_rounds += 1;
+                crate::wire::top_k_sparsify(w.local_gradient().unwrap(), k)
+            } else if cfg.echo_enabled {
+                w.transmit()
+            } else {
+                w.stats.raw_rounds += 1;
+                Payload::Raw(w.local_gradient().unwrap().to_vec())
+            })
+        };
+        match outgoing {
+            Some(p) => {
+                let bytes = encode(&p, enc);
+                if is_byz {
+                    // Our own slot's on-air payload, as decoded by
+                    // receivers — later attacks may reference it.
+                    if let Ok(dp) = decode(&bytes, enc) {
+                        absorb.overheard.push((me, dp));
                     }
                 }
-            } else if let Some(bytes) = aired_bytes {
-                if let Ok(p) = decode(&bytes, enc) {
-                    let w = worker.as_mut().unwrap();
-                    w.stats.frames_heard += 1;
-                    if cfg.echo_enabled {
-                        w.overhear(sender, &p);
-                    }
-                }
+                write_frame(&mut stream, &NetFrame::Uplink { round, slot: me, bytes })
+                    .map_err(|e| format!("worker {me}: uplink failed: {e}"))?;
+            }
+            None => write_frame(&mut stream, &NetFrame::SilentSlot { round, slot: me })
+                .map_err(|e| format!("worker {me}: silence marker failed: {e}"))?,
+        }
+
+        // ---- Tail digest: the rest of the round ------------------------
+        match next_frame(&mut stream, enc, me, absorb.worker)? {
+            Ctl::Shutdown => return Ok(()),
+            Ctl::Frame(NetFrame::RoundDigest { round: r, start, entries })
+                if r == round && start == me + 1 && entries.len() == n - me - 1 =>
+            {
+                absorb.digest(me + 1, &entries)?;
+            }
+            Ctl::Frame(f) => {
+                return Err(format!("worker {me}: expected tail digest, got {f:?}"))
             }
         }
 
@@ -290,6 +386,14 @@ pub fn run_worker(opts: NodeOpts) -> Result<(), String> {
         if opts.die_after_rounds == Some(rounds_done) {
             // Fault injection: vanish without a goodbye — the server must
             // degrade our remaining slots to Lost, never hang.
+            return Ok(());
+        }
+        if opts.wedge_after_rounds == Some(rounds_done) {
+            // Fault injection: wedge, don't die. Leaking the socket keeps
+            // the TCP connection open with no EOF in flight, so the
+            // server's next read on it can only end by round deadline —
+            // the exact path this hook exists to exercise.
+            std::mem::forget(stream);
             return Ok(());
         }
     }

@@ -3,7 +3,9 @@
 //! stream layer, and decoding is *total* — no byte sequence (truncated,
 //! oversized, garbage) can panic the server.
 
-use echo_cgc::net::{read_frame, write_frame, FrameError, MAX_FRAME_BYTES, NetFrame};
+use echo_cgc::net::{
+    read_frame, write_frame, DigestEntry, DigestSlot, FrameError, MAX_FRAME_BYTES, NetFrame,
+};
 use echo_cgc::prop::forall;
 use echo_cgc::rng::Rng;
 
@@ -12,32 +14,48 @@ fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
     (0..len).map(|_| rng.range(0, 256) as u8).collect()
 }
 
-/// Uniform over all eight frame shapes, payload lengths included.
+fn rand_digest(rng: &mut Rng, round: usize) -> NetFrame {
+    let start = rng.range(0, 16);
+    let k = rng.range(0, 6);
+    let entries = (0..k)
+        .map(|j| DigestEntry {
+            slot: start + j,
+            outcome: match rng.range(0, 3) {
+                0 => DigestSlot::Silent,
+                1 => DigestSlot::Lost,
+                _ => DigestSlot::Aired(rand_bytes(rng, 64)),
+            },
+        })
+        .collect();
+    NetFrame::RoundDigest { round, start, entries }
+}
+
+/// Uniform over all seven frame shapes (digests twice — they carry the
+/// most structure), payload lengths included.
 fn rand_frame(rng: &mut Rng) -> NetFrame {
     let round = rng.range(0, 10_000);
     let slot = rng.range(0, 256);
-    let sender = rng.range(0, 256);
     match rng.range(0, 8) {
         0 => NetFrame::Hello { id: rng.range(0, 1 << 20) },
         1 => NetFrame::Downlink { round, bytes: rand_bytes(rng, 256) },
         2 => NetFrame::Uplink { round, slot, bytes: rand_bytes(rng, 256) },
         3 => NetFrame::SilentSlot { round, slot },
-        4 => NetFrame::Overheard { round, slot, sender, bytes: rand_bytes(rng, 256) },
-        5 => NetFrame::SlotEmpty { round, slot, sender, lost: rng.bool(0.5) },
+        4 | 5 => rand_digest(rng, round),
         6 => NetFrame::FallbackReq { round, slot },
         _ => NetFrame::Shutdown,
     }
 }
 
 /// Byte offset where a frame's fixed header ends (tag + u32/u8 fields);
-/// the variable-length frames absorb any tail at or past it.
-fn header_len(f: &NetFrame) -> usize {
+/// the variable-length frames absorb any tail at or past it. A digest's
+/// length is fully determined by its entry count, so its "header" is the
+/// whole body: every strict prefix must error.
+fn header_len(f: &NetFrame, body_len: usize) -> usize {
     match f {
         NetFrame::Shutdown => 1,
         NetFrame::Hello { .. } | NetFrame::Downlink { .. } => 5,
         NetFrame::Uplink { .. } | NetFrame::SilentSlot { .. } | NetFrame::FallbackReq { .. } => 9,
-        NetFrame::Overheard { .. } => 13,
-        NetFrame::SlotEmpty { .. } => 14,
+        NetFrame::RoundDigest { .. } => body_len,
     }
 }
 
@@ -111,7 +129,7 @@ fn prop_truncated_bodies_error_never_panic() {
         },
         |((f, cut), _)| {
             let body = f.encode_body();
-            let header = header_len(&f);
+            let header = header_len(&f, body.len());
             match NetFrame::decode_body(&body[..cut]) {
                 // A variable-length frame's tail is all payload: any cut at
                 // or past the header still decodes (to shorter bytes).
@@ -165,6 +183,75 @@ fn prop_stream_reads_of_garbage_never_panic() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_truncated_digests_error_never_panic() {
+    // The digest is the one frame with internal structure (a count plus
+    // variable-size entries), so it gets its own denser truncation fuzz:
+    // every strict prefix of a valid digest body is a typed Truncated
+    // error — never a short decode, never a panic.
+    forall(
+        "truncated digests are typed errors",
+        600,
+        |g| {
+            let f = rand_digest(&mut g.rng, g.rng.range(0, 10_000));
+            let cut = g.rng.range(0, f.encode_body().len());
+            ((f, cut), ())
+        },
+        |((f, cut), _)| {
+            let body = f.encode_body();
+            match NetFrame::decode_body(&body[..cut]) {
+                Err(FrameError::Truncated) => Ok(()),
+                Ok(f2) => Err(format!("decoded {f2:?} from a {cut}-byte prefix")),
+                Err(e) => Err(format!("unexpected error on {cut}-byte prefix: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_garbage_digest_entries_error_never_panic() {
+    // Valid digest header, hostile entry bytes: decode must stay total
+    // (Truncated / BadEntryKind / Trailing), and anything that does
+    // decode must re-encode to itself.
+    forall(
+        "garbage digest entry bytes are typed errors",
+        600,
+        |g| {
+            let mut body = vec![0x09u8]; // TAG_ROUND_DIGEST
+            body.extend_from_slice(&(g.rng.range(0, 1000) as u32).to_le_bytes()); // round
+            body.extend_from_slice(&(g.rng.range(0, 16) as u32).to_le_bytes()); // start
+            body.extend_from_slice(&(g.rng.range(0, 8) as u32).to_le_bytes()); // count
+            body.extend(rand_bytes(&mut g.rng, 64));
+            (body, ())
+        },
+        |(body, _)| match NetFrame::decode_body(&body) {
+            Ok(f) => {
+                if f.encode_body() == *body {
+                    Ok(())
+                } else {
+                    Err(format!("decoded {f:?} does not re-encode to its input"))
+                }
+            }
+            Err(
+                FrameError::Truncated | FrameError::BadEntryKind(_) | FrameError::Trailing(_),
+            ) => Ok(()),
+            Err(e) => Err(format!("unexpected error class: {e}")),
+        },
+    );
+}
+
+#[test]
+fn hostile_digest_count_is_rejected_before_allocating() {
+    // A digest header claiming u32::MAX entries with no entry bytes must
+    // fail the count-vs-remaining gate, not allocate a 4-billion-entry
+    // vector.
+    let mut body = vec![0x09u8];
+    body.extend_from_slice(&7u32.to_le_bytes());
+    body.extend_from_slice(&0u32.to_le_bytes());
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(NetFrame::decode_body(&body), Err(FrameError::Truncated)));
 }
 
 #[test]

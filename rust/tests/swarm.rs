@@ -7,7 +7,9 @@
 
 use echo_cgc::byzantine::AttackKind;
 use echo_cgc::config::ExperimentConfig;
-use echo_cgc::net::{compare_rounds, run_swarm_threads, run_swarm_threads_with};
+use echo_cgc::net::{
+    compare_rounds, run_swarm_threads, run_swarm_threads_faulty, run_swarm_threads_with,
+};
 use echo_cgc::sim::Simulation;
 use std::time::Duration;
 
@@ -23,9 +25,9 @@ fn base() -> ExperimentConfig {
     cfg
 }
 
-/// Generous per-slot deadline: CI machines stall, and a slow slot must
-/// not be misread as a dead worker in the healthy-fleet tests.
-const DEADLINE: Duration = Duration::from_secs(20);
+/// Generous per-*round* deadline: CI machines stall, and a slow round
+/// must not be misread as a dead worker in the healthy-fleet tests.
+const DEADLINE: Duration = Duration::from_secs(60);
 
 #[test]
 fn swarm_matches_in_memory_sim_bit_for_bit() {
@@ -46,8 +48,28 @@ fn swarm_matches_in_memory_sim_bit_for_bit() {
 }
 
 #[test]
+fn swarm_scales_to_n_32_with_parity() {
+    // The batched-digest relay at a size the lock-step relay choked on:
+    // 32 worker threads, O(n) relay frames per round, still bit-identical
+    // to the in-memory sim (CI's swarm-smoke covers n=128 with real
+    // processes; this keeps the scale regression in `cargo test`).
+    let mut cfg = base();
+    cfg.n = 32;
+    cfg.rounds = 6;
+    let report = run_swarm_threads(&cfg, DEADLINE).expect("swarm run");
+    assert_eq!(report.events.len(), cfg.rounds);
+    let mut sim = Simulation::build(&cfg).expect("sim");
+    for ev in &report.events {
+        let mem = sim.step();
+        compare_rounds(&mem, ev).expect("parity at n=32");
+    }
+    assert_eq!(report.lost_slots, 0);
+    assert_eq!(report.exposed, sim.server().exposed().len());
+}
+
+#[test]
 fn swarm_parity_holds_for_silent_byzantine_nodes() {
-    // Silence is the attack that exercises the SilentSlot/SlotEmpty
+    // Silence is the attack that exercises the SilentSlot/digest-Silent
     // protocol path — and under a perfect channel it is Byzantine-provable.
     let mut cfg = base();
     cfg.attack = AttackKind::Silent;
@@ -67,7 +89,7 @@ fn swarm_parity_holds_for_silent_byzantine_nodes() {
 #[test]
 fn swarm_parity_holds_without_echoes() {
     // Gupta–Vaidya baseline: every slot raw — exercises the pure
-    // Uplink/Overheard relay with no fallback traffic.
+    // uplink/digest relay with no fallback traffic.
     let mut cfg = base();
     cfg.echo_enabled = false;
     cfg.rounds = 6;
@@ -113,5 +135,37 @@ fn dead_worker_degrades_to_lost_slots_without_hanging() {
     for ev in &report.events[..died_after] {
         let mem = sim.step();
         compare_rounds(&mem, ev).expect("pre-death parity");
+    }
+}
+
+#[test]
+fn wedged_worker_times_out_under_the_round_deadline() {
+    // Nastier than a crash: the worker stops participating but keeps its
+    // socket open (no EOF), so only the round deadline can unstick the
+    // server. Wedging the *last* slot keeps the stall at the end of the
+    // round, where it cannot starve the healthy slots' budget; the
+    // timeout kills the connection, so exactly one round pays the full
+    // deadline and later rounds resolve the corpse's slot instantly.
+    let mut cfg = base();
+    cfg.b = 0; // all-honest fleet; the fault is a wedge, not an attack
+    cfg.rounds = 6;
+    let wedged_after = 2usize;
+    let victim = cfg.n - 1;
+    let mut wedge = vec![None; cfg.n];
+    wedge[victim] = Some(wedged_after);
+    let report = run_swarm_threads_faulty(&cfg, Duration::from_secs(2), &[], &wedge)
+        .expect("swarm survives a wedged peer");
+    assert_eq!(report.events.len(), cfg.rounds, "server finishes every round");
+    assert_eq!(report.lost_slots, (cfg.rounds - wedged_after) as u64);
+    assert_eq!(report.exposed, 0, "a wedged peer is never Byzantine proof");
+    for ev in &report.events {
+        let live_slots = if ev.round < wedged_after { cfg.n } else { cfg.n - 1 };
+        assert_eq!(ev.echo_count + ev.raw_count, live_slots, "round {}: aired slots", ev.round);
+    }
+    // Pre-wedge rounds still match the in-memory sim bit for bit.
+    let mut sim = Simulation::build(&cfg).expect("sim");
+    for ev in &report.events[..wedged_after] {
+        let mem = sim.step();
+        compare_rounds(&mem, ev).expect("pre-wedge parity");
     }
 }

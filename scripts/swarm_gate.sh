@@ -1,0 +1,96 @@
+#!/usr/bin/env bash
+# Latency-trajectory gate for the swarm bench.
+#
+# Usage: swarm_gate.sh BASELINE_CSV CURRENT_CSV
+#
+# Compares the current BENCH_swarm_latency.csv against the previous
+# run's (restored from the actions cache), per (n, d) row. Policy:
+#
+#   * hard-fail when the current CSV is missing, or missing a row for
+#     any required sweep size (n in 8, 32, 128) — the bench silently
+#     shrinking is a broken bench, not a slow one;
+#   * ::warning (plus a step-summary table) when p50 or p99 regresses
+#     by more than 25% against the previous run — loopback latency on
+#     shared CI runners is too noisy to hard-gate on;
+#   * no baseline yet (first run, or an expired cache) is fine: this
+#     run seeds the trajectory.
+#
+# Parity divergence is not this script's job: `echo-cgc swarm` itself
+# exits non-zero on any round that diverges from the in-memory sim.
+set -euo pipefail
+
+BASELINE="${1:?usage: swarm_gate.sh BASELINE_CSV CURRENT_CSV}"
+CURRENT="${2:?usage: swarm_gate.sh BASELINE_CSV CURRENT_CSV}"
+SUMMARY="${GITHUB_STEP_SUMMARY:-/dev/null}"
+
+if [ ! -f "$CURRENT" ]; then
+  echo "::error::swarm gate: $CURRENT missing — the swarm bench did not run"
+  exit 1
+fi
+
+for n in 8 32 128; do
+  if ! awk -F, -v want="$n" '
+      NR == 1 { for (i = 1; i <= NF; i++) if ($i == "n") c = i; next }
+      $c == want { found = 1 }
+      END { exit !found }' "$CURRENT"; then
+    echo "::error::swarm gate: no row for n=$n in $CURRENT — the sweep lost a cell"
+    exit 1
+  fi
+done
+
+if [ ! -f "$BASELINE" ]; then
+  echo "swarm gate: no baseline yet — this run seeds the latency trajectory"
+  {
+    echo "## swarm latency gate"
+    echo ""
+    echo "No previous baseline (first run or expired cache) — this run seeds the trajectory."
+  } >> "$SUMMARY"
+  exit 0
+fi
+
+out="$(awk -F, -v base="$BASELINE" '
+  function pct(old, new) { return old > 0 ? (new - old) * 100.0 / old : 0 }
+  FNR == 1 {
+    split("", c)
+    for (i = 1; i <= NF; i++) c[$i] = i
+    inbase = (FILENAME == base)
+    if (inbase) {
+      bn = c["n"]; bd = ("d" in c) ? c["d"] : 0
+      b50 = c["p50_ms"]; b99 = c["p99_ms"]
+    } else {
+      cn = c["n"]; cd = ("d" in c) ? c["d"] : 0
+      c50 = c["p50_ms"]; c99 = c["p99_ms"]
+    }
+    next
+  }
+  inbase {
+    k = $bn SUBSEP (bd ? $bd : "-")
+    p50[k] = $b50; p99[k] = $b99
+    next
+  }
+  {
+    k = $cn SUBSEP (cd ? $cd : "-")
+    n = $cn; d = (cd ? $cd : "-")
+    if (k in p50) {
+      d50 = pct(p50[k], $c50); d99 = pct(p99[k], $c99)
+      if (d50 > 25 || d99 > 25)
+        printf "::warning::swarm latency regression at n=%s d=%s: p50 %+.1f%%, p99 %+.1f%% vs previous run\n", n, d, d50, d99
+      rows = rows sprintf("| %s | %s | %.2f → %.2f | %+.1f%% | %.2f → %.2f | %+.1f%% |\n", n, d, p50[k], $c50, d50, p99[k], $c99, d99)
+    } else {
+      rows = rows sprintf("| %s | %s | (new) %.2f | — | (new) %.2f | — |\n", n, d, $c50, $c99)
+    }
+  }
+  END {
+    print "| n | d | p50 ms (prev → now) | Δp50 | p99 ms (prev → now) | Δp99 |"
+    print "|---|---|---|---|---|---|"
+    printf "%s", rows
+  }' "$BASELINE" "$CURRENT")"
+
+echo "$out"
+{
+  echo "## swarm latency gate (vs previous run)"
+  echo ""
+  echo "$out" | grep -v '^::warning' || true
+  echo ""
+  echo "Soft gate: >25% p50/p99 regression warns (loopback CI latency is noisy); only missing rows or parity divergence fail the job."
+} >> "$SUMMARY"

@@ -20,17 +20,18 @@
 #                     faceted error-vs-round curves figure and the HTML
 #                     artifact index (results/FIG_curves.{svg,csv},
 #                     results/index.html)
-#     swarm-smoke   — a real loopback TCP deployment (`echo-cgc swarm`,
-#                     n=8 f=1, 20 rounds): n worker processes + server,
-#                     per-round parity against the in-memory sim, and the
-#                     wall-clock latency benchmark
-#                     (results/BENCH_swarm_latency.csv)
+#     swarm-smoke   — a real loopback TCP deployment per sweep cell
+#                     (`echo-cgc swarm --n-sweep 8,32,128`): n worker
+#                     processes + server, per-round parity against the
+#                     in-memory sim, the wall-clock latency benchmark
+#                     (results/BENCH_swarm_latency.csv) and the
+#                     FIG_swarm_* latency/throughput panel
 #     all           — build-test + lint
 #
 #   --smoke-bench  — append the smoke-bench + figures-smoke + trace-smoke
 #                    + swarm-smoke stages to `all`.
 set -euo pipefail
-cd "$(dirname "$0")/.."
+cd "$(dirname "$0")/.." || exit 1
 
 STAGE=""
 SMOKE=0
@@ -66,6 +67,13 @@ run_lint() {
 
   echo "== hygiene: cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
   RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+  if command -v shellcheck >/dev/null 2>&1; then
+    echo "== hygiene: shellcheck scripts/*.sh =="
+    shellcheck scripts/*.sh
+  else
+    echo "== hygiene: shellcheck not installed — skipping (CI's lint job runs it) =="
+  fi
 }
 
 run_smoke_bench() {
@@ -94,12 +102,17 @@ run_trace_smoke() {
 }
 
 run_swarm_smoke() {
-  echo "== swarm-smoke: loopback TCP deployment, parity vs the in-memory sim =="
+  echo "== swarm-smoke: loopback TCP n-sweep, parity vs the in-memory sim =="
   # The swarm subcommand exits non-zero on any worker failure, a missed
   # round, or a parity divergence — the assertions live in the binary.
-  cargo run --release --bin echo-cgc -- swarm --n 8 --f 1 --b 1 --d 32 --rounds 20
-  echo "-- swarm latency benchmark:"
-  ls -l results/BENCH_swarm_latency.csv
+  # Each sweep cell deploys its own full fleet (up to 128 real worker
+  # processes at the top cell).
+  cargo run --release --bin echo-cgc -- swarm --n-sweep 8,32,128 --f 1 --b 1 --d 32 --rounds 10
+  cargo run --release --bin echo-cgc -- figures --fig swarm
+  echo "-- swarm latency benchmark + figure panel:"
+  ls -l results/BENCH_swarm_latency.csv \
+    results/FIG_swarm_latency.svg results/FIG_swarm_latency.csv \
+    results/FIG_swarm_throughput.svg results/FIG_swarm_throughput.csv
   cat results/BENCH_swarm_latency.csv
 }
 
