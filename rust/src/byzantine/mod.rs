@@ -35,6 +35,23 @@ pub struct AttackCtx<'a> {
 pub trait Attack: Send {
     fn name(&self) -> &'static str;
     fn frame(&mut self, ctx: &AttackCtx, rng: &mut Rng) -> Option<Payload>;
+
+    /// An *equivocal* pair `(to_server, to_listeners)` for attacks that
+    /// exploit the sharded uplink (`recovery=fec|hybrid`): the shard
+    /// subsets are crafted so the server and the overhearers reconstruct
+    /// different frames. The round engine consults this **before**
+    /// [`Attack::frame`] each slot; the default returns `None` and draws
+    /// nothing from `rng`, so every pre-existing attack's RNG stream —
+    /// and therefore every pre-existing trajectory — is untouched. Under
+    /// `recovery=arq` the engine ignores this hook entirely (reliable
+    /// whole-frame broadcast makes equivocation structurally impossible).
+    fn equivocal_frame(
+        &mut self,
+        _ctx: &AttackCtx,
+        _rng: &mut Rng,
+    ) -> Option<(Payload, Payload)> {
+        None
+    }
 }
 
 /// Named attack kinds (CLI / config selection).
@@ -58,6 +75,12 @@ pub enum AttackKind {
     /// Inner-product manipulation (Xie et al. 2020): a modest reversed
     /// multiple of the honest mean, keeping ⟨g_byz, ∇Q⟩ < 0 at low norm.
     Ipm,
+    /// Shard-level equivocation (`recovery=fec|hybrid` only): send the
+    /// server a reversed gradient while honest overhearers reconstruct a
+    /// plausible one — the mismatched hash commitments make the sender
+    /// content-provably exposable. Under ARQ it degrades to sending the
+    /// server-bound frame to everyone (reliable broadcast).
+    Equivocate,
 }
 
 impl AttackKind {
@@ -76,6 +99,7 @@ impl AttackKind {
             AttackKind::EchoForgeRandomX => "echo-random-x",
             AttackKind::Alie => "alie",
             AttackKind::Ipm => "ipm",
+            AttackKind::Equivocate => "equivocate",
         }
     }
 
@@ -94,11 +118,12 @@ impl AttackKind {
             "echo-random-x" => AttackKind::EchoForgeRandomX,
             "alie" => AttackKind::Alie,
             "ipm" | "inner-product-manipulation" => AttackKind::Ipm,
+            "equivocate" | "equivocation" => AttackKind::Equivocate,
             _ => return None,
         })
     }
 
-    pub fn all() -> [AttackKind; 13] {
+    pub fn all() -> [AttackKind; 14] {
         [
             AttackKind::None,
             AttackKind::SignFlip,
@@ -113,6 +138,7 @@ impl AttackKind {
             AttackKind::EchoForgeRandomX,
             AttackKind::Alie,
             AttackKind::Ipm,
+            AttackKind::Equivocate,
         ]
     }
 
@@ -132,6 +158,7 @@ impl AttackKind {
             AttackKind::EchoForgeRandomX => Box::new(EchoForgeRandomX),
             AttackKind::Alie => Box::new(Alie { z: 1.5 }),
             AttackKind::Ipm => Box::new(InnerProductManipulation { epsilon: 0.5 }),
+            AttackKind::Equivocate => Box::new(Equivocate { epsilon: 0.5 }),
         }
     }
 }
@@ -335,6 +362,40 @@ impl Attack for InnerProductManipulation {
     }
 }
 
+/// Shard-level equivocation: the server gets `−ε · mean(honest)` (an
+/// IPM-style poisoned gradient) while overhearers reconstruct the true
+/// gradient — an honest-looking frame, so no listener-side sanity check
+/// trips. The point of the attack is what *defeats* it: the hash
+/// commitment carried by every shard lets any honest overhearer prove
+/// the mismatch, so the sender is exposed instead of merely clipped.
+pub struct Equivocate {
+    pub epsilon: f64,
+}
+
+impl Attack for Equivocate {
+    fn name(&self) -> &'static str {
+        "equivocate"
+    }
+
+    fn frame(&mut self, ctx: &AttackCtx, _rng: &mut Rng) -> Option<Payload> {
+        // ARQ degradation: reliable whole-frame broadcast — everyone gets
+        // the server-bound poisoned gradient.
+        let m = mean_honest(ctx);
+        Some(Payload::Raw(linalg::scale(-self.epsilon, &m)))
+    }
+
+    fn equivocal_frame(
+        &mut self,
+        ctx: &AttackCtx,
+        _rng: &mut Rng,
+    ) -> Option<(Payload, Payload)> {
+        let m = mean_honest(ctx);
+        let to_server = Payload::Raw(linalg::scale(-self.epsilon, &m));
+        let to_listeners = Payload::Raw(ctx.true_grad.to_vec());
+        Some((to_server, to_listeners))
+    }
+}
+
 /// Echo forgery: reference a slot that has not transmitted yet. The
 /// reliable-broadcast argument lets the server *prove* the sender is
 /// Byzantine (`G[i] = ⊥`) — the attack must always be neutralized.
@@ -496,5 +557,41 @@ mod tests {
             }
             assert_eq!(AttackKind::parse(kind.name()), Some(kind));
         }
+    }
+
+    #[test]
+    fn equivocate_sends_poison_to_server_and_truth_to_listeners() {
+        let w = vec![0.0; 2];
+        let tg = vec![1.0, 2.0];
+        let mut honest = BTreeMap::new();
+        honest.insert(0usize, vec![2.0, 4.0]);
+        let over = vec![];
+        let mut a = Equivocate { epsilon: 0.5 };
+        let ctx = ctx_fixture(&w, &tg, &honest, &over);
+        let (srv, lst) = a.equivocal_frame(&ctx, &mut Rng::new(0)).unwrap();
+        assert_eq!(srv, Payload::Raw(vec![-1.0, -2.0]));
+        assert_eq!(lst, Payload::Raw(tg.clone()), "listeners see an honest-looking frame");
+        // ARQ degradation: frame() is the server-bound payload.
+        assert_eq!(a.frame(&ctx, &mut Rng::new(0)), Some(srv));
+    }
+
+    #[test]
+    fn default_equivocal_frame_is_none_and_draws_no_rng() {
+        let w = vec![0.0; 2];
+        let tg = vec![1.0, 0.0];
+        let mut honest = BTreeMap::new();
+        honest.insert(0usize, vec![1.0, 1.0]);
+        let over = vec![];
+        let ctx = ctx_fixture(&w, &tg, &honest, &over);
+        let mut rng = Rng::new(7);
+        let before = rng.next_u64();
+        let mut rng = Rng::new(7);
+        for kind in AttackKind::all() {
+            if kind == AttackKind::Equivocate {
+                continue;
+            }
+            assert!(kind.build().equivocal_frame(&ctx, &mut rng).is_none(), "{}", kind.name());
+        }
+        assert_eq!(rng.next_u64(), before, "default hook must not consume the attack stream");
     }
 }

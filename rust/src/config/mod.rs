@@ -4,6 +4,7 @@
 
 use crate::byzantine::AttackKind;
 use crate::coordinator::Aggregator;
+use crate::fec::Recovery;
 use crate::radio::ChannelModel;
 use crate::trace::TracePolicy;
 use crate::wire::{Encoding, IdCodec, Precision};
@@ -159,6 +160,12 @@ pub struct ExperimentConfig {
     /// server misses it (bounded ARQ). Irrelevant under a lossless
     /// channel (the first attempt always lands).
     pub uplink_retries: usize,
+    /// Uplink erasure-recovery policy ([`crate::fec::Recovery`]):
+    /// `arq` (PR 5's whole-frame retransmissions, bit-for-bit), `fec`
+    /// (Reed–Solomon shards, zero retransmissions) or `hybrid` (FEC
+    /// first, ARQ only if the server still cannot reconstruct). CLI:
+    /// `--recovery arq|fec|hybrid`.
+    pub recovery: Recovery,
 }
 
 impl Default for ExperimentConfig {
@@ -195,6 +202,7 @@ impl Default for ExperimentConfig {
             trace: TracePolicy::Full,
             channel: ChannelModel::Perfect,
             uplink_retries: 2,
+            recovery: Recovery::Arq,
         }
     }
 }
@@ -365,6 +373,11 @@ impl ExperimentConfig {
                 })?
             }
             "uplink-retries" | "retries" => self.uplink_retries = parse_usize(value)?,
+            "recovery" => {
+                self.recovery = Recovery::parse(value).ok_or_else(|| {
+                    format!("recovery: expected arq|fec|hybrid, got '{value}'")
+                })?
+            }
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -477,6 +490,7 @@ impl ExperimentConfig {
         kv("trace", self.trace.label());
         kv("channel", self.channel.label());
         kv("uplink-retries", self.uplink_retries.to_string());
+        kv("recovery", self.recovery.name().to_string());
         out
     }
 
@@ -628,6 +642,23 @@ mod tests {
     }
 
     #[test]
+    fn recovery_parses_through_the_config_surface() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.recovery, Recovery::Arq);
+        cfg.set("recovery", "fec").unwrap();
+        assert_eq!(cfg.recovery, Recovery::Fec);
+        cfg.set("recovery", "hybrid").unwrap();
+        assert_eq!(cfg.recovery, Recovery::Hybrid);
+        assert!(cfg.set("recovery", "bogus").is_err());
+        // And through the CLI argument surface.
+        let mut cfg = ExperimentConfig::default();
+        let args: Vec<String> = ["--recovery", "fec"].iter().map(|s| s.to_string()).collect();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.recovery, Recovery::Fec);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn config_string_round_trips() {
         let mut cfg = ExperimentConfig::default();
         cfg.n = 9;
@@ -644,6 +675,7 @@ mod tests {
         cfg.threads = 0;
         cfg.trace = TracePolicy::EveryK { every_k: 4, max_points: 64 };
         cfg.channel = ChannelModel::Bernoulli { p: 0.15 };
+        cfg.recovery = Recovery::Hybrid;
         cfg.r = Some(0.3);
         let mut back = ExperimentConfig::default();
         back.apply_file(&cfg.to_config_string()).unwrap();

@@ -89,6 +89,11 @@ pub enum SlotOutcome {
     /// for this round, but **no exposure** — channel loss is not proof of
     /// Byzantine behaviour.
     Lost,
+    /// The sender's sharded uplink reconstructed to *different content*
+    /// at the server and at honest overhearers (hash commitments differ).
+    /// Content-provable equivocation — exposed under any channel, lossy
+    /// or not (stored 0⃗).
+    Equivocated,
 }
 
 /// Verdict of the echo validity check.
@@ -205,6 +210,19 @@ impl ParameterServer {
         assert!(j < self.n);
         assert!(self.g[j].is_none(), "slot {j} delivered twice");
         self.mark_lost(j);
+    }
+
+    /// Worker `j`'s sharded uplink reconstructed to different content at
+    /// the server and at an honest overhearer — the hash commitments
+    /// disagree, which is content-provable equivocation. Unlike loss or
+    /// silence this exposes **even in lossy mode**: erasures can hide a
+    /// frame, but they cannot manufacture two consistent reconstructions
+    /// with mismatched digests.
+    pub fn on_equivocation(&mut self, j: usize) -> SlotOutcome {
+        assert!(j < self.n);
+        assert!(self.g[j].is_none(), "slot {j} delivered twice");
+        self.expose(j, SlotOutcome::Equivocated);
+        SlotOutcome::Equivocated
     }
 
     /// Does slot `i` hold a gradient an echo may reference? A `Lost` slot
@@ -454,6 +472,19 @@ mod tests {
         let mut s = server(3, 0, 2);
         assert_eq!(s.on_frame(0, &Payload::Raw(vec![1.0, 2.0])), SlotOutcome::Raw);
         assert_eq!(s.stored(0), Some(&vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn equivocation_exposes_even_in_lossy_mode() {
+        let mut s = server(3, 1, 2);
+        s.set_lossy(true);
+        assert_eq!(s.on_equivocation(0), SlotOutcome::Equivocated);
+        assert!(s.exposed().contains(&0), "content-proof beats channel deniability");
+        assert_eq!(s.stored(0), Some(&vec![0.0, 0.0]));
+        // Plain loss on the very same lossy server still never exposes.
+        s.on_lost(1);
+        assert_eq!(s.outcome(1), Some(SlotOutcome::Lost));
+        assert!(!s.exposed().contains(&1));
     }
 
     #[test]

@@ -1,0 +1,355 @@
+//! Zero-dependency Reed–Solomon erasure coding over GF(256), plus the
+//! uplink [`Recovery`] policy it enables.
+//!
+//! PR 5's lossy channel recovers erased uplink frames by *resending*
+//! them (bounded ARQ). The related-work echo handlers (ctrbc/ccbrb:
+//! `FEC::new(f, n)` shards + hash commitments, reconstruct from n−f
+//! pieces) show the stronger play: erasure-code each frame into
+//! `k + r` shards spread across the slot's transmit attempts, so the
+//! server and the overhearers reconstruct under per-receiver erasures
+//! with **zero extra round trips** whenever at least `k` of the
+//! `k + r` shard transmissions get through.
+//!
+//! The code is systematic: for every byte column, the `k` data shards
+//! are the values of a degree-`< k` polynomial at the field points
+//! `x = 0..k-1` (i.e. the padded frame itself, chunked), and the `r`
+//! parity shards are its evaluations at `x = k..k+r-1`. Any `k` shards
+//! with distinct indices reconstruct the frame by Lagrange
+//! interpolation. Arithmetic is GF(2⁸) with the usual `0x11D`
+//! reduction polynomial, log/exp tables built once via
+//! [`std::sync::OnceLock`] — no external crates, MSRV 1.74.
+//!
+//! Hostile inputs (zero data shards, more than 255 total shards,
+//! duplicate or inconsistent shards, too few shards, a corrupted
+//! length header) are rejected with a typed [`FecError`] *before* any
+//! allocation proportional to the claimed sizes; `rust/tests/fec.rs`
+//! fuzzes these paths. Bit-flipped shard *contents* decode to garbage
+//! bytes rather than an error — content integrity is the job of the
+//! frame's hash commitment ([`crate::wire::digest`]), which also makes
+//! an equivocating Byzantine worker content-provably exposable (two
+//! validly-slotted frames with different digests are proof; pure
+//! channel loss never is).
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// How the radio recovers erased uplink frames (`--recovery`).
+///
+/// * `Arq` — PR 5's behavior, bit-for-bit: resend the whole frame up
+///   to `--uplink-retries` times until the server hears it.
+/// * `Fec` — one logical transmission of [`FEC_DATA_SHARDS`]` +
+///   `[`FEC_PARITY_SHARDS`] Reed–Solomon shards; every receiver that
+///   catches at least [`FEC_DATA_SHARDS`] of them reconstructs. No
+///   retransmissions, ever.
+/// * `Hybrid` — FEC first; only if the *server* still cannot
+///   reconstruct, fall back to whole-frame ARQ retries.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Recovery {
+    #[default]
+    Arq,
+    Fec,
+    Hybrid,
+}
+
+impl Recovery {
+    pub fn name(self) -> &'static str {
+        match self {
+            Recovery::Arq => "arq",
+            Recovery::Fec => "fec",
+            Recovery::Hybrid => "hybrid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Recovery> {
+        Some(match s {
+            "arq" => Recovery::Arq,
+            "fec" => Recovery::Fec,
+            "hybrid" => Recovery::Hybrid,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [Recovery; 3] {
+        [Recovery::Arq, Recovery::Fec, Recovery::Hybrid]
+    }
+}
+
+/// Data shards per uplink frame under `recovery=fec|hybrid`.
+pub const FEC_DATA_SHARDS: usize = 4;
+/// Parity shards per uplink frame under `recovery=fec|hybrid`. With
+/// `k = 4, r = 2` a Bernoulli erasure rate up to `r/(k+r) = 1/3`
+/// still reconstructs in expectation with zero retransmissions.
+pub const FEC_PARITY_SHARDS: usize = 2;
+/// Per-shard wire overhead in bytes: a 1-byte shard index plus the
+/// frame's 8-byte hash commitment riding every shard (so any `k`
+/// surviving shards carry it).
+pub const SHARD_OVERHEAD_BYTES: usize = 9;
+
+/// Typed rejection of hostile or inconsistent shard input. Every
+/// variant is raised *before* allocating buffers sized by the claim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FecError {
+    /// `k == 0`, or `k + r > 255` (GF(256) has only 255 nonzero
+    /// evaluation points plus zero — 256 distinct shard indices would
+    /// collide).
+    BadShardCount { k: usize, r: usize },
+    /// The frame cannot be represented (length header is 4 bytes).
+    DataTooLong { len: usize },
+    /// Decode input shards disagree on length.
+    LengthMismatch { expected: usize, got: usize },
+    /// A shard with an empty body.
+    EmptyShard,
+    /// Two input shards claim the same index.
+    DuplicateIndex(u8),
+    /// Fewer than `k` shards supplied.
+    NotEnoughShards { have: usize, need: usize },
+    /// The reconstructed length header exceeds the payload capacity —
+    /// truncated or corrupted input.
+    BadLengthHeader { claimed: usize, max: usize },
+}
+
+impl fmt::Display for FecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FecError::BadShardCount { k, r } => {
+                write!(f, "bad shard counts k={k} r={r} (need 1 <= k and k+r <= 255)")
+            }
+            FecError::DataTooLong { len } => write!(f, "frame of {len} bytes too long to shard"),
+            FecError::LengthMismatch { expected, got } => {
+                write!(f, "shard length mismatch: expected {expected}, got {got}")
+            }
+            FecError::EmptyShard => write!(f, "empty shard"),
+            FecError::DuplicateIndex(i) => write!(f, "duplicate shard index {i}"),
+            FecError::NotEnoughShards { have, need } => {
+                write!(f, "not enough shards: have {have}, need {need}")
+            }
+            FecError::BadLengthHeader { claimed, max } => {
+                write!(f, "length header claims {claimed} bytes, capacity is {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FecError {}
+
+struct Tables {
+    log: [u8; 256],
+    exp: [u8; 512],
+}
+
+static TABLES: OnceLock<Tables> = OnceLock::new();
+
+/// GF(2⁸) log/exp tables for the `x⁸+x⁴+x³+x²+1` (0x11D) field, built
+/// once. `exp` is doubled so `exp[log a + log b]` never wraps.
+fn tables() -> &'static Tables {
+    TABLES.get_or_init(|| {
+        let mut log = [0u8; 256];
+        let mut exp = [0u8; 512];
+        let mut x: u16 = 1;
+        for i in 0..255 {
+            exp[i] = x as u8;
+            log[x as usize] = i as u8;
+            x <<= 1;
+            if x & 0x100 != 0 {
+                x ^= 0x11D;
+            }
+        }
+        for i in 255..512 {
+            exp[i] = exp[i - 255];
+        }
+        Tables { log, exp }
+    })
+}
+
+fn gf_mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let t = tables();
+    t.exp[t.log[a as usize] as usize + t.log[b as usize] as usize]
+}
+
+/// Multiplicative inverse; `a` must be nonzero (guaranteed by distinct
+/// interpolation points — denominators are XORs of distinct elements).
+fn gf_inv(a: u8) -> u8 {
+    let t = tables();
+    t.exp[255 - t.log[a as usize] as usize]
+}
+
+/// The shard body length `encode` produces for a frame of `data_len`
+/// bytes split into `k` data shards (4-byte length header included).
+pub fn shard_len(data_len: usize, k: usize) -> usize {
+    (4 + data_len).div_ceil(k).max(1)
+}
+
+/// Systematic Reed–Solomon encode: `data` (with a 4-byte LE length
+/// header prepended and zero padding) becomes `k` data shards followed
+/// by `r` parity shards, each [`shard_len`] bytes. Shard `i`'s index
+/// is its position; [`decode`] reconstructs from any `k` of them.
+pub fn encode(data: &[u8], k: usize, r: usize) -> Result<Vec<Vec<u8>>, FecError> {
+    if k == 0 || k + r > 255 {
+        return Err(FecError::BadShardCount { k, r });
+    }
+    if data.len() > u32::MAX as usize - 4 {
+        return Err(FecError::DataTooLong { len: data.len() });
+    }
+    let len = shard_len(data.len(), k);
+    let mut buf = vec![0u8; k * len];
+    buf[..4].copy_from_slice(&(data.len() as u32).to_le_bytes());
+    buf[4..4 + data.len()].copy_from_slice(data);
+    let mut shards: Vec<Vec<u8>> = buf.chunks(len).map(|c| c.to_vec()).collect();
+    // Parity shard j = the column polynomials evaluated at x = k + j.
+    // The Lagrange basis over the data points x = 0..k-1 is the same
+    // for every byte column, so compute its coefficients once.
+    for j in 0..r {
+        let t = (k + j) as u8;
+        let coef: Vec<u8> = (0..k).map(|i| lagrange_coef(t, i as u8, &data_points(k))).collect();
+        let mut parity = vec![0u8; len];
+        for (i, c) in coef.iter().enumerate() {
+            for (p, &s) in parity.iter_mut().zip(shards[i].iter()) {
+                *p ^= gf_mul(*c, s);
+            }
+        }
+        shards.push(parity);
+    }
+    Ok(shards)
+}
+
+/// Reconstruct the original frame from any `k` distinct-index shards
+/// (data or parity, any order; extras beyond the first `k` are
+/// validated but unused). Returns the de-padded frame bytes.
+pub fn decode(shards: &[(u8, Vec<u8>)], k: usize) -> Result<Vec<u8>, FecError> {
+    if k == 0 || k > 255 {
+        return Err(FecError::BadShardCount { k, r: 0 });
+    }
+    if shards.len() < k {
+        return Err(FecError::NotEnoughShards { have: shards.len(), need: k });
+    }
+    let mut seen = [false; 256];
+    let len = shards[0].1.len();
+    if len == 0 {
+        return Err(FecError::EmptyShard);
+    }
+    for (idx, body) in shards {
+        if seen[*idx as usize] {
+            return Err(FecError::DuplicateIndex(*idx));
+        }
+        seen[*idx as usize] = true;
+        if body.len() != len {
+            return Err(FecError::LengthMismatch { expected: len, got: body.len() });
+        }
+    }
+    // Hostile short shards: the padded frame must at least hold its own
+    // 4-byte length header, or reading it below would walk off the end.
+    if k * len < 4 {
+        return Err(FecError::BadLengthHeader { claimed: 4, max: k * len });
+    }
+    let chosen = &shards[..k];
+    let xs: Vec<u8> = chosen.iter().map(|(i, _)| *i).collect();
+    let mut buf = vec![0u8; k * len];
+    for target in 0..k {
+        let t = target as u8;
+        let out = &mut buf[target * len..(target + 1) * len];
+        if let Some(pos) = xs.iter().position(|&x| x == t) {
+            out.copy_from_slice(&chosen[pos].1);
+            continue;
+        }
+        for (i, (_, body)) in chosen.iter().enumerate() {
+            let c = lagrange_coef(t, xs[i], &xs);
+            for (o, &s) in out.iter_mut().zip(body.iter()) {
+                *o ^= gf_mul(c, s);
+            }
+        }
+    }
+    let claimed = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if claimed > buf.len() - 4 {
+        return Err(FecError::BadLengthHeader { claimed, max: buf.len() - 4 });
+    }
+    Ok(buf[4..4 + claimed].to_vec())
+}
+
+fn data_points(k: usize) -> Vec<u8> {
+    (0..k as u8).collect()
+}
+
+/// Lagrange basis coefficient `L_i(t)` over interpolation points `xs`,
+/// where `xi = xs[i]`: `∏_{m≠i} (t ⊕ xs[m]) / (xi ⊕ xs[m])`. In
+/// characteristic 2 subtraction is XOR, so distinct points make every
+/// denominator factor nonzero.
+fn lagrange_coef(t: u8, xi: u8, xs: &[u8]) -> u8 {
+    let mut num = 1u8;
+    let mut den = 1u8;
+    for &xm in xs {
+        if xm == xi {
+            continue;
+        }
+        num = gf_mul(num, t ^ xm);
+        den = gf_mul(den, xi ^ xm);
+    }
+    gf_mul(num, gf_inv(den))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovery_names_roundtrip() {
+        for r in Recovery::all() {
+            assert_eq!(Recovery::parse(r.name()), Some(r));
+        }
+        assert_eq!(Recovery::parse("bogus"), None);
+        assert_eq!(Recovery::default(), Recovery::Arq);
+    }
+
+    #[test]
+    fn systematic_prefix_is_the_padded_frame() {
+        let data: Vec<u8> = (0..37).collect();
+        let shards = encode(&data, 4, 2).unwrap();
+        assert_eq!(shards.len(), 6);
+        let len = shard_len(data.len(), 4);
+        let mut buf = Vec::new();
+        for s in &shards[..4] {
+            assert_eq!(s.len(), len);
+            buf.extend_from_slice(s);
+        }
+        assert_eq!(&buf[..4], &(37u32).to_le_bytes());
+        assert_eq!(&buf[4..4 + 37], &data[..]);
+    }
+
+    #[test]
+    fn any_k_subset_of_default_geometry_reconstructs() {
+        let data: Vec<u8> = (0u16..97).map(|v| (v * 31 % 251) as u8).collect();
+        let shards = encode(&data, FEC_DATA_SHARDS, FEC_PARITY_SHARDS).unwrap();
+        let total = FEC_DATA_SHARDS + FEC_PARITY_SHARDS;
+        // Every pair of erased shards still reconstructs.
+        for a in 0..total {
+            for b in (a + 1)..total {
+                let subset: Vec<(u8, Vec<u8>)> = (0..total)
+                    .filter(|&i| i != a && i != b)
+                    .map(|i| (i as u8, shards[i].clone()))
+                    .collect();
+                assert_eq!(decode(&subset, FEC_DATA_SHARDS).unwrap(), data);
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_counts_rejected_before_allocation() {
+        assert_eq!(encode(&[1], 0, 2), Err(FecError::BadShardCount { k: 0, r: 2 }));
+        assert_eq!(encode(&[1], 200, 56), Err(FecError::BadShardCount { k: 200, r: 56 }));
+        assert_eq!(decode(&[], 0), Err(FecError::BadShardCount { k: 0, r: 0 }));
+        assert_eq!(decode(&[], 4), Err(FecError::NotEnoughShards { have: 0, need: 4 }));
+    }
+
+    #[test]
+    fn duplicate_and_mismatched_shards_rejected() {
+        let shards = encode(b"hello", 3, 2).unwrap();
+        let dup = vec![(0u8, shards[0].clone()), (0u8, shards[0].clone()), (1u8, shards[1].clone())];
+        assert_eq!(decode(&dup, 3), Err(FecError::DuplicateIndex(0)));
+        let mut short = shards[1].clone();
+        short.pop();
+        let mix = vec![(0u8, shards[0].clone()), (1u8, short), (2u8, shards[2].clone())];
+        assert!(matches!(decode(&mix, 3), Err(FecError::LengthMismatch { .. })));
+    }
+}

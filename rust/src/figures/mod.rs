@@ -36,6 +36,11 @@
 //!   echo rate, communication savings and final error vs. the channel
 //!   loss probability ([`Axis::Loss`]), three charts from one lossy
 //!   sweep over the shared [`crate::sweep::presets::loss_sweep`] grid.
+//! * [`paper_loss_recovery`] declares the recovery comparison
+//!   (`--fig loss-recovery`): delivered uplink bits and final error vs.
+//!   loss probability, one series per recovery discipline
+//!   ([`Axis::Recovery`] — ARQ vs FEC vs hybrid) over
+//!   [`crate::sweep::presets::loss_recovery`].
 //! * [`apply_axis_specs`] implements the ad-hoc ablation mini-DSL
 //!   (`--axis n=10,20,50 --axis f=0..4`): comma lists or inclusive
 //!   `a..b` integer ranges per axis key. Unless `b` is given explicitly,
@@ -58,6 +63,7 @@ pub mod swarm;
 use crate::byzantine::AttackKind;
 use crate::config::{ExperimentConfig, ModelKind};
 use crate::coordinator::Aggregator;
+use crate::fec::Recovery;
 use crate::metrics::{CsvTable, Summary};
 use crate::radio::ChannelModel;
 use crate::sweep::{presets, SweepCell, SweepGrid, SweepProfile, SweepReport};
@@ -172,6 +178,9 @@ pub enum Axis {
     /// The channel-loss axis: numeric for Perfect (0) / Bernoulli (p),
     /// categorical for bursty Gilbert–Elliott channels.
     Loss,
+    /// The uplink recovery discipline (`arq` / `fec` / `hybrid`) —
+    /// categorical, the series axis of the `FIG_loss_recovery_*` family.
+    Recovery,
 }
 
 impl Axis {
@@ -187,6 +196,7 @@ impl Axis {
             Axis::Echo => "echo",
             Axis::Model => "model",
             Axis::Loss => "loss",
+            Axis::Recovery => "recovery",
         }
     }
 
@@ -202,6 +212,7 @@ impl Axis {
             "echo" => Axis::Echo,
             "model" => Axis::Model,
             "loss" | "channel" => Axis::Loss,
+            "recovery" => Axis::Recovery,
             _ => return None,
         })
     }
@@ -225,6 +236,7 @@ impl Axis {
                 Some(p) => AxisValue::Num(p),
                 None => AxisValue::Cat(c.channel.tag()),
             },
+            Axis::Recovery => AxisValue::Cat(c.recovery.name().to_string()),
         }
     }
 }
@@ -279,6 +291,7 @@ pub struct ReplicateCell {
     pub sigma: f64,
     pub echo_enabled: bool,
     pub channel: ChannelModel,
+    pub recovery: Recovery,
     /// Seeds of the replicates, in grid order.
     pub seeds: Vec<u64>,
     samples: Vec<SweepCell>,
@@ -296,6 +309,7 @@ impl ReplicateCell {
             && self.sigma.to_bits() == c.sigma.to_bits()
             && self.echo_enabled == c.echo_enabled
             && self.channel == c.channel
+            && self.recovery == c.recovery
     }
 
     /// Number of replicate samples in the group.
@@ -360,6 +374,7 @@ pub fn replicates(report: &SweepReport) -> Vec<ReplicateCell> {
                 sigma: c.sigma,
                 echo_enabled: c.echo_enabled,
                 channel: c.channel,
+                recovery: c.recovery,
                 seeds: vec![c.seed],
                 samples: vec![c.clone()],
             }),
@@ -659,6 +674,9 @@ pub fn paper_figure(id: FigId, profile: SweepProfile) -> FigureJob {
 #[derive(Clone, Debug)]
 pub struct LossFigureJob {
     pub grid: SweepGrid,
+    /// Axis each chart splits its series on (σ for the loss family,
+    /// the recovery discipline for `FIG_loss_recovery_*`).
+    pub series: Option<Axis>,
     /// `(metric, artifact stem, title, log_y)` per chart.
     pub charts: Vec<(Metric, &'static str, &'static str, bool)>,
 }
@@ -675,7 +693,7 @@ impl LossFigureJob {
                 let spec = SeriesSpec {
                     metric,
                     x: Axis::Loss,
-                    series: Some(Axis::Sigma),
+                    series: self.series,
                     pins: vec![],
                 };
                 let mut chart = Chart::from_report(&report, &spec, title);
@@ -693,6 +711,7 @@ pub fn paper_loss(profile: SweepProfile) -> LossFigureJob {
     grid.seeds = replicate_seeds(profile);
     LossFigureJob {
         grid,
+        series: Some(Axis::Sigma),
         charts: vec![
             (
                 Metric::CommSavings,
@@ -710,6 +729,35 @@ pub fn paper_loss(profile: SweepProfile) -> LossFigureJob {
                 Metric::FinalDistSq,
                 "FIG_loss_error",
                 "final ‖w − w*‖² vs channel loss probability",
+                true,
+            ),
+        ],
+    }
+}
+
+/// Declare the recovery-comparison figure (`--fig loss-recovery`): one
+/// sweep over [`presets::loss_recovery`] — the loss axis crossed with
+/// every recovery discipline — rendered as delivered uplink bits and
+/// final error vs. the loss probability, one series per discipline. The
+/// headline contrast: FEC holds its per-round bit budget flat where ARQ's
+/// retransmissions grow with p, at matching (or better) final error.
+pub fn paper_loss_recovery(profile: SweepProfile) -> LossFigureJob {
+    let mut grid = presets::loss_recovery(profile);
+    grid.seeds = replicate_seeds(profile);
+    LossFigureJob {
+        grid,
+        series: Some(Axis::Recovery),
+        charts: vec![
+            (
+                Metric::BitsPerRound,
+                "FIG_loss_recovery_bits",
+                "delivered uplink bits per round vs loss (arq / fec / hybrid)",
+                false,
+            ),
+            (
+                Metric::FinalDistSq,
+                "FIG_loss_recovery_error",
+                "final ‖w − w*‖² vs loss (arq / fec / hybrid)",
                 true,
             ),
         ],
@@ -762,13 +810,17 @@ pub fn swept_axes(grid: &SweepGrid) -> Vec<Axis> {
     if grid.channels.len() > 1 {
         out.push(Axis::Loss);
     }
+    if grid.recoveries.len() > 1 {
+        out.push(Axis::Recovery);
+    }
     out
 }
 
 /// Apply `--axis key=spec` declarations to a grid (the ad-hoc ablation
 /// mini-DSL). `spec` is a comma list (`n=10,20,50`, `attack=omniscient,
 /// alie`) or an inclusive integer range (`f=0..4` ⇒ 0,1,2,3,4). Keys:
-/// `n f b d sigma seed attack aggregator model echo`. `n`/`f`/`b` build
+/// `n f b d sigma seed attack aggregator model echo loss recovery`.
+/// `n`/`f`/`b` build
 /// the joint `(n, f, b)` axis as their cross-product; without an explicit
 /// `b`, the Byzantine count tracks the fault tolerance (`b = f`).
 /// Combinations violating `f < n/2` become error cells in the report and
@@ -813,10 +865,13 @@ pub fn apply_axis_specs(grid: &mut SweepGrid, specs: &[String]) -> Result<(), St
                 }
                 grid.channels = ps.into_iter().map(|p| ChannelModel::Bernoulli { p }).collect();
             }
+            "recovery" => {
+                grid.recoveries = parse_named_list(val, Recovery::parse, "recovery")?
+            }
             other => {
                 return Err(format!(
                     "unknown axis '{other}' \
-                     (expected n|f|b|d|sigma|seed|attack|aggregator|model|echo|loss)"
+                     (expected n|f|b|d|sigma|seed|attack|aggregator|model|echo|loss|recovery)"
                 ))
             }
         }
@@ -980,6 +1035,7 @@ mod tests {
             rounds: 5,
             echo_enabled: true,
             channel: ChannelModel::Perfect,
+            recovery: Recovery::Arq,
             echo_rate: 0.5,
             comm_savings: savings,
             final_loss: 0.1,
@@ -1114,6 +1170,8 @@ mod tests {
             Axis::Aggregator,
             Axis::Echo,
             Axis::Model,
+            Axis::Loss,
+            Axis::Recovery,
         ] {
             assert_eq!(Axis::parse(a.name()), Some(a));
         }
@@ -1189,6 +1247,44 @@ mod tests {
     }
 
     #[test]
+    fn recovery_axis_splits_series_and_keys_replicates() {
+        let mut a = cell(10, 0.05, 1, 0.6, None);
+        a.channel = ChannelModel::Bernoulli { p: 0.2 };
+        let mut b = a.clone();
+        b.recovery = Recovery::Fec;
+        b.seed = 1;
+        let r = report(vec![a, b]);
+        let rc = replicates(&r);
+        assert_eq!(rc.len(), 2, "recovery is part of the replicate key");
+        let series = select(
+            &rc,
+            &SeriesSpec {
+                metric: Metric::CommSavings,
+                x: Axis::Loss,
+                series: Some(Axis::Recovery),
+                pins: vec![],
+            },
+        );
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].name, "recovery=arq");
+        assert_eq!(series[1].name, "recovery=fec");
+    }
+
+    #[test]
+    fn paper_loss_recovery_declares_recovery_series_charts() {
+        for profile in [SweepProfile::Smoke, SweepProfile::Full] {
+            let job = paper_loss_recovery(profile);
+            assert_eq!(job.series, Some(Axis::Recovery));
+            assert_eq!(job.grid.recoveries, Recovery::all().to_vec());
+            assert!(job.grid.seeds.len() >= 2, "recovery figure needs replicate seeds");
+            assert!(job.grid.channels[0].is_lossless(), "loss axis anchors at 0");
+            let stems: Vec<&str> = job.charts.iter().map(|c| c.1).collect();
+            assert!(stems.contains(&"FIG_loss_recovery_bits"));
+            assert!(stems.contains(&"FIG_loss_recovery_error"));
+        }
+    }
+
+    #[test]
     fn axis_dsl_loss_builds_bernoulli_channels() {
         let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
         apply_axis_specs(&mut grid, &["loss=0,0.1,0.3".to_string()]).unwrap();
@@ -1260,10 +1356,14 @@ mod tests {
             "attack=omniscient,alie".to_string(),
             "aggregator=cgc,mean".to_string(),
             "echo=on,off".to_string(),
+            "recovery=arq,fec,hybrid".to_string(),
         ];
         apply_axis_specs(&mut grid, &specs).unwrap();
         assert_eq!(grid.attacks, vec![AttackKind::Omniscient, AttackKind::Alie]);
         assert_eq!(grid.aggregators, vec![Aggregator::CgcSum, Aggregator::Mean]);
         assert_eq!(grid.echo, vec![true, false]);
+        assert_eq!(grid.recoveries, vec![Recovery::Arq, Recovery::Fec, Recovery::Hybrid]);
+        assert_eq!(swept_axes(&grid).last(), Some(&Axis::Recovery));
+        assert!(apply_axis_specs(&mut grid, &["recovery=nope".to_string()]).is_err());
     }
 }

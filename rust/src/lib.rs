@@ -67,6 +67,13 @@
 //!   wall-clock round latency (rounds/sec, p50/p99) — with a per-round
 //!   trace bit-identical to the in-memory sim for the same config (see
 //!   `docs/node-mode.md`);
+//! * **erasure-coded uplink recovery** ([`fec`]): a zero-dependency
+//!   GF(256) Reed–Solomon codec behind `--recovery arq|fec|hybrid`.
+//!   Frames shard across the slot's transmit attempts so lossy-channel
+//!   erasures reconstruct with zero retransmissions, and every sharded
+//!   frame carries a hash commitment ([`wire::digest`]) that makes an
+//!   equivocating Byzantine worker content-provably exposable — while
+//!   pure channel loss still never counts as Byzantine proof;
 //! * an **XLA/PJRT runtime** facade ([`runtime`]) for gradient computations
 //!   AOT-lowered from JAX/Pallas (`python/compile/`) as HLO text (python is
 //!   never on the request path). Currently a stub — see [`runtime`] — until
@@ -139,6 +146,7 @@ pub mod byzantine;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fec;
 pub mod figures;
 pub mod grad;
 pub mod linalg;

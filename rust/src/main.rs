@@ -67,7 +67,11 @@
 //! Every subcommand also accepts `--channel
 //! perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg` (the radio's loss
 //! model; `perfect` is the paper's reliable broadcast and the default)
-//! and `--uplink-retries <k>` (bounded server-bound ARQ).
+//! and `--uplink-retries <k>` (bounded server-bound ARQ), plus
+//! `--recovery arq|fec|hybrid` — how a lost uplink frame is recovered:
+//! whole-frame retransmission (`arq`, the default), Reed–Solomon shard
+//! coding with zero retransmissions (`fec`), or sharding with an ARQ
+//! tail (`hybrid`).
 //!
 //! Examples:
 //! ```text
@@ -77,12 +81,15 @@
 //! echo-cgc figures --fig all --profile smoke --threads auto
 //! echo-cgc figures --fig curves --profile smoke --threads auto
 //! echo-cgc figures --fig loss --profile smoke --threads auto
+//! echo-cgc figures --fig loss-recovery --profile smoke --threads auto
 //! echo-cgc figures --axis n=10,20,50 --axis f=0..4 --metric comm_savings
 //! echo-cgc figures --axis loss=0,0.1,0.3 --metric echo_rate
 //! echo-cgc figures --which all
 //! echo-cgc attack-matrix --n 25 --f 2 --rounds 300
 //! echo-cgc sweep --grid comm-savings --profile smoke --threads auto
 //! echo-cgc sweep --grid loss --profile smoke --threads auto
+//! echo-cgc sweep --grid loss-recovery --profile smoke --threads auto
+//! echo-cgc train --n 20 --f 2 --channel bernoulli=0.2 --recovery fec
 //! echo-cgc sweep --grid convergence --profile smoke --trace every_k=4,max=64
 //! echo-cgc swarm --n 8 --f 1 --rounds 20
 //! echo-cgc swarm --n-sweep 8,32,128 --f 1 --d 32 --rounds 10
@@ -104,8 +111,9 @@ fn usage() -> ! {
          common flags:  --n --f --b --d --rounds --sigma --attack --aggregator --seed --threads <k|auto>\n\
                         --trace summary|full|every_k=K,max=M (per-round trajectory retention)\n\
                         --channel perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg --uplink-retries <k> (lossy radio)\n\
-         sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|loss|quick --profile smoke|full --out <path>\n\
-         figures flags: --fig 2|3|4|curves|loss|swarm|all --profile smoke|full --out-dir <dir> (paper figures)\n\
+                        --recovery arq|fec|hybrid (uplink loss recovery: retransmit, RS shard coding, or both)\n\
+         sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|loss|loss-recovery|quick --profile smoke|full --out <path>\n\
+         figures flags: --fig 2|3|4|curves|loss|loss-recovery|swarm|all --profile smoke|full --out-dir <dir> (paper figures)\n\
                         --axis key=v1,v2|a..b [--x axis] [--series axis] [--metric name] (ad-hoc ablation)\n\
                         --which 1a|1b|1c|1d|all (closed-form theory figures)\n\
          node flags:    --listen ADDR (server) | --id K --peers ADDR (worker); --deadline-ms <ms> (per round)\n\
@@ -559,7 +567,7 @@ fn cmd_sweep(
     let mut grid = presets::by_name(grid_name, profile).unwrap_or_else(|| {
         eprintln!(
             "unknown grid '{grid_name}' \
-             (expected attack-matrix|gv-baseline|comm-savings|convergence|loss|quick)"
+             (expected attack-matrix|gv-baseline|comm-savings|convergence|loss|loss-recovery|quick)"
         );
         std::process::exit(2);
     });
@@ -748,12 +756,14 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
         let mut ids: Vec<FigId> = Vec::new();
         let mut want_curves = false;
         let mut want_loss = false;
+        let mut want_recovery = false;
         let mut want_swarm = false;
         let swarm_csv = format!("{out_dir}/BENCH_swarm_latency.csv");
         if figs == "all" {
             ids = FigId::all().to_vec();
             want_curves = true;
             want_loss = true;
+            want_recovery = true;
             // The swarm panel renders a measured bench CSV rather than
             // running a sweep — under `all` it is opportunistic, under an
             // explicit `--fig swarm` a missing CSV is an error.
@@ -774,12 +784,19 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                     want_loss = true;
                     continue;
                 }
+                if v == "loss-recovery" || v == "loss_recovery" {
+                    want_recovery = true;
+                    continue;
+                }
                 if v == "swarm" {
                     want_swarm = true;
                     continue;
                 }
                 ids.push(FigId::parse(v).unwrap_or_else(|| {
-                    eprintln!("unknown figure '{v}' (expected 2|3|4|curves|loss|swarm|all)");
+                    eprintln!(
+                        "unknown figure '{v}' \
+                         (expected 2|3|4|curves|loss|loss-recovery|swarm|all)"
+                    );
                     std::process::exit(2);
                 }));
             }
@@ -831,6 +848,25 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                 println!("wrote {} + {}", csv_path.display(), svg_path.display());
             }
             println!("wrote {out_dir}/FIG_loss_report.json");
+        }
+        if want_recovery {
+            let job = figures::paper_loss_recovery(profile);
+            println!(
+                "figures: FIG_loss_recovery — recovery grid '{}', {} cells × profile {} on {} threads",
+                job.grid.name,
+                job.grid.len(),
+                profile.name(),
+                threads
+            );
+            let (report, charts) = job.run(threads);
+            report
+                .write_json(format!("{out_dir}/FIG_loss_recovery_report.json"))
+                .expect("write loss-recovery report");
+            for (chart, stem) in charts {
+                let (csv_path, svg_path) = chart.write(&out_dir, stem).expect("write figure");
+                println!("wrote {} + {}", csv_path.display(), svg_path.display());
+            }
+            println!("wrote {out_dir}/FIG_loss_recovery_report.json");
         }
         if want_swarm {
             let charts = figures::swarm::swarm_charts(&swarm_csv).unwrap_or_else(|e| {

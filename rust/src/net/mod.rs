@@ -58,7 +58,10 @@ use crate::config::ExperimentConfig;
 /// from their id; a shuffled schedule would need a per-round schedule
 /// broadcast the protocol does not carry) and a perfect channel (the
 /// erasure models live in the in-memory radio; TCP delivers reliably, so
-/// a lossy run over sockets would silently measure the wrong thing).
+/// a lossy run over sockets would silently measure the wrong thing). The
+/// same reasoning pins ARQ recovery and bars the equivocate attack: FEC
+/// shard streams and per-receiver payload splits are radio-path
+/// constructs a whole-frame TCP uplink cannot express.
 pub fn validate_node_cfg(cfg: &ExperimentConfig) -> Result<(), String> {
     cfg.validate()?;
     if cfg.shuffle_slots {
@@ -69,6 +72,20 @@ pub fn validate_node_cfg(cfg: &ExperimentConfig) -> Result<(), String> {
             "node mode runs over reliable TCP; channel model '{}' is sim-only (use --channel perfect)",
             cfg.channel.label()
         ));
+    }
+    if cfg.recovery != crate::fec::Recovery::Arq {
+        return Err(format!(
+            "node mode sends whole frames over reliable TCP; recovery '{}' shards the \
+             in-memory radio uplink and is sim-only (use --recovery arq)",
+            cfg.recovery.name()
+        ));
+    }
+    if cfg.attack == crate::byzantine::AttackKind::Equivocate {
+        return Err(
+            "node mode cannot stage the equivocate attack: per-receiver shard streams \
+             exist only in the in-memory radio (pick another --attack)"
+                .into(),
+        );
     }
     Ok(())
 }
@@ -92,4 +109,24 @@ pub fn check_digest_bound(n: usize, d: usize, enc: crate::wire::Encoding) -> Res
         ));
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::byzantine::AttackKind;
+    use crate::fec::Recovery;
+
+    #[test]
+    fn node_mode_rejects_sim_only_recovery_and_equivocation() {
+        let mut cfg = ExperimentConfig::default();
+        validate_node_cfg(&cfg).expect("the default config must be node-deployable");
+        cfg.recovery = Recovery::Fec;
+        assert!(validate_node_cfg(&cfg).unwrap_err().contains("recovery"));
+        cfg.recovery = Recovery::Hybrid;
+        assert!(validate_node_cfg(&cfg).unwrap_err().contains("sim-only"));
+        cfg.recovery = Recovery::Arq;
+        cfg.attack = AttackKind::Equivocate;
+        assert!(validate_node_cfg(&cfg).unwrap_err().contains("equivocate"));
+    }
 }

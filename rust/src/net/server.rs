@@ -311,6 +311,9 @@ impl Transport for NetServerTransport {
                             server_got: true,
                             attempts: 1,
                             bits,
+                            fec_recovered: false,
+                            commitment: None,
+                            heard_payload: None,
                         }),
                     )
                 }
@@ -339,7 +342,16 @@ impl Transport for NetServerTransport {
                 // outcome *before* any digest carrying this slot is
                 // built — listeners only ever see the replacement.
                 self.entries[slot] = DigestEntry { slot, outcome: DigestSlot::Aired(bytes) };
-                return Broadcast { payload: p, heard, server_got: true, attempts: 1, bits };
+                return Broadcast {
+                    payload: p,
+                    heard,
+                    server_got: true,
+                    attempts: 1,
+                    bits,
+                    fec_recovered: false,
+                    commitment: None,
+                    heard_payload: None,
+                };
             }
             self.conns[sender] = None;
         }
@@ -352,6 +364,9 @@ impl Transport for NetServerTransport {
             server_got: false,
             attempts: 1,
             bits: 0,
+            fec_recovered: false,
+            commitment: None,
+            heard_payload: None,
         }
     }
 

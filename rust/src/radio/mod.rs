@@ -41,7 +41,8 @@ pub mod multihop;
 
 pub use channel::{Channel, ChannelModel};
 
-use crate::wire::{bit_len, decode, encode, Encoding, Payload};
+use crate::fec::{self, Recovery};
+use crate::wire::{bit_len, decode, digest, encode, Encoding, Payload};
 
 /// Node identifier = TDMA slot index in `0..n`. The server is not a slot
 /// owner (it transmits in the downlink phase, not in worker slots).
@@ -176,10 +177,24 @@ pub struct Broadcast {
     /// Did the server receive the frame within the retransmit budget?
     pub server_got: bool,
     /// Transmissions on air (1 + retransmissions; 1 under a perfect
-    /// channel).
+    /// channel). A FEC shard pass counts as one logical transmission
+    /// regardless of how many shards it spread — no round trips were
+    /// spent, which is the point of the code.
     pub attempts: u64,
-    /// Total bits charged (`attempts ×` the frame's encoded bit length).
+    /// Total bits charged (`attempts ×` the frame's encoded bit length
+    /// under ARQ; `(k + r) ×` the shard length under FEC).
     pub bits: u64,
+    /// Did the server reconstruct the frame from a *partial* shard set
+    /// (i.e. FEC actually repaired an erasure)? Always `false` under ARQ.
+    pub fec_recovered: bool,
+    /// Hash commitment over the server-bound encoded frame, carried by
+    /// every shard. `None` under ARQ (whole frames need no commitment —
+    /// a heard frame is heard consistently).
+    pub commitment: Option<u64>,
+    /// Only for an equivocal shard stream: the payload the *listeners*
+    /// reconstruct, when it differs from what the server decodes.
+    /// `None` for every honest broadcast.
+    pub heard_payload: Option<Payload>,
 }
 
 /// The slot-sequencing state of one communication round: which slot is
@@ -253,7 +268,52 @@ impl SlotCursor {
         self.transmit(net, slot, sender, payload)
     }
 
+    /// See [`RadioRound::broadcast_equivocal`].
+    pub fn broadcast_equivocal(
+        &mut self,
+        net: &mut RadioNetwork,
+        slot: usize,
+        sender: NodeId,
+        to_server: &Payload,
+        to_listeners: &Payload,
+    ) -> Broadcast {
+        assert!(
+            net.recovery != Recovery::Arq,
+            "an equivocal shard stream requires recovery=fec|hybrid (whole-frame \
+             broadcasts are heard consistently — equivocation is impossible under arq)"
+        );
+        assert_eq!(slot, self.next_slot, "slot used out of order");
+        assert_eq!(
+            sender,
+            net.schedule.owner(slot),
+            "node {sender} transmitted in slot {slot} owned by {}",
+            net.schedule.owner(slot)
+        );
+        self.next_slot += 1;
+        self.slot_attempts = 0;
+        self.last_slot_broadcast = true;
+        // A Byzantine sender never helps the server recover its own
+        // equivocation: no hybrid retry tail.
+        self.transmit_fec(net, slot, sender, to_server, Some(to_listeners), false)
+    }
+
     fn transmit(
+        &mut self,
+        net: &mut RadioNetwork,
+        slot: usize,
+        sender: NodeId,
+        payload: &Payload,
+    ) -> Broadcast {
+        match net.recovery {
+            Recovery::Arq => self.transmit_arq(net, slot, sender, payload),
+            Recovery::Fec => self.transmit_fec(net, slot, sender, payload, None, false),
+            Recovery::Hybrid => self.transmit_fec(net, slot, sender, payload, None, true),
+        }
+    }
+
+    /// The pre-FEC transmit loop, byte-for-byte: whole-frame attempts
+    /// until the server acks or the retry budget runs out.
+    fn transmit_arq(
         &mut self,
         net: &mut RadioNetwork,
         slot: usize,
@@ -288,7 +348,136 @@ impl SlotCursor {
             server_got = net.channel.delivers(round, slot, a, n);
         }
         let delivered = decode(&bytes, enc).expect("self-encoded frame must decode");
-        Broadcast { payload: delivered, heard, server_got, attempts, bits }
+        Broadcast {
+            payload: delivered,
+            heard,
+            server_got,
+            attempts,
+            bits,
+            fec_recovered: false,
+            commitment: None,
+            heard_payload: None,
+        }
+    }
+
+    /// Erasure-coded transmit: the frame is split into `k` data + `r`
+    /// parity shards (systematic Reed–Solomon over GF(256), [`crate::fec`])
+    /// and the slot's `k + r` transmit attempts each carry one shard. A
+    /// receiver reconstructs iff its channel draws deliver at least `k`
+    /// of them — erasures up to `r` shards cost *zero* extra round trips.
+    /// Every shard carries the [`digest`] commitment of the server-bound
+    /// encoded frame, so differing reconstructions are content-provable.
+    ///
+    /// `listener_payload = Some(b)` models an *equivocal* shard stream: a
+    /// Byzantine sender interleaves shards of two frames such that the
+    /// subset the server catches decodes to `payload` while listeners'
+    /// subsets decode to `b`. Bits are charged for the larger of the two
+    /// shard geometries (it is still one physical stream of `k + r`
+    /// shards). `allow_retries` enables the hybrid whole-frame ARQ tail
+    /// when the server could not reconstruct from the shard pass.
+    fn transmit_fec(
+        &mut self,
+        net: &mut RadioNetwork,
+        slot: usize,
+        sender: NodeId,
+        payload: &Payload,
+        listener_payload: Option<&Payload>,
+        allow_retries: bool,
+    ) -> Broadcast {
+        let enc = net.encoding;
+        let bytes = encode(payload, enc);
+        let commitment = digest(&bytes);
+        let k = fec::FEC_DATA_SHARDS;
+        let total = fec::FEC_DATA_SHARDS + fec::FEC_PARITY_SHARDS;
+        let shards =
+            fec::encode(&bytes, k, fec::FEC_PARITY_SHARDS).expect("frame fits GF(256) shard bounds");
+        let alt_body_len = listener_payload
+            .map(|p| fec::shard_len(encode(p, enc).len(), k))
+            .unwrap_or(0);
+        let body_len = shards[0].len().max(alt_body_len);
+        // Shard wire format: 1 index byte + 8 commitment bytes + body.
+        let shard_bits = ((fec::SHARD_OVERHEAD_BYTES + body_len) as u64) * 8;
+        let n = net.schedule.n_slots();
+        let round = net.round;
+        let mut shard_count = vec![0usize; n];
+        let mut server_shards: Vec<u8> = Vec::new();
+        let base = self.slot_attempts;
+        self.slot_attempts += total as u64;
+        let mut bits = 0u64;
+        for s in 0..total {
+            let a = base + s as u64;
+            net.meter.charge_tx(sender, shard_bits);
+            bits += shard_bits;
+            for (r, c) in shard_count.iter_mut().enumerate() {
+                if r != sender && net.channel.delivers(round, slot, a, r) {
+                    *c += 1;
+                    net.meter.charge_rx(r, shard_bits);
+                }
+            }
+            // The server is receiver id `n` on the channel.
+            if net.channel.delivers(round, slot, a, n) {
+                server_shards.push(s as u8);
+            }
+        }
+        let mut heard: Vec<bool> =
+            shard_count.iter().enumerate().map(|(r, &c)| r != sender && c >= k).collect();
+        let mut server_got = server_shards.len() >= k;
+        let fec_recovered = server_got && server_shards.len() < total;
+        let mut attempts = 1u64;
+        // Hybrid tail: whole-frame ARQ retries, only when the shard pass
+        // left the server short. Attempt coordinates continue the slot's
+        // sequence so no draw is reused.
+        if allow_retries && !server_got {
+            let bits1 = (bytes.len() as u64) * 8;
+            let mut retries = 0u64;
+            while retries < net.uplink_retries as u64 && !server_got {
+                let a = self.slot_attempts;
+                self.slot_attempts += 1;
+                retries += 1;
+                attempts += 1;
+                net.meter.charge_tx(sender, bits1);
+                bits += bits1;
+                for (r, h) in heard.iter_mut().enumerate() {
+                    if r != sender && net.channel.delivers(round, slot, a, r) {
+                        *h = true;
+                        net.meter.charge_rx(r, bits1);
+                    }
+                }
+                server_got = net.channel.delivers(round, slot, a, n);
+            }
+        }
+        // The server's copy goes through the *real* decode path when it
+        // was assembled from shards (a hybrid retry delivers the whole
+        // frame directly, like ARQ).
+        let delivered = if server_got && server_shards.len() >= k {
+            let subset: Vec<(u8, Vec<u8>)> = server_shards[..k]
+                .iter()
+                .map(|&i| (i, shards[i as usize].clone()))
+                .collect();
+            let back = fec::decode(&subset, k).expect("k distinct shards reconstruct the frame");
+            debug_assert_eq!(back, bytes, "RS reconstruction must be exact");
+            decode(&back, enc).expect("self-encoded frame must decode")
+        } else {
+            decode(&bytes, enc).expect("self-encoded frame must decode")
+        };
+        let heard_payload = listener_payload.and_then(|p| {
+            let alt_bytes = encode(p, enc);
+            if digest(&alt_bytes) == commitment {
+                None // identical content — not actually equivocal
+            } else {
+                Some(decode(&alt_bytes, enc).expect("self-encoded frame must decode"))
+            }
+        });
+        Broadcast {
+            payload: delivered,
+            heard,
+            server_got,
+            attempts,
+            bits,
+            fec_recovered,
+            commitment: Some(commitment),
+            heard_payload,
+        }
     }
 
     /// See [`RadioRound::silence`].
@@ -356,6 +545,25 @@ impl<'a> RadioRound<'a> {
         self.cur.fallback(self.net, slot, sender, payload)
     }
 
+    /// A Byzantine *equivocal* shard stream in the sender's slot: the
+    /// `k + r` shards are crafted so the subset the server reconstructs
+    /// decodes to `to_server` while listeners' subsets decode to
+    /// `to_listeners`. Only representable under `recovery=fec|hybrid`
+    /// (panics under ARQ, where whole frames are heard consistently).
+    /// The returned [`Broadcast::heard_payload`] carries the listeners'
+    /// reconstruction; the commitment is over the server-bound frame, so
+    /// any honest listener that heard the stream can content-provably
+    /// expose the mismatch.
+    pub fn broadcast_equivocal(
+        &mut self,
+        slot: usize,
+        sender: NodeId,
+        to_server: &Payload,
+        to_listeners: &Payload,
+    ) -> Broadcast {
+        self.cur.broadcast_equivocal(self.net, slot, sender, to_server, to_listeners)
+    }
+
     /// A worker may stay silent in its slot (a crash-style fault). The slot
     /// still elapses; the server observes the absence (synchrony ⇒ it can
     /// identify the worker as faulty, §2.1).
@@ -393,6 +601,10 @@ pub struct RadioNetwork {
     /// frame when the server misses it (0 extra under a perfect channel
     /// anyway — the first attempt always lands).
     uplink_retries: usize,
+    /// Uplink loss-recovery discipline: whole-frame ARQ (the pre-FEC
+    /// behaviour, byte-identical), Reed–Solomon shard spreading, or FEC
+    /// with an ARQ tail.
+    recovery: Recovery,
     /// Round counter — the channel's `round` coordinate (advanced by
     /// [`RadioRound::finish`]).
     round: usize,
@@ -420,8 +632,20 @@ impl RadioNetwork {
             meter: BitMeter::new(n),
             channel: Channel::new(model, seed, n + 1),
             uplink_retries: retries,
+            recovery: Recovery::Arq,
             round: 0,
         }
+    }
+
+    /// Select the uplink loss-recovery discipline (builder style; the
+    /// default is [`Recovery::Arq`], the pre-FEC behaviour exactly).
+    pub fn with_recovery(mut self, recovery: Recovery) -> Self {
+        self.recovery = recovery;
+        self
+    }
+
+    pub fn recovery(&self) -> Recovery {
+        self.recovery
     }
 
     pub fn with_schedule(schedule: TdmaSchedule, encoding: Encoding) -> Self {
@@ -657,5 +881,139 @@ mod tests {
         let mut round = net.begin_round();
         round.silence(0);
         round.fallback(0, 0, &raw(1.0, 4));
+    }
+
+    #[test]
+    fn fec_on_a_perfect_channel_is_one_sharded_transmission() {
+        let mut net = RadioNetwork::new(3, Encoding::default()).with_recovery(Recovery::Fec);
+        let mut round = net.begin_round();
+        let bc = round.broadcast(0, 0, &raw(1.0, 10));
+        assert!(bc.server_got);
+        assert_eq!(bc.attempts, 1, "a shard pass is one logical transmission");
+        assert!(!bc.fec_recovered, "nothing was erased, nothing was recovered");
+        assert!(bc.commitment.is_some());
+        assert!(bc.heard_payload.is_none());
+        assert_eq!(bc.heard, vec![false, true, true]);
+        assert_eq!(bc.payload.kind(), "raw");
+        let total = (crate::fec::FEC_DATA_SHARDS + crate::fec::FEC_PARITY_SHARDS) as u64;
+        assert_eq!(bc.bits % total, 0, "k + r equal-size shards");
+        round.silence(1);
+        round.silence(2);
+        round.finish();
+        assert_eq!(net.meter.tx_bits[0], bc.bits);
+    }
+
+    #[test]
+    fn fec_blackout_spends_no_retries() {
+        // p = 1: the shard pass fails, and pure FEC never retransmits —
+        // zero extra round trips by construction.
+        let blackout = ChannelModel::Bernoulli { p: 1.0 };
+        let mut net = RadioNetwork::with_channel(2, Encoding::default(), blackout, 9, 2)
+            .with_recovery(Recovery::Fec);
+        let mut round = net.begin_round();
+        let bc = round.broadcast(0, 0, &raw(1.0, 10));
+        assert!(!bc.server_got);
+        assert_eq!(bc.attempts, 1);
+        assert_eq!(bc.heard, vec![false, false]);
+        round.silence(1);
+        round.finish();
+    }
+
+    #[test]
+    fn hybrid_blackout_falls_back_to_the_arq_tail() {
+        let blackout = ChannelModel::Bernoulli { p: 1.0 };
+        let mut net = RadioNetwork::with_channel(2, Encoding::default(), blackout, 9, 2)
+            .with_recovery(Recovery::Hybrid);
+        let mut round = net.begin_round();
+        let bc = round.broadcast(0, 0, &raw(1.0, 10));
+        assert!(!bc.server_got);
+        assert_eq!(bc.attempts, 3, "1 shard pass + 2 whole-frame retries");
+        round.silence(1);
+        round.finish();
+    }
+
+    #[test]
+    fn fec_recovers_partial_shard_erasure_without_retransmitting() {
+        // Across seeds, at p = 0.3 the server frequently catches ≥ k but
+        // < k + r shards — exactly the erasure pattern FEC repairs for
+        // free. Every such broadcast must still be a single attempt.
+        let mut recovered = 0u32;
+        for seed in 0..200u64 {
+            let lossy = ChannelModel::Bernoulli { p: 0.3 };
+            let mut net = RadioNetwork::with_channel(2, Encoding::default(), lossy, seed, 2)
+                .with_recovery(Recovery::Fec);
+            let mut round = net.begin_round();
+            let bc = round.broadcast(0, 0, &raw(1.0, 16));
+            assert_eq!(bc.attempts, 1);
+            if bc.fec_recovered {
+                assert!(bc.server_got);
+                assert_eq!(bc.payload.kind(), "raw", "reconstruction is the real decode path");
+                recovered += 1;
+            }
+            round.silence(1);
+            round.finish();
+        }
+        assert!(recovered > 0, "p=0.3 over 200 seeds must hit a recoverable erasure");
+    }
+
+    #[test]
+    fn equivocal_stream_delivers_different_payloads_to_server_and_listeners() {
+        let mut net = RadioNetwork::new(3, Encoding::default()).with_recovery(Recovery::Fec);
+        let mut round = net.begin_round();
+        let bc = round.broadcast_equivocal(0, 0, &raw(1.0, 8), &raw(-1.0, 8));
+        assert!(bc.server_got);
+        assert_eq!(bc.heard, vec![false, true, true]);
+        let server_side = match &bc.payload {
+            Payload::Raw(g) => g.clone(),
+            other => panic!("wrong kind {}", other.kind()),
+        };
+        let listener_side = match bc.heard_payload.as_ref().expect("equivocal stream") {
+            Payload::Raw(g) => g.clone(),
+            other => panic!("wrong kind {}", other.kind()),
+        };
+        assert!(server_side.iter().all(|&x| x == 1.0));
+        assert!(listener_side.iter().all(|&x| x == -1.0));
+        assert!(bc.commitment.is_some());
+        assert!(!bc.fec_recovered, "an equivocal stream never counts as a repair");
+        round.silence(1);
+        round.silence(2);
+        round.finish();
+    }
+
+    #[test]
+    fn equivocal_stream_with_identical_content_is_not_equivocal() {
+        let mut net = RadioNetwork::new(2, Encoding::default()).with_recovery(Recovery::Fec);
+        let mut round = net.begin_round();
+        let bc = round.broadcast_equivocal(0, 0, &raw(2.0, 8), &raw(2.0, 8));
+        assert!(bc.heard_payload.is_none(), "same bytes on both sides — nothing to expose");
+        round.silence(1);
+        round.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "requires recovery=fec|hybrid")]
+    fn equivocation_is_impossible_under_arq() {
+        let mut net = RadioNetwork::new(2, Encoding::default());
+        let mut round = net.begin_round();
+        round.broadcast_equivocal(0, 0, &raw(1.0, 4), &raw(2.0, 4));
+    }
+
+    #[test]
+    fn arq_cells_are_untouched_by_the_recovery_field() {
+        // The default network is Recovery::Arq and the ARQ transmit path
+        // is the pre-FEC loop byte-for-byte: same attempts, same meter.
+        let mk = |rec| {
+            let lossy = ChannelModel::Bernoulli { p: 0.4 };
+            let mut net = RadioNetwork::with_channel(3, Encoding::default(), lossy, 7, 2)
+                .with_recovery(rec);
+            let mut round = net.begin_round();
+            let bc = round.broadcast(0, 0, &raw(1.0, 12));
+            round.silence(1);
+            round.silence(2);
+            round.finish();
+            (bc.attempts, bc.heard, bc.server_got, bc.bits, net.meter.tx_bits[0])
+        };
+        assert_eq!(mk(Recovery::Arq), mk(Recovery::Arq));
+        assert_eq!(RadioNetwork::new(2, Encoding::default()).recovery(), Recovery::Arq);
     }
 }

@@ -44,6 +44,7 @@ use crate::byzantine::{Attack, AttackCtx};
 use crate::config::{ExperimentConfig, ModelKind};
 use crate::coordinator::{ParameterServer, SlotOutcome};
 use crate::data;
+use crate::fec::Recovery;
 use crate::grad::{GradientBackend, NativeBackend};
 use crate::linalg;
 use crate::model::{
@@ -87,6 +88,15 @@ pub struct ChannelTotals {
     /// way it aggregated `0⃗` there. Silent slots are not counted (no
     /// frame was ever on air).
     pub lost_slots: u64,
+    /// Uplinks the server reconstructed from a *partial* Reed–Solomon
+    /// shard set (`recovery=fec|hybrid`): erasures repaired with zero
+    /// extra round trips. Always 0 under `recovery=arq`.
+    pub fec_recoveries: u64,
+    /// Equivocal shard streams exposed by mismatched hash commitments
+    /// (server and an honest overhearer reconstructed different
+    /// content). Always 0 under `recovery=arq`, where whole-frame local
+    /// broadcast makes equivocation structurally impossible.
+    pub equivocations: u64,
 }
 
 /// Everything an experiment needs *except* its transport: model, server,
@@ -216,6 +226,7 @@ fn radio_for(cfg: &ExperimentConfig) -> RadioNetwork {
         cfg.seed ^ 0xC4A7_7E11_0C0D_E5ED,
         cfg.uplink_retries,
     )
+    .with_recovery(cfg.recovery)
 }
 
 /// A fully-wired experiment, generic over its communication substrate
@@ -469,9 +480,24 @@ impl<T: Transport> Simulation<T> {
                     f: self.cfg.f,
                     round: self.round,
                 };
-                match att.frame(&ctx, &mut self.attack_rng) {
-                    Some(p) => Outgoing::Frame(p),
-                    None => Outgoing::Silence,
+                // Under a sharded uplink an attack may equivocate; the
+                // hook is skipped entirely under ARQ (reliable whole-frame
+                // broadcast), where every attack degrades to `frame()`.
+                // Attacks without the hook return `None` drawing nothing,
+                // so pre-FEC attack RNG streams are byte-identical.
+                let equivocal = if self.cfg.recovery != Recovery::Arq {
+                    att.equivocal_frame(&ctx, &mut self.attack_rng)
+                } else {
+                    None
+                };
+                match equivocal {
+                    Some((to_server, to_listeners)) => {
+                        Outgoing::Equivocal(to_server, to_listeners)
+                    }
+                    None => match att.frame(&ctx, &mut self.attack_rng) {
+                        Some(p) => Outgoing::Frame(p),
+                        None => Outgoing::Silence,
+                    },
                 }
             } else {
                 let w = self.workers[owner].as_mut().unwrap();
@@ -507,6 +533,12 @@ impl<T: Transport> Simulation<T> {
                     // stops at exactly this primary's attempt count.
                     self.baseline_attempts += bc.attempts;
                     retransmits += (bc.attempts - 1) as usize;
+                    if bc.fec_recovered {
+                        self.channel_totals.fec_recoveries += 1;
+                    }
+                    // An equivocal shard stream delivered different content
+                    // to the server and to listeners (fec/hybrid only).
+                    let equivocal = bc.heard_payload.is_some();
                     if hosts {
                         dropped_frames += note_listeners(&mut self.workers, owner, &bc.heard);
                     }
@@ -516,7 +548,11 @@ impl<T: Transport> Simulation<T> {
                             _ => raw_count += 1,
                         }
                     }
-                    if hosts && self.cfg.echo_enabled {
+                    // Listeners never extend their spans with an equivocal
+                    // frame: its commitment disagrees with what the server
+                    // acknowledges, so honest workers refuse it as an echo
+                    // basis (referencing it would get *them* NACKed).
+                    if hosts && self.cfg.echo_enabled && !equivocal {
                         overhear_fan_out(&mut self.workers, owner, &bc.payload, &bc.heard, threads);
                     }
                     // Honest echo the server missed (uplink erasure)
@@ -567,6 +603,9 @@ impl<T: Transport> Simulation<T> {
                             stats.raw_rounds += 1;
                         }
                         retransmits += (fb.attempts - 1) as usize;
+                        if fb.fec_recovered {
+                            self.channel_totals.fec_recoveries += 1;
+                        }
                         if hosts {
                             dropped_frames += note_listeners(&mut self.workers, owner, &fb.heard);
                             if self.cfg.echo_enabled {
@@ -586,6 +625,33 @@ impl<T: Transport> Simulation<T> {
                             SlotOutcome::Lost
                         };
                         (out, fb.payload)
+                    } else if equivocal {
+                        // Exposure needs both halves of the proof on the
+                        // table: the server's own reconstruction and at
+                        // least one honest overhearer's conflicting one
+                        // (reported with its commitment in the next
+                        // synchronous exchange). Anything less degrades
+                        // to the ordinary lossy-channel verdicts — loss
+                        // alone still never exposes anyone.
+                        let witnessed = bc.server_got
+                            && bc
+                                .heard
+                                .iter()
+                                .enumerate()
+                                .any(|(i, &h)| h && !self.attacks.contains_key(&i));
+                        let out = if witnessed {
+                            self.channel_totals.equivocations += 1;
+                            self.server.on_equivocation(owner)
+                        } else if bc.server_got {
+                            self.server.on_frame(owner, &bc.payload)
+                        } else {
+                            self.server.on_lost(owner);
+                            SlotOutcome::Lost
+                        };
+                        // What listeners actually had on air is *their*
+                        // reconstruction — that is what an omniscient
+                        // later attacker may react to.
+                        (out, bc.heard_payload.unwrap())
                     } else {
                         let out = if bc.server_got {
                             self.server.on_frame(owner, &bc.payload)
@@ -925,6 +991,28 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn equivocate_attack_exposed_under_fec_but_not_under_arq() {
+        let mut cfg = quick_cfg();
+        cfg.rounds = 5;
+        cfg.attack = AttackKind::Equivocate;
+        cfg.recovery = Recovery::Fec;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        sim.run();
+        assert_eq!(sim.server().exposed().len(), 1, "mismatched commitments expose the sender");
+        assert!(sim.channel_totals().equivocations >= 1);
+
+        // Under ARQ the same attack degrades to a consistent frame:
+        // reliable whole-frame broadcast leaves nothing to expose.
+        let mut cfg2 = cfg.clone();
+        cfg2.recovery = Recovery::Arq;
+        let mut sim2 = Simulation::build(&cfg2).unwrap();
+        sim2.run();
+        assert_eq!(sim2.server().exposed().len(), 0);
+        assert_eq!(sim2.channel_totals().equivocations, 0);
+        assert_eq!(sim2.channel_totals().fec_recoveries, 0);
     }
 
     #[test]

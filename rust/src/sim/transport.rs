@@ -30,6 +30,11 @@ pub enum Outgoing {
     Remote,
     /// A locally synthesized frame (honest worker or in-process attack).
     Frame(Payload),
+    /// A Byzantine equivocal shard stream (`recovery=fec|hybrid` only):
+    /// the server reconstructs the first payload, listeners the second.
+    /// Collapses to `Frame(first)` under ARQ, where whole-frame local
+    /// broadcast is heard consistently and equivocation is impossible.
+    Equivocal(Payload, Payload),
     /// Deliberate silence (a crash-style fault an attack chose).
     Silence,
 }
@@ -147,6 +152,9 @@ impl Transport for RadioTransport {
             Outgoing::Frame(p) => {
                 SlotResolution::Aired(self.cur.broadcast(&mut self.net, slot, sender, &p))
             }
+            Outgoing::Equivocal(a, b) => SlotResolution::Aired(
+                self.cur.broadcast_equivocal(&mut self.net, slot, sender, &a, &b),
+            ),
             Outgoing::Silence => {
                 self.cur.silence(slot);
                 SlotResolution::Silent

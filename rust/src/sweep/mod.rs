@@ -45,6 +45,7 @@
 use crate::byzantine::AttackKind;
 use crate::config::{ExperimentConfig, ModelKind};
 use crate::coordinator::Aggregator;
+use crate::fec::Recovery;
 use crate::metrics::{CsvTable, Json};
 use crate::radio::ChannelModel;
 use crate::sim::{ChannelTotals, PhaseTimings, Simulation};
@@ -122,7 +123,7 @@ pub fn auto_threads() -> usize {
 /// the base config's value; non-empty axes multiply into a cross-product
 /// enumerated in a fixed nesting order (outermost → innermost): `nfb`,
 /// `models`, `sigmas`, `dims`, `attacks`, `aggregators`, `echo`,
-/// `channels`, `seeds`.
+/// `channels`, `recoveries`, `seeds`.
 #[derive(Clone, Debug)]
 pub struct SweepGrid {
     pub name: String,
@@ -140,6 +141,10 @@ pub struct SweepGrid {
     /// The loss axis: radio channel models
     /// ([`crate::radio::ChannelModel`]).
     pub channels: Vec<ChannelModel>,
+    /// The uplink loss-recovery axis ([`crate::fec::Recovery`]): ARQ (the
+    /// pre-FEC discipline), Reed–Solomon shard spreading, or hybrid.
+    /// Nested inside `channels` so each loss rate compares disciplines.
+    pub recoveries: Vec<Recovery>,
     pub seeds: Vec<u64>,
 }
 
@@ -157,6 +162,7 @@ impl SweepGrid {
             aggregators: Vec::new(),
             echo: Vec::new(),
             channels: Vec::new(),
+            recoveries: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -178,6 +184,7 @@ impl SweepGrid {
         let aggs = axis(&self.aggregators, self.base.aggregator);
         let echoes = axis(&self.echo, self.base.echo_enabled);
         let channels = axis(&self.channels, self.base.channel);
+        let recoveries = axis(&self.recoveries, self.base.recovery);
         let seeds = axis(&self.seeds, self.base.seed);
         let mut out = Vec::new();
         for &(n, f, b) in &nfb {
@@ -188,20 +195,23 @@ impl SweepGrid {
                             for &agg in &aggs {
                                 for &echo in &echoes {
                                     for &channel in &channels {
-                                        for &seed in &seeds {
-                                            let mut cfg = self.base.clone();
-                                            cfg.n = n;
-                                            cfg.f = f;
-                                            cfg.b = b;
-                                            cfg.model = model;
-                                            cfg.sigma = sigma;
-                                            cfg.d = d;
-                                            cfg.attack = attack;
-                                            cfg.aggregator = agg;
-                                            cfg.echo_enabled = echo;
-                                            cfg.channel = channel;
-                                            cfg.seed = seed;
-                                            out.push(cfg);
+                                        for &recovery in &recoveries {
+                                            for &seed in &seeds {
+                                                let mut cfg = self.base.clone();
+                                                cfg.n = n;
+                                                cfg.f = f;
+                                                cfg.b = b;
+                                                cfg.model = model;
+                                                cfg.sigma = sigma;
+                                                cfg.d = d;
+                                                cfg.attack = attack;
+                                                cfg.aggregator = agg;
+                                                cfg.echo_enabled = echo;
+                                                cfg.channel = channel;
+                                                cfg.recovery = recovery;
+                                                cfg.seed = seed;
+                                                out.push(cfg);
+                                            }
                                         }
                                     }
                                 }
@@ -267,6 +277,9 @@ pub struct SweepCell {
     pub echo_enabled: bool,
     /// The radio channel the cell ran over (the `loss` axis coordinate).
     pub channel: ChannelModel,
+    /// The uplink recovery discipline the cell ran under (the `recovery`
+    /// axis coordinate; serialized only when not the ARQ default).
+    pub recovery: Recovery,
     pub echo_rate: f64,
     pub comm_savings: f64,
     pub final_loss: f64,
@@ -343,6 +356,14 @@ impl SweepCell {
             pairs.push(("fallbacks", Json::Num(self.channel_totals.fallbacks as f64)));
             pairs.push(("lost_slots", Json::Num(self.channel_totals.lost_slots as f64)));
         }
+        // Same contract for the recovery axis: only non-ARQ cells carry
+        // the discipline and its counters, so every `recovery=arq` cell —
+        // lossless or lossy — serializes the exact pre-FEC schema.
+        if self.recovery != Recovery::Arq {
+            pairs.push(("recovery", Json::Str(self.recovery.name().to_string())));
+            pairs.push(("fec_recoveries", Json::Num(self.channel_totals.fec_recoveries as f64)));
+            pairs.push(("equivocations", Json::Num(self.channel_totals.equivocations as f64)));
+        }
         if include_timings {
             pairs.push(("grad_ns", Json::Num(self.timings.grad_ns as f64)));
             pairs.push(("comm_ns", Json::Num(self.timings.comm_ns as f64)));
@@ -398,9 +419,12 @@ impl SweepReport {
         self.to_json_with_timings().write_file_pretty(path)
     }
 
-    /// Flat CSV rendering (one row per cell, fixed schema).
+    /// Flat CSV rendering (one row per cell, fixed schema). The recovery
+    /// columns appear only when some cell ran a non-ARQ discipline, so
+    /// pure-ARQ reports render the exact pre-FEC CSV bytes.
     pub fn csv(&self) -> CsvTable {
-        let mut t = CsvTable::new(&[
+        let with_recovery = self.cells.iter().any(|c| c.recovery != Recovery::Arq);
+        let mut header = vec![
             "index",
             "label",
             "n",
@@ -428,10 +452,15 @@ impl SweepReport {
             "empirical_rho",
             "theory_rho",
             "error",
-        ]);
+        ];
+        if with_recovery {
+            let i = header.iter().position(|&h| h == "empirical_rho").unwrap();
+            header.splice(i..i, ["recovery", "fec_recoveries", "equivocations"]);
+        }
+        let mut t = CsvTable::new(&header);
         let opt = |v: Option<f64>| v.map(|x| format!("{x}")).unwrap_or_default();
         for c in &self.cells {
-            t.push_row_mixed(vec![
+            let mut row = vec![
                 format!("{}", c.index),
                 c.label.clone(),
                 format!("{}", c.n),
@@ -456,10 +485,16 @@ impl SweepReport {
                 format!("{}", c.channel_totals.retransmits),
                 format!("{}", c.channel_totals.fallbacks),
                 format!("{}", c.channel_totals.lost_slots),
-                opt(c.empirical_rho),
-                opt(c.theory_rho),
-                c.error.clone().unwrap_or_default(),
-            ]);
+            ];
+            if with_recovery {
+                row.push(c.recovery.name().to_string());
+                row.push(format!("{}", c.channel_totals.fec_recoveries));
+                row.push(format!("{}", c.channel_totals.equivocations));
+            }
+            row.push(opt(c.empirical_rho));
+            row.push(opt(c.theory_rho));
+            row.push(c.error.clone().unwrap_or_default());
+            t.push_row_mixed(row);
         }
         t
     }
@@ -505,7 +540,7 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
     // channel suffix appears only for lossy cells (label stability for
     // the pre-channel artifact names).
     let label = format!(
-        "{}_{}_sigma{}_d{}_seed{}{}{}",
+        "{}_{}_sigma{}_d{}_seed{}{}{}{}",
         cfg.run_tag(),
         cfg.aggregator.name(),
         cfg.sigma,
@@ -516,6 +551,12 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
             String::new()
         } else {
             format!("_{}", cfg.channel.tag())
+        },
+        // ARQ cells keep their pre-FEC labels (artifact-name stability).
+        if cfg.recovery == Recovery::Arq {
+            String::new()
+        } else {
+            format!("_{}", cfg.recovery.name())
         }
     );
     let mut cell = SweepCell {
@@ -533,6 +574,7 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
         rounds: cfg.rounds,
         echo_enabled: cfg.echo_enabled,
         channel: cfg.channel,
+        recovery: cfg.recovery,
         echo_rate: f64::NAN,
         comm_savings: f64::NAN,
         final_loss: f64::NAN,
@@ -704,6 +746,38 @@ pub mod presets {
         grid
     }
 
+    /// ARQ vs FEC vs hybrid uplink recovery across the loss axis
+    /// (`echo-cgc figures --fig loss-recovery`, `echo-cgc sweep --grid
+    /// loss-recovery`): delivered bits and final error per discipline at
+    /// each Bernoulli erasure rate. Same scenario family as
+    /// [`loss_sweep`], one σ, with the recovery axis nested inside the
+    /// channel axis so each loss rate compares the three disciplines
+    /// under identical channel draws.
+    pub fn loss_recovery(profile: SweepProfile) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.n = 20;
+        base.f = 2;
+        base.b = 2;
+        base.d = 100;
+        base.threads = 1;
+        base.trace = TracePolicy::Summary;
+        base.attack = AttackKind::Omniscient;
+        base.rounds = match profile {
+            SweepProfile::Full => 120,
+            SweepProfile::Smoke => 40,
+        };
+        let mut grid = SweepGrid::new("loss_recovery", base);
+        grid.profile = profile;
+        let ps: &[f64] = match profile {
+            SweepProfile::Full => &[0.0, 0.05, 0.1, 0.2, 0.3, 0.4],
+            SweepProfile::Smoke => &[0.0, 0.1, 0.3],
+        };
+        grid.channels = ps.iter().map(|&p| ChannelModel::Bernoulli { p }).collect();
+        grid.sigmas = vec![0.05];
+        grid.recoveries = Recovery::all().to_vec();
+        grid
+    }
+
     /// Tiny demonstration grid (`echo-cgc sweep --grid quick`).
     pub fn quick() -> SweepGrid {
         let mut base = ExperimentConfig::default();
@@ -729,6 +803,7 @@ pub mod presets {
             "comm-savings" | "comm_savings" => comm_savings(profile),
             "convergence" => convergence(profile),
             "loss" | "loss-sweep" | "loss_sweep" => loss_sweep(profile),
+            "loss-recovery" | "loss_recovery" => loss_recovery(profile),
             "quick" => quick(),
             _ => return None,
         })
@@ -814,13 +889,91 @@ mod tests {
 
     #[test]
     fn presets_resolve_by_name() {
-        for name in
-            ["attack-matrix", "gv-baseline", "comm-savings", "convergence", "loss", "quick"]
-        {
+        for name in [
+            "attack-matrix",
+            "gv-baseline",
+            "comm-savings",
+            "convergence",
+            "loss",
+            "loss-recovery",
+            "quick",
+        ] {
             let grid = presets::by_name(name, SweepProfile::Smoke).unwrap();
             assert!(grid.len() >= 2, "{name} should sweep something");
         }
         assert!(presets::by_name("nope", SweepProfile::Smoke).is_none());
+    }
+
+    #[test]
+    fn recovery_axis_multiplies_inside_the_channel_axis() {
+        let mut grid = tiny_grid();
+        grid.channels = vec![ChannelModel::Perfect, ChannelModel::Bernoulli { p: 0.2 }];
+        grid.recoveries = vec![Recovery::Arq, Recovery::Fec];
+        // 2 sigmas × 2 aggregators × 2 channels × 2 recoveries.
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 16);
+        // Recovery is inner relative to channel, outer relative to seed.
+        assert_eq!(cells[0].recovery, Recovery::Arq);
+        assert_eq!(cells[1].recovery, Recovery::Fec);
+        assert_eq!(cells[0].channel, ChannelModel::Perfect);
+        assert_eq!(cells[2].channel, ChannelModel::Bernoulli { p: 0.2 });
+    }
+
+    #[test]
+    fn arq_cells_serialize_the_pre_fec_schema_byte_identically() {
+        // A grid that never sets the recovery axis and one that pins it
+        // to the ARQ default must render the same bytes — JSON and CSV.
+        let mut base = tiny_grid().base;
+        base.rounds = 6;
+        let mut implicit = SweepGrid::new("golden", base.clone());
+        implicit.channels = vec![ChannelModel::Bernoulli { p: 0.3 }];
+        let mut explicit = implicit.clone();
+        explicit.recoveries = vec![Recovery::Arq];
+        let a = implicit.run(1);
+        let b = explicit.run(1);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.csv().to_string(), b.csv().to_string());
+        // And the pre-FEC schema carries no recovery vocabulary at all.
+        let json = a.to_json().to_string();
+        assert!(!json.contains("\"recovery\""));
+        assert!(!json.contains("fec_recoveries"));
+        assert!(!json.contains("equivocations"));
+        assert!(!a.csv().to_string().contains("recovery"));
+    }
+
+    #[test]
+    fn non_arq_cells_carry_the_recovery_fields_and_label_suffix() {
+        let mut base = tiny_grid().base;
+        base.rounds = 6;
+        let mut grid = SweepGrid::new("fec", base);
+        grid.channels = vec![ChannelModel::Bernoulli { p: 0.3 }];
+        grid.recoveries = vec![Recovery::Arq, Recovery::Fec, Recovery::Hybrid];
+        let report = grid.run(1);
+        assert_eq!(report.cells.len(), 3);
+        let json = report.to_json().to_string();
+        assert!(json.contains("\"recovery\":\"fec\""));
+        assert!(json.contains("\"recovery\":\"hybrid\""));
+        assert!(json.contains("\"fec_recoveries\""));
+        assert!(json.contains("\"equivocations\""));
+        // Exactly the two non-ARQ cells carry the field.
+        assert_eq!(json.matches("\"recovery\":").count(), 2);
+        assert!(report.cells[0].label.ends_with("_bern0.3"), "{}", report.cells[0].label);
+        assert!(report.cells[1].label.ends_with("_bern0.3_fec"), "{}", report.cells[1].label);
+        assert!(
+            report.cells[2].label.ends_with("_bern0.3_hybrid"),
+            "{}",
+            report.cells[2].label
+        );
+        // FEC repaired at least one erasure somewhere at p = 0.3, and no
+        // retransmission was ever charged to the pure-FEC cell.
+        let fec = &report.cells[1];
+        assert!(fec.error.is_none(), "{:?}", fec.error);
+        assert_eq!(fec.channel_totals.retransmits, 0, "pure FEC never retransmits");
+        assert!(fec.channel_totals.fec_recoveries > 0, "p=0.3 must exercise a repair");
+        // The CSV gains the discipline columns for this report.
+        let csv = report.csv().to_string();
+        assert!(csv.contains(",recovery,fec_recoveries,equivocations,"));
+        assert!(csv.contains(",fec,"));
     }
 
     #[test]

@@ -382,6 +382,30 @@ pub fn raw_gradient_bits(d: usize, enc: Encoding) -> u64 {
     bit_len(&Payload::Raw(vec![0.0; d]), enc)
 }
 
+/// 64-bit content digest of an encoded frame — the hash commitment that
+/// rides every Reed–Solomon shard under `recovery=fec|hybrid`
+/// ([`crate::fec`]). FNV-1a accumulation with a SplitMix64-style
+/// finalizer for avalanche; deterministic, zero-dependency, and *not*
+/// cryptographic — in the simulated radio the adversary cannot rewrite
+/// honest frames, only author its own, so collision-resistance against
+/// grinding is not load-bearing here (a deployment would swap in a
+/// cryptographic hash behind the same signature). Two validly-slotted
+/// frames from one worker with different digests are content-proof of
+/// equivocation; channel loss can never manufacture that proof.
+pub fn digest(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^= h >> 31;
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -486,6 +510,16 @@ mod tests {
             assert_eq!(get_varint(&buf, &mut pos, ).unwrap(), v);
             assert_eq!(pos, buf.len());
         }
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_content_sensitive() {
+        let enc = Encoding::default();
+        let a = encode(&Payload::Raw(vec![1.0, 2.0, 3.0]), enc);
+        let b = encode(&Payload::Raw(vec![1.0, 2.0, 3.5]), enc);
+        assert_eq!(digest(&a), digest(&a));
+        assert_ne!(digest(&a), digest(&b), "distinct frames must commit differently");
+        assert_ne!(digest(&[]), digest(&[0]), "a single byte must change the digest");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use echo_cgc::byzantine::AttackKind;
 use echo_cgc::config::ExperimentConfig;
+use echo_cgc::fec::Recovery;
 use echo_cgc::radio::ChannelModel;
 use echo_cgc::sim::Simulation;
 use echo_cgc::sweep::SweepGrid;
@@ -64,6 +65,11 @@ fn lossy_sweep_json_is_byte_identical_at_any_thread_count() {
     let serial = grid.run(1).to_json().to_string();
     assert!(serial.contains("\"channel\":\"bernoulli=0.2\""));
     assert!(serial.contains("\"dropped_frames\""));
+    // Golden-schema pin: a default (ARQ) lossy report carries none of
+    // the recovery-layer vocabulary — PR 5 artifacts byte for byte.
+    assert!(!serial.contains("\"recovery\""));
+    assert!(!serial.contains("\"fec_recoveries\""));
+    assert!(!serial.contains("\"equivocations\""));
     for threads in [2usize, 8] {
         let par = grid.run(threads).to_json().to_string();
         assert_eq!(serial.as_bytes(), par.as_bytes(), "threads={threads}");
@@ -212,6 +218,73 @@ fn all_raw_baseline_saves_exactly_zero_at_any_loss_rate() {
         sim.run_silent();
         assert_eq!(sim.comm_savings().to_bits(), 0.0f64.to_bits(), "p={p}");
     }
+}
+
+#[test]
+fn fec_recovers_erasures_with_zero_retransmissions() {
+    // recovery=fec at the design-point loss rate (p = 0.3 = r/(k+r)):
+    // partial shard erasures are absorbed by parity, never by ARQ — the
+    // tentpole's zero-extra-round-trips claim at the engine level.
+    let mut cfg = base_cfg();
+    cfg.rounds = 60;
+    cfg.channel = ChannelModel::Bernoulli { p: 0.3 };
+    cfg.recovery = Recovery::Fec;
+    let mut sim = Simulation::build(&cfg).unwrap();
+    sim.run_silent();
+    let totals = sim.channel_totals();
+    assert_eq!(totals.retransmits, 0, "fec never retransmits");
+    assert!(totals.fec_recoveries > 0, "p=0.3 must exercise parity reconstruction");
+    assert!(totals.dropped_frames > 0);
+    assert_eq!(totals.equivocations, 0, "nobody equivocates in this run");
+}
+
+#[test]
+fn hybrid_spends_retries_only_when_parity_runs_out() {
+    // Heavy loss: fec alone loses slots; hybrid's ARQ tail buys some of
+    // them back, so it retransmits — but only after sharding failed.
+    let mut cfg = base_cfg();
+    cfg.rounds = 40;
+    cfg.channel = ChannelModel::Bernoulli { p: 0.55 };
+    cfg.recovery = Recovery::Hybrid;
+    let mut sim = Simulation::build(&cfg).unwrap();
+    sim.run_silent();
+    let hybrid = sim.channel_totals();
+    assert!(hybrid.retransmits > 0, "p=0.55 must overwhelm parity sometimes");
+    assert!(hybrid.fec_recoveries > 0, "partial erasures still recover from parity");
+    let mut fec_cfg = cfg.clone();
+    fec_cfg.recovery = Recovery::Fec;
+    let mut sim = Simulation::build(&fec_cfg).unwrap();
+    sim.run_silent();
+    let fec = sim.channel_totals();
+    assert_eq!(fec.retransmits, 0, "pure fec never falls back to ARQ");
+    assert!(fec.lost_slots > 0, "p=0.55 is past the r/(k+r) budget — fec alone loses slots");
+}
+
+#[test]
+fn equivocation_is_exposed_under_fec_but_pure_loss_never_is() {
+    // The commitment guarantee end to end: a Byzantine worker whose
+    // sharded uplink reconstructs to different content at the server and
+    // at honest overhearers is content-provably exposed — while the same
+    // seed and channel without the attack resolves its erasures as Lost
+    // with nobody exposed. Loss hides frames; it cannot forge digests.
+    let mut cfg = base_cfg();
+    cfg.rounds = 20;
+    cfg.attack = AttackKind::Equivocate;
+    cfg.recovery = Recovery::Fec;
+    cfg.channel = ChannelModel::Bernoulli { p: 0.2 };
+    let mut sim = Simulation::build(&cfg).unwrap();
+    sim.run_silent();
+    assert_eq!(sim.server().exposed().len(), 1, "the equivocator is exposed despite loss");
+    assert!(sim.channel_totals().equivocations >= 1);
+
+    let mut honest = cfg.clone();
+    honest.attack = AttackKind::None;
+    let mut sim = Simulation::build(&honest).unwrap();
+    sim.run_silent();
+    let totals = sim.channel_totals();
+    assert!(sim.server().exposed().is_empty(), "channel loss is never Byzantine proof");
+    assert_eq!(totals.equivocations, 0);
+    assert!(totals.lost_slots > 0, "p=0.2 over 20 rounds must lose whole slots");
 }
 
 #[test]

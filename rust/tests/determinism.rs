@@ -138,6 +138,23 @@ fn silent_attack_is_thread_invariant() {
 }
 
 #[test]
+fn fec_recovery_under_loss_is_thread_invariant() {
+    // The sharded uplink path: every shard delivery is a pure hash of
+    // (seed, round, slot, attempt, receiver), so lossy FEC runs — parity
+    // reconstruction, hybrid ARQ tails and equivocation exposure
+    // included — are bit-identical at any thread count.
+    let mut cfg = quadratic_cfg();
+    cfg.channel = echo_cgc::radio::ChannelModel::Bernoulli { p: 0.25 };
+    cfg.recovery = echo_cgc::fec::Recovery::Fec;
+    assert_identical(&cfg, "quadratic+bernoulli(0.25)+fec");
+    cfg.recovery = echo_cgc::fec::Recovery::Hybrid;
+    assert_identical(&cfg, "quadratic+bernoulli(0.25)+hybrid");
+    cfg.recovery = echo_cgc::fec::Recovery::Fec;
+    cfg.attack = AttackKind::Equivocate;
+    assert_identical(&cfg, "quadratic+bernoulli(0.25)+fec+equivocate");
+}
+
+#[test]
 fn parallel_server_aggregation_is_thread_invariant() {
     // `threads` now also drives the server's aggregation phase (parallel
     // norm pass + coordinate-chunked CGC sum). Large-norm attackers force

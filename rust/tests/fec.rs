@@ -1,0 +1,248 @@
+//! Property tests over the Reed–Solomon erasure codec behind
+//! `--recovery fec|hybrid`: every (k, r, len) geometry round-trips from
+//! *any* k-subset of its shards, and decoding is *total* — truncated,
+//! bit-flipped, duplicated or hostile shard input yields a typed
+//! [`FecError`] (or garbage bytes the hash commitment catches), never a
+//! panic and never an allocation sized by an attacker's claim.
+
+use echo_cgc::fec::{
+    decode, encode, shard_len, FecError, FEC_DATA_SHARDS, FEC_PARITY_SHARDS,
+};
+use echo_cgc::prop::forall;
+use echo_cgc::rng::Rng;
+use echo_cgc::wire::digest;
+
+fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    let len = rng.range(0, max_len + 1);
+    (0..len).map(|_| rng.range(0, 256) as u8).collect()
+}
+
+/// A random geometry that stays enumerable: `1 ≤ k ≤ 4`, `0 ≤ r ≤ 4`
+/// (so `k + r ≤ 8` and all `C(k+r, k)` subsets fit in a bitmask sweep;
+/// `r ≥ k` happens often enough to cover parity-only reconstruction).
+fn rand_geometry(rng: &mut Rng) -> (usize, usize) {
+    (1 + rng.range(0, 4), rng.range(0, 5))
+}
+
+/// The systematic prefix (shards `0..k`) as decode input.
+fn data_prefix(shards: &[Vec<u8>], k: usize) -> Vec<(u8, Vec<u8>)> {
+    shards.iter().take(k).enumerate().map(|(i, s)| (i as u8, s.clone())).collect()
+}
+
+#[test]
+fn prop_round_trips_across_geometries() {
+    forall(
+        "encode/decode round-trips for every (k, r, len)",
+        400,
+        |g| {
+            let (k, r) = rand_geometry(&mut g.rng);
+            ((rand_bytes(&mut g.rng, 300), k, r), ())
+        },
+        |((data, k, r), _)| {
+            let shards = encode(&data, k, r).map_err(|e| e.to_string())?;
+            if shards.len() != k + r {
+                return Err(format!("{} shards for k={k} r={r}", shards.len()));
+            }
+            let want = shard_len(data.len(), k);
+            if let Some(s) = shards.iter().find(|s| s.len() != want) {
+                return Err(format!("shard of {} bytes, shard_len says {want}", s.len()));
+            }
+            let all: Vec<(u8, Vec<u8>)> =
+                shards.iter().enumerate().map(|(i, s)| (i as u8, s.clone())).collect();
+            let back = decode(&all, k).map_err(|e| e.to_string())?;
+            if back != data {
+                return Err(format!("round-trip diverged at len {}", data.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_every_k_subset_reconstructs() {
+    // The erasure guarantee itself: *which* k shards survive must not
+    // matter, nor the order they arrive in.
+    forall(
+        "any k distinct shards rebuild the frame",
+        150,
+        |g| {
+            let (k, r) = rand_geometry(&mut g.rng);
+            ((rand_bytes(&mut g.rng, 120), k, r), ())
+        },
+        |((data, k, r), _)| {
+            let shards = encode(&data, k, r).map_err(|e| e.to_string())?;
+            let total = k + r;
+            for mask in 0u32..(1 << total) {
+                if mask.count_ones() as usize != k {
+                    continue;
+                }
+                // Reversed order: decode must not assume sorted indices.
+                let subset: Vec<(u8, Vec<u8>)> = (0..total)
+                    .rev()
+                    .filter(|i| mask & (1 << i) != 0)
+                    .map(|i| (i as u8, shards[i].clone()))
+                    .collect();
+                let back = decode(&subset, k).map_err(|e| e.to_string())?;
+                if back != data {
+                    return Err(format!("subset {mask:#b} of k={k} r={r} diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_truncated_shards_are_typed_errors() {
+    forall(
+        "a truncated shard is a typed error, never a panic",
+        300,
+        |g| {
+            let (k, r) = rand_geometry(&mut g.rng);
+            let data = rand_bytes(&mut g.rng, 120);
+            let victim = g.rng.range(0, k);
+            ((data, k, r, victim), ())
+        },
+        |((data, k, r, victim), _)| {
+            let shards = encode(&data, k, r).map_err(|e| e.to_string())?;
+            let mut subset = data_prefix(&shards, k);
+            subset[victim].1.pop();
+            match decode(&subset, k) {
+                // k ≥ 2: the shortened shard disagrees with its peers
+                // (or, at 1-byte shards, empties outright).
+                Err(FecError::LengthMismatch { .. } | FecError::EmptyShard) => Ok(()),
+                // k = 1: the sole shard IS the padded frame; shaving its
+                // last byte drops capacity below the header's claim.
+                Err(FecError::BadLengthHeader { .. }) if k == 1 => Ok(()),
+                Ok(_) => Err("decoded from a truncated shard set".into()),
+                Err(e) => Err(format!("unexpected error class: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_bit_flips_change_the_commitment() {
+    // Flipped shard *contents* are not the codec's job to detect — they
+    // decode to different bytes, and the frame's hash commitment is what
+    // exposes them. Pin exactly that division of labor.
+    forall(
+        "a data-region bit flip surfaces in the decoded digest",
+        300,
+        |g| {
+            let (k, r) = rand_geometry(&mut g.rng);
+            let mut data = rand_bytes(&mut g.rng, 120);
+            if data.is_empty() {
+                data.push(g.rng.range(0, 256) as u8);
+            }
+            // A bit inside the real data region of the padded frame
+            // (past the 4-byte header, before the padding).
+            let pos = 4 + g.rng.range(0, data.len());
+            let bit = g.rng.range(0, 8) as u8;
+            ((data, k, r, pos, bit), ())
+        },
+        |((data, k, r, pos, bit), _)| {
+            let shards = encode(&data, k, r).map_err(|e| e.to_string())?;
+            let len = shards[0].len();
+            let mut subset = data_prefix(&shards, k);
+            subset[pos / len].1[pos % len] ^= 1 << bit;
+            // The flip sits past the length header and inside the real
+            // data region, and the subset is the systematic prefix — so
+            // decode succeeds and returns exactly-one-byte-off garbage.
+            match decode(&subset, k) {
+                Ok(garbage) => {
+                    if garbage == data {
+                        return Err("flipped bit decoded back to the original".into());
+                    }
+                    if digest(&garbage) == digest(&data) {
+                        return Err("commitment failed to separate a 1-bit flip".into());
+                    }
+                    Ok(())
+                }
+                Err(e) => Err(format!("unexpected error class: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_duplicate_and_missing_shards_are_typed_errors() {
+    forall(
+        "duplicates and sub-k sets are rejected",
+        300,
+        |g| {
+            let (k, r) = rand_geometry(&mut g.rng);
+            ((rand_bytes(&mut g.rng, 80), k, r), ())
+        },
+        |((data, k, r), _)| {
+            let shards = encode(&data, k, r).map_err(|e| e.to_string())?;
+            let good = data_prefix(&shards, k);
+            // Replace the last shard's index with the first's: duplicate.
+            if k >= 2 {
+                let mut dup = good.clone();
+                dup[k - 1].0 = 0;
+                match decode(&dup, k) {
+                    Err(FecError::DuplicateIndex(0)) => {}
+                    other => return Err(format!("duplicate index gave {other:?}")),
+                }
+            }
+            // One shard short of k.
+            match decode(&good[..k - 1], k) {
+                Err(FecError::NotEnoughShards { have, need }) if have == k - 1 && need == k => {
+                    Ok(())
+                }
+                other => Err(format!("k−1 shards gave {other:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn hostile_counts_and_shapes_are_rejected_before_allocation() {
+    // A decode call claiming an absurd k must die on the count gate —
+    // never allocate a k×len buffer first. Same for encode geometries
+    // GF(256) cannot index.
+    let shard = (0u8, vec![0u8; 16]);
+    assert_eq!(
+        decode(&[shard.clone()], usize::MAX),
+        Err(FecError::BadShardCount { k: usize::MAX, r: 0 })
+    );
+    assert_eq!(decode(&[shard], 0), Err(FecError::BadShardCount { k: 0, r: 0 }));
+    assert_eq!(encode(b"x", 0, 0), Err(FecError::BadShardCount { k: 0, r: 0 }));
+    assert_eq!(encode(b"x", 1, 255), Err(FecError::BadShardCount { k: 1, r: 255 }));
+    assert_eq!(encode(b"x", 128, 128), Err(FecError::BadShardCount { k: 128, r: 128 }));
+    // Empty shard bodies carry no length header to trust.
+    assert_eq!(decode(&[(0, Vec::new()), (1, Vec::new())], 2), Err(FecError::EmptyShard));
+    // Shards too short to even hold the 4-byte length header are typed
+    // errors, not out-of-bounds reads.
+    assert!(matches!(
+        decode(&[(0, vec![7u8])], 1),
+        Err(FecError::BadLengthHeader { claimed: 4, max: 1 })
+    ));
+    // A corrupted length header claiming more than the payload capacity
+    // is caught after interpolation, before the copy-out.
+    let mut shards = encode(b"abc", 2, 1).unwrap();
+    shards[0][..4].copy_from_slice(&u32::MAX.to_le_bytes());
+    let subset: Vec<(u8, Vec<u8>)> =
+        shards.iter().take(2).enumerate().map(|(i, s)| (i as u8, s.clone())).collect();
+    assert!(matches!(decode(&subset, 2), Err(FecError::BadLengthHeader { .. })));
+}
+
+#[test]
+fn default_geometry_survives_its_design_point_erasure_rate() {
+    // The shipped k=4, r=2 geometry tolerates any 2 erasures — the
+    // r/(k+r) = 1/3 budget the smoke loss grid (p ≤ 0.3) leans on.
+    let data: Vec<u8> = (0u16..257).map(|v| (v % 256) as u8).collect();
+    let shards = encode(&data, FEC_DATA_SHARDS, FEC_PARITY_SHARDS).unwrap();
+    let total = FEC_DATA_SHARDS + FEC_PARITY_SHARDS;
+    assert_eq!(total, 6);
+    for a in 0..total {
+        for b in (a + 1)..total {
+            let subset: Vec<(u8, Vec<u8>)> = (0..total)
+                .filter(|&i| i != a && i != b)
+                .map(|i| (i as u8, shards[i].clone()))
+                .collect();
+            assert_eq!(decode(&subset, FEC_DATA_SHARDS).unwrap(), data);
+        }
+    }
+}

@@ -92,7 +92,9 @@ fn invalid_cells_are_reported_not_fatal() {
 #[test]
 fn smoke_presets_stay_small() {
     use echo_cgc::sweep::{presets, SweepProfile};
-    for name in ["attack-matrix", "gv-baseline", "comm-savings", "convergence", "loss"] {
+    for name in
+        ["attack-matrix", "gv-baseline", "comm-savings", "convergence", "loss", "loss-recovery"]
+    {
         let full = presets::by_name(name, SweepProfile::Full).unwrap();
         let smoke = presets::by_name(name, SweepProfile::Smoke).unwrap();
         assert!(smoke.len() <= full.len(), "{name}: smoke grid larger than full");

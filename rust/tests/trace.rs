@@ -118,6 +118,7 @@ fn cell(seed: u64, attack: &'static str, trace: Vec<RoundEvent>) -> SweepCell {
         rounds: 4,
         echo_enabled: true,
         channel: echo_cgc::radio::ChannelModel::Perfect,
+        recovery: echo_cgc::fec::Recovery::Arq,
         echo_rate: 0.5,
         comm_savings: 0.5,
         final_loss: 0.1,

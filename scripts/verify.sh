@@ -16,6 +16,11 @@
 #                     FIG_loss family from `echo-cgc figures`, smoke
 #                     profile (also run by CI's bench-smoke job;
 #                     artifacts land in results/FIG_*.{svg,csv})
+#     fec-smoke     — the erasure-coded recovery comparison
+#                     (`figures --fig loss-recovery`): ARQ vs FEC vs
+#                     hybrid across the loss axis, emitting the
+#                     FIG_loss_recovery_* charts and report (also run by
+#                     CI's bench-smoke job)
 #     trace-smoke   — a traced convergence sweep (`--trace`) plus the
 #                     faceted error-vs-round curves figure and the HTML
 #                     artifact index (results/FIG_curves.{svg,csv},
@@ -28,8 +33,8 @@
 #                     FIG_swarm_* latency/throughput panel
 #     all           — build-test + lint
 #
-#   --smoke-bench  — append the smoke-bench + figures-smoke + trace-smoke
-#                    + swarm-smoke stages to `all`.
+#   --smoke-bench  — append the smoke-bench + figures-smoke + fec-smoke
+#                    + trace-smoke + swarm-smoke stages to `all`.
 set -euo pipefail
 cd "$(dirname "$0")/.." || exit 1
 
@@ -37,7 +42,7 @@ STAGE=""
 SMOKE=0
 for arg in "$@"; do
   case "$arg" in
-    build-test|lint|smoke-bench|figures-smoke|trace-smoke|swarm-smoke|all)
+    build-test|lint|smoke-bench|figures-smoke|fec-smoke|trace-smoke|swarm-smoke|all)
       if [ -n "$STAGE" ]; then
         echo "verify.sh: multiple stages given ('$STAGE' and '$arg') — pass one" >&2
         exit 2
@@ -126,11 +131,21 @@ run_figures_smoke() {
     results/FIG_loss_error.svg results/FIG_loss_report.json
 }
 
+run_fec_smoke() {
+  echo "== fec-smoke: erasure-coded recovery comparison (arq vs fec vs hybrid) =="
+  cargo run --release --bin echo-cgc -- figures --fig loss-recovery --profile smoke --threads auto
+  echo "-- recovery artifacts (listed explicitly so a missing chart fails the stage):"
+  ls -l results/FIG_loss_recovery_bits.svg results/FIG_loss_recovery_bits.csv \
+    results/FIG_loss_recovery_error.svg results/FIG_loss_recovery_error.csv \
+    results/FIG_loss_recovery_report.json
+}
+
 case "$STAGE" in
   build-test) run_build_test ;;
   lint) run_lint ;;
   smoke-bench) run_smoke_bench ;;
   figures-smoke) run_figures_smoke ;;
+  fec-smoke) run_fec_smoke ;;
   trace-smoke) run_trace_smoke ;;
   swarm-smoke) run_swarm_smoke ;;
   all)
@@ -139,6 +154,7 @@ case "$STAGE" in
     if [ "$SMOKE" = "1" ]; then
       run_smoke_bench
       run_figures_smoke
+      run_fec_smoke
       run_trace_smoke
       run_swarm_smoke
     fi
