@@ -10,9 +10,11 @@
 
 use echo_cgc::bench_utils::Bencher;
 use echo_cgc::grad::{parallel_gradients, GradientBackend, NativeBackend};
+use echo_cgc::linalg;
 use echo_cgc::model::{CostModel, GaussianQuadratic};
 use echo_cgc::rng::Rng;
 use echo_cgc::runtime::{PjrtRuntime, XlaLmStep, XlaQuadraticBackend};
+use echo_cgc::wire::{decode, encode_ctx, CodecCtx, Encoding, IdCodec, Payload, Precision, WireCodec};
 use std::sync::Arc;
 
 /// Fresh per-worker backends + pre-split RNG streams for one fan-out run.
@@ -66,6 +68,49 @@ fn bench_thread_scaling(b: &mut Bencher) {
     }
 }
 
+/// In-place vector kernels vs the allocating helpers they replaced on the
+/// per-round path, at d = 10^7 — the memory-bound regime where one pass
+/// over the data (and zero allocator traffic) is the whole story.
+fn bench_linalg_inplace(b: &mut Bencher) {
+    let mut rng = Rng::new(11);
+    let d = 10_000_000;
+    let x = rng.normal_vec(d);
+    let mut y = rng.normal_vec(d);
+    let mut out = vec![0.0f64; d];
+    b.bench(&format!("linalg/axpy_inplace_d{d}"), || linalg::axpy(0.5, &x, &mut y));
+    b.bench(&format!("linalg/scale_mut_d{d}"), || linalg::scale_mut(1.000_000_1, &mut y));
+    b.bench(&format!("linalg/sub_into_d{d}"), || linalg::sub_into(&x, &y, &mut out));
+    // Allocating baselines (cold-path/test helpers since the in-place
+    // migration) — kept as rows so the CSV shows the win at the same d.
+    b.bench(&format!("linalg/scale_alloc_d{d}"), || linalg::scale(1.000_000_1, &y));
+    b.bench(&format!("linalg/sub_alloc_d{d}"), || linalg::sub(&x, &y));
+}
+
+/// Wire-codec encode/decode throughput on a dense gradient. F64 is the
+/// identity (legacy bytes); the lossy codecs trade decode error for
+/// on-air bits — this measures what that trade costs in CPU.
+fn bench_codec(b: &mut Bencher) {
+    let mut rng = Rng::new(12);
+    let enc = Encoding { precision: Precision::F64, id_codec: IdCodec::Varint };
+    let ctx = CodecCtx { seed: 7, round: 3, slot: 1 };
+    let d = 100_000;
+    let p = Payload::Raw(rng.normal_vec(d));
+    for codec in
+        [WireCodec::F64, WireCodec::F32, WireCodec::Int8, WireCodec::Sign, WireCodec::TopK(64)]
+    {
+        let name = codec.name();
+        b.bench(&format!("codec/{name}_encode_d{d}"), || encode_ctx(&p, enc, codec, ctx));
+        let bytes = encode_ctx(&p, enc, codec, ctx);
+        println!("    codec {name}: {} bytes on air for d={d}", bytes.len());
+        b.bench(&format!("codec/{name}_decode_d{d}"), || decode(&bytes, enc));
+    }
+    // One d = 10^7 row: quantization at the dimension where the paper's
+    // O(d) uplink cost actually bites.
+    let d_big = 10_000_000;
+    let p_big = Payload::Raw(rng.normal_vec(d_big));
+    b.bench(&format!("codec/int8_encode_d{d_big}"), || encode_ctx(&p_big, enc, WireCodec::Int8, ctx));
+}
+
 fn main() {
     let mut b = Bencher::new();
     let mut rng = Rng::new(5);
@@ -79,6 +124,12 @@ fn main() {
 
     // -- thread scaling of the parallel round engine -------------------------
     bench_thread_scaling(&mut b);
+
+    // -- in-place linalg kernels at d = 10^7 ---------------------------------
+    bench_linalg_inplace(&mut b);
+
+    // -- wire codec encode/decode --------------------------------------------
+    bench_codec(&mut b);
 
     // -- XLA/PJRT artifact path ----------------------------------------------
     if !PjrtRuntime::available() {

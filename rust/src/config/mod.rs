@@ -7,7 +7,7 @@ use crate::coordinator::Aggregator;
 use crate::fec::Recovery;
 use crate::radio::ChannelModel;
 use crate::trace::TracePolicy;
-use crate::wire::{Encoding, IdCodec, Precision};
+use crate::wire::{Encoding, IdCodec, Precision, WireCodec};
 
 /// Which cost model the workers train.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -128,6 +128,15 @@ pub struct ExperimentConfig {
     pub aggregator: Aggregator,
     pub precision: Precision,
     pub id_codec: IdCodec,
+    /// Gradient wire codec ([`crate::wire::WireCodec`]): a lossy
+    /// re-encoding of dense payloads (raw uplinks, echo fallbacks, and —
+    /// for `f32`/`int8` — the server downlink). `f64` is the identity
+    /// (legacy bytes, the default); `f32`, `int8`, `sign` and `topk<k>`
+    /// trade decode error for bits on the air. Stochastic-rounding dither
+    /// is a pure hash of `(seed, round, slot, chunk, lane)`, so any codec
+    /// stays bit-identical at every `--threads` value. CLI:
+    /// `--codec f64|f32|int8|sign|topk<k>`.
+    pub codec: WireCodec,
     /// Re-draw the TDMA permutation each round.
     pub shuffle_slots: bool,
     /// Echo mechanism on/off: off = the Gupta–Vaidya CGC baseline (every
@@ -195,6 +204,7 @@ impl Default for ExperimentConfig {
             aggregator: Aggregator::CgcSum,
             precision: Precision::F32,
             id_codec: IdCodec::Varint,
+            codec: WireCodec::F64,
             shuffle_slots: false,
             echo_enabled: true,
             topk: None,
@@ -351,6 +361,21 @@ impl ExperimentConfig {
                     _ => return Err(format!("id-codec must be varint|u16, got '{value}'")),
                 }
             }
+            // Combined wire-encoding surface: `--encoding f64+u16` sets
+            // both halves at once (the only CLI route that previously
+            // reached `IdCodec::FixedU16` was the separate `--id-codec`).
+            "encoding" => {
+                let (p, i) = value
+                    .split_once('+')
+                    .ok_or_else(|| format!("encoding must be <f32|f64>+<varint|u16>, got '{value}'"))?;
+                self.set("precision", p)?;
+                self.set("id-codec", i)?;
+            }
+            "codec" => {
+                self.codec = WireCodec::parse(value).ok_or_else(|| {
+                    format!("codec must be f64|f32|int8|sign|topk<k>, got '{value}'")
+                })?
+            }
             "shuffle-slots" => self.shuffle_slots = parse_bool(value)?,
             "echo" | "echo-enabled" => self.echo_enabled = parse_bool(value)?,
             "topk" => {
@@ -480,6 +505,7 @@ impl ExperimentConfig {
             }
             .to_string(),
         );
+        kv("codec", self.codec.name());
         kv("shuffle-slots", self.shuffle_slots.to_string());
         kv("echo", self.echo_enabled.to_string());
         kv("topk", self.topk.map_or_else(|| "off".to_string(), |k| k.to_string()));
@@ -671,6 +697,7 @@ mod tests {
         cfg.aggregator = Aggregator::TrimmedMean;
         cfg.precision = Precision::F64;
         cfg.id_codec = IdCodec::FixedU16;
+        cfg.codec = WireCodec::TopK(48);
         cfg.topk = Some(5);
         cfg.threads = 0;
         cfg.trace = TracePolicy::EveryK { every_k: 4, max_points: 64 };
@@ -684,6 +711,47 @@ mod tests {
         let mut back = ExperimentConfig::default();
         back.apply_file(&ExperimentConfig::default().to_config_string()).unwrap();
         assert_eq!(format!("{:?}", ExperimentConfig::default()), format!("{back:?}"));
+    }
+
+    #[test]
+    fn codec_parses_through_the_config_surface() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.codec, WireCodec::F64);
+        cfg.set("codec", "int8").unwrap();
+        assert_eq!(cfg.codec, WireCodec::Int8);
+        cfg.set("codec", "sign").unwrap();
+        assert_eq!(cfg.codec, WireCodec::Sign);
+        cfg.set("codec", "topk32").unwrap();
+        assert_eq!(cfg.codec, WireCodec::TopK(32));
+        assert!(cfg.set("codec", "gzip").is_err());
+        // And through the CLI argument surface.
+        let mut cfg = ExperimentConfig::default();
+        let args: Vec<String> = ["--codec", "sign"].iter().map(|s| s.to_string()).collect();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.codec, WireCodec::Sign);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn combined_encoding_key_reaches_fixed_u16() {
+        // `IdCodec::FixedU16` used to be settable only via the separate
+        // `--id-codec` knob; `--encoding` now sets both halves at once and
+        // a frame round-trips under the resulting encoding.
+        let mut cfg = ExperimentConfig::default();
+        let args: Vec<String> =
+            ["--encoding", "f64+u16"].iter().map(|s| s.to_string()).collect();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.precision, Precision::F64);
+        assert_eq!(cfg.id_codec, IdCodec::FixedU16);
+        let enc = cfg.encoding();
+        let p = crate::wire::Payload::Echo {
+            k: 2.5,
+            coeffs: vec![1.0, -0.5],
+            ids: vec![3, 1000],
+        };
+        assert_eq!(crate::wire::decode(&crate::wire::encode(&p, enc), enc).unwrap(), p);
+        assert!(cfg.set("encoding", "f64").is_err());
+        assert!(cfg.set("encoding", "f16+varint").is_err());
     }
 
     #[test]

@@ -221,9 +221,23 @@ pub fn aggregate<G: AsRef<[f64]>>(agg: Aggregator, grads: &[G], f: usize) -> Vec
             }
             out
         }
-        Aggregator::Krum => linalg::scale(n as f64, grads[krum_select(grads, f)].as_ref()),
-        Aggregator::CoordMedian => linalg::scale(n as f64, &coordinate_median(grads)),
-        Aggregator::TrimmedMean => linalg::scale(n as f64, &trimmed_mean(grads, f)),
+        // In-place scaling on the per-round path: the winner/statistic
+        // vector is already owned, so ×n costs zero extra allocations.
+        Aggregator::Krum => {
+            let mut out = grads[krum_select(grads, f)].as_ref().to_vec();
+            linalg::scale_mut(n as f64, &mut out);
+            out
+        }
+        Aggregator::CoordMedian => {
+            let mut out = coordinate_median(grads);
+            linalg::scale_mut(n as f64, &mut out);
+            out
+        }
+        Aggregator::TrimmedMean => {
+            let mut out = trimmed_mean(grads, f);
+            linalg::scale_mut(n as f64, &mut out);
+            out
+        }
     }
 }
 

@@ -41,6 +41,10 @@
 //!   loss probability, one series per recovery discipline
 //!   ([`Axis::Recovery`] — ARQ vs FEC vs hybrid) over
 //!   [`crate::sweep::presets::loss_recovery`].
+//! * [`paper_codec`] declares the wire-codec comparison (`--fig codec`):
+//!   bits on the air and final error per gradient codec
+//!   ([`Axis::Codec`] — f64/f32/int8/sign/top-k), echo on vs off as
+//!   series, over [`crate::sweep::presets::codec_sweep`].
 //! * [`apply_axis_specs`] implements the ad-hoc ablation mini-DSL
 //!   (`--axis n=10,20,50 --axis f=0..4`): comma lists or inclusive
 //!   `a..b` integer ranges per axis key. Unless `b` is given explicitly,
@@ -67,6 +71,7 @@ use crate::fec::Recovery;
 use crate::metrics::{CsvTable, Summary};
 use crate::radio::ChannelModel;
 use crate::sweep::{presets, SweepCell, SweepGrid, SweepProfile, SweepReport};
+use crate::wire::WireCodec;
 use std::fmt::Write as _;
 use std::fs;
 use std::io;
@@ -181,6 +186,9 @@ pub enum Axis {
     /// The uplink recovery discipline (`arq` / `fec` / `hybrid`) —
     /// categorical, the series axis of the `FIG_loss_recovery_*` family.
     Recovery,
+    /// The gradient wire codec (`f64` / `f32` / `int8` / `sign` /
+    /// `topk<k>`) — categorical, the x axis of the `FIG_codec_*` family.
+    Codec,
 }
 
 impl Axis {
@@ -197,6 +205,7 @@ impl Axis {
             Axis::Model => "model",
             Axis::Loss => "loss",
             Axis::Recovery => "recovery",
+            Axis::Codec => "codec",
         }
     }
 
@@ -213,6 +222,7 @@ impl Axis {
             "model" => Axis::Model,
             "loss" | "channel" => Axis::Loss,
             "recovery" => Axis::Recovery,
+            "codec" => Axis::Codec,
             _ => return None,
         })
     }
@@ -237,6 +247,7 @@ impl Axis {
                 None => AxisValue::Cat(c.channel.tag()),
             },
             Axis::Recovery => AxisValue::Cat(c.recovery.name().to_string()),
+            Axis::Codec => AxisValue::Cat(c.codec.name()),
         }
     }
 }
@@ -292,6 +303,7 @@ pub struct ReplicateCell {
     pub echo_enabled: bool,
     pub channel: ChannelModel,
     pub recovery: Recovery,
+    pub codec: WireCodec,
     /// Seeds of the replicates, in grid order.
     pub seeds: Vec<u64>,
     samples: Vec<SweepCell>,
@@ -310,6 +322,7 @@ impl ReplicateCell {
             && self.echo_enabled == c.echo_enabled
             && self.channel == c.channel
             && self.recovery == c.recovery
+            && self.codec == c.codec
     }
 
     /// Number of replicate samples in the group.
@@ -375,6 +388,7 @@ pub fn replicates(report: &SweepReport) -> Vec<ReplicateCell> {
                 echo_enabled: c.echo_enabled,
                 channel: c.channel,
                 recovery: c.recovery,
+                codec: c.codec,
                 seeds: vec![c.seed],
                 samples: vec![c.clone()],
             }),
@@ -674,8 +688,12 @@ pub fn paper_figure(id: FigId, profile: SweepProfile) -> FigureJob {
 #[derive(Clone, Debug)]
 pub struct LossFigureJob {
     pub grid: SweepGrid,
+    /// Shared x axis of every chart ([`Axis::Loss`] for the loss and
+    /// recovery families, [`Axis::Codec`] for `FIG_codec_*`).
+    pub x: Axis,
     /// Axis each chart splits its series on (σ for the loss family,
-    /// the recovery discipline for `FIG_loss_recovery_*`).
+    /// the recovery discipline for `FIG_loss_recovery_*`, echo on/off
+    /// for `FIG_codec_*`).
     pub series: Option<Axis>,
     /// `(metric, artifact stem, title, log_y)` per chart.
     pub charts: Vec<(Metric, &'static str, &'static str, bool)>,
@@ -692,7 +710,7 @@ impl LossFigureJob {
             .map(|&(metric, stem, title, log_y)| {
                 let spec = SeriesSpec {
                     metric,
-                    x: Axis::Loss,
+                    x: self.x,
                     series: self.series,
                     pins: vec![],
                 };
@@ -711,6 +729,7 @@ pub fn paper_loss(profile: SweepProfile) -> LossFigureJob {
     grid.seeds = replicate_seeds(profile);
     LossFigureJob {
         grid,
+        x: Axis::Loss,
         series: Some(Axis::Sigma),
         charts: vec![
             (
@@ -746,6 +765,7 @@ pub fn paper_loss_recovery(profile: SweepProfile) -> LossFigureJob {
     grid.seeds = replicate_seeds(profile);
     LossFigureJob {
         grid,
+        x: Axis::Loss,
         series: Some(Axis::Recovery),
         charts: vec![
             (
@@ -758,6 +778,37 @@ pub fn paper_loss_recovery(profile: SweepProfile) -> LossFigureJob {
                 Metric::FinalDistSq,
                 "FIG_loss_recovery_error",
                 "final ‖w − w*‖² vs loss (arq / fec / hybrid)",
+                true,
+            ),
+        ],
+    }
+}
+
+/// Declare the wire-codec comparison figure (`--fig codec`): one sweep
+/// over [`presets::codec_sweep`] — every gradient codec × echo on/off on
+/// a perfect channel — rendered as bits on the air and final error per
+/// codec. The headline trade: int8/sign/top-k cut the uplink by roughly
+/// their bits-per-coordinate ratio while the decode error they fold into
+/// the descent stays small enough to converge; echo stacks multiplicative
+/// savings on top of any codec.
+pub fn paper_codec(profile: SweepProfile) -> LossFigureJob {
+    let mut grid = presets::codec_sweep(profile);
+    grid.seeds = replicate_seeds(profile);
+    LossFigureJob {
+        grid,
+        x: Axis::Codec,
+        series: Some(Axis::Echo),
+        charts: vec![
+            (
+                Metric::BitsPerRound,
+                "FIG_codec_bits",
+                "uplink bits per round by wire codec (echo vs raw)",
+                false,
+            ),
+            (
+                Metric::FinalDistSq,
+                "FIG_codec_error",
+                "final ‖w − w*‖² by wire codec (echo vs raw)",
                 true,
             ),
         ],
@@ -812,6 +863,9 @@ pub fn swept_axes(grid: &SweepGrid) -> Vec<Axis> {
     }
     if grid.recoveries.len() > 1 {
         out.push(Axis::Recovery);
+    }
+    if grid.codecs.len() > 1 {
+        out.push(Axis::Codec);
     }
     out
 }
@@ -868,10 +922,13 @@ pub fn apply_axis_specs(grid: &mut SweepGrid, specs: &[String]) -> Result<(), St
             "recovery" => {
                 grid.recoveries = parse_named_list(val, Recovery::parse, "recovery")?
             }
+            "codec" | "codecs" => {
+                grid.codecs = parse_named_list(val, WireCodec::parse, "codec")?
+            }
             other => {
                 return Err(format!(
-                    "unknown axis '{other}' \
-                     (expected n|f|b|d|sigma|seed|attack|aggregator|model|echo|loss|recovery)"
+                    "unknown axis '{other}' (expected \
+                     n|f|b|d|sigma|seed|attack|aggregator|model|echo|loss|recovery|codec)"
                 ))
             }
         }
@@ -1036,6 +1093,7 @@ mod tests {
             echo_enabled: true,
             channel: ChannelModel::Perfect,
             recovery: Recovery::Arq,
+            codec: WireCodec::F64,
             echo_rate: 0.5,
             comm_savings: savings,
             final_loss: 0.1,
@@ -1172,6 +1230,7 @@ mod tests {
             Axis::Model,
             Axis::Loss,
             Axis::Recovery,
+            Axis::Codec,
         ] {
             assert_eq!(Axis::parse(a.name()), Some(a));
         }
@@ -1285,6 +1344,56 @@ mod tests {
     }
 
     #[test]
+    fn codec_axis_splits_series_and_keys_replicates() {
+        let a = cell(10, 0.05, 1, 0.6, None);
+        let mut b = a.clone();
+        b.codec = WireCodec::Int8;
+        let r = report(vec![a, b]);
+        let rc = replicates(&r);
+        assert_eq!(rc.len(), 2, "codec is part of the replicate key");
+        let series = select(
+            &rc,
+            &SeriesSpec {
+                metric: Metric::CommSavings,
+                x: Axis::Codec,
+                series: None,
+                pins: vec![],
+            },
+        );
+        // Categorical x keeps first-occurrence order: f64 then int8.
+        let xs: Vec<String> = series[0].points.iter().map(|p| p.x.label()).collect();
+        assert_eq!(xs, vec!["f64", "int8"]);
+    }
+
+    #[test]
+    fn paper_codec_declares_codec_axis_charts() {
+        for profile in [SweepProfile::Smoke, SweepProfile::Full] {
+            let job = paper_codec(profile);
+            assert_eq!(job.x, Axis::Codec);
+            assert_eq!(job.series, Some(Axis::Echo));
+            assert_eq!(job.grid.codecs, WireCodec::sweep_set().to_vec());
+            assert_eq!(job.grid.codecs[0], WireCodec::F64, "axis anchors at the identity");
+            assert!(job.grid.seeds.len() >= 2, "codec figure needs replicate seeds");
+            assert_eq!(job.grid.echo, vec![true, false]);
+            let stems: Vec<&str> = job.charts.iter().map(|c| c.1).collect();
+            assert!(stems.contains(&"FIG_codec_bits"));
+            assert!(stems.contains(&"FIG_codec_error"));
+        }
+    }
+
+    #[test]
+    fn axis_dsl_codec_builds_the_codec_axis() {
+        let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
+        apply_axis_specs(&mut grid, &["codec=f64,int8,topk16".to_string()]).unwrap();
+        assert_eq!(
+            grid.codecs,
+            vec![WireCodec::F64, WireCodec::Int8, WireCodec::TopK(16)]
+        );
+        assert_eq!(swept_axes(&grid), vec![Axis::Codec]);
+        assert!(apply_axis_specs(&mut grid, &["codec=gzip".to_string()]).is_err());
+    }
+
+    #[test]
     fn axis_dsl_loss_builds_bernoulli_channels() {
         let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
         apply_axis_specs(&mut grid, &["loss=0,0.1,0.3".to_string()]).unwrap();
@@ -1336,6 +1445,8 @@ mod tests {
         fs::write(dir.join("FIG_a.csv"), "x\n").unwrap();
         fs::write(dir.join("BENCH_x.json"), "{}").unwrap();
         fs::write(dir.join("FIG_loss_report.json"), "{}").unwrap();
+        fs::write(dir.join("FIG_codec_bits.svg"), "<svg/>").unwrap();
+        fs::write(dir.join("FIG_codec_report.json"), "{}").unwrap();
         fs::write(dir.join("notes.txt"), "ignored").unwrap();
         let path = write_html_index(&dir).unwrap();
         let html = fs::read_to_string(&path).unwrap();
@@ -1345,6 +1456,8 @@ mod tests {
         assert!(html.contains("<a href=\"FIG_a.csv\">csv</a>"));
         assert!(html.contains("BENCH_x.json"));
         assert!(html.contains("FIG_loss_report.json"), "figure reports join the gallery");
+        assert!(html.contains("FIG_codec_bits.svg"), "codec charts join the gallery");
+        assert!(html.contains("FIG_codec_report.json"), "codec report joins the gallery");
         assert!(!html.contains("notes.txt"));
         let _ = fs::remove_dir_all(&dir);
     }

@@ -56,33 +56,75 @@ pub fn norm(a: &[f64]) -> f64 {
 }
 
 /// `y += alpha * x`.
+///
+/// Elementwise over fixed-width `[f64; 8]` chunks: each lane is
+/// independent (no cross-lane reduction), so the chunked layout changes
+/// no bit of the result while giving LLVM straight-line bodies it
+/// auto-vectorizes without `-ffast-math`.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (yk, xk) in (&mut yc).zip(&mut xc) {
+        for i in 0..8 {
+            yk[i] += alpha * xk[i];
+        }
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
         *yi += alpha * xi;
     }
 }
 
-/// `a * x` as a new vector.
+/// `a * x` as a new vector. Cold-path/test helper — per-round code uses
+/// the in-place [`scale_mut`] / [`axpy`] instead.
 pub fn scale(alpha: f64, x: &[f64]) -> Vec<f64> {
     x.iter().map(|v| alpha * v).collect()
 }
 
-/// In-place scale `x *= alpha`.
+/// In-place scale `x *= alpha` (chunked like [`axpy`]).
+#[inline]
 pub fn scale_mut(alpha: f64, x: &mut [f64]) {
-    for v in x.iter_mut() {
+    let mut xc = x.chunks_exact_mut(8);
+    for xk in &mut xc {
+        for v in xk.iter_mut() {
+            *v *= alpha;
+        }
+    }
+    for v in xc.into_remainder().iter_mut() {
         *v *= alpha;
     }
 }
 
-/// `a - b` as a new vector.
+/// `out ← a − b`, in place (no allocation; the per-round replacement for
+/// the allocating [`sub`]).
+#[inline]
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let mut oc = out.chunks_exact_mut(8);
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for ((ok, ak), bk) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..8 {
+            ok[i] = ak[i] - bk[i];
+        }
+    }
+    for ((o, x), y) in
+        oc.into_remainder().iter_mut().zip(ac.remainder().iter()).zip(bc.remainder().iter())
+    {
+        *o = x - y;
+    }
+}
+
+/// `a - b` as a new vector. Cold-path/test helper — per-round code uses
+/// [`sub_into`] with a reused buffer.
 pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b.iter()).map(|(x, y)| x - y).collect()
 }
 
-/// `a + b` as a new vector.
+/// `a + b` as a new vector. Cold-path/test helper.
 pub fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
@@ -145,13 +187,16 @@ where
     let mut v = rng.unit_vector(d);
     let mut lambda = 0.0;
     for _ in 0..iters {
-        let w = matvec(&v);
+        let mut w = matvec(&v);
         let n = norm(&w);
         if n < 1e-300 {
             return 0.0;
         }
         lambda = dot(&v, &w);
-        v = scale(1.0 / n, &w);
+        // Normalize in place and reuse the matvec output as the next
+        // iterate (no per-iteration allocation beyond matvec's own).
+        scale_mut(1.0 / n, &mut w);
+        v = w;
     }
     lambda
 }
@@ -228,5 +273,37 @@ mod tests {
         let a = vec![1.0, 2.0, 3.0];
         let b = vec![0.0, 0.0, 7.0];
         assert!((dist(&a, &b) - norm(&sub(&a, &b))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sub_into_matches_sub_across_chunk_remainders() {
+        // Exercise lengths around the 8-wide chunk boundary so both the
+        // chunked body and the remainder tail are covered.
+        for d in [0usize, 1, 7, 8, 9, 16, 23, 64] {
+            let a: Vec<f64> = (0..d).map(|i| (i as f64).sin()).collect();
+            let b: Vec<f64> = (0..d).map(|i| (i as f64 * 0.7).cos()).collect();
+            let mut out = vec![f64::NAN; d];
+            sub_into(&a, &b, &mut out);
+            assert_eq!(out, sub(&a, &b), "d={d}");
+        }
+    }
+
+    #[test]
+    fn chunked_axpy_and_scale_mut_are_bitwise_elementwise() {
+        for d in [1usize, 7, 8, 9, 31, 40] {
+            let x: Vec<f64> = (0..d).map(|i| (i as f64 + 0.3).sqrt()).collect();
+            let mut y: Vec<f64> = (0..d).map(|i| i as f64 * 0.11).collect();
+            let expect: Vec<f64> = y.iter().zip(x.iter()).map(|(yi, xi)| yi + 1.7 * xi).collect();
+            axpy(1.7, &x, &mut y);
+            let ya: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u64> = expect.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ya, yb, "axpy d={d}");
+
+            let mut z = x.clone();
+            scale_mut(-0.5, &mut z);
+            let za: Vec<u64> = z.iter().map(|v| v.to_bits()).collect();
+            let zb: Vec<u64> = x.iter().map(|v| (v * -0.5).to_bits()).collect();
+            assert_eq!(za, zb, "scale_mut d={d}");
+        }
     }
 }

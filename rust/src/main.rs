@@ -8,7 +8,7 @@
 //! * `analyze`        — print the theory constants (β, γ, ρ, r-bound, C, …)
 //! * `figures`        — reproduce the paper's figures. Measured,
 //!                      sweep-engine-backed with replicate seeds:
-//!                      `--fig 2|3|4|curves|loss|swarm|all --profile
+//!                      `--fig 2|3|4|curves|loss|codec|swarm|all --profile
 //!                      smoke|full`
 //!                      (writes `results/FIG_*.{svg,csv}`; `curves` is
 //!                      the faceted error-vs-round figure from a traced
@@ -71,7 +71,10 @@
 //! `--recovery arq|fec|hybrid` — how a lost uplink frame is recovered:
 //! whole-frame retransmission (`arq`, the default), Reed–Solomon shard
 //! coding with zero retransmissions (`fec`), or sharding with an ARQ
-//! tail (`hybrid`).
+//! tail (`hybrid`) — and `--codec f64|f32|int8|sign|topk<k>`, the
+//! gradient wire codec: a lossy re-encoding of dense frames whose decode
+//! error folds into convergence (`f64`, the default, is the identity —
+//! legacy bytes exactly).
 //!
 //! Examples:
 //! ```text
@@ -82,6 +85,9 @@
 //! echo-cgc figures --fig curves --profile smoke --threads auto
 //! echo-cgc figures --fig loss --profile smoke --threads auto
 //! echo-cgc figures --fig loss-recovery --profile smoke --threads auto
+//! echo-cgc figures --fig codec --profile smoke --threads auto
+//! echo-cgc train --n 20 --f 2 --codec int8
+//! echo-cgc sweep --grid codec --profile smoke --threads auto
 //! echo-cgc figures --axis n=10,20,50 --axis f=0..4 --metric comm_savings
 //! echo-cgc figures --axis loss=0,0.1,0.3 --metric echo_rate
 //! echo-cgc figures --which all
@@ -112,8 +118,10 @@ fn usage() -> ! {
                         --trace summary|full|every_k=K,max=M (per-round trajectory retention)\n\
                         --channel perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg --uplink-retries <k> (lossy radio)\n\
                         --recovery arq|fec|hybrid (uplink loss recovery: retransmit, RS shard coding, or both)\n\
-         sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|loss|loss-recovery|quick --profile smoke|full --out <path>\n\
-         figures flags: --fig 2|3|4|curves|loss|loss-recovery|swarm|all --profile smoke|full --out-dir <dir> (paper figures)\n\
+                        --codec f64|f32|int8|sign|topk<k> (gradient wire codec; f64 = identity)\n\
+                        --encoding <f32|f64>+<varint|u16> (frame precision + echo-id codec, both halves at once)\n\
+         sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|loss|loss-recovery|codec|quick --profile smoke|full --out <path>\n\
+         figures flags: --fig 2|3|4|curves|loss|loss-recovery|codec|swarm|all --profile smoke|full --out-dir <dir> (paper figures)\n\
                         --axis key=v1,v2|a..b [--x axis] [--series axis] [--metric name] (ad-hoc ablation)\n\
                         --which 1a|1b|1c|1d|all (closed-form theory figures)\n\
          node flags:    --listen ADDR (server) | --id K --peers ADDR (worker); --deadline-ms <ms> (per round)\n\
@@ -566,8 +574,8 @@ fn cmd_sweep(
     });
     let mut grid = presets::by_name(grid_name, profile).unwrap_or_else(|| {
         eprintln!(
-            "unknown grid '{grid_name}' \
-             (expected attack-matrix|gv-baseline|comm-savings|convergence|loss|loss-recovery|quick)"
+            "unknown grid '{grid_name}' (expected attack-matrix|gv-baseline|comm-savings|\
+             convergence|loss|loss-recovery|codec|quick)"
         );
         std::process::exit(2);
     });
@@ -757,6 +765,7 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
         let mut want_curves = false;
         let mut want_loss = false;
         let mut want_recovery = false;
+        let mut want_codec = false;
         let mut want_swarm = false;
         let swarm_csv = format!("{out_dir}/BENCH_swarm_latency.csv");
         if figs == "all" {
@@ -764,6 +773,7 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
             want_curves = true;
             want_loss = true;
             want_recovery = true;
+            want_codec = true;
             // The swarm panel renders a measured bench CSV rather than
             // running a sweep — under `all` it is opportunistic, under an
             // explicit `--fig swarm` a missing CSV is an error.
@@ -788,6 +798,10 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                     want_recovery = true;
                     continue;
                 }
+                if v == "codec" || v == "codecs" {
+                    want_codec = true;
+                    continue;
+                }
                 if v == "swarm" {
                     want_swarm = true;
                     continue;
@@ -795,7 +809,7 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                 ids.push(FigId::parse(v).unwrap_or_else(|| {
                     eprintln!(
                         "unknown figure '{v}' \
-                         (expected 2|3|4|curves|loss|loss-recovery|swarm|all)"
+                         (expected 2|3|4|curves|loss|loss-recovery|codec|swarm|all)"
                     );
                     std::process::exit(2);
                 }));
@@ -867,6 +881,25 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                 println!("wrote {} + {}", csv_path.display(), svg_path.display());
             }
             println!("wrote {out_dir}/FIG_loss_recovery_report.json");
+        }
+        if want_codec {
+            let job = figures::paper_codec(profile);
+            println!(
+                "figures: FIG_codec — codec grid '{}', {} cells × profile {} on {} threads",
+                job.grid.name,
+                job.grid.len(),
+                profile.name(),
+                threads
+            );
+            let (report, charts) = job.run(threads);
+            report
+                .write_json(format!("{out_dir}/FIG_codec_report.json"))
+                .expect("write codec report");
+            for (chart, stem) in charts {
+                let (csv_path, svg_path) = chart.write(&out_dir, stem).expect("write figure");
+                println!("wrote {} + {}", csv_path.display(), svg_path.display());
+            }
+            println!("wrote {out_dir}/FIG_codec_report.json");
         }
         if want_swarm {
             let charts = figures::swarm::swarm_charts(&swarm_csv).unwrap_or_else(|e| {

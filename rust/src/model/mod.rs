@@ -112,9 +112,11 @@ pub fn estimate_sigma<M: CostModel + ?Sized>(
         return 0.0;
     }
     let mut acc = 0.0;
+    let mut diff = vec![0.0; full.len()];
     for _ in 0..samples {
         let g = m.stochastic_gradient(w, rng);
-        acc += crate::linalg::norm_sq(&crate::linalg::sub(&g, &full));
+        crate::linalg::sub_into(&g, &full, &mut diff);
+        acc += crate::linalg::norm_sq(&diff);
     }
     (acc / samples as f64 / fn2).sqrt()
 }

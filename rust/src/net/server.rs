@@ -52,7 +52,9 @@ use super::frame::{
 };
 use crate::radio::{BitMeter, Broadcast, TdmaSchedule};
 use crate::sim::{Outgoing, SlotResolution, Transport};
-use crate::wire::{decode, encode, Encoding, Payload};
+use crate::wire::{
+    decode, encode_ctx, CodecCtx, Encoding, Payload, WireCodec, DOWNLINK_SLOT,
+};
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
@@ -126,6 +128,14 @@ pub struct NetServerTransport {
     /// is slot `s`'s *final* outcome (a raw fallback replaces the echo
     /// entry before any digest carrying it is built).
     entries: Vec<DigestEntry>,
+    /// Gradient wire codec for the downlink. Uplinks arrive already
+    /// codec-encoded by the worker processes; the server only re-encodes
+    /// what *it* puts on the air. [`WireCodec::F64`] is the identity.
+    codec: WireCodec,
+    /// Seed half of the codec dither hash — must match the workers'
+    /// derivation (`cfg.seed ^ 0xC0DE_C5EE_DD17_4E52`) for sim↔node
+    /// parity.
+    codec_seed: u64,
 }
 
 impl NetServerTransport {
@@ -153,7 +163,17 @@ impl NetServerTransport {
             deadline,
             round_start: Instant::now(),
             entries: Vec::with_capacity(n),
+            codec: WireCodec::F64,
+            codec_seed: 0,
         }
+    }
+
+    /// Set the downlink wire codec. The default ([`WireCodec::F64`])
+    /// leaves every frame byte-identical to the legacy encoding.
+    pub fn with_codec(mut self, codec: WireCodec, seed: u64) -> Self {
+        self.codec = codec;
+        self.codec_seed = seed;
+        self
     }
 
     /// Workers still connected.
@@ -263,7 +283,9 @@ impl Transport for NetServerTransport {
 
     fn downlink(&mut self, w: &[f64]) -> Vec<f64> {
         let p = Payload::Param(w.to_vec());
-        let bytes = encode(&p, self.enc);
+        let ctx =
+            CodecCtx { seed: self.codec_seed, round: self.round as u64, slot: DOWNLINK_SLOT };
+        let bytes = encode_ctx(&p, self.enc, self.codec, ctx);
         self.meter.charge_downlink((bytes.len() as u64) * 8);
         let frame = NetFrame::Downlink { round: self.round, bytes: bytes.clone() };
         for i in 0..self.n {

@@ -81,7 +81,11 @@ pub fn run_server_on(
     check_digest_bound(cfg.n, cfg.d, cfg.encoding())?;
     let wiring = Wiring::native(cfg)?;
     let conns = accept_workers(&listener, cfg.n, Duration::from_secs(60))?;
-    let transport = NetServerTransport::new(conns, cfg.encoding(), deadline);
+    // Same codec-seed derivation as `sim::radio_for` — the dither is a
+    // pure hash of (seed, round, slot, chunk), so worker processes and
+    // the in-memory engine produce identical bytes.
+    let transport = NetServerTransport::new(conns, cfg.encoding(), deadline)
+        .with_codec(cfg.codec, cfg.seed ^ 0xC0DE_C5EE_DD17_4E52);
     let mut sim = Simulation::from_wiring(cfg, wiring, transport);
     let mut events = Vec::with_capacity(cfg.rounds);
     let mut latencies_ms = Vec::with_capacity(cfg.rounds);

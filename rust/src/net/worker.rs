@@ -37,7 +37,7 @@ use crate::byzantine::{Attack, AttackCtx};
 use crate::config::ExperimentConfig;
 use crate::rng::Rng;
 use crate::sim::Wiring;
-use crate::wire::{decode, encode, Encoding, Payload};
+use crate::wire::{decode, encode_ctx, CodecCtx, Encoding, Payload, WireCodec};
 use crate::worker::EchoWorker;
 use std::collections::BTreeMap;
 use std::net::TcpStream;
@@ -178,6 +178,8 @@ impl Absorb<'_> {
 fn next_frame(
     stream: &mut TcpStream,
     enc: Encoding,
+    codec: WireCodec,
+    codec_seed: u64,
     me: usize,
     worker: &mut Option<EchoWorker>,
 ) -> Result<Ctl, String> {
@@ -198,7 +200,11 @@ fn next_frame(
                 // in-memory engine does for its hosted workers.
                 w.stats.echo_rounds -= 1;
                 w.stats.raw_rounds += 1;
-                let bytes = encode(&Payload::Raw(g), enc);
+                // Same (seed, round, slot) dither context the in-memory
+                // radio uses for this slot's fallback retransmission.
+                let ctx =
+                    CodecCtx { seed: codec_seed, round: round as u64, slot: me as u64 };
+                let bytes = encode_ctx(&Payload::Raw(g), enc, codec, ctx);
                 write_frame(stream, &NetFrame::Uplink { round, slot, bytes })
                     .map_err(|e| format!("worker {me}: fallback uplink failed: {e}"))?;
             }
@@ -219,6 +225,11 @@ pub fn run_worker(opts: NodeOpts) -> Result<(), String> {
     }
     let n = cfg.n;
     let enc = cfg.encoding();
+    let codec = cfg.codec;
+    // Same derivation as `sim::radio_for` and the swarm server — the
+    // codec dither is a pure hash of (seed, round, slot, chunk), so any
+    // process that knows the config reproduces the exact on-air bytes.
+    let codec_seed = cfg.seed ^ 0xC0DE_C5EE_DD17_4E52;
     let threads = cfg.effective_threads();
 
     let Wiring {
@@ -263,7 +274,7 @@ pub fn run_worker(opts: NodeOpts) -> Result<(), String> {
     let mut rounds_done = 0usize;
     loop {
         // ---- Downlink --------------------------------------------------
-        let frame = match next_frame(&mut stream, enc, me, &mut worker)? {
+        let frame = match next_frame(&mut stream, enc, codec, codec_seed, me, &mut worker)? {
             Ctl::Shutdown => return Ok(()),
             Ctl::Frame(f) => f,
         };
@@ -315,7 +326,7 @@ pub fn run_worker(opts: NodeOpts) -> Result<(), String> {
             attack_rng: &mut attack_rng,
             worker: &mut worker,
         };
-        match next_frame(&mut stream, enc, me, absorb.worker)? {
+        match next_frame(&mut stream, enc, codec, codec_seed, me, absorb.worker)? {
             Ctl::Shutdown => return Ok(()),
             Ctl::Frame(NetFrame::RoundDigest { round: r, start: 0, entries })
                 if r == round && entries.len() == me =>
@@ -354,7 +365,11 @@ pub fn run_worker(opts: NodeOpts) -> Result<(), String> {
         };
         match outgoing {
             Some(p) => {
-                let bytes = encode(&p, enc);
+                // Codec-encode exactly as the in-memory radio does for
+                // this (round, slot) — the server relays these bytes
+                // verbatim, so every listener decodes the same payload.
+                let ctx = CodecCtx { seed: codec_seed, round: round as u64, slot: me as u64 };
+                let bytes = encode_ctx(&p, enc, codec, ctx);
                 if is_byz {
                     // Our own slot's on-air payload, as decoded by
                     // receivers — later attacks may reference it.
@@ -370,7 +385,7 @@ pub fn run_worker(opts: NodeOpts) -> Result<(), String> {
         }
 
         // ---- Tail digest: the rest of the round ------------------------
-        match next_frame(&mut stream, enc, me, absorb.worker)? {
+        match next_frame(&mut stream, enc, codec, codec_seed, me, absorb.worker)? {
             Ctl::Shutdown => return Ok(()),
             Ctl::Frame(NetFrame::RoundDigest { round: r, start, entries })
                 if r == round && start == me + 1 && entries.len() == n - me - 1 =>

@@ -42,7 +42,10 @@ pub mod multihop;
 pub use channel::{Channel, ChannelModel};
 
 use crate::fec::{self, Recovery};
-use crate::wire::{bit_len, decode, digest, encode, Encoding, Payload};
+use crate::wire::{
+    bit_len, decode, digest, encode, encode_ctx, CodecCtx, Encoding, Payload, WireCodec,
+    DOWNLINK_SLOT,
+};
 
 /// Node identifier = TDMA slot index in `0..n`. The server is not a slot
 /// owner (it transmits in the downlink phase, not in worker slots).
@@ -321,7 +324,7 @@ impl SlotCursor {
         payload: &Payload,
     ) -> Broadcast {
         let enc = net.encoding;
-        let bytes = encode(payload, enc);
+        let bytes = encode_ctx(payload, enc, net.codec, net.codec_ctx(slot));
         let bits1 = (bytes.len() as u64) * 8;
         let n = net.schedule.n_slots();
         let round = net.round;
@@ -385,14 +388,15 @@ impl SlotCursor {
         allow_retries: bool,
     ) -> Broadcast {
         let enc = net.encoding;
-        let bytes = encode(payload, enc);
+        let ctx = net.codec_ctx(slot);
+        let bytes = encode_ctx(payload, enc, net.codec, ctx);
         let commitment = digest(&bytes);
         let k = fec::FEC_DATA_SHARDS;
         let total = fec::FEC_DATA_SHARDS + fec::FEC_PARITY_SHARDS;
         let shards =
             fec::encode(&bytes, k, fec::FEC_PARITY_SHARDS).expect("frame fits GF(256) shard bounds");
         let alt_body_len = listener_payload
-            .map(|p| fec::shard_len(encode(p, enc).len(), k))
+            .map(|p| fec::shard_len(encode_ctx(p, enc, net.codec, ctx).len(), k))
             .unwrap_or(0);
         let body_len = shards[0].len().max(alt_body_len);
         // Shard wire format: 1 index byte + 8 commitment bytes + body.
@@ -461,7 +465,7 @@ impl SlotCursor {
             decode(&bytes, enc).expect("self-encoded frame must decode")
         };
         let heard_payload = listener_payload.and_then(|p| {
-            let alt_bytes = encode(p, enc);
+            let alt_bytes = encode_ctx(p, enc, net.codec, ctx);
             if digest(&alt_bytes) == commitment {
                 None // identical content — not actually equivocal
             } else {
@@ -605,6 +609,14 @@ pub struct RadioNetwork {
     /// behaviour, byte-identical), Reed–Solomon shard spreading, or FEC
     /// with an ARQ tail.
     recovery: Recovery,
+    /// Gradient wire codec applied to every frame on the air (raw uplinks,
+    /// echo fallbacks, the downlink). [`WireCodec::F64`] is the identity —
+    /// the legacy bytes exactly.
+    codec: WireCodec,
+    /// Seed of the codec's stochastic-rounding dither (a pure hash of
+    /// `(codec_seed, round, slot, chunk, lane)` — no RNG stream consumed,
+    /// so codecs are bit-identical at every thread count).
+    codec_seed: u64,
     /// Round counter — the channel's `round` coordinate (advanced by
     /// [`RadioRound::finish`]).
     round: usize,
@@ -633,6 +645,8 @@ impl RadioNetwork {
             channel: Channel::new(model, seed, n + 1),
             uplink_retries: retries,
             recovery: Recovery::Arq,
+            codec: WireCodec::F64,
+            codec_seed: 0,
             round: 0,
         }
     }
@@ -646,6 +660,23 @@ impl RadioNetwork {
 
     pub fn recovery(&self) -> Recovery {
         self.recovery
+    }
+
+    /// Select the gradient wire codec (builder style; the default is
+    /// [`WireCodec::F64`], the identity — legacy frames byte-for-byte).
+    pub fn with_codec(mut self, codec: WireCodec, seed: u64) -> Self {
+        self.codec = codec;
+        self.codec_seed = seed;
+        self
+    }
+
+    pub fn codec(&self) -> WireCodec {
+        self.codec
+    }
+
+    /// Dither coordinates for a worker-slot transmission this round.
+    fn codec_ctx(&self, slot: usize) -> CodecCtx {
+        CodecCtx { seed: self.codec_seed, round: self.round as u64, slot: slot as u64 }
     }
 
     pub fn with_schedule(schedule: TdmaSchedule, encoding: Encoding) -> Self {
@@ -668,10 +699,15 @@ impl RadioNetwork {
     }
 
     /// Server downlink broadcast of the parameter (computation phase step 1).
-    /// Returns the payload as decoded by the workers.
+    /// Returns the payload as decoded by the workers. Rides the network's
+    /// codec when the codec supports parameter frames (`f32`, `int8`;
+    /// `sign`/`topk` are gradient-shaped and leave the downlink at legacy
+    /// encoding), with the reserved [`DOWNLINK_SLOT`] dither coordinate so
+    /// downlink dither never collides with any worker slot's.
     pub fn downlink(&mut self, w: &[f64]) -> Vec<f64> {
         let p = Payload::Param(w.to_vec());
-        let bytes = encode(&p, self.encoding);
+        let ctx = CodecCtx { seed: self.codec_seed, round: self.round as u64, slot: DOWNLINK_SLOT };
+        let bytes = encode_ctx(&p, self.encoding, self.codec, ctx);
         self.meter.charge_downlink((bytes.len() as u64) * 8);
         match decode(&bytes, self.encoding).expect("self-encoded frame must decode") {
             Payload::Param(v) => v,
@@ -685,6 +721,9 @@ impl RadioNetwork {
     }
 
     /// Bit cost a frame *would* have (used by attacks sizing their frames).
+    /// Deliberately the *legacy* (codec-free) length: attack frame-sizing
+    /// and the comm-savings denominator stay on the uncompressed baseline,
+    /// so codec gains show up in the measured bits, not in a moving target.
     pub fn frame_bits(&self, p: &Payload) -> u64 {
         bit_len(p, self.encoding)
     }
@@ -1015,5 +1054,108 @@ mod tests {
         };
         assert_eq!(mk(Recovery::Arq), mk(Recovery::Arq));
         assert_eq!(RadioNetwork::new(2, Encoding::default()).recovery(), Recovery::Arq);
+    }
+
+    #[test]
+    fn f64_codec_leaves_the_meter_byte_identical() {
+        let mk = |net: &mut RadioNetwork| {
+            let mut round = net.begin_round();
+            let bc = round.broadcast(0, 0, &raw(0.25, 33));
+            round.silence(1);
+            round.finish();
+            (bc.bits, bc.payload)
+        };
+        let mut legacy = RadioNetwork::new(2, Encoding::default());
+        let mut f64c =
+            RadioNetwork::new(2, Encoding::default()).with_codec(crate::wire::WireCodec::F64, 77);
+        assert_eq!(mk(&mut legacy), mk(&mut f64c));
+        assert_eq!(RadioNetwork::new(2, Encoding::default()).codec(), crate::wire::WireCodec::F64);
+    }
+
+    #[test]
+    fn int8_codec_shrinks_the_uplink_and_decodes_close() {
+        use crate::wire::{Precision, WireCodec};
+        let enc = Encoding { precision: Precision::F64, ..Encoding::default() };
+        let g: Vec<f64> = (0..300).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut legacy = RadioNetwork::new(2, enc);
+        let mut q8 = RadioNetwork::new(2, enc).with_codec(WireCodec::Int8, 5);
+        let run = |net: &mut RadioNetwork| {
+            let mut round = net.begin_round();
+            let bc = round.broadcast(0, 0, &Payload::Raw(g.clone()));
+            round.silence(1);
+            round.finish();
+            bc
+        };
+        let b_legacy = run(&mut legacy);
+        let b_q8 = run(&mut q8);
+        assert!(
+            b_q8.bits * 6 < b_legacy.bits,
+            "int8 must cut the 64-bit uplink well past 6x: {} vs {}",
+            b_q8.bits,
+            b_legacy.bits
+        );
+        let got = match b_q8.payload {
+            Payload::Raw(v) => v,
+            other => panic!("codec must decode back to raw, got {}", other.kind()),
+        };
+        // Per-chunk step = max|v|/127 ≤ 1/127; stochastic rounding stays
+        // within one step of the input.
+        for (q, o) in got.iter().zip(g.iter()) {
+            assert!((q - o).abs() <= 1.0 / 127.0 + 1e-12, "|{q} - {o}| > step");
+        }
+    }
+
+    #[test]
+    fn downlink_rides_the_codec() {
+        use crate::wire::{Precision, WireCodec};
+        let enc = Encoding { precision: Precision::F64, ..Encoding::default() };
+        let w: Vec<f64> = (0..200).map(|i| (i as f64 * 0.11).cos()).collect();
+        let mut legacy = RadioNetwork::new(2, enc);
+        legacy.downlink(&w);
+        let mut q8 = RadioNetwork::new(2, enc).with_codec(WireCodec::Int8, 5);
+        let got = q8.downlink(&w);
+        assert!(q8.meter.downlink_bits * 6 < legacy.meter.downlink_bits);
+        for (q, o) in got.iter().zip(w.iter()) {
+            assert!((q - o).abs() <= 1.0 / 127.0 + 1e-12);
+        }
+        // Gradient-shaped codecs leave the parameter downlink at legacy
+        // encoding: same bits as no codec at all.
+        let mut sign = RadioNetwork::new(2, enc).with_codec(WireCodec::Sign, 5);
+        let got = sign.downlink(&w);
+        assert_eq!(sign.meter.downlink_bits, legacy.meter.downlink_bits);
+        assert_eq!(got, w);
+    }
+
+    #[test]
+    fn codec_applies_to_fec_shard_streams_too() {
+        use crate::wire::{Precision, WireCodec};
+        let enc = Encoding { precision: Precision::F64, ..Encoding::default() };
+        let g: Vec<f64> = (0..300).map(|i| (i as f64 * 0.21).sin()).collect();
+        let run = |codec| {
+            let mut net = RadioNetwork::new(2, enc)
+                .with_recovery(Recovery::Fec)
+                .with_codec(codec, 5);
+            let mut round = net.begin_round();
+            let bc = round.broadcast(0, 0, &Payload::Raw(g.clone()));
+            round.silence(1);
+            round.finish();
+            bc
+        };
+        let b_legacy = run(WireCodec::F64);
+        let b_sign = run(WireCodec::Sign);
+        assert!(b_sign.server_got && b_legacy.server_got);
+        assert!(
+            b_sign.bits * 20 < b_legacy.bits,
+            "sign shards must be far smaller: {} vs {}",
+            b_sign.bits,
+            b_legacy.bits
+        );
+        // The commitment is over the codec-encoded frame, so listeners
+        // verify the same bytes the server reconstructs.
+        assert!(b_sign.commitment.is_some());
+        match b_sign.payload {
+            Payload::Raw(v) => assert_eq!(v.len(), g.len()),
+            other => panic!("wrong kind {}", other.kind()),
+        }
     }
 }

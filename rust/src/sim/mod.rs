@@ -227,6 +227,11 @@ fn radio_for(cfg: &ExperimentConfig) -> RadioNetwork {
         cfg.uplink_retries,
     )
     .with_recovery(cfg.recovery)
+    // The codec dither seed is likewise a pure function of the experiment
+    // seed (different salt than the channel so the two hash streams never
+    // alias); `--codec f64` encodes legacy bytes, so default cells stay
+    // byte-identical.
+    .with_codec(cfg.codec, cfg.seed ^ 0xC0DE_C5EE_DD17_4E52)
 }
 
 /// A fully-wired experiment, generic over its communication substrate

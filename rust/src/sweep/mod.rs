@@ -50,6 +50,7 @@ use crate::metrics::{CsvTable, Json};
 use crate::radio::ChannelModel;
 use crate::sim::{ChannelTotals, PhaseTimings, Simulation};
 use crate::trace::{RoundEvent, TracePolicy};
+use crate::wire::WireCodec;
 use std::io;
 use std::path::Path;
 
@@ -123,7 +124,7 @@ pub fn auto_threads() -> usize {
 /// the base config's value; non-empty axes multiply into a cross-product
 /// enumerated in a fixed nesting order (outermost → innermost): `nfb`,
 /// `models`, `sigmas`, `dims`, `attacks`, `aggregators`, `echo`,
-/// `channels`, `recoveries`, `seeds`.
+/// `channels`, `recoveries`, `codecs`, `seeds`.
 #[derive(Clone, Debug)]
 pub struct SweepGrid {
     pub name: String,
@@ -145,6 +146,11 @@ pub struct SweepGrid {
     /// pre-FEC discipline), Reed–Solomon shard spreading, or hybrid.
     /// Nested inside `channels` so each loss rate compares disciplines.
     pub recoveries: Vec<Recovery>,
+    /// The gradient wire-codec axis ([`crate::wire::WireCodec`]): lossy
+    /// uplink/downlink re-encodings traded against convergence. Nested
+    /// inside `recoveries` so each discipline compares codecs under
+    /// identical channel draws.
+    pub codecs: Vec<WireCodec>,
     pub seeds: Vec<u64>,
 }
 
@@ -163,6 +169,7 @@ impl SweepGrid {
             echo: Vec::new(),
             channels: Vec::new(),
             recoveries: Vec::new(),
+            codecs: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -185,6 +192,7 @@ impl SweepGrid {
         let echoes = axis(&self.echo, self.base.echo_enabled);
         let channels = axis(&self.channels, self.base.channel);
         let recoveries = axis(&self.recoveries, self.base.recovery);
+        let codecs = axis(&self.codecs, self.base.codec);
         let seeds = axis(&self.seeds, self.base.seed);
         let mut out = Vec::new();
         for &(n, f, b) in &nfb {
@@ -196,21 +204,24 @@ impl SweepGrid {
                                 for &echo in &echoes {
                                     for &channel in &channels {
                                         for &recovery in &recoveries {
-                                            for &seed in &seeds {
-                                                let mut cfg = self.base.clone();
-                                                cfg.n = n;
-                                                cfg.f = f;
-                                                cfg.b = b;
-                                                cfg.model = model;
-                                                cfg.sigma = sigma;
-                                                cfg.d = d;
-                                                cfg.attack = attack;
-                                                cfg.aggregator = agg;
-                                                cfg.echo_enabled = echo;
-                                                cfg.channel = channel;
-                                                cfg.recovery = recovery;
-                                                cfg.seed = seed;
-                                                out.push(cfg);
+                                            for &codec in &codecs {
+                                                for &seed in &seeds {
+                                                    let mut cfg = self.base.clone();
+                                                    cfg.n = n;
+                                                    cfg.f = f;
+                                                    cfg.b = b;
+                                                    cfg.model = model;
+                                                    cfg.sigma = sigma;
+                                                    cfg.d = d;
+                                                    cfg.attack = attack;
+                                                    cfg.aggregator = agg;
+                                                    cfg.echo_enabled = echo;
+                                                    cfg.channel = channel;
+                                                    cfg.recovery = recovery;
+                                                    cfg.codec = codec;
+                                                    cfg.seed = seed;
+                                                    out.push(cfg);
+                                                }
                                             }
                                         }
                                     }
@@ -280,6 +291,9 @@ pub struct SweepCell {
     /// The uplink recovery discipline the cell ran under (the `recovery`
     /// axis coordinate; serialized only when not the ARQ default).
     pub recovery: Recovery,
+    /// The gradient wire codec the cell ran under (the `codec` axis
+    /// coordinate; serialized only when not the f64 identity default).
+    pub codec: WireCodec,
     pub echo_rate: f64,
     pub comm_savings: f64,
     pub final_loss: f64,
@@ -364,6 +378,11 @@ impl SweepCell {
             pairs.push(("fec_recoveries", Json::Num(self.channel_totals.fec_recoveries as f64)));
             pairs.push(("equivocations", Json::Num(self.channel_totals.equivocations as f64)));
         }
+        // And for the codec axis: `codec=f64` is the identity encode, so
+        // default cells serialize the exact pre-codec schema byte for byte.
+        if self.codec != WireCodec::F64 {
+            pairs.push(("codec", Json::Str(self.codec.name())));
+        }
         if include_timings {
             pairs.push(("grad_ns", Json::Num(self.timings.grad_ns as f64)));
             pairs.push(("comm_ns", Json::Num(self.timings.comm_ns as f64)));
@@ -424,6 +443,7 @@ impl SweepReport {
     /// pure-ARQ reports render the exact pre-FEC CSV bytes.
     pub fn csv(&self) -> CsvTable {
         let with_recovery = self.cells.iter().any(|c| c.recovery != Recovery::Arq);
+        let with_codec = self.cells.iter().any(|c| c.codec != WireCodec::F64);
         let mut header = vec![
             "index",
             "label",
@@ -456,6 +476,13 @@ impl SweepReport {
         if with_recovery {
             let i = header.iter().position(|&h| h == "empirical_rho").unwrap();
             header.splice(i..i, ["recovery", "fec_recoveries", "equivocations"]);
+        }
+        // The codec column splices immediately before `empirical_rho` too
+        // (after any recovery columns), so pure-f64 reports keep the
+        // pre-codec CSV bytes.
+        if with_codec {
+            let i = header.iter().position(|&h| h == "empirical_rho").unwrap();
+            header.splice(i..i, ["codec"]);
         }
         let mut t = CsvTable::new(&header);
         let opt = |v: Option<f64>| v.map(|x| format!("{x}")).unwrap_or_default();
@@ -490,6 +517,9 @@ impl SweepReport {
                 row.push(c.recovery.name().to_string());
                 row.push(format!("{}", c.channel_totals.fec_recoveries));
                 row.push(format!("{}", c.channel_totals.equivocations));
+            }
+            if with_codec {
+                row.push(c.codec.name());
             }
             row.push(opt(c.empirical_rho));
             row.push(opt(c.theory_rho));
@@ -540,7 +570,7 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
     // channel suffix appears only for lossy cells (label stability for
     // the pre-channel artifact names).
     let label = format!(
-        "{}_{}_sigma{}_d{}_seed{}{}{}{}",
+        "{}_{}_sigma{}_d{}_seed{}{}{}{}{}",
         cfg.run_tag(),
         cfg.aggregator.name(),
         cfg.sigma,
@@ -557,6 +587,12 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
             String::new()
         } else {
             format!("_{}", cfg.recovery.name())
+        },
+        // f64 cells likewise keep their pre-codec labels.
+        if cfg.codec == WireCodec::F64 {
+            String::new()
+        } else {
+            format!("_{}", cfg.codec.name())
         }
     );
     let mut cell = SweepCell {
@@ -575,6 +611,7 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
         echo_enabled: cfg.echo_enabled,
         channel: cfg.channel,
         recovery: cfg.recovery,
+        codec: cfg.codec,
         echo_rate: f64::NAN,
         comm_savings: f64::NAN,
         final_loss: f64::NAN,
@@ -778,6 +815,33 @@ pub mod presets {
         grid
     }
 
+    /// Bits-on-the-air vs final error across the gradient wire codecs
+    /// (`echo-cgc figures --fig codec`, `echo-cgc sweep --grid codec`):
+    /// every [`WireCodec`] × echo on/off, on a perfect channel so the
+    /// only thing varying is the codec itself. The base encoding is
+    /// pinned to `f64` precision so the axis spans the full 64 → 32 → 8
+    /// → 1 bits-per-coordinate range against the uncompressed baseline.
+    pub fn codec_sweep(profile: SweepProfile) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.n = 20;
+        base.f = 2;
+        base.b = 2;
+        base.d = 100;
+        base.threads = 1;
+        base.trace = TracePolicy::Summary;
+        base.attack = AttackKind::Omniscient;
+        base.precision = crate::wire::Precision::F64;
+        base.rounds = match profile {
+            SweepProfile::Full => 120,
+            SweepProfile::Smoke => 40,
+        };
+        let mut grid = SweepGrid::new("codec", base);
+        grid.profile = profile;
+        grid.echo = vec![true, false];
+        grid.codecs = WireCodec::sweep_set().to_vec();
+        grid
+    }
+
     /// Tiny demonstration grid (`echo-cgc sweep --grid quick`).
     pub fn quick() -> SweepGrid {
         let mut base = ExperimentConfig::default();
@@ -804,6 +868,7 @@ pub mod presets {
             "convergence" => convergence(profile),
             "loss" | "loss-sweep" | "loss_sweep" => loss_sweep(profile),
             "loss-recovery" | "loss_recovery" => loss_recovery(profile),
+            "codec" | "codecs" => codec_sweep(profile),
             "quick" => quick(),
             _ => return None,
         })
@@ -896,6 +961,7 @@ mod tests {
             "convergence",
             "loss",
             "loss-recovery",
+            "codec",
             "quick",
         ] {
             let grid = presets::by_name(name, SweepProfile::Smoke).unwrap();
@@ -974,6 +1040,74 @@ mod tests {
         let csv = report.csv().to_string();
         assert!(csv.contains(",recovery,fec_recoveries,equivocations,"));
         assert!(csv.contains(",fec,"));
+    }
+
+    #[test]
+    fn f64_cells_serialize_the_pre_codec_schema_byte_identically() {
+        // A grid that never sets the codec axis and one that pins it to
+        // the f64 identity default must render the same bytes — JSON and
+        // CSV — including across the lossy/recovery conditional fields.
+        let mut base = tiny_grid().base;
+        base.rounds = 6;
+        let mut implicit = SweepGrid::new("golden-codec", base.clone());
+        implicit.channels = vec![ChannelModel::Bernoulli { p: 0.3 }];
+        implicit.recoveries = vec![Recovery::Arq, Recovery::Fec];
+        let mut explicit = implicit.clone();
+        explicit.codecs = vec![WireCodec::F64];
+        let a = implicit.run(1);
+        let b = explicit.run(1);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.csv().to_string(), b.csv().to_string());
+        // And the pre-codec schema carries no codec vocabulary at all.
+        let json = a.to_json().to_string();
+        assert!(!json.contains("\"codec\""));
+        assert!(!a.csv().to_string().contains("codec"));
+    }
+
+    #[test]
+    fn codec_cells_carry_the_field_and_label_suffix() {
+        let mut base = tiny_grid().base;
+        base.rounds = 6;
+        let mut grid = SweepGrid::new("codec-cells", base);
+        grid.codecs = vec![WireCodec::F64, WireCodec::Int8, WireCodec::TopK(4)];
+        let report = grid.run(1);
+        assert_eq!(report.cells.len(), 3);
+        let json = report.to_json().to_string();
+        // Exactly the two non-f64 cells carry the field.
+        assert_eq!(json.matches("\"codec\":").count(), 2);
+        assert!(json.contains("\"codec\":\"int8\""));
+        assert!(json.contains("\"codec\":\"topk4\""));
+        assert!(!report.cells[0].label.contains("int8"));
+        assert!(report.cells[1].label.ends_with("_int8"), "{}", report.cells[1].label);
+        assert!(report.cells[2].label.ends_with("_topk4"), "{}", report.cells[2].label);
+        // Compressed cells move fewer bits than the identity cell while
+        // still converging (error recorded, no build failure).
+        let f64_bits = report.cells[0].uplink_bits_total;
+        let int8 = &report.cells[1];
+        assert!(int8.error.is_none(), "{:?}", int8.error);
+        assert!(int8.uplink_bits_total < f64_bits, "int8 must shrink the uplink");
+        assert!(int8.final_loss.is_finite());
+        // The CSV gains the codec column for this report, spliced before
+        // empirical_rho.
+        let csv = report.csv().to_string();
+        assert!(csv.contains(",codec,empirical_rho,"));
+        assert!(csv.contains(",int8,"));
+    }
+
+    #[test]
+    fn codec_axis_nests_inside_recovery() {
+        let mut grid = tiny_grid();
+        grid.recoveries = vec![Recovery::Arq, Recovery::Fec];
+        grid.codecs = vec![WireCodec::F64, WireCodec::Sign];
+        grid.seeds = vec![1, 2];
+        // 2 sigmas × 2 aggregators × 2 recoveries × 2 codecs × 2 seeds.
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 32);
+        assert_eq!(cells[0].codec, WireCodec::F64);
+        assert_eq!(cells[0].seed, 1);
+        assert_eq!(cells[1].seed, 2);
+        assert_eq!(cells[2].codec, WireCodec::Sign);
+        assert_eq!(cells[4].recovery, Recovery::Fec);
     }
 
     #[test]

@@ -1,0 +1,668 @@
+//! Gradient wire codecs: lossy re-encodings of the dense payloads
+//! ([`Payload::Raw`] uplinks and fallbacks, [`Payload::Param`] downlinks)
+//! that trade decode error for bits on the air.
+//!
+//! The echo mechanism removes *whole frames*; a codec shrinks the frames
+//! that remain. Jin et al. (arXiv 1902.10336) show Byzantine-tolerant SGD
+//! survives 1-bit-per-coordinate stochastic sign compression — the codecs
+//! here let the simulator answer whether echoes still win at 1 bit/coord
+//! and whether echo-of-quantized composes (workers echo against the
+//! *decoded* basis, so the reconstruction error is physically real).
+//!
+//! ## Codecs
+//!
+//! * [`WireCodec::F64`] — identity: the legacy encode path, byte-for-byte
+//!   (the [`Encoding::precision`] knob still governs the float width).
+//!   This is the default; every pre-codec artifact stays byte-identical.
+//! * [`WireCodec::F32`] — force 4-byte floats on dense payloads. A no-op
+//!   under the default f32 encoding (the legacy frame already is f32);
+//!   under `--precision f64` the payload is re-framed with the
+//!   self-describing `TAG_F32` tag, because legacy frames do not embed
+//!   their float width and the decoder would otherwise read the 4-byte
+//!   values back as 8-byte doubles.
+//! * [`WireCodec::Int8`] — stochastic 8-bit quantization: per-chunk scale
+//!   `step = max|v| / 127` stored as one f32 per [`CODEC_CHUNK`] lanes,
+//!   values stochastically rounded to `q ∈ [−127, 127]` so the decode
+//!   `q · step` is unbiased.
+//! * [`WireCodec::Sign`] — 1-bit stochastic sign (Jin et al.): per-chunk
+//!   scale `s = max|v|`, each coordinate becomes `+s` with probability
+//!   `(1 + v/s)/2` and `−s` otherwise — unbiased at 1 bit/coordinate.
+//! * [`WireCodec::TopK`] — top-k magnitude sparsification: the k largest
+//!   |coordinates| survive (delta-varint indices + values), the rest
+//!   decode to zero. Deterministic (no dither).
+//!
+//! ## Determinism
+//!
+//! The stochastic rounding dither is a **pure hash** of
+//! `(codec seed, round, slot, chunk, lane)` — no RNG stream is consumed,
+//! so encodes are bit-identical at any `--threads` value and a node-mode
+//! worker process (which encodes its own uplink from the shared config)
+//! produces exactly the bytes the in-memory simulation predicts.
+//!
+//! Sign and top-k are *gradient* codecs: the server downlink stays on the
+//! legacy `Param` path under them (the server is mains-powered and the
+//! paper's cost metric is worker uplink bits; a sign-compressed parameter
+//! broadcast would destroy convergence for nothing). `F32`/`Int8` do
+//! compress the downlink. Echo frames (already `O(n) ≪ O(d)`) and the
+//! legacy `--topk` sparse baseline pass through unchanged.
+
+use super::{
+    decode, encode, put_varint, Encoding, Payload, Precision, WireError, TAG_F32, TAG_PARAM,
+    TAG_Q8, TAG_RAW, TAG_SIGN, TAG_TOPK,
+};
+
+/// Lanes covered by one stored codec scale (f32): 256 keeps the scale
+/// overhead at 4/256 = 1.6 % for int8 and 4/(256/8) = 12.5 % of the bit
+/// payload for sign, while staying tight enough that one outlier
+/// coordinate cannot flatten the resolution of a whole gradient.
+pub const CODEC_CHUNK: usize = 256;
+
+/// Decoder cap on the declared dimension of a codec frame. Q8/sign
+/// frames are already length-bounded by the buffer (≥ 1 bit per lane),
+/// but a hostile top-k frame could declare an astronomical `dim` in a
+/// handful of bytes and the decoder materializes `dim` f64 lanes — so
+/// every codec frame's `dim` is validated against this cap (2²⁴, above
+/// the d = 10⁷ bench ceiling) before any allocation.
+pub const MAX_CODEC_DIM: u64 = 1 << 24;
+
+/// The sentinel slot coordinate used for server-downlink dither draws
+/// (the downlink is not a TDMA slot; workers use their slot index).
+pub const DOWNLINK_SLOT: u64 = u64::MAX;
+
+/// Selectable gradient wire codec (`--codec`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireCodec {
+    /// Identity — the legacy encode path, byte-for-byte.
+    F64,
+    /// Force f32 floats on dense payloads.
+    F32,
+    /// Stochastic 8-bit quantization, per-chunk f32 scale.
+    Int8,
+    /// 1-bit stochastic sign, per-chunk f32 scale.
+    Sign,
+    /// Keep the k largest-magnitude coordinates, zero the rest.
+    TopK(usize),
+}
+
+impl WireCodec {
+    /// Canonical, filesystem-safe name (`f64`, `f32`, `int8`, `sign`,
+    /// `topk<k>`); [`WireCodec::parse`] round-trips it.
+    pub fn name(self) -> String {
+        match self {
+            WireCodec::F64 => "f64".into(),
+            WireCodec::F32 => "f32".into(),
+            WireCodec::Int8 => "int8".into(),
+            WireCodec::Sign => "sign".into(),
+            WireCodec::TopK(k) => format!("topk{k}"),
+        }
+    }
+
+    /// Parse a codec name: `f64 | f32 | int8 | sign | topk[=]<k>`
+    /// (`topk` alone defaults to k = 64).
+    pub fn parse(s: &str) -> Option<WireCodec> {
+        match s {
+            "f64" => return Some(WireCodec::F64),
+            "f32" => return Some(WireCodec::F32),
+            "int8" | "q8" => return Some(WireCodec::Int8),
+            "sign" | "1bit" => return Some(WireCodec::Sign),
+            "topk" | "top-k" => return Some(WireCodec::TopK(64)),
+            _ => {}
+        }
+        let rest = s.strip_prefix("topk").or_else(|| s.strip_prefix("top-k"))?;
+        let rest = rest.strip_prefix('=').unwrap_or(rest);
+        let k: usize = rest.parse().ok()?;
+        if k == 0 {
+            return None;
+        }
+        Some(WireCodec::TopK(k))
+    }
+
+    /// The codecs swept by the `codec` preset / figure job.
+    pub fn sweep_set() -> [WireCodec; 5] {
+        [
+            WireCodec::F64,
+            WireCodec::F32,
+            WireCodec::Int8,
+            WireCodec::Sign,
+            WireCodec::TopK(64),
+        ]
+    }
+}
+
+impl Default for WireCodec {
+    fn default() -> Self {
+        WireCodec::F64
+    }
+}
+
+/// The dither coordinates of one encode: every stochastic-rounding draw
+/// is a pure hash of `(seed, round, slot, chunk, lane)`.
+#[derive(Clone, Copy, Debug)]
+pub struct CodecCtx {
+    /// The codec seed (derived from the experiment seed, *not* a shared
+    /// RNG stream).
+    pub seed: u64,
+    pub round: u64,
+    /// TDMA slot of the sender; [`DOWNLINK_SLOT`] for the server.
+    pub slot: u64,
+}
+
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    z
+}
+
+/// Uniform dither in `[0, 1)` from the draw coordinates (pure function —
+/// the thread-invariance and node-parity anchor).
+#[inline]
+pub(crate) fn dither(seed: u64, round: u64, slot: u64, chunk: u64, lane: u64) -> f64 {
+    let mut h = seed ^ 0x9e37_79b9_7f4a_7c15;
+    h = mix(h ^ round.wrapping_mul(0xa076_1d64_78bd_642f));
+    h = mix(h ^ slot.wrapping_mul(0xe703_7ed1_a0b4_28db));
+    h = mix(h ^ chunk.wrapping_mul(0x8ebc_6af0_9c88_c6e3));
+    h = mix(h ^ lane.wrapping_mul(0x5899_65cc_7537_4cc3));
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Serialize a payload under `codec`. [`WireCodec::F64`] (and every
+/// payload kind a codec does not transform) falls through to the legacy
+/// [`encode`] byte-for-byte; the bit meter charges whatever this returns.
+pub fn encode_ctx(p: &Payload, enc: Encoding, codec: WireCodec, ctx: CodecCtx) -> Vec<u8> {
+    match (codec, p) {
+        (WireCodec::F64, _) => encode(p, enc),
+        // Legacy frames do not embed their float width (the decoder reads
+        // per `enc.precision`), so the down-cast is the identity when the
+        // session already encodes f32 and a self-describing `TAG_F32`
+        // frame when it encodes f64.
+        (WireCodec::F32, Payload::Raw(g)) => match enc.precision {
+            Precision::F32 => encode(p, enc),
+            Precision::F64 => encode_f32(g, TAG_RAW),
+        },
+        (WireCodec::F32, Payload::Param(w)) => match enc.precision {
+            Precision::F32 => encode(p, enc),
+            Precision::F64 => encode_f32(w, TAG_PARAM),
+        },
+        (WireCodec::Int8, Payload::Raw(g)) => encode_q8(g, TAG_RAW, ctx),
+        (WireCodec::Int8, Payload::Param(w)) => encode_q8(w, TAG_PARAM, ctx),
+        (WireCodec::Sign, Payload::Raw(g)) => encode_sign(g, ctx),
+        (WireCodec::TopK(k), Payload::Raw(g)) => encode_topk(g, *k, enc),
+        // Echoes, the legacy sparse baseline, and (under sign/top-k) the
+        // reliable parameter downlink ride the legacy path.
+        _ => encode(p, enc),
+    }
+}
+
+/// [`encode_ctx`] length in bits — codec-aware sibling of
+/// [`super::bit_len`].
+pub fn bit_len_ctx(p: &Payload, enc: Encoding, codec: WireCodec, ctx: CodecCtx) -> u64 {
+    (encode_ctx(p, enc, codec, ctx).len() as u64) * 8
+}
+
+fn encode_f32(xs: &[f64], kind: u8) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(2 + 10 + xs.len() * 4);
+    buf.push(TAG_F32);
+    buf.push(kind);
+    put_varint(&mut buf, xs.len() as u64);
+    for &x in xs {
+        buf.extend_from_slice(&(x as f32).to_le_bytes());
+    }
+    buf
+}
+
+fn encode_q8(xs: &[f64], kind: u8, ctx: CodecCtx) -> Vec<u8> {
+    let chunks = xs.len().div_ceil(CODEC_CHUNK);
+    let mut buf = Vec::with_capacity(2 + 10 + chunks * 4 + xs.len());
+    buf.push(TAG_Q8);
+    buf.push(kind);
+    put_varint(&mut buf, xs.len() as u64);
+    for (c, chunk) in xs.chunks(CODEC_CHUNK).enumerate() {
+        let m = chunk.iter().map(|v| v.abs()).filter(|a| a.is_finite()).fold(0.0f64, f64::max);
+        // The scale is stored (and therefore quantized against) as f32,
+        // so encoder and decoder agree on the exact step.
+        let step32 = (m / 127.0) as f32;
+        let step = step32 as f64;
+        buf.extend_from_slice(&step32.to_le_bytes());
+        for (l, &v) in chunk.iter().enumerate() {
+            let q: i8 = if step > 0.0 {
+                let u = dither(ctx.seed, ctx.round, ctx.slot, c as u64, l as u64);
+                // floor(v/step + u) is unbiased: E[q]·step = v.
+                ((v / step + u).floor()).clamp(-127.0, 127.0) as i8
+            } else {
+                0
+            };
+            buf.push(q as u8);
+        }
+    }
+    buf
+}
+
+fn encode_sign(xs: &[f64], ctx: CodecCtx) -> Vec<u8> {
+    let chunks = xs.len().div_ceil(CODEC_CHUNK);
+    let mut buf = Vec::with_capacity(1 + 10 + chunks * 4 + xs.len() / 8 + chunks);
+    buf.push(TAG_SIGN);
+    put_varint(&mut buf, xs.len() as u64);
+    for (c, chunk) in xs.chunks(CODEC_CHUNK).enumerate() {
+        let m = chunk.iter().map(|v| v.abs()).filter(|a| a.is_finite()).fold(0.0f64, f64::max);
+        let s32 = m as f32;
+        let s = s32 as f64;
+        buf.extend_from_slice(&s32.to_le_bytes());
+        let mut byte = 0u8;
+        for (l, &v) in chunk.iter().enumerate() {
+            // +s with probability (1 + v/s)/2 — unbiased: E = v.
+            let p = if s > 0.0 { (0.5 * (1.0 + v / s)).clamp(0.0, 1.0) } else { 0.5 };
+            let u = dither(ctx.seed, ctx.round, ctx.slot, c as u64, l as u64);
+            if u < p {
+                byte |= 1 << (l % 8);
+            }
+            if l % 8 == 7 {
+                buf.push(byte);
+                byte = 0;
+            }
+        }
+        if chunk.len() % 8 != 0 {
+            buf.push(byte);
+        }
+    }
+    buf
+}
+
+fn encode_topk(g: &[f64], k: usize, enc: Encoding) -> Vec<u8> {
+    let (dim, idx, vals) = match super::top_k_sparsify(g, k) {
+        Payload::SparseRaw { dim, idx, vals } => (dim, idx, vals),
+        _ => unreachable!("top_k_sparsify returns SparseRaw"),
+    };
+    let mut buf = Vec::with_capacity(1 + 10 + idx.len() * (3 + enc.precision.bytes()));
+    buf.push(TAG_TOPK);
+    put_varint(&mut buf, dim as u64);
+    put_varint(&mut buf, idx.len() as u64);
+    let mut prev = 0u64;
+    for &i in &idx {
+        let v = i as u64;
+        put_varint(&mut buf, v.wrapping_sub(prev));
+        prev = v;
+    }
+    match enc.precision {
+        Precision::F32 => {
+            for &x in &vals {
+                buf.extend_from_slice(&(x as f32).to_le_bytes());
+            }
+        }
+        Precision::F64 => {
+            for &x in &vals {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    buf
+}
+
+fn get_f32(buf: &[u8], pos: &mut usize) -> Result<f64, WireError> {
+    if buf.len().saturating_sub(*pos) < 4 {
+        return Err(WireError::Truncated);
+    }
+    let s = &buf[*pos..*pos + 4];
+    *pos += 4;
+    Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]) as f64)
+}
+
+fn get_codec_dim(buf: &[u8], pos: &mut usize) -> Result<usize, WireError> {
+    let d = super::get_varint(buf, pos)?;
+    if d > MAX_CODEC_DIM {
+        return Err(WireError::DimTooLarge(d));
+    }
+    Ok(d as usize)
+}
+
+/// Decode a `TAG_F32` body (tag already consumed): a dense payload whose
+/// 4-byte float width is declared by the frame itself, independent of the
+/// session [`Encoding::precision`].
+pub(crate) fn decode_f32(buf: &[u8], pos: &mut usize) -> Result<Payload, WireError> {
+    let kind = *buf.get(*pos).ok_or(WireError::Truncated)?;
+    *pos += 1;
+    if kind != TAG_RAW && kind != TAG_PARAM {
+        return Err(WireError::BadTag(kind));
+    }
+    let d = get_codec_dim(buf, pos)?;
+    let need = d.checked_mul(4).ok_or(WireError::Truncated)?;
+    if buf.len().saturating_sub(*pos) < need {
+        return Err(WireError::Truncated);
+    }
+    let mut out = Vec::with_capacity(d);
+    for i in 0..d {
+        let s = &buf[*pos + i * 4..*pos + i * 4 + 4];
+        out.push(f32::from_le_bytes([s[0], s[1], s[2], s[3]]) as f64);
+    }
+    *pos += need;
+    Ok(match kind {
+        TAG_RAW => Payload::Raw(out),
+        _ => Payload::Param(out),
+    })
+}
+
+/// Decode a `TAG_Q8` body (tag already consumed). Total: hostile lengths
+/// are validated against the buffer before any allocation.
+pub(crate) fn decode_q8(buf: &[u8], pos: &mut usize) -> Result<Payload, WireError> {
+    let kind = *buf.get(*pos).ok_or(WireError::Truncated)?;
+    *pos += 1;
+    if kind != TAG_RAW && kind != TAG_PARAM {
+        return Err(WireError::BadTag(kind));
+    }
+    let d = get_codec_dim(buf, pos)?;
+    let chunks = d.div_ceil(CODEC_CHUNK);
+    if buf.len().saturating_sub(*pos) < chunks * 4 + d {
+        return Err(WireError::Truncated);
+    }
+    let mut out = Vec::with_capacity(d);
+    let mut remaining = d;
+    while remaining > 0 {
+        let len = remaining.min(CODEC_CHUNK);
+        let step = get_f32(buf, pos)?;
+        for i in 0..len {
+            let q = buf[*pos + i] as i8;
+            out.push(q as f64 * step);
+        }
+        *pos += len;
+        remaining -= len;
+    }
+    Ok(match kind {
+        TAG_RAW => Payload::Raw(out),
+        _ => Payload::Param(out),
+    })
+}
+
+/// Decode a `TAG_SIGN` body (tag already consumed).
+pub(crate) fn decode_sign(buf: &[u8], pos: &mut usize) -> Result<Payload, WireError> {
+    let d = get_codec_dim(buf, pos)?;
+    let full = d / CODEC_CHUNK;
+    let rem = d % CODEC_CHUNK;
+    let chunks = d.div_ceil(CODEC_CHUNK);
+    let need = chunks * 4 + full * (CODEC_CHUNK / 8) + rem.div_ceil(8);
+    if buf.len().saturating_sub(*pos) < need {
+        return Err(WireError::Truncated);
+    }
+    let mut out = Vec::with_capacity(d);
+    let mut remaining = d;
+    while remaining > 0 {
+        let len = remaining.min(CODEC_CHUNK);
+        let s = get_f32(buf, pos)?;
+        for l in 0..len {
+            let bit = (buf[*pos + l / 8] >> (l % 8)) & 1 == 1;
+            out.push(if s == 0.0 {
+                0.0
+            } else if bit {
+                s
+            } else {
+                -s
+            });
+        }
+        *pos += len.div_ceil(8);
+        remaining -= len;
+    }
+    Ok(Payload::Raw(out))
+}
+
+/// Decode a `TAG_TOPK` body (tag already consumed) — densifies straight
+/// to [`Payload::Raw`] so the round engine (span fan-out, aggregation)
+/// sees a dense gradient with the sparsification error baked in.
+pub(crate) fn decode_topk(
+    buf: &[u8],
+    pos: &mut usize,
+    enc: Encoding,
+) -> Result<Payload, WireError> {
+    let dim = get_codec_dim(buf, pos)?;
+    let k = super::get_varint(buf, pos)? as usize;
+    if k > dim || buf.len().saturating_sub(*pos) < k {
+        return Err(WireError::Truncated);
+    }
+    let mut out = vec![0.0; dim];
+    let mut prev = 0u64;
+    let mut idx = Vec::with_capacity(k);
+    for i in 0..k {
+        let delta = super::get_varint(buf, pos)?;
+        let v = if i == 0 {
+            delta
+        } else {
+            prev.checked_add(delta).ok_or(WireError::VarintOverflow)?
+        };
+        if v >= dim as u64 {
+            return Err(WireError::Truncated);
+        }
+        idx.push(v as usize);
+        prev = v;
+    }
+    let w = enc.precision.bytes();
+    let need = k.checked_mul(w).ok_or(WireError::Truncated)?;
+    if buf.len().saturating_sub(*pos) < need {
+        return Err(WireError::Truncated);
+    }
+    for (i, &at) in idx.iter().enumerate() {
+        out[at] = match enc.precision {
+            Precision::F32 => {
+                let s = &buf[*pos + i * 4..*pos + i * 4 + 4];
+                f32::from_le_bytes([s[0], s[1], s[2], s[3]]) as f64
+            }
+            Precision::F64 => {
+                let s = &buf[*pos + i * 8..*pos + i * 8 + 8];
+                f64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
+            }
+        };
+    }
+    *pos += need;
+    Ok(Payload::Raw(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::wire::IdCodec;
+
+    fn ctx() -> CodecCtx {
+        CodecCtx { seed: 0xABCD, round: 3, slot: 5 }
+    }
+
+    fn enc() -> Encoding {
+        Encoding::default()
+    }
+
+    #[test]
+    fn f64_codec_is_byte_identical_to_legacy_encode() {
+        let mut rng = Rng::new(7);
+        for p in [
+            Payload::Raw(rng.normal_vec(300)),
+            Payload::Param(rng.normal_vec(40)),
+            Payload::Echo { k: 1.5, coeffs: vec![0.25, -1.0], ids: vec![0, 7] },
+        ] {
+            assert_eq!(encode_ctx(&p, enc(), WireCodec::F64, ctx()), encode(&p, enc()));
+        }
+    }
+
+    #[test]
+    fn f32_codec_under_f64_encoding_roundtrips_and_halves_bits() {
+        let e = Encoding { precision: Precision::F64, id_codec: IdCodec::Varint };
+        let mut rng = Rng::new(13);
+        let g = rng.normal_vec(500);
+        for p in [Payload::Raw(g.clone()), Payload::Param(g.clone())] {
+            let bytes = encode_ctx(&p, e, WireCodec::F32, ctx());
+            let full = encode(&p, e);
+            assert!(
+                (bytes.len() as f64) < 0.6 * full.len() as f64,
+                "{} vs {} bytes",
+                bytes.len(),
+                full.len()
+            );
+            let back = match (decode(&bytes, e).unwrap(), &p) {
+                (Payload::Raw(v), Payload::Raw(_)) => v,
+                (Payload::Param(v), Payload::Param(_)) => v,
+                (other, _) => panic!("payload kind changed: {}", other.kind()),
+            };
+            for (a, b) in g.iter().zip(&back) {
+                assert_eq!(f64::from(*a as f32).to_bits(), b.to_bits());
+            }
+        }
+        // Under the default f32 session encoding the codec is the identity
+        // (the legacy frame already carries 4-byte floats).
+        let d = Encoding::default();
+        let p = Payload::Raw(g);
+        assert_eq!(encode_ctx(&p, d, WireCodec::F32, ctx()), encode(&p, d));
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bounded_by_step() {
+        let mut rng = Rng::new(9);
+        let g = rng.normal_vec(1000);
+        let bytes = encode_ctx(&Payload::Raw(g.clone()), enc(), WireCodec::Int8, ctx());
+        let back = match decode(&bytes, enc()).unwrap() {
+            Payload::Raw(v) => v,
+            p => panic!("expected raw, got {}", p.kind()),
+        };
+        assert_eq!(back.len(), g.len());
+        for (c, chunk) in g.chunks(CODEC_CHUNK).enumerate() {
+            let m = chunk.iter().fold(0.0f64, |a, v| a.max(v.abs()));
+            let step = (m / 127.0) as f32 as f64;
+            for (l, &v) in chunk.iter().enumerate() {
+                let err = (back[c * CODEC_CHUNK + l] - v).abs();
+                assert!(err <= step * (1.0 + 1e-12), "err {err} > step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_bits_are_about_an_eighth_of_f64() {
+        let g = vec![0.5; 100_000];
+        let e = Encoding { precision: Precision::F64, id_codec: IdCodec::Varint };
+        let full = bit_len_ctx(&Payload::Raw(g.clone()), e, WireCodec::F64, ctx());
+        let q8 = bit_len_ctx(&Payload::Raw(g), e, WireCodec::Int8, ctx());
+        let ratio = full as f64 / q8 as f64;
+        assert!((7.0..9.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn sign_decodes_to_per_chunk_scale() {
+        let mut rng = Rng::new(11);
+        let g = rng.normal_vec(600);
+        let bytes = encode_ctx(&Payload::Raw(g.clone()), enc(), WireCodec::Sign, ctx());
+        let back = match decode(&bytes, enc()).unwrap() {
+            Payload::Raw(v) => v,
+            p => panic!("expected raw, got {}", p.kind()),
+        };
+        assert_eq!(back.len(), g.len());
+        for (c, chunk) in g.chunks(CODEC_CHUNK).enumerate() {
+            let s = chunk.iter().fold(0.0f64, |a, v| a.max(v.abs())) as f32 as f64;
+            for l in 0..chunk.len() {
+                let v = back[c * CODEC_CHUNK + l];
+                assert!(v == s || v == -s, "value {v} not ±{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sign_is_roughly_one_bit_per_coordinate() {
+        let g = vec![1.0; 100_000];
+        let bytes = encode_ctx(&Payload::Raw(g), enc(), WireCodec::Sign, ctx());
+        let bits_per_coord = (bytes.len() * 8) as f64 / 100_000.0;
+        assert!(bits_per_coord < 1.2, "{bits_per_coord} bits/coord");
+    }
+
+    #[test]
+    fn topk_decodes_dense_with_k_nonzeros() {
+        let g = vec![0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 2.5];
+        let bytes = encode_ctx(&Payload::Raw(g.clone()), enc(), WireCodec::TopK(3), ctx());
+        let back = match decode(&bytes, enc()).unwrap() {
+            Payload::Raw(v) => v,
+            p => panic!("expected raw, got {}", p.kind()),
+        };
+        assert_eq!(back.len(), g.len());
+        let nz: Vec<usize> = (0..back.len()).filter(|&i| back[i] != 0.0).collect();
+        assert_eq!(nz, vec![1, 3, 6]);
+    }
+
+    #[test]
+    fn quantization_is_unbiased_in_expectation() {
+        // Across many (round, slot) dither coordinates, the mean decode of
+        // a constant vector converges to the constant.
+        let d = 64;
+        let g = vec![0.3; d];
+        for codec in [WireCodec::Int8, WireCodec::Sign] {
+            let mut acc = 0.0;
+            let trials = 400;
+            for t in 0..trials {
+                let c = CodecCtx { seed: 42, round: t, slot: 1 };
+                let bytes = encode_ctx(&Payload::Raw(g.clone()), enc(), codec, c);
+                if let Payload::Raw(v) = decode(&bytes, enc()).unwrap() {
+                    acc += v.iter().sum::<f64>() / d as f64;
+                }
+            }
+            let mean = acc / trials as f64;
+            assert!(
+                (mean - 0.3).abs() < 0.05,
+                "{codec:?}: mean decode {mean} far from 0.3"
+            );
+        }
+    }
+
+    #[test]
+    fn dither_is_a_pure_function_of_coordinates() {
+        assert_eq!(dither(1, 2, 3, 4, 5).to_bits(), dither(1, 2, 3, 4, 5).to_bits());
+        assert_ne!(dither(1, 2, 3, 4, 5).to_bits(), dither(1, 2, 3, 4, 6).to_bits());
+        for args in [(0u64, 0u64, 0u64, 0u64, 0u64), (7, 1, 2, 3, 4)] {
+            let u = dither(args.0, args.1, args.2, args.3, args.4);
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn hostile_topk_dim_is_capped_before_allocation() {
+        let mut buf = vec![TAG_TOPK];
+        put_varint(&mut buf, u64::MAX); // astronomically-declared dim
+        put_varint(&mut buf, 1);
+        assert_eq!(
+            decode(&buf, enc()).unwrap_err(),
+            WireError::DimTooLarge(u64::MAX)
+        );
+    }
+
+    #[test]
+    fn hostile_codec_frames_return_typed_errors() {
+        let e = enc();
+        // Truncated q8: claims 600 lanes, provides nothing.
+        let mut q8 = vec![TAG_Q8, TAG_RAW];
+        put_varint(&mut q8, 600);
+        assert_eq!(decode(&q8, e).unwrap_err(), WireError::Truncated);
+        // Bad inner kind byte.
+        let bad_kind = [TAG_Q8, 0x7f, 0x01, 0x00, 0x00, 0x00, 0x00, 0x00];
+        assert_eq!(decode(&bad_kind, e).unwrap_err(), WireError::BadTag(0x7f));
+        // Truncated sign frame.
+        let mut sg = vec![TAG_SIGN];
+        put_varint(&mut sg, 1000);
+        assert_eq!(decode(&sg, e).unwrap_err(), WireError::Truncated);
+        // Truncated f32 frame: claims 500 lanes, provides none.
+        let mut f32f = vec![TAG_F32, TAG_RAW];
+        put_varint(&mut f32f, 500);
+        assert_eq!(decode(&f32f, e).unwrap_err(), WireError::Truncated);
+        // Bad inner kind byte on an f32 frame.
+        assert_eq!(decode(&[TAG_F32, 0x42, 0x01], e).unwrap_err(), WireError::BadTag(0x42));
+        // Trailing bytes after a valid q8 frame.
+        let mut ok = encode_ctx(&Payload::Raw(vec![1.0, -2.0]), e, WireCodec::Int8, ctx());
+        ok.push(0);
+        assert!(matches!(decode(&ok, e).unwrap_err(), WireError::TrailingBytes(1)));
+    }
+
+    #[test]
+    fn codec_names_round_trip() {
+        for codec in
+            [WireCodec::F64, WireCodec::F32, WireCodec::Int8, WireCodec::Sign, WireCodec::TopK(37)]
+        {
+            assert_eq!(WireCodec::parse(&codec.name()), Some(codec));
+        }
+        assert_eq!(WireCodec::parse("topk=16"), Some(WireCodec::TopK(16)));
+        assert_eq!(WireCodec::parse("topk"), Some(WireCodec::TopK(64)));
+        assert_eq!(WireCodec::parse("topk0"), None);
+        assert_eq!(WireCodec::parse("gzip"), None);
+    }
+}

@@ -10,17 +10,43 @@
 //! Frame grammar (all multi-byte integers little-endian):
 //!
 //! ```text
-//! frame      := tag:u8 body
-//! body(Raw)  := len:varint value*          // len values, one per dim
-//! body(Echo) := k:f64 nc:varint coeff*nc nid:varint id*    // Algorithm 1, line 21
-//! body(Param):= len:varint value*          // server downlink w^t
-//! value      := f32 | f64                  // per Encoding::precision
-//! id         := varint | u16               // per Encoding::id_codec
+//! frame       := tag:u8 body
+//! body(Raw)   := len:varint value*          // tag 0x01: len values, one per dim
+//! body(Echo)  := k:f64 nc:varint coeff*nc nid:varint id*  // tag 0x02 (Alg. 1, l. 21)
+//! body(Param) := len:varint value*          // tag 0x03: server downlink w^t
+//! body(Sparse):= dim:varint k:varint delta:varint*k value*k  // tag 0x04 (--topk baseline)
+//! body(Q8)    := kind:u8 dim:varint chunk*  // tag 0x05: --codec int8; kind = 0x01|0x03
+//! chunk(Q8)   := step:f32 q:i8*chunklen     // ≤256 lanes; decode = q·step
+//! body(Sign)  := dim:varint schunk*         // tag 0x06: --codec sign
+//! chunk(Sign) := s:f32 bits:u8*ceil(chunklen/8)  // bit=1 → +s, 0 → −s (LSB-first)
+//! body(TopK)  := dim:varint k:varint delta:varint*k value*k  // tag 0x07: --codec topkK
+//! body(F32)   := kind:u8 dim:varint f32*dim  // tag 0x08: --codec f32 under f64 precision
+//! value       := f32 | f64                  // per Encoding::precision
+//! id          := varint | u16               // per Encoding::id_codec
 //! ```
 //!
 //! Echo coefficients and `k` are always f64: there are at most `n ≪ d` of
 //! them, so their width is irrelevant to the bit count but matters for
 //! reconstruction accuracy.
+//!
+//! Tags `0x05–0x08` are the [`codec`] frames (`--codec`): lossy
+//! re-encodings of dense gradient payloads whose stochastic-rounding
+//! dither is a pure hash of `(codec seed, round, slot, chunk, lane)` —
+//! see [`codec::WireCodec`]. `Q8` and `F32` decode to `Raw` or `Param`
+//! per their inner `kind` byte; `Sign` and `TopK` decode to `Raw` (the
+//! decode error is physically real: the server aggregates, and workers
+//! echo against, the dequantized vectors). The `F32` tag exists because
+//! legacy `Raw`/`Param` frames do **not** embed their float width — the
+//! decoder reads whatever [`Encoding::precision`] says — so a down-cast
+//! frame under an f64 session encoding must carry its own tag to stay
+//! decodable. Codec frames cap their declared `dim` at
+//! [`codec::MAX_CODEC_DIM`] before any allocation.
+
+pub mod codec;
+
+pub use codec::{
+    bit_len_ctx, encode_ctx, CodecCtx, WireCodec, CODEC_CHUNK, DOWNLINK_SLOT, MAX_CODEC_DIM,
+};
 
 /// Floating-point width used for gradient / parameter payloads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,6 +124,10 @@ const TAG_RAW: u8 = 0x01;
 const TAG_ECHO: u8 = 0x02;
 const TAG_PARAM: u8 = 0x03;
 const TAG_SPARSE: u8 = 0x04;
+const TAG_Q8: u8 = 0x05;
+const TAG_SIGN: u8 = 0x06;
+const TAG_TOPK: u8 = 0x07;
+const TAG_F32: u8 = 0x08;
 
 /// Errors from [`decode`].
 #[derive(Debug, PartialEq, Eq)]
@@ -106,6 +136,9 @@ pub enum WireError {
     BadTag(u8),
     TrailingBytes(usize),
     VarintOverflow,
+    /// A codec frame declared a dimension above [`codec::MAX_CODEC_DIM`]
+    /// (rejected before the decoder materializes `dim` lanes).
+    DimTooLarge(u64),
 }
 
 impl std::fmt::Display for WireError {
@@ -115,6 +148,9 @@ impl std::fmt::Display for WireError {
             WireError::BadTag(t) => write!(f, "unknown frame tag {t:#x}"),
             WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes"),
             WireError::VarintOverflow => write!(f, "varint overflow"),
+            WireError::DimTooLarge(d) => {
+                write!(f, "declared dimension {d} exceeds the codec decode cap")
+            }
         }
     }
 }
@@ -363,6 +399,10 @@ pub fn decode(buf: &[u8], enc: Encoding) -> Result<Payload, WireError> {
             }
             Payload::Echo { k, coeffs, ids }
         }
+        TAG_Q8 => codec::decode_q8(buf, &mut pos)?,
+        TAG_SIGN => codec::decode_sign(buf, &mut pos)?,
+        TAG_TOPK => codec::decode_topk(buf, &mut pos, enc)?,
+        TAG_F32 => codec::decode_f32(buf, &mut pos)?,
         t => return Err(WireError::BadTag(t)),
     };
     if pos != buf.len() {

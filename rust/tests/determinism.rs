@@ -155,6 +155,26 @@ fn fec_recovery_under_loss_is_thread_invariant() {
 }
 
 #[test]
+fn lossy_codecs_are_thread_invariant() {
+    // Every codec dither draw is a pure hash of (codec_seed, round, slot,
+    // chunk, lane) — no shared RNG stream is consumed — so quantized runs
+    // are bit-identical at any thread count.
+    use echo_cgc::wire::WireCodec;
+    for codec in [WireCodec::F32, WireCodec::Int8, WireCodec::Sign, WireCodec::TopK(8)] {
+        let mut cfg = quadratic_cfg();
+        cfg.codec = codec;
+        assert_identical(&cfg, &format!("quadratic+codec={}", codec.name()));
+    }
+    // Quantization composed with a lossy channel and FEC shard streams:
+    // the full stochastic composition stays pure-hash end to end.
+    let mut cfg = quadratic_cfg();
+    cfg.channel = echo_cgc::radio::ChannelModel::Bernoulli { p: 0.25 };
+    cfg.recovery = echo_cgc::fec::Recovery::Fec;
+    cfg.codec = WireCodec::Int8;
+    assert_identical(&cfg, "quadratic+bernoulli(0.25)+fec+int8");
+}
+
+#[test]
 fn parallel_server_aggregation_is_thread_invariant() {
     // `threads` now also drives the server's aggregation phase (parallel
     // norm pass + coordinate-chunked CGC sum). Large-norm attackers force

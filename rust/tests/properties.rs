@@ -5,7 +5,10 @@ use echo_cgc::coordinator::{aggregate, cgc_filter, Aggregator, ParameterServer};
 use echo_cgc::linalg::{self, SpanProjector};
 use echo_cgc::prop::forall;
 use echo_cgc::rng::Rng;
-use echo_cgc::wire::{bit_len, decode, encode, Encoding, IdCodec, Payload, Precision};
+use echo_cgc::wire::{
+    bit_len, decode, encode, encode_ctx, CodecCtx, Encoding, IdCodec, Payload, Precision,
+    WireCodec, CODEC_CHUNK,
+};
 use echo_cgc::worker::EchoWorker;
 
 fn rand_encoding(rng: &mut Rng) -> Encoding {
@@ -86,6 +89,157 @@ fn prop_wire_decode_never_panics_on_corruption() {
                         bytes.push(g.rng.next_u64() as u8);
                     }
                 }
+            }
+            ((), (bytes, enc))
+        },
+        |(_, (bytes, enc))| {
+            let _ = decode(&bytes, enc); // must not panic; Err is fine
+            Ok(())
+        },
+    );
+}
+
+fn rand_codec(rng: &mut Rng) -> WireCodec {
+    match rng.range(0, 5) {
+        0 => WireCodec::F64,
+        1 => WireCodec::F32,
+        2 => WireCodec::Int8,
+        3 => WireCodec::Sign,
+        _ => WireCodec::TopK(1 + rng.range(0, 16)),
+    }
+}
+
+#[test]
+fn prop_codec_roundtrip_error_bounded() {
+    forall(
+        "codec decode error obeys the per-chunk quantization bound",
+        300,
+        |g| {
+            let d = 1 + g.rng.range(0, 600);
+            let v = g.rng.normal_vec(d);
+            let codec = rand_codec(&mut g.rng);
+            let ctx = CodecCtx {
+                seed: g.rng.next_u64(),
+                round: g.rng.range(0, 1000) as u64,
+                slot: g.rng.range(0, 64) as u64,
+            };
+            ((), (v, codec, ctx))
+        },
+        |(_, (v, codec, ctx))| {
+            let enc = Encoding { precision: Precision::F64, id_codec: IdCodec::Varint };
+            let bytes = encode_ctx(&Payload::Raw(v.clone()), enc, codec, ctx);
+            let back = match decode(&bytes, enc).map_err(|e| e.to_string())? {
+                Payload::Raw(b) => b,
+                other => return Err(format!("gradient decoded to {other:?}")),
+            };
+            if back.len() != v.len() {
+                return Err(format!("length {} != {}", back.len(), v.len()));
+            }
+            match codec {
+                WireCodec::F64 => {
+                    if back != v {
+                        return Err("f64 must be the identity".into());
+                    }
+                }
+                WireCodec::F32 => {
+                    for (a, b) in v.iter().zip(&back) {
+                        if f64::from(*a as f32) != *b {
+                            return Err("f32 must round each coordinate to f32".into());
+                        }
+                    }
+                }
+                WireCodec::Int8 => {
+                    // Unbiased rounding never strays more than one step
+                    // (= chunk max / 127, stored as f32 — hence the slack).
+                    for (ci, chunk) in v.chunks(CODEC_CHUNK).enumerate() {
+                        let m = chunk.iter().fold(0.0f64, |acc, x| acc.max(x.abs()));
+                        let step = (m / 127.0) * (1.0 + 1e-3) + 1e-12;
+                        for (j, x) in chunk.iter().enumerate() {
+                            let b = back[ci * CODEC_CHUNK + j];
+                            if (x - b).abs() > step {
+                                return Err(format!(
+                                    "int8 error {} > step {step}",
+                                    (x - b).abs()
+                                ));
+                            }
+                        }
+                    }
+                }
+                WireCodec::Sign => {
+                    // Every decoded coordinate is ±s with s the chunk's
+                    // max magnitude (as f32).
+                    for (ci, chunk) in v.chunks(CODEC_CHUNK).enumerate() {
+                        let m = chunk.iter().fold(0.0f64, |acc, x| acc.max(x.abs()));
+                        let bound = m * (1.0 + 1e-3) + 1e-12;
+                        for j in 0..chunk.len() {
+                            let b = back[ci * CODEC_CHUNK + j];
+                            if b.abs() > bound {
+                                return Err(format!(
+                                    "sign magnitude {} > chunk max {m}",
+                                    b.abs()
+                                ));
+                            }
+                        }
+                    }
+                }
+                WireCodec::TopK(k) => {
+                    // Densified reconstruction: at most k survivors, each
+                    // carried verbatim (f64 precision) at its own index.
+                    let nz = back.iter().filter(|x| **x != 0.0).count();
+                    if nz > k {
+                        return Err(format!("topk kept {nz} > k = {k} coordinates"));
+                    }
+                    for (i, b) in back.iter().enumerate() {
+                        if *b != 0.0 && *b != v[i] {
+                            return Err(format!("topk coord {i} altered: {b} vs {}", v[i]));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_codec_decode_total_on_hostile_frames() {
+    forall(
+        "codec decode is total on corrupted and adversarial frames",
+        500,
+        |g| {
+            let enc = rand_encoding(&mut g.rng);
+            let mut bytes = if g.rng.bool(0.5) {
+                let d = 1 + g.rng.range(0, 200);
+                let codec = rand_codec(&mut g.rng);
+                let ctx = CodecCtx { seed: g.rng.next_u64(), round: 0, slot: 0 };
+                encode_ctx(&Payload::Raw(g.rng.normal_vec(d)), enc, codec, ctx)
+            } else {
+                // Adversarial from scratch: a codec tag followed by
+                // garbage (huge dims, truncated scales, bogus deltas).
+                let tag = [0x05u8, 0x06, 0x07, 0x08][g.rng.range(0, 4)];
+                let mut b = vec![tag];
+                for _ in 0..g.rng.range(0, 24) {
+                    b.push(g.rng.next_u64() as u8);
+                }
+                b
+            };
+            match g.rng.range(0, 4) {
+                0 => {
+                    if !bytes.is_empty() {
+                        let i = g.rng.range(0, bytes.len());
+                        bytes[i] ^= 1 << g.rng.range(0, 8);
+                    }
+                }
+                1 => {
+                    let keep = g.rng.range(0, bytes.len() + 1);
+                    bytes.truncate(keep);
+                }
+                2 => {
+                    for _ in 0..g.rng.range(1, 8) {
+                        bytes.push(g.rng.next_u64() as u8);
+                    }
+                }
+                _ => {}
             }
             ((), (bytes, enc))
         },

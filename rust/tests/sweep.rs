@@ -90,11 +90,43 @@ fn invalid_cells_are_reported_not_fatal() {
 }
 
 #[test]
+fn default_codec_keeps_the_pre_codec_artifact_schema() {
+    use echo_cgc::wire::WireCodec;
+    // The exact CSV header the sweep emitted before the codec axis
+    // existed. Default (codec = f64) reports must keep it byte-for-byte —
+    // the codec column only splices in when a non-f64 cell is present, so
+    // every artifact produced by earlier PRs diffs clean against this one.
+    const PRE_CODEC_HEADER: &str = "index,label,n,f,b,d,model,attack,aggregator,sigma,seed,\
+                                    rounds,echo_enabled,channel,echo_rate,comm_savings,\
+                                    final_loss,final_dist_sq,uplink_bits_total,exposed,\
+                                    dropped_frames,retransmits,fallbacks,lost_slots,\
+                                    empirical_rho,theory_rho,error";
+    let implicit = small_grid().run(2);
+    let csv = implicit.csv().to_string();
+    assert_eq!(csv.lines().next().unwrap(), PRE_CODEC_HEADER);
+    let json = implicit.to_json().to_string();
+    assert!(!json.contains("codec"), "default reports must not mention the codec axis");
+    // Spelling the default out changes nothing: an explicit f64 axis is
+    // byte-identical to the implicit one.
+    let mut grid = small_grid();
+    grid.codecs = vec![WireCodec::F64];
+    let explicit = grid.run(2);
+    assert_eq!(json.as_bytes(), explicit.to_json().to_string().as_bytes());
+    assert_eq!(csv.as_bytes(), explicit.csv().to_string().as_bytes());
+}
+
+#[test]
 fn smoke_presets_stay_small() {
     use echo_cgc::sweep::{presets, SweepProfile};
-    for name in
-        ["attack-matrix", "gv-baseline", "comm-savings", "convergence", "loss", "loss-recovery"]
-    {
+    for name in [
+        "attack-matrix",
+        "gv-baseline",
+        "comm-savings",
+        "convergence",
+        "loss",
+        "loss-recovery",
+        "codec",
+    ] {
         let full = presets::by_name(name, SweepProfile::Full).unwrap();
         let smoke = presets::by_name(name, SweepProfile::Smoke).unwrap();
         assert!(smoke.len() <= full.len(), "{name}: smoke grid larger than full");

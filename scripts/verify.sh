@@ -21,6 +21,11 @@
 #                     hybrid across the loss axis, emitting the
 #                     FIG_loss_recovery_* charts and report (also run by
 #                     CI's bench-smoke job)
+#     codec-smoke   — the gradient wire-codec comparison
+#                     (`figures --fig codec`): f64/f32/int8/sign/topk,
+#                     echo on vs off, emitting the FIG_codec_* bits +
+#                     error charts and report (also run by CI's
+#                     bench-smoke job)
 #     trace-smoke   — a traced convergence sweep (`--trace`) plus the
 #                     faceted error-vs-round curves figure and the HTML
 #                     artifact index (results/FIG_curves.{svg,csv},
@@ -34,7 +39,8 @@
 #     all           — build-test + lint
 #
 #   --smoke-bench  — append the smoke-bench + figures-smoke + fec-smoke
-#                    + trace-smoke + swarm-smoke stages to `all`.
+#                    + codec-smoke + trace-smoke + swarm-smoke stages to
+#                    `all`.
 set -euo pipefail
 cd "$(dirname "$0")/.." || exit 1
 
@@ -42,7 +48,7 @@ STAGE=""
 SMOKE=0
 for arg in "$@"; do
   case "$arg" in
-    build-test|lint|smoke-bench|figures-smoke|fec-smoke|trace-smoke|swarm-smoke|all)
+    build-test|lint|smoke-bench|figures-smoke|fec-smoke|codec-smoke|trace-smoke|swarm-smoke|all)
       if [ -n "$STAGE" ]; then
         echo "verify.sh: multiple stages given ('$STAGE' and '$arg') — pass one" >&2
         exit 2
@@ -140,12 +146,22 @@ run_fec_smoke() {
     results/FIG_loss_recovery_report.json
 }
 
+run_codec_smoke() {
+  echo "== codec-smoke: gradient wire-codec comparison (f64/f32/int8/sign/topk) =="
+  cargo run --release --bin echo-cgc -- figures --fig codec --profile smoke --threads auto
+  echo "-- codec artifacts (listed explicitly so a missing chart fails the stage):"
+  ls -l results/FIG_codec_bits.svg results/FIG_codec_bits.csv \
+    results/FIG_codec_error.svg results/FIG_codec_error.csv \
+    results/FIG_codec_report.json
+}
+
 case "$STAGE" in
   build-test) run_build_test ;;
   lint) run_lint ;;
   smoke-bench) run_smoke_bench ;;
   figures-smoke) run_figures_smoke ;;
   fec-smoke) run_fec_smoke ;;
+  codec-smoke) run_codec_smoke ;;
   trace-smoke) run_trace_smoke ;;
   swarm-smoke) run_swarm_smoke ;;
   all)
@@ -155,6 +171,7 @@ case "$STAGE" in
       run_smoke_bench
       run_figures_smoke
       run_fec_smoke
+      run_codec_smoke
       run_trace_smoke
       run_swarm_smoke
     fi
