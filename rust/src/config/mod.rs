@@ -175,6 +175,25 @@ pub struct ExperimentConfig {
     /// first, ARQ only if the server still cannot reconstruct). CLI:
     /// `--recovery arq|fec|hybrid`.
     pub recovery: Recovery,
+    /// Per-round per-worker absence probability (membership churn). Each
+    /// round's roster is drawn as a pure hash of `(seed, round, worker)` —
+    /// no RNG stream is consumed — so churned runs stay bit-identical at
+    /// any `--threads` value. An absent worker gets no TDMA slot, computes
+    /// nothing, and resolves at the server as `Lost` (never exposed). `0`
+    /// (the default) is the paper's fixed roster, byte-for-byte.
+    pub churn: f64,
+    /// Per-round per-worker lateness probability (stragglers). A late
+    /// worker keeps its slot and computes its gradient, but misses the
+    /// server's round deadline: the slot resolves as `Lost`-like absence —
+    /// slow is never exposed as Byzantine. Draws are pure hashes of
+    /// `(seed, round, worker)`, like `churn`.
+    pub straggler: f64,
+    /// Dirichlet(α) non-IID data sharding for labeled models
+    /// (logistic/softmax): each worker samples batches from its own
+    /// label-skewed shard instead of the full dataset. Small α ⇒ extreme
+    /// skew; large α ⇒ near-IID. `None` (the default) is the paper's IID
+    /// sampling, byte-for-byte. CLI: `--alpha <a>|iid`.
+    pub alpha: Option<f64>,
 }
 
 impl Default for ExperimentConfig {
@@ -213,6 +232,9 @@ impl Default for ExperimentConfig {
             channel: ChannelModel::Perfect,
             uplink_retries: 2,
             recovery: Recovery::Arq,
+            churn: 0.0,
+            straggler: 0.0,
+            alpha: None,
         }
     }
 }
@@ -403,6 +425,15 @@ impl ExperimentConfig {
                     format!("recovery: expected arq|fec|hybrid, got '{value}'")
                 })?
             }
+            "churn" => self.churn = parse_f64(value)?,
+            "straggler" => self.straggler = parse_f64(value)?,
+            "alpha" => {
+                self.alpha = if value == "iid" || value == "off" {
+                    None
+                } else {
+                    Some(parse_f64(value)?)
+                }
+            }
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -517,6 +548,18 @@ impl ExperimentConfig {
         kv("channel", self.channel.label());
         kv("uplink-retries", self.uplink_retries.to_string());
         kv("recovery", self.recovery.name().to_string());
+        // Heterogeneity knobs are emitted only off their defaults, so a
+        // churn-free config string stays byte-identical to pre-churn
+        // output (the same contract as the omitted auto-derived r/eta).
+        if self.churn != 0.0 {
+            kv("churn", self.churn.to_string());
+        }
+        if self.straggler != 0.0 {
+            kv("straggler", self.straggler.to_string());
+        }
+        if let Some(a) = self.alpha {
+            kv("alpha", a.to_string());
+        }
         out
     }
 
@@ -536,6 +579,31 @@ impl ExperimentConfig {
         }
         if self.rounds == 0 {
             return Err("rounds must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&self.churn) {
+            return Err(format!("churn must be in [0, 1] (got {})", self.churn));
+        }
+        if !(0.0..=1.0).contains(&self.straggler) {
+            return Err(format!("straggler must be in [0, 1] (got {})", self.straggler));
+        }
+        if self.churn > 0.0 && self.shuffle_slots {
+            return Err(
+                "churn and shuffle-slots are mutually exclusive (the per-round \
+                 roster re-derives the TDMA schedule itself)"
+                    .into(),
+            );
+        }
+        if let Some(a) = self.alpha {
+            if !(a > 0.0) {
+                return Err(format!("alpha must be positive (got {a})"));
+            }
+            if !matches!(self.model, ModelKind::Logistic | ModelKind::Softmax) {
+                return Err(format!(
+                    "alpha (non-IID Dirichlet shards) needs a labeled model \
+                     (logistic|softmax), got {}",
+                    self.model.name()
+                ));
+            }
         }
         self.channel.validate()?;
         Ok(())
@@ -752,6 +820,69 @@ mod tests {
         assert_eq!(crate::wire::decode(&crate::wire::encode(&p, enc), enc).unwrap(), p);
         assert!(cfg.set("encoding", "f64").is_err());
         assert!(cfg.set("encoding", "f16+varint").is_err());
+    }
+
+    #[test]
+    fn churn_straggler_alpha_parse_through_the_config_surface() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.churn, 0.0);
+        assert_eq!(cfg.straggler, 0.0);
+        assert_eq!(cfg.alpha, None);
+        cfg.set("churn", "0.2").unwrap();
+        cfg.set("straggler", "0.15").unwrap();
+        cfg.set("alpha", "0.5").unwrap();
+        assert_eq!(cfg.churn, 0.2);
+        assert_eq!(cfg.straggler, 0.15);
+        assert_eq!(cfg.alpha, Some(0.5));
+        cfg.set("alpha", "iid").unwrap();
+        assert_eq!(cfg.alpha, None);
+        // And through the CLI argument surface, with validation.
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = ModelKind::Logistic;
+        let args: Vec<String> = ["--churn", "0.1", "--straggler=0.3", "--alpha", "1.0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!((cfg.churn, cfg.straggler, cfg.alpha), (0.1, 0.3, Some(1.0)));
+        cfg.validate().unwrap();
+        // Out-of-range knobs and unlabeled models are rejected.
+        let mut bad = ExperimentConfig::default();
+        bad.churn = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.straggler = -0.1;
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.alpha = Some(0.5); // quadratic has no labels to skew
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.model = ModelKind::Logistic;
+        bad.alpha = Some(0.0);
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.churn = 0.2;
+        bad.shuffle_slots = true;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn churn_free_config_string_matches_pre_churn_bytes() {
+        // The default config string carries no heterogeneity vocabulary —
+        // node-mode config shipping stays byte-identical for old configs —
+        // and non-default knobs round-trip through the file loader.
+        let s = ExperimentConfig::default().to_config_string();
+        assert!(!s.contains("churn"));
+        assert!(!s.contains("straggler"));
+        assert!(!s.contains("alpha"));
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = ModelKind::Logistic;
+        cfg.churn = 0.25;
+        cfg.straggler = 0.1;
+        cfg.alpha = Some(0.3);
+        let mut back = ExperimentConfig::default();
+        back.apply_file(&cfg.to_config_string()).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
     }
 
     #[test]

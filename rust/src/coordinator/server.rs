@@ -111,6 +111,12 @@ enum EchoCheck {
 pub struct ParameterServer {
     n: usize,
     f: usize,
+    /// The clip budget actually applied this round. Equals `f` except
+    /// under an epoch-keyed churn roster, where the round engine
+    /// re-derives it from the round's *active* membership
+    /// (`f' = min(f, ⌈active−1⌉/2)`) so the CGC threshold keeps its
+    /// `2f' < active` guarantee when workers are absent.
+    round_f: usize,
     d: usize,
     agg: Aggregator,
     /// `G` — reconstructed gradients of the current round (`None` = ⊥).
@@ -143,6 +149,7 @@ impl ParameterServer {
         Self {
             n,
             f,
+            round_f: f,
             d,
             agg,
             g: vec![None; n],
@@ -176,6 +183,19 @@ impl ParameterServer {
 
     pub fn f(&self) -> usize {
         self.f
+    }
+
+    /// Re-derive the clip budget for the current round's membership (the
+    /// churn roster calls this before the communication phase; without
+    /// churn it never moves off `f`, keeping the pre-roster bytes).
+    pub fn set_round_f(&mut self, round_f: usize) {
+        assert!(round_f <= self.f, "the roster can only shrink the clip budget");
+        self.round_f = round_f;
+    }
+
+    /// The clip budget applied by [`Self::aggregate_tracked`] this round.
+    pub fn round_f(&self) -> usize {
+        self.round_f
     }
 
     pub fn aggregator(&self) -> Aggregator {
@@ -407,7 +427,7 @@ impl ParameterServer {
     /// Aggregation phase: apply the configured rule and return `g^t`.
     pub fn aggregate(&self) -> Vec<f64> {
         let grads = self.gradients();
-        aggregate(self.agg, &grads, self.f)
+        aggregate(self.agg, &grads, self.round_f)
     }
 
     /// Aggregate and update the suspicion counters (the round engine's
@@ -419,7 +439,7 @@ impl ParameterServer {
             // norm pass and the weighted sum run across the thread pool.
             let (out, clipped) = {
                 let grads = self.gradients();
-                cgc_sum_fused_refs(&grads, self.f, self.d, self.threads)
+                cgc_sum_fused_refs(&grads, self.round_f, self.d, self.threads)
             };
             self.last_clipped = clipped.len();
             for j in clipped {
@@ -429,7 +449,7 @@ impl ParameterServer {
         } else {
             self.last_clipped = 0;
             let grads = self.gradients();
-            aggregate(self.agg, &grads, self.f)
+            aggregate(self.agg, &grads, self.round_f)
         }
     }
 
@@ -717,6 +737,43 @@ mod tests {
         assert!(s.echo_refs_stored(&[0]));
         assert!(!s.echo_refs_stored(&[0, 1]), "slot 1 not yet stored");
         assert!(!s.echo_refs_stored(&[7]), "out of range");
+    }
+
+    #[test]
+    fn round_f_rederives_the_clip_budget() {
+        // Same frames, shrunken round budget: with round_f = 0 the huge
+        // gradient passes unclipped; at the configured f = 1 it is clipped.
+        let frames = [vec![1.0, 0.0], vec![0.0, 2.0], vec![1e6, 0.0]];
+        let mut full = server(3, 1, 2);
+        let mut shrunk = server(3, 1, 2);
+        shrunk.set_round_f(0);
+        for (j, p) in frames.iter().enumerate() {
+            full.on_frame(j, &Payload::Raw(p.clone()));
+            shrunk.on_frame(j, &Payload::Raw(p.clone()));
+        }
+        assert_eq!(full.aggregate_tracked(), vec![3.0, 2.0]); // 1e6 clipped to 2
+        assert_eq!(full.clipped_last_round(), 1);
+        assert_eq!(shrunk.aggregate_tracked(), vec![1e6 + 1.0, 2.0]);
+        assert_eq!(shrunk.clipped_last_round(), 0);
+        assert_eq!(shrunk.f(), 1, "configured f untouched");
+        assert_eq!(shrunk.round_f(), 0);
+    }
+
+    #[test]
+    fn all_lost_round_aggregates_to_the_zero_update() {
+        // A round where every worker is absent or late: every slot routes
+        // through on_lost, the CGC threshold degenerates to 0, and the
+        // update is exactly 0⃗ — no panic, no NaN, no exposure.
+        let mut s = ParameterServer::new(4, 1, 3, Aggregator::CgcSum);
+        s.set_lossy(true);
+        s.begin_round();
+        for j in 0..4 {
+            s.on_lost(j);
+        }
+        let g = s.aggregate_tracked();
+        assert_eq!(g, vec![0.0; 3]);
+        assert!(g.iter().all(|v| v.is_finite()));
+        assert!(s.exposed().is_empty(), "slow/absent is never Byzantine");
     }
 
     #[test]

@@ -160,6 +160,148 @@ pub fn make_blobs(d: usize, m: usize, c: usize, sep: f64, rng: &mut Rng) -> Regr
     RegressionData::new(x, y, m, d)
 }
 
+/// Dirichlet(α) non-IID partition: worker `j`'s share of each label class
+/// is drawn from a Dirichlet(α, …, α) over workers, so small `α` gives
+/// each class to few workers (extreme skew) and large `α` approaches the
+/// uniform IID split. Every sample index lands in exactly one shard, and
+/// every shard is non-empty (empty shards are topped up round-robin from
+/// the largest shards, so a worker always has data to sample).
+///
+/// The draw consumes only the supplied `rng`, so callers can key the
+/// partition off a dedicated salted seed and leave every other stream in
+/// the run untouched.
+pub fn dirichlet_partition(
+    labels: &[f64],
+    n_workers: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(n_workers >= 1);
+    assert!(alpha > 0.0, "alpha must be positive (got {alpha})");
+    // Distinct classes in first-appearance order (labels are small ints).
+    let mut classes: Vec<f64> = Vec::new();
+    for &y in labels {
+        if !classes.iter().any(|&c| c == y) {
+            classes.push(y);
+        }
+    }
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+    for &class in &classes {
+        // Dirichlet via normalized Gamma(α) draws.
+        let g: Vec<f64> = (0..n_workers).map(|_| gamma_draw(alpha, rng)).collect();
+        let total: f64 = g.iter().sum();
+        let members: Vec<usize> =
+            (0..labels.len()).filter(|&i| labels[i] == class).collect();
+        // Cut points over the class's members proportional to the weights.
+        let mut start = 0usize;
+        let mut acc = 0.0;
+        for (j, &gj) in g.iter().enumerate() {
+            acc += gj;
+            let end = if j + 1 == n_workers {
+                members.len()
+            } else {
+                ((acc / total) * members.len() as f64).round() as usize
+            };
+            let end = end.clamp(start, members.len());
+            shards[j].extend_from_slice(&members[start..end]);
+            start = end;
+        }
+    }
+    top_up_empty_shards(&mut shards);
+    shards
+}
+
+/// Label-skewed partition: each worker holds samples from at most
+/// `labels_per_worker` classes, assigned round-robin — the classic
+/// pathological federated split (each phone sees only its own digits).
+/// Indices within a class are dealt round-robin to that class's workers.
+pub fn label_skew_partition(
+    labels: &[f64],
+    n_workers: usize,
+    labels_per_worker: usize,
+) -> Vec<Vec<usize>> {
+    assert!(n_workers >= 1);
+    assert!(labels_per_worker >= 1);
+    let mut classes: Vec<f64> = Vec::new();
+    for &y in labels {
+        if !classes.iter().any(|&c| c == y) {
+            classes.push(y);
+        }
+    }
+    // Worker j takes classes {j, j+1, …, j+labels_per_worker-1} mod |C|.
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+    for (ci, &class) in classes.iter().enumerate() {
+        let holders: Vec<usize> = (0..n_workers)
+            .filter(|&j| {
+                (0..labels_per_worker).any(|k| (j + k) % classes.len() == ci)
+            })
+            .collect();
+        let members: Vec<usize> =
+            (0..labels.len()).filter(|&i| labels[i] == class).collect();
+        if holders.is_empty() {
+            // More workers than class slots: round-robin over everyone.
+            for (r, &i) in members.iter().enumerate() {
+                shards[r % n_workers].push(i);
+            }
+            continue;
+        }
+        for (r, &i) in members.iter().enumerate() {
+            shards[holders[r % holders.len()]].push(i);
+        }
+    }
+    top_up_empty_shards(&mut shards);
+    shards
+}
+
+/// Move one sample from the largest shard into each empty shard so every
+/// worker can draw a batch (a worker with no data cannot run a round).
+fn top_up_empty_shards(shards: &mut [Vec<usize>]) {
+    for j in 0..shards.len() {
+        if !shards[j].is_empty() {
+            continue;
+        }
+        let donor = (0..shards.len())
+            .max_by_key(|&k| shards[k].len())
+            .expect("at least one shard");
+        assert!(shards[donor].len() > 1, "not enough samples to cover every worker");
+        let moved = shards[donor].pop().expect("donor non-empty");
+        shards[j].push(moved);
+    }
+}
+
+/// One Gamma(α, 1) deviate (Marsaglia–Tsang squeeze; the α < 1 boost uses
+/// `G(α) = G(α+1) · U^{1/α}`). Consumes only `rng`, so Dirichlet draws
+/// stay on whatever dedicated stream the caller supplies.
+fn gamma_draw(alpha: f64, rng: &mut Rng) -> f64 {
+    assert!(alpha > 0.0);
+    if alpha < 1.0 {
+        let boost = loop {
+            let u = rng.uniform();
+            if u > 0.0 {
+                break u.powf(1.0 / alpha);
+            }
+        };
+        return gamma_draw(alpha + 1.0, rng) * boost;
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v = v * v * v;
+        let u = rng.uniform();
+        if u < 1.0 - 0.0331 * (x * x) * (x * x) {
+            return d * v;
+        }
+        if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
 /// A tiny synthetic character corpus for the end-to-end LM driver: a
 /// first-order Markov chain over a small alphabet with deterministic
 /// structure (so a few hundred steps of training visibly reduce loss).
@@ -263,6 +405,83 @@ mod tests {
             counts[data.y()[i] as usize] += 1;
         }
         assert_eq!(counts, vec![25; 4]);
+    }
+
+    fn assert_exact_cover(shards: &[Vec<usize>], m: usize) {
+        let mut seen = vec![false; m];
+        for shard in shards {
+            assert!(!shard.is_empty(), "every shard must be non-empty");
+            for &i in shard {
+                assert!(i < m);
+                assert!(!seen[i], "index {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every index must land in a shard");
+    }
+
+    #[test]
+    fn dirichlet_partition_covers_exactly_and_is_deterministic() {
+        let mut rng = Rng::new(9);
+        let data = make_logreg(4, 300, 0.5, &mut rng);
+        let a = dirichlet_partition(data.y(), 8, 0.5, &mut Rng::new(77));
+        assert_exact_cover(&a, data.m());
+        // Same seed ⇒ same partition, different seed ⇒ (almost surely) not.
+        let b = dirichlet_partition(data.y(), 8, 0.5, &mut Rng::new(77));
+        assert_eq!(a, b);
+        let c = dirichlet_partition(data.y(), 8, 0.5, &mut Rng::new(78));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_skew() {
+        let mut rng = Rng::new(10);
+        let data = make_blobs(3, 1200, 4, 3.0, &mut rng);
+        let n = 6;
+        let spread = |alpha: f64| -> usize {
+            let shards = dirichlet_partition(data.y(), n, alpha, &mut Rng::new(5));
+            let sizes: Vec<usize> = shards.iter().map(Vec::len).collect();
+            sizes.iter().max().unwrap() - sizes.iter().min().unwrap()
+        };
+        // Large α ⇒ near-uniform shard sizes; tiny α ⇒ much wider spread.
+        assert!(spread(100.0) < spread(0.05), "α must control the skew");
+        let near_iid = dirichlet_partition(data.y(), n, 1000.0, &mut Rng::new(5));
+        let target = data.m() / n;
+        for shard in &near_iid {
+            assert!(
+                (shard.len() as i64 - target as i64).unsigned_abs() as usize
+                    <= target / 2,
+                "α=1000 shard size {} vs uniform {target}",
+                shard.len()
+            );
+        }
+    }
+
+    #[test]
+    fn label_skew_partition_restricts_classes_per_worker() {
+        let mut rng = Rng::new(11);
+        let data = make_blobs(3, 400, 4, 3.0, &mut rng);
+        let shards = label_skew_partition(data.y(), 8, 2);
+        assert_exact_cover(&shards, data.m());
+        for shard in &shards {
+            let mut classes: Vec<i64> = shard.iter().map(|&i| data.y()[i] as i64).collect();
+            classes.sort_unstable();
+            classes.dedup();
+            assert!(classes.len() <= 2, "worker saw {} classes", classes.len());
+        }
+    }
+
+    #[test]
+    fn gamma_draw_matches_moments() {
+        let mut rng = Rng::new(12);
+        for &alpha in &[0.3, 1.0, 4.0] {
+            let n = 30_000;
+            let xs: Vec<f64> = (0..n).map(|_| gamma_draw(alpha, &mut rng)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            // Gamma(α, 1) has mean α.
+            assert!((mean - alpha).abs() < 0.08 * alpha.max(1.0), "α={alpha} mean={mean}");
+            assert!(xs.iter().all(|&x| x > 0.0));
+        }
     }
 
     #[test]

@@ -45,6 +45,11 @@
 //!   bits on the air and final error per gradient codec
 //!   ([`Axis::Codec`] — f64/f32/int8/sign/top-k), echo on vs off as
 //!   series, over [`crate::sweep::presets::codec_sweep`].
+//! * [`paper_churn`] declares the heterogeneity bench (`--fig churn`):
+//!   echo rate and final error vs. the membership-churn probability
+//!   ([`Axis::Churn`]), one series per Dirichlet shard concentration
+//!   ([`Axis::Alpha`] — IID vs non-IID), over
+//!   [`crate::sweep::presets::churn_sweep`].
 //! * [`apply_axis_specs`] implements the ad-hoc ablation mini-DSL
 //!   (`--axis n=10,20,50 --axis f=0..4`): comma lists or inclusive
 //!   `a..b` integer ranges per axis key. Unless `b` is given explicitly,
@@ -189,6 +194,15 @@ pub enum Axis {
     /// The gradient wire codec (`f64` / `f32` / `int8` / `sign` /
     /// `topk<k>`) — categorical, the x axis of the `FIG_codec_*` family.
     Codec,
+    /// Per-round membership-churn probability — numeric, the x axis of
+    /// the `FIG_churn_*` family.
+    Churn,
+    /// Per-round straggler (missed-deadline) probability — numeric.
+    Straggler,
+    /// Dirichlet concentration of the non-IID shards — categorical
+    /// (`iid` for the unsharded default, else the α value), the series
+    /// axis of the `FIG_churn_*` family.
+    Alpha,
 }
 
 impl Axis {
@@ -206,6 +220,9 @@ impl Axis {
             Axis::Loss => "loss",
             Axis::Recovery => "recovery",
             Axis::Codec => "codec",
+            Axis::Churn => "churn",
+            Axis::Straggler => "straggler",
+            Axis::Alpha => "alpha",
         }
     }
 
@@ -223,6 +240,9 @@ impl Axis {
             "loss" | "channel" => Axis::Loss,
             "recovery" => Axis::Recovery,
             "codec" => Axis::Codec,
+            "churn" => Axis::Churn,
+            "straggler" => Axis::Straggler,
+            "alpha" => Axis::Alpha,
             _ => return None,
         })
     }
@@ -248,6 +268,12 @@ impl Axis {
             },
             Axis::Recovery => AxisValue::Cat(c.recovery.name().to_string()),
             Axis::Codec => AxisValue::Cat(c.codec.name()),
+            Axis::Churn => AxisValue::Num(c.churn),
+            Axis::Straggler => AxisValue::Num(c.straggler),
+            Axis::Alpha => match c.alpha {
+                None => AxisValue::Cat("iid".to_string()),
+                Some(a) => AxisValue::Cat(format!("{a}")),
+            },
         }
     }
 }
@@ -304,6 +330,9 @@ pub struct ReplicateCell {
     pub channel: ChannelModel,
     pub recovery: Recovery,
     pub codec: WireCodec,
+    pub churn: f64,
+    pub straggler: f64,
+    pub alpha: Option<f64>,
     /// Seeds of the replicates, in grid order.
     pub seeds: Vec<u64>,
     samples: Vec<SweepCell>,
@@ -323,6 +352,9 @@ impl ReplicateCell {
             && self.channel == c.channel
             && self.recovery == c.recovery
             && self.codec == c.codec
+            && self.churn.to_bits() == c.churn.to_bits()
+            && self.straggler.to_bits() == c.straggler.to_bits()
+            && self.alpha.map(f64::to_bits) == c.alpha.map(f64::to_bits)
     }
 
     /// Number of replicate samples in the group.
@@ -389,6 +421,9 @@ pub fn replicates(report: &SweepReport) -> Vec<ReplicateCell> {
                 channel: c.channel,
                 recovery: c.recovery,
                 codec: c.codec,
+                churn: c.churn,
+                straggler: c.straggler,
+                alpha: c.alpha,
                 seeds: vec![c.seed],
                 samples: vec![c.clone()],
             }),
@@ -815,6 +850,39 @@ pub fn paper_codec(profile: SweepProfile) -> LossFigureJob {
     }
 }
 
+/// Declare the churn/heterogeneity figure (`--fig churn`): one sweep over
+/// [`presets::churn_sweep`] — membership churn × stragglers × Dirichlet
+/// shards on a logistic task — rendered as echo rate and final error vs.
+/// the churn probability, one series per shard concentration (IID
+/// baseline included). The headline question: how much of the echo
+/// savings survives when the roster turns over every round and the data
+/// stops being IID. The straggler axis rides in the report (and the CSV)
+/// but is not plotted: the first (straggler = 0) slice wins per
+/// [`select`]'s pin rule.
+pub fn paper_churn(profile: SweepProfile) -> LossFigureJob {
+    let mut grid = presets::churn_sweep(profile);
+    grid.seeds = replicate_seeds(profile);
+    LossFigureJob {
+        grid,
+        x: Axis::Churn,
+        series: Some(Axis::Alpha),
+        charts: vec![
+            (
+                Metric::EchoRate,
+                "FIG_churn_echo_rate",
+                "echo rate vs membership churn (iid vs dirichlet shards)",
+                false,
+            ),
+            (
+                Metric::FinalDistSq,
+                "FIG_churn_error",
+                "final ‖w − w*‖² vs membership churn (iid vs dirichlet shards)",
+                true,
+            ),
+        ],
+    }
+}
+
 /// Axes a grid actually sweeps (≥ 2 distinct values), in nesting order —
 /// the default x/series choice for ad-hoc ablations.
 pub fn swept_axes(grid: &SweepGrid) -> Vec<Axis> {
@@ -867,14 +935,23 @@ pub fn swept_axes(grid: &SweepGrid) -> Vec<Axis> {
     if grid.codecs.len() > 1 {
         out.push(Axis::Codec);
     }
+    if grid.churns.len() > 1 {
+        out.push(Axis::Churn);
+    }
+    if grid.stragglers.len() > 1 {
+        out.push(Axis::Straggler);
+    }
+    if grid.alphas.len() > 1 {
+        out.push(Axis::Alpha);
+    }
     out
 }
 
 /// Apply `--axis key=spec` declarations to a grid (the ad-hoc ablation
 /// mini-DSL). `spec` is a comma list (`n=10,20,50`, `attack=omniscient,
 /// alie`) or an inclusive integer range (`f=0..4` ⇒ 0,1,2,3,4). Keys:
-/// `n f b d sigma seed attack aggregator model echo loss recovery`.
-/// `n`/`f`/`b` build
+/// `n f b d sigma seed attack aggregator model echo loss recovery codec
+/// churn straggler alpha`. `n`/`f`/`b` build
 /// the joint `(n, f, b)` axis as their cross-product; without an explicit
 /// `b`, the Byzantine count tracks the fault tolerance (`b = f`).
 /// Combinations violating `f < n/2` become error cells in the report and
@@ -925,10 +1002,49 @@ pub fn apply_axis_specs(grid: &mut SweepGrid, specs: &[String]) -> Result<(), St
             "codec" | "codecs" => {
                 grid.codecs = parse_named_list(val, WireCodec::parse, "codec")?
             }
+            "churn" => {
+                let ps = parse_f64_list(val)?;
+                for &p in &ps {
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("churn axis: probability {p} outside [0, 1]"));
+                    }
+                }
+                grid.churns = ps;
+            }
+            "straggler" => {
+                let ps = parse_f64_list(val)?;
+                for &p in &ps {
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!(
+                            "straggler axis: probability {p} outside [0, 1]"
+                        ));
+                    }
+                }
+                grid.stragglers = ps;
+            }
+            // `iid` (or `off`) names the unsharded default; any positive
+            // number is a Dirichlet concentration.
+            "alpha" => {
+                grid.alphas = val
+                    .split(',')
+                    .map(|v| match v.trim() {
+                        "iid" | "off" => Ok(None),
+                        v => {
+                            let a: f64 =
+                                v.parse().map_err(|e| format!("alpha '{v}': {e}"))?;
+                            if a <= 0.0 {
+                                return Err(format!("alpha axis: {a} must be positive"));
+                            }
+                            Ok(Some(a))
+                        }
+                    })
+                    .collect::<Result<Vec<Option<f64>>, String>>()?;
+            }
             other => {
                 return Err(format!(
                     "unknown axis '{other}' (expected \
-                     n|f|b|d|sigma|seed|attack|aggregator|model|echo|loss|recovery|codec)"
+                     n|f|b|d|sigma|seed|attack|aggregator|model|echo|loss|recovery|codec\
+                     |churn|straggler|alpha)"
                 ))
             }
         }
@@ -1094,6 +1210,11 @@ mod tests {
             channel: ChannelModel::Perfect,
             recovery: Recovery::Arq,
             codec: WireCodec::F64,
+            churn: 0.0,
+            straggler: 0.0,
+            alpha: None,
+            absent: 0,
+            late: 0,
             echo_rate: 0.5,
             comm_savings: savings,
             final_loss: 0.1,
@@ -1231,6 +1352,9 @@ mod tests {
             Axis::Loss,
             Axis::Recovery,
             Axis::Codec,
+            Axis::Churn,
+            Axis::Straggler,
+            Axis::Alpha,
         ] {
             assert_eq!(Axis::parse(a.name()), Some(a));
         }
@@ -1382,6 +1506,71 @@ mod tests {
     }
 
     #[test]
+    fn churn_axis_splits_alpha_series_and_keys_replicates() {
+        let a = cell(10, 0.05, 1, 0.6, None);
+        let mut b = a.clone();
+        b.churn = 0.2;
+        let mut c = a.clone();
+        c.churn = 0.2;
+        c.alpha = Some(0.5);
+        let r = report(vec![a, b, c]);
+        let rc = replicates(&r);
+        assert_eq!(rc.len(), 3, "churn and alpha are part of the replicate key");
+        let series = select(
+            &rc,
+            &SeriesSpec {
+                metric: Metric::CommSavings,
+                x: Axis::Churn,
+                series: Some(Axis::Alpha),
+                pins: vec![],
+            },
+        );
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].name, "alpha=iid");
+        assert_eq!(series[1].name, "alpha=0.5");
+        let xs: Vec<f64> = series[0].points.iter().map(|p| p.x.num().unwrap()).collect();
+        assert_eq!(xs, vec![0.0, 0.2], "churn plots numerically, sorted");
+    }
+
+    #[test]
+    fn paper_churn_declares_the_heterogeneity_bench() {
+        for profile in [SweepProfile::Smoke, SweepProfile::Full] {
+            let job = paper_churn(profile);
+            assert_eq!(job.x, Axis::Churn);
+            assert_eq!(job.series, Some(Axis::Alpha));
+            assert!(job.grid.seeds.len() >= 2, "churn figure needs replicate seeds");
+            assert_eq!(job.grid.churns[0], 0.0, "churn axis anchors at the fixed roster");
+            assert_eq!(job.grid.alphas[0], None, "alpha axis anchors at IID");
+            assert!(job.grid.stragglers.len() >= 2, "straggler axis rides in the report");
+            let stems: Vec<&str> = job.charts.iter().map(|c| c.1).collect();
+            assert!(stems.contains(&"FIG_churn_echo_rate"));
+            assert!(stems.contains(&"FIG_churn_error"));
+        }
+    }
+
+    #[test]
+    fn axis_dsl_membership_axes() {
+        let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
+        let specs: Vec<String> = vec![
+            "churn=0,0.2".to_string(),
+            "straggler=0,0.3".to_string(),
+            "alpha=iid,1,0.1".to_string(),
+        ];
+        apply_axis_specs(&mut grid, &specs).unwrap();
+        assert_eq!(grid.churns, vec![0.0, 0.2]);
+        assert_eq!(grid.stragglers, vec![0.0, 0.3]);
+        assert_eq!(grid.alphas, vec![None, Some(1.0), Some(0.1)]);
+        assert_eq!(
+            swept_axes(&grid),
+            vec![Axis::Churn, Axis::Straggler, Axis::Alpha]
+        );
+        assert!(apply_axis_specs(&mut grid, &["churn=1.5".to_string()]).is_err());
+        assert!(apply_axis_specs(&mut grid, &["straggler=-0.1".to_string()]).is_err());
+        assert!(apply_axis_specs(&mut grid, &["alpha=0".to_string()]).is_err());
+        assert!(apply_axis_specs(&mut grid, &["alpha=wat".to_string()]).is_err());
+    }
+
+    #[test]
     fn axis_dsl_codec_builds_the_codec_axis() {
         let mut grid = SweepGrid::new("adhoc", ExperimentConfig::default());
         apply_axis_specs(&mut grid, &["codec=f64,int8,topk16".to_string()]).unwrap();
@@ -1447,6 +1636,9 @@ mod tests {
         fs::write(dir.join("FIG_loss_report.json"), "{}").unwrap();
         fs::write(dir.join("FIG_codec_bits.svg"), "<svg/>").unwrap();
         fs::write(dir.join("FIG_codec_report.json"), "{}").unwrap();
+        fs::write(dir.join("FIG_churn_error.svg"), "<svg/>").unwrap();
+        fs::write(dir.join("FIG_churn_report.json"), "{}").unwrap();
+        fs::write(dir.join("BENCH_churn.json"), "{}").unwrap();
         fs::write(dir.join("notes.txt"), "ignored").unwrap();
         let path = write_html_index(&dir).unwrap();
         let html = fs::read_to_string(&path).unwrap();
@@ -1458,6 +1650,9 @@ mod tests {
         assert!(html.contains("FIG_loss_report.json"), "figure reports join the gallery");
         assert!(html.contains("FIG_codec_bits.svg"), "codec charts join the gallery");
         assert!(html.contains("FIG_codec_report.json"), "codec report joins the gallery");
+        assert!(html.contains("FIG_churn_error.svg"), "churn charts join the gallery");
+        assert!(html.contains("FIG_churn_report.json"), "churn report joins the gallery");
+        assert!(html.contains("BENCH_churn.json"), "churn bench joins the gallery");
         assert!(!html.contains("notes.txt"));
         let _ = fs::remove_dir_all(&dir);
     }

@@ -56,6 +56,46 @@ impl GradientBackend for NativeBackend {
     }
 }
 
+/// Non-IID backend: this worker samples batches from its own data shard
+/// (a fixed index subset from [`crate::data::dirichlet_partition`])
+/// instead of the full dataset — the worker's local gradient is biased
+/// toward its shard, exactly the heterogeneity that stresses the echo
+/// premise. Requires a model with per-sample structure
+/// ([`CostModel::shard_gradient`]); construction rejects models without
+/// one.
+pub struct ShardedBackend {
+    model: Arc<dyn CostModel>,
+    shard: Vec<usize>,
+}
+
+impl ShardedBackend {
+    pub fn new(model: Arc<dyn CostModel>, shard: Vec<usize>) -> Result<Self, String> {
+        if shard.is_empty() {
+            return Err("sharded backend needs a non-empty shard".into());
+        }
+        if model.labels().is_none() {
+            return Err("sharded backend needs a labeled data-driven model".into());
+        }
+        Ok(Self { model, shard })
+    }
+
+    pub fn shard(&self) -> &[usize] {
+        &self.shard
+    }
+}
+
+impl GradientBackend for ShardedBackend {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn gradient(&mut self, w: &[f64], rng: &mut Rng) -> Vec<f64> {
+        self.model
+            .shard_gradient(w, &self.shard, rng)
+            .expect("construction verified the model shards")
+    }
+}
+
 /// Compute every live backend's stochastic gradient at `w`, fanning the
 /// work across up to `threads` OS threads (`std::thread::scope`, no pool
 /// crate needed). Returns `(worker_id, gradient)` pairs in ascending
@@ -72,11 +112,30 @@ pub fn parallel_gradients(
     w: &[f64],
     threads: usize,
 ) -> Vec<(usize, Vec<f64>)> {
+    parallel_gradients_active(backends, rngs, w, threads, None)
+}
+
+/// [`parallel_gradients`] with a per-round membership mask: workers whose
+/// `active` entry is `false` (the churn roster's absentees) compute
+/// nothing and leave their RNG streams untouched that round. Presence is
+/// a pure hash of `(seed, round, worker)`, so every worker's stream
+/// advances identically at any thread count whether or not churn is on.
+pub fn parallel_gradients_active(
+    backends: &mut [Option<Box<dyn GradientBackend>>],
+    rngs: &mut [Rng],
+    w: &[f64],
+    threads: usize,
+    active: Option<&[bool]>,
+) -> Vec<(usize, Vec<f64>)> {
     assert_eq!(backends.len(), rngs.len(), "one rng stream per worker slot");
+    if let Some(mask) = active {
+        assert_eq!(mask.len(), backends.len(), "one mask entry per worker slot");
+    }
     let mut jobs: Vec<(usize, &mut Box<dyn GradientBackend>, &mut Rng, Vec<f64>)> = backends
         .iter_mut()
         .zip(rngs.iter_mut())
         .enumerate()
+        .filter(|(i, _)| active.map_or(true, |mask| mask[*i]))
         .filter_map(|(i, (b, r))| b.as_mut().map(|b| (i, b, r, Vec::new())))
         .collect();
     crate::par::scoped_for_each(&mut jobs, threads, |(_, b, r, out)| {
@@ -150,5 +209,47 @@ mod tests {
     fn all_byzantine_is_empty() {
         let (mut b, mut r, w) = fan_out_fixture(3, &[0, 1, 2]);
         assert!(parallel_gradients(&mut b, &mut r, &w, 4).is_empty());
+    }
+
+    #[test]
+    fn active_mask_skips_workers_and_preserves_streams() {
+        // A masked worker's RNG stream is untouched; every active
+        // worker's draw is bitwise what the unmasked fan-out produced.
+        let (mut b1, mut r1, w) = fan_out_fixture(6, &[]);
+        let (mut b2, mut r2, _) = fan_out_fixture(6, &[]);
+        let full = parallel_gradients(&mut b1, &mut r1, &w, 2);
+        let mask = [true, false, true, true, false, true];
+        let masked = parallel_gradients_active(&mut b2, &mut r2, &w, 2, Some(&mask));
+        let ids: Vec<usize> = masked.iter().map(|(i, _)| *i).collect();
+        assert_eq!(ids, vec![0, 2, 3, 5]);
+        for (i, g) in &masked {
+            let (_, gf) = full.iter().find(|(j, _)| j == i).unwrap();
+            assert_eq!(g, gf, "worker {i} differs under masking");
+        }
+        // Absent workers' streams did not advance.
+        assert_eq!(r2[1].next_u64(), {
+            let (_, mut r3, _) = fan_out_fixture(6, &[]);
+            r3[1].next_u64()
+        });
+    }
+
+    #[test]
+    fn sharded_backend_draws_only_from_its_shard() {
+        use crate::data::make_logreg;
+        use crate::model::LogisticRegression;
+        let mut rng = Rng::new(21);
+        let data = make_logreg(6, 120, 0.8, &mut rng);
+        let m = Arc::new(LogisticRegression::new(data, 0.05, 8, &mut rng));
+        // A degenerate one-sample shard makes the batch deterministic:
+        // the sharded gradient must equal the batch gradient on that row.
+        let mut b = ShardedBackend::new(m.clone(), vec![17]).unwrap();
+        let w = rng.normal_vec(6);
+        let g = b.gradient(&w, &mut Rng::new(3));
+        assert_eq!(g, m.gradient_on_batch(&w, &vec![17; 8]));
+        // Unlabeled models and empty shards are rejected at construction.
+        assert!(ShardedBackend::new(m.clone(), vec![]).is_err());
+        let quad =
+            Arc::new(crate::model::GaussianQuadratic::new(4, 1.0, 2.0, 0.1, &mut rng));
+        assert!(ShardedBackend::new(quad, vec![0]).is_err());
     }
 }

@@ -8,8 +8,8 @@
 //! * `analyze`        — print the theory constants (β, γ, ρ, r-bound, C, …)
 //! * `figures`        — reproduce the paper's figures. Measured,
 //!                      sweep-engine-backed with replicate seeds:
-//!                      `--fig 2|3|4|curves|loss|codec|swarm|all --profile
-//!                      smoke|full`
+//!                      `--fig 2|3|4|curves|loss|codec|churn|swarm|all
+//!                      --profile smoke|full`
 //!                      (writes `results/FIG_*.{svg,csv}`; `curves` is
 //!                      the faceted error-vs-round figure from a traced
 //!                      sweep, with the contraction fit overlaid; `loss`
@@ -32,7 +32,8 @@
 //! * `convergence`    — empirical contraction vs theoretical ρ
 //! * `sweep`          — run a declarative experiment grid on the sweep
 //!                      engine (`--grid attack-matrix|gv-baseline|
-//!                      comm-savings|convergence|quick`, `--profile
+//!                      comm-savings|convergence|loss|loss-recovery|
+//!                      codec|churn|quick`, `--profile
 //!                      smoke|full`, `--out <path>`); config flags
 //!                      override the preset's base (swept axes win for
 //!                      their own dimension), cells fan out across the
@@ -86,8 +87,12 @@
 //! echo-cgc figures --fig loss --profile smoke --threads auto
 //! echo-cgc figures --fig loss-recovery --profile smoke --threads auto
 //! echo-cgc figures --fig codec --profile smoke --threads auto
+//! echo-cgc figures --fig churn --profile smoke --threads auto
 //! echo-cgc train --n 20 --f 2 --codec int8
+//! echo-cgc train --n 12 --f 1 --model logistic --churn 0.2 --alpha 0.5
 //! echo-cgc sweep --grid codec --profile smoke --threads auto
+//! echo-cgc sweep --grid churn --profile smoke --threads auto
+//! echo-cgc figures --axis churn=0,0.1,0.3 --axis alpha=iid,0.1 --metric echo_rate
 //! echo-cgc figures --axis n=10,20,50 --axis f=0..4 --metric comm_savings
 //! echo-cgc figures --axis loss=0,0.1,0.3 --metric echo_rate
 //! echo-cgc figures --which all
@@ -119,9 +124,10 @@ fn usage() -> ! {
                         --channel perfect|bernoulli=p|ge=p_good,p_bad,p_gb,p_bg --uplink-retries <k> (lossy radio)\n\
                         --recovery arq|fec|hybrid (uplink loss recovery: retransmit, RS shard coding, or both)\n\
                         --codec f64|f32|int8|sign|topk<k> (gradient wire codec; f64 = identity)\n\
+                        --churn p --straggler p --alpha a|iid (sim-only: epoch-keyed membership, missed deadlines, non-IID Dirichlet shards)\n\
                         --encoding <f32|f64>+<varint|u16> (frame precision + echo-id codec, both halves at once)\n\
-         sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|loss|loss-recovery|codec|quick --profile smoke|full --out <path>\n\
-         figures flags: --fig 2|3|4|curves|loss|loss-recovery|codec|swarm|all --profile smoke|full --out-dir <dir> (paper figures)\n\
+         sweep flags:   --grid attack-matrix|gv-baseline|comm-savings|convergence|loss|loss-recovery|codec|churn|quick --profile smoke|full --out <path>\n\
+         figures flags: --fig 2|3|4|curves|loss|loss-recovery|codec|churn|swarm|all --profile smoke|full --out-dir <dir> (paper figures)\n\
                         --axis key=v1,v2|a..b [--x axis] [--series axis] [--metric name] (ad-hoc ablation)\n\
                         --which 1a|1b|1c|1d|all (closed-form theory figures)\n\
          node flags:    --listen ADDR (server) | --id K --peers ADDR (worker); --deadline-ms <ms> (per round)\n\
@@ -575,7 +581,7 @@ fn cmd_sweep(
     let mut grid = presets::by_name(grid_name, profile).unwrap_or_else(|| {
         eprintln!(
             "unknown grid '{grid_name}' (expected attack-matrix|gv-baseline|comm-savings|\
-             convergence|loss|loss-recovery|codec|quick)"
+             convergence|loss|loss-recovery|codec|churn|quick)"
         );
         std::process::exit(2);
     });
@@ -766,6 +772,7 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
         let mut want_loss = false;
         let mut want_recovery = false;
         let mut want_codec = false;
+        let mut want_churn = false;
         let mut want_swarm = false;
         let swarm_csv = format!("{out_dir}/BENCH_swarm_latency.csv");
         if figs == "all" {
@@ -774,6 +781,7 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
             want_loss = true;
             want_recovery = true;
             want_codec = true;
+            want_churn = true;
             // The swarm panel renders a measured bench CSV rather than
             // running a sweep — under `all` it is opportunistic, under an
             // explicit `--fig swarm` a missing CSV is an error.
@@ -802,6 +810,10 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                     want_codec = true;
                     continue;
                 }
+                if v == "churn" {
+                    want_churn = true;
+                    continue;
+                }
                 if v == "swarm" {
                     want_swarm = true;
                     continue;
@@ -809,7 +821,7 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                 ids.push(FigId::parse(v).unwrap_or_else(|| {
                     eprintln!(
                         "unknown figure '{v}' \
-                         (expected 2|3|4|curves|loss|loss-recovery|codec|swarm|all)"
+                         (expected 2|3|4|curves|loss|loss-recovery|codec|churn|swarm|all)"
                     );
                     std::process::exit(2);
                 }));
@@ -900,6 +912,25 @@ fn cmd_figures(cfg: &ExperimentConfig, which: &str, profile_name: &str, cli: &Fi
                 println!("wrote {} + {}", csv_path.display(), svg_path.display());
             }
             println!("wrote {out_dir}/FIG_codec_report.json");
+        }
+        if want_churn {
+            let job = figures::paper_churn(profile);
+            println!(
+                "figures: FIG_churn — heterogeneity grid '{}', {} cells × profile {} on {} threads",
+                job.grid.name,
+                job.grid.len(),
+                profile.name(),
+                threads
+            );
+            let (report, charts) = job.run(threads);
+            report
+                .write_json(format!("{out_dir}/FIG_churn_report.json"))
+                .expect("write churn report");
+            for (chart, stem) in charts {
+                let (csv_path, svg_path) = chart.write(&out_dir, stem).expect("write figure");
+                println!("wrote {} + {}", csv_path.display(), svg_path.display());
+            }
+            println!("wrote {out_dir}/FIG_churn_report.json");
         }
         if want_swarm {
             let charts = figures::swarm::swarm_charts(&swarm_csv).unwrap_or_else(|e| {

@@ -140,6 +140,22 @@ impl CostModel for LogisticRegression {
     fn constants(&self) -> CurvatureConstants {
         self.consts
     }
+
+    fn labels(&self) -> Option<&[f64]> {
+        Some(self.data.y())
+    }
+
+    fn shard_gradient(
+        &self,
+        w: &[f64],
+        shard: &[usize],
+        rng: &mut Rng,
+    ) -> Option<Vec<f64>> {
+        assert!(!shard.is_empty());
+        let idx: Vec<usize> =
+            (0..self.batch).map(|_| shard[rng.range(0, shard.len())]).collect();
+        Some(self.gradient_on_batch(w, &idx))
+    }
 }
 
 #[cfg(test)]

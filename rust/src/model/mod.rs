@@ -76,6 +76,28 @@ pub trait CostModel: Send + Sync {
     fn initial_w(&self, rng: &mut Rng) -> Vec<f64> {
         rng.normal_vec(self.dim())
     }
+
+    /// Per-sample target labels, when the model is data-driven
+    /// classification (logistic/softmax) — what the non-IID Dirichlet
+    /// sharder ([`crate::data::dirichlet_partition`]) partitions. `None`
+    /// for synthetic models with no per-sample structure.
+    fn labels(&self) -> Option<&[f64]> {
+        None
+    }
+
+    /// Mini-batch stochastic gradient restricted to `shard` (batch indices
+    /// sampled with replacement from the shard instead of the full
+    /// dataset) — the non-IID oracle behind
+    /// [`crate::grad::ShardedBackend`]. `None` when the model has no
+    /// per-sample structure to shard.
+    fn shard_gradient(
+        &self,
+        _w: &[f64],
+        _shard: &[usize],
+        _rng: &mut Rng,
+    ) -> Option<Vec<f64>> {
+        None
+    }
 }
 
 /// Finite-difference check used by the per-model unit tests:

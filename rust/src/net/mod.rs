@@ -87,6 +87,27 @@ pub fn validate_node_cfg(cfg: &ExperimentConfig) -> Result<(), String> {
                 .into(),
         );
     }
+    if cfg.churn > 0.0 {
+        return Err(
+            "node mode runs a fixed TCP roster; membership churn re-keys the TDMA \
+             schedule per round and is sim-only (use --churn 0)"
+                .into(),
+        );
+    }
+    if cfg.straggler > 0.0 {
+        return Err(
+            "node mode has real wall-clock deadlines (--deadline-ms); the synthetic \
+             straggler draw is sim-only (use --straggler 0)"
+                .into(),
+        );
+    }
+    if cfg.alpha.is_some() {
+        return Err(
+            "node mode workers evaluate the shared dataset; Dirichlet sharding is \
+             sim-only (use --alpha iid)"
+                .into(),
+        );
+    }
     Ok(())
 }
 
@@ -128,5 +149,21 @@ mod tests {
         cfg.recovery = Recovery::Arq;
         cfg.attack = AttackKind::Equivocate;
         assert!(validate_node_cfg(&cfg).unwrap_err().contains("equivocate"));
+    }
+
+    #[test]
+    fn node_mode_rejects_sim_only_membership_axes() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.churn = 0.2;
+        assert!(validate_node_cfg(&cfg).unwrap_err().contains("churn"));
+        cfg.churn = 0.0;
+        cfg.straggler = 0.1;
+        assert!(validate_node_cfg(&cfg).unwrap_err().contains("straggler"));
+        cfg.straggler = 0.0;
+        cfg.model = crate::config::ModelKind::Logistic;
+        cfg.alpha = Some(0.5);
+        assert!(validate_node_cfg(&cfg).unwrap_err().contains("sharding"));
+        cfg.alpha = None;
+        validate_node_cfg(&cfg).expect("membership defaults stay deployable");
     }
 }

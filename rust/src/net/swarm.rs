@@ -180,7 +180,7 @@ pub fn compare_rounds(a: &RoundEvent, b: &RoundEvent) -> Result<(), String> {
     fn bits(x: Option<f64>) -> Option<u64> {
         x.map(f64::to_bits)
     }
-    let fields: [(&str, bool); 12] = [
+    let fields: [(&str, bool); 14] = [
         ("round", a.round == b.round),
         ("loss", a.loss.to_bits() == b.loss.to_bits()),
         ("dist_sq", bits(a.dist_sq) == bits(b.dist_sq)),
@@ -193,6 +193,8 @@ pub fn compare_rounds(a: &RoundEvent, b: &RoundEvent) -> Result<(), String> {
         ("dropped_frames", a.dropped_frames == b.dropped_frames),
         ("retransmits", a.retransmits == b.retransmits),
         ("fallbacks", a.fallbacks == b.fallbacks),
+        ("absent", a.absent == b.absent),
+        ("late", a.late == b.late),
     ];
     for (name, eq) in fields {
         if !eq {

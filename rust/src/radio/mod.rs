@@ -85,6 +85,23 @@ impl TdmaSchedule {
         Self { order }
     }
 
+    /// A per-round membership roster: slots cover only the round's
+    /// *active* workers, in ascending id order. Ids index the full worker
+    /// population `0..n` (the roster is a subset, not a permutation), so
+    /// the receiver domain must stay the full population — the network
+    /// tracks it separately ([`RadioNetwork::workers`]). An empty roster
+    /// is legal: the round simply has no uplink slots.
+    pub fn roster(active: Vec<NodeId>, n: usize) -> Self {
+        for (i, &w) in active.iter().enumerate() {
+            assert!(w < n, "roster id {w} out of 0..{n}");
+            assert!(
+                i == 0 || active[i - 1] < w,
+                "roster must be strictly ascending: {active:?}"
+            );
+        }
+        Self { order: active }
+    }
+
     pub fn n_slots(&self) -> usize {
         self.order.len()
     }
@@ -326,7 +343,10 @@ impl SlotCursor {
         let enc = net.encoding;
         let bytes = encode_ctx(payload, enc, net.codec, net.codec_ctx(slot));
         let bits1 = (bytes.len() as u64) * 8;
-        let n = net.schedule.n_slots();
+        // Receiver domain = the full worker population, NOT the schedule
+        // length: a churn roster shortens the round's slots, but absent
+        // workers keep their receiver ids (and the server stays id `n`).
+        let n = net.workers;
         let round = net.round;
         let budget = 1 + net.uplink_retries as u64;
         let mut heard = vec![false; n];
@@ -401,7 +421,8 @@ impl SlotCursor {
         let body_len = shards[0].len().max(alt_body_len);
         // Shard wire format: 1 index byte + 8 commitment bytes + body.
         let shard_bits = ((fec::SHARD_OVERHEAD_BYTES + body_len) as u64) * 8;
-        let n = net.schedule.n_slots();
+        // Receiver domain = the full worker population (see transmit_arq).
+        let n = net.workers;
         let round = net.round;
         let mut shard_count = vec![0usize; n];
         let mut server_shards: Vec<u8> = Vec::new();
@@ -600,6 +621,12 @@ pub struct RadioNetwork {
     pub schedule: TdmaSchedule,
     pub encoding: Encoding,
     pub meter: BitMeter,
+    /// Size of the full worker population — the receiver-id domain
+    /// (workers are channel receivers `0..workers`, the server is
+    /// receiver `workers`). Distinct from `schedule.n_slots()` because a
+    /// churn roster covers only the round's active subset while absent
+    /// workers remain addressable receivers.
+    workers: usize,
     channel: Channel,
     /// Extra server-bound transmission attempts a sender may spend per
     /// frame when the server misses it (0 extra under a perfect channel
@@ -642,6 +669,7 @@ impl RadioNetwork {
             schedule: TdmaSchedule::identity(n),
             encoding,
             meter: BitMeter::new(n),
+            workers: n,
             channel: Channel::new(model, seed, n + 1),
             uplink_retries: retries,
             recovery: Recovery::Arq,
@@ -688,6 +716,13 @@ impl RadioNetwork {
 
     pub fn n(&self) -> usize {
         self.schedule.n_slots()
+    }
+
+    /// Size of the full worker population (the channel's receiver-id
+    /// domain; the server is receiver id `workers`). Equals
+    /// [`Self::n`] except under a churn roster schedule.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     pub fn channel_model(&self) -> ChannelModel {
@@ -758,6 +793,37 @@ mod tests {
         // Receivers overheard everything not their own.
         assert_eq!(net.meter.rx_bits[2], b0 + b1);
         assert_eq!(net.meter.rx_bits[0], b1);
+    }
+
+    #[test]
+    fn roster_schedule_keeps_the_full_receiver_domain() {
+        // A 5-worker population with only {1, 3, 4} active: the round has
+        // 3 slots, but every broadcast's heard vector (and the meter)
+        // still spans all 5 workers, and the server stays receiver id 5.
+        let mut net = RadioNetwork::new(5, Encoding::default());
+        net.schedule = TdmaSchedule::roster(vec![1, 3, 4], 5);
+        assert_eq!(net.n(), 3);
+        assert_eq!(net.workers(), 5);
+        let mut round = net.begin_round();
+        let bc = round.broadcast(0, 1, &raw(1.0, 8));
+        assert_eq!(bc.heard, vec![true, false, true, true, true]);
+        assert!(bc.server_got);
+        round.broadcast(1, 3, &raw(2.0, 8));
+        round.silence(2);
+        round.finish();
+        assert_eq!(net.meter.tx_bits.len(), 5);
+        assert_eq!(net.meter.tx_bits[0], 0, "absent workers transmit nothing");
+        assert!(net.meter.tx_bits[1] > 0);
+        // An empty roster is a legal zero-slot round.
+        net.schedule = TdmaSchedule::roster(vec![], 5);
+        net.begin_round().finish();
+        assert_eq!(net.meter.uplink_history.last(), Some(&0));
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn roster_rejects_unsorted_ids() {
+        TdmaSchedule::roster(vec![2, 1], 5);
     }
 
     #[test]

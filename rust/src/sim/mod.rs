@@ -45,7 +45,7 @@ use crate::config::{ExperimentConfig, ModelKind};
 use crate::coordinator::{ParameterServer, SlotOutcome};
 use crate::data;
 use crate::fec::Recovery;
-use crate::grad::{GradientBackend, NativeBackend};
+use crate::grad::{GradientBackend, NativeBackend, ShardedBackend};
 use crate::linalg;
 use crate::model::{
     CostModel, GaussianQuadratic, LogisticRegression, RidgeRegression, SoftmaxRegression,
@@ -63,6 +63,28 @@ pub use crate::trace::RoundEvent;
 
 /// Historical name of [`RoundEvent`] — the per-round measurement record.
 pub use crate::trace::RoundEvent as RoundRecord;
+
+/// Salts separating the epoch-keyed roster's draws from each other (and,
+/// by construction, from the channel/codec hash streams — every salt
+/// family is distinct, so no two pure-hash sequences alias).
+const SALT_CHURN: u64 = 0x43_48_52_4E; // "CHRN" — per-round absence
+const SALT_LATE: u64 = 0x4C_41_54_45; // "LATE" — per-round deadline misses
+/// Salt deriving the one-shot Dirichlet shard-partition seed.
+const SALT_SHARD: u64 = 0x53_48_52_44; // "SHRD"
+
+/// Uniform `[0, 1)` membership draw — a pure hash of
+/// `(seed, round, worker, salt)`, the channel-model trick
+/// ([`crate::radio::channel`]): no shared RNG stream is consumed, so the
+/// churn/straggler knobs perturb no existing random sequence and the
+/// draws are bit-identical at any thread count.
+fn membership_draw(seed: u64, salt: u64, round: u64, worker: u64) -> f64 {
+    let mut h = seed;
+    h ^= round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= worker.wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    h ^= salt.wrapping_mul(0x94D0_49BB_1331_11EB);
+    let mut sm = crate::rng::SplitMix64::new(h);
+    (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
 
 /// Wall-clock totals per phase (feeds the §Perf profile).
 #[derive(Clone, Copy, Debug, Default)]
@@ -130,19 +152,40 @@ impl Wiring {
     pub fn native(cfg: &ExperimentConfig) -> Result<Wiring, String> {
         let mut rng = Rng::new(cfg.seed);
         let model = Simulation::build_model(cfg, &mut rng);
-        let backends: Vec<Option<Box<dyn GradientBackend>>> = {
-            let byz = cfg.byz_placement.place(cfg.n, cfg.b, &mut rng.split(1));
-            (0..cfg.n)
-                .map(|i| {
-                    if byz.contains(&i) {
-                        None
-                    } else {
-                        Some(Box::new(NativeBackend::new(model.clone()))
-                            as Box<dyn GradientBackend>)
-                    }
-                })
-                .collect()
+        let byz = cfg.byz_placement.place(cfg.n, cfg.b, &mut rng.split(1));
+        // Dirichlet(α) shards are drawn once at build from a dedicated
+        // pure-derived seed — no draw from the main stream — so
+        // `alpha = None` (IID) stays byte-identical to the pre-shard
+        // engine and the partition itself is thread-count-independent.
+        let shards: Option<Vec<Vec<usize>>> = match cfg.alpha {
+            Some(alpha) => {
+                let labels = model
+                    .labels()
+                    .ok_or_else(|| "alpha (non-IID sharding) needs a labeled model".to_string())?;
+                Some(data::dirichlet_partition(
+                    labels,
+                    cfg.n,
+                    alpha,
+                    &mut Rng::new(cfg.seed ^ SALT_SHARD),
+                ))
+            }
+            None => None,
         };
+        let mut backends: Vec<Option<Box<dyn GradientBackend>>> = Vec::with_capacity(cfg.n);
+        for i in 0..cfg.n {
+            if byz.contains(&i) {
+                backends.push(None);
+            } else if let Some(shards) = &shards {
+                backends.push(Some(Box::new(ShardedBackend::new(
+                    model.clone(),
+                    shards[i].clone(),
+                )?) as Box<dyn GradientBackend>));
+            } else {
+                backends
+                    .push(Some(Box::new(NativeBackend::new(model.clone()))
+                        as Box<dyn GradientBackend>));
+            }
+        }
         Self::with_backends(cfg, model, backends)
     }
 
@@ -273,6 +316,12 @@ pub struct Simulation<T: Transport = RadioTransport> {
     /// (remote workers keep their own [`crate::worker::WorkerStats`]).
     cum_echo: u64,
     cum_raw: u64,
+    /// Cumulative epoch-keyed roster casualties: worker-rounds absent
+    /// from the schedule (churn) and honest worker-rounds that missed the
+    /// round deadline (stragglers). Both 0 without the knobs — what
+    /// [`crate::sweep`] serializes for churn/straggler cells.
+    cum_absent: u64,
+    cum_late: u64,
 }
 
 impl Simulation {
@@ -348,6 +397,8 @@ impl<T: Transport> Simulation<T> {
             baseline_attempts: 0,
             cum_echo: 0,
             cum_raw: 0,
+            cum_absent: 0,
+            cum_late: 0,
             model: wiring.model,
             cfg: cfg.clone(),
         }
@@ -402,6 +453,12 @@ impl<T: Transport> Simulation<T> {
         self.channel_totals
     }
 
+    /// Cumulative `(absent, late)` worker-rounds under the epoch-keyed
+    /// roster — both 0 when churn/straggler are off.
+    pub fn membership_totals(&self) -> (u64, u64) {
+        (self.cum_absent, self.cum_late)
+    }
+
     pub fn server(&self) -> &ParameterServer {
         &self.server
     }
@@ -413,6 +470,32 @@ impl<T: Transport> Simulation<T> {
         // Does this engine host the workers in-process (in-memory radio),
         // or do remote node processes own them (networked server)?
         let hosts = self.transport.hosts_workers();
+
+        // ---- Epoch-keyed roster -----------------------------------------------
+        // Per-round membership and lateness are pure hash draws of
+        // `(seed, round, worker)` — the channel-model trick — so they
+        // consume no RNG stream and everything downstream stays
+        // byte-identical at any thread count (and, with both knobs at
+        // their 0.0 defaults, byte-identical to the roster-free engine).
+        let churned = self.cfg.churn > 0.0;
+        let active: Vec<bool> = (0..cfg_n)
+            .map(|i| {
+                !churned
+                    || membership_draw(self.cfg.seed, SALT_CHURN, self.round as u64, i as u64)
+                        >= self.cfg.churn
+            })
+            .collect();
+        let late: Vec<bool> = (0..cfg_n)
+            .map(|i| {
+                active[i]
+                    && self.cfg.straggler > 0.0
+                    && membership_draw(self.cfg.seed, SALT_LATE, self.round as u64, i as u64)
+                        < self.cfg.straggler
+            })
+            .collect();
+        let roster: Vec<usize> = (0..cfg_n).filter(|&i| active[i]).collect();
+        let absent_count = cfg_n - roster.len();
+
         // Pre-update measurements at w^t.
         let loss = self.model.loss(&self.w);
         let full_grad_at_w = self.model.full_gradient(&self.w);
@@ -432,11 +515,14 @@ impl<T: Transport> Simulation<T> {
         let mut true_grad = Vec::new();
         let mut honest_grads: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
         if hosts {
-            let grads = crate::grad::parallel_gradients(
+            // Absent workers compute nothing and leave their RNG streams
+            // untouched this round (mask = identity without churn).
+            let grads = crate::grad::parallel_gradients_active(
                 &mut self.backends,
                 &mut self.worker_rngs,
                 &w_recv,
                 threads,
+                Some(&active),
             );
             // Omniscient adversaries know the true gradient at the received w
             // and every honest gradient. Both are pure attack inputs, and the
@@ -459,21 +545,47 @@ impl<T: Transport> Simulation<T> {
         let t1 = Instant::now();
         if self.cfg.shuffle_slots {
             self.transport.set_schedule(TdmaSchedule::shuffled(cfg_n, &mut self.sched_rng));
+        } else if churned {
+            // Membership changed (or may have): re-derive the TDMA slot
+            // schedule over the round's active subset and the server's
+            // clip budget from the active count (`2f' < active`, so a
+            // thinned round cannot over-trust the filter).
+            self.transport.set_schedule(TdmaSchedule::roster(roster.clone(), cfg_n));
+            self.server.set_round_f(self.cfg.f.min(roster.len().saturating_sub(1) / 2));
         }
         self.server.begin_round();
         self.transport.begin_round();
-        let mut overheard: Vec<(usize, Payload)> = Vec::with_capacity(cfg_n);
+        // Absent workers have no slot this round; their frames are a
+        // `Lost`-like absence the server zeroes without exposure (absence
+        // under churn is not Byzantine proof, exactly like channel loss).
+        // They contribute no baseline attempt either: an all-raw baseline
+        // would not have transmitted for them.
+        for j in 0..cfg_n {
+            if !active[j] {
+                self.server.on_lost(j);
+            }
+        }
+        let mut overheard: Vec<(usize, Payload)> = Vec::with_capacity(roster.len());
         let mut echo_count = 0usize;
         let mut raw_count = 0usize;
+        let mut late_count = 0usize;
         let mut dropped_frames = 0usize;
         let mut retransmits = 0usize;
         let mut fallbacks = 0usize;
-        for slot in 0..cfg_n {
+        for slot in 0..roster.len() {
             let owner = self.transport.owner(slot);
+            // An honest straggler computed its gradient but missed the
+            // round deadline: the slot is kept (the worker is present and
+            // listening) yet elapses with no frame. Resolved below as a
+            // `Lost`-like absence — slow is never Byzantine. Attacks keep
+            // their own on-air behaviour (a strong adversary is on time).
+            let is_late = late[owner] && !self.attacks.contains_key(&owner);
             let outgoing: Outgoing = if !hosts {
                 // The slot owner is a remote process: the transport reads
                 // its frame off the wire (or times the slot out).
                 Outgoing::Remote
+            } else if is_late {
+                Outgoing::Silence
             } else if let Some(att) = self.attacks.get_mut(&owner) {
                 let ctx = AttackCtx {
                     id: owner,
@@ -521,7 +633,14 @@ impl<T: Transport> Simulation<T> {
             let honest = !self.attacks.contains_key(&owner);
             match self.transport.resolve_slot(slot, owner, outgoing) {
                 SlotResolution::Silent => {
-                    self.server.on_silence(owner);
+                    if is_late {
+                        // Deadline miss, not deliberate silence: score the
+                        // slot `Lost` (zeroed, never exposed).
+                        self.server.on_lost(owner);
+                        late_count += 1;
+                    } else {
+                        self.server.on_silence(owner);
+                    }
                     self.baseline_attempts += 1;
                 }
                 SlotResolution::Lost => {
@@ -545,7 +664,8 @@ impl<T: Transport> Simulation<T> {
                     // to the server and to listeners (fec/hybrid only).
                     let equivocal = bc.heard_payload.is_some();
                     if hosts {
-                        dropped_frames += note_listeners(&mut self.workers, owner, &bc.heard);
+                        dropped_frames +=
+                            note_listeners(&mut self.workers, owner, &bc.heard, &active);
                     }
                     if honest {
                         match &bc.payload {
@@ -558,7 +678,14 @@ impl<T: Transport> Simulation<T> {
                     // acknowledges, so honest workers refuse it as an echo
                     // basis (referencing it would get *them* NACKed).
                     if hosts && self.cfg.echo_enabled && !equivocal {
-                        overhear_fan_out(&mut self.workers, owner, &bc.payload, &bc.heard, threads);
+                        overhear_fan_out(
+                            &mut self.workers,
+                            owner,
+                            &bc.payload,
+                            &bc.heard,
+                            &active,
+                            threads,
+                        );
                     }
                     // Honest echo the server missed (uplink erasure)
                     // or cannot reconstruct (it missed a referenced
@@ -612,13 +739,15 @@ impl<T: Transport> Simulation<T> {
                             self.channel_totals.fec_recoveries += 1;
                         }
                         if hosts {
-                            dropped_frames += note_listeners(&mut self.workers, owner, &fb.heard);
+                            dropped_frames +=
+                                note_listeners(&mut self.workers, owner, &fb.heard, &active);
                             if self.cfg.echo_enabled {
                                 overhear_fan_out(
                                     &mut self.workers,
                                     owner,
                                     &fb.payload,
                                     &fb.heard,
+                                    &active,
                                     threads,
                                 );
                             }
@@ -698,10 +827,14 @@ impl<T: Transport> Simulation<T> {
             dropped_frames,
             retransmits,
             fallbacks,
+            absent: absent_count,
+            late: late_count,
         };
         self.round += 1;
         self.cum_echo += echo_count as u64;
         self.cum_raw += raw_count as u64;
+        self.cum_absent += absent_count as u64;
+        self.cum_late += late_count as u64;
         self.trace.on_round(&rec);
         rec
     }
@@ -805,10 +938,17 @@ impl<T: Transport> Simulation<T> {
 /// Update the per-worker heard/missed statistics for one broadcast and
 /// return how many honest listeners missed it (the round's
 /// `dropped_frames` contribution — always 0 under the perfect channel).
-fn note_listeners(workers: &mut [Option<EchoWorker>], owner: usize, heard: &[bool]) -> usize {
+fn note_listeners(
+    workers: &mut [Option<EchoWorker>],
+    owner: usize,
+    heard: &[bool],
+    active: &[bool],
+) -> usize {
     let mut dropped = 0usize;
     for (i, slot) in workers.iter_mut().enumerate() {
-        if i == owner {
+        // Roster absentees are not listening: a frame they "missed" is
+        // neither a heard nor a dropped frame.
+        if i == owner || !active[i] {
             continue;
         }
         if let Some(wk) = slot.as_mut() {
@@ -836,6 +976,7 @@ fn overhear_fan_out(
     owner: usize,
     delivered: &Payload,
     heard: &[bool],
+    active: &[bool],
     threads: usize,
 ) {
     // Only raw gradients can extend a span (Algorithm 1, line 27):
@@ -847,7 +988,10 @@ fn overhear_fan_out(
     }
     let mut listeners: Vec<&mut EchoWorker> = Vec::with_capacity(workers.len());
     for (i, slot) in workers.iter_mut().enumerate() {
-        if i == owner || !heard[i] {
+        // Roster absentees overhear nothing (they are off the air
+        // entirely); stragglers still listen — they are present, merely
+        // slow to compute.
+        if i == owner || !heard[i] || !active[i] {
             continue;
         }
         if let Some(wk) = slot.as_mut() {
@@ -1018,6 +1162,101 @@ mod tests {
         assert_eq!(sim2.server().exposed().len(), 0);
         assert_eq!(sim2.channel_totals().equivocations, 0);
         assert_eq!(sim2.channel_totals().fec_recoveries, 0);
+    }
+
+    #[test]
+    fn churn_removes_slots_and_never_exposes_absentees() {
+        let mut cfg = quick_cfg();
+        cfg.churn = 0.3;
+        cfg.b = 0;
+        cfg.attack = AttackKind::None;
+        cfg.rounds = 40;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        let recs = sim.run();
+        let total_absent: usize = recs.iter().map(|r| r.absent).sum();
+        assert!(total_absent > 0, "churn=0.3 over 40 rounds must thin some round");
+        for r in &recs {
+            // Every active honest slot still resolves echo-or-raw; absent
+            // workers simply have no slot (perfect channel, b = 0).
+            assert_eq!(r.echo_count + r.raw_count + r.absent, cfg.n, "round {}", r.round);
+            assert_eq!(r.late, 0);
+        }
+        assert!(sim.server().exposed().is_empty(), "absence is never Byzantine");
+        assert_eq!(sim.membership_totals(), (total_absent as u64, 0));
+        // Pure-hash membership: a rerun reproduces the pattern exactly.
+        let mut sim2 = Simulation::build(&cfg).unwrap();
+        let recs2 = sim2.run();
+        let pat: Vec<usize> = recs.iter().map(|r| r.absent).collect();
+        let pat2: Vec<usize> = recs2.iter().map(|r| r.absent).collect();
+        assert_eq!(pat, pat2);
+        // And a different seed draws a different roster sequence.
+        let mut cfg3 = cfg.clone();
+        cfg3.seed = 977;
+        let mut sim3 = Simulation::build(&cfg3).unwrap();
+        let pat3: Vec<usize> = sim3.run().iter().map(|r| r.absent).collect();
+        assert_ne!(pat, pat3, "membership must be keyed on the seed");
+    }
+
+    #[test]
+    fn always_late_worker_misses_every_deadline_and_is_never_exposed() {
+        // straggler = 1.0: every honest worker computes its gradient but
+        // misses the round deadline every round. All slots score Lost,
+        // nobody is exposed, and the aggregate degenerates to the zero
+        // update — the parameter never moves and nothing panics.
+        let mut cfg = quick_cfg();
+        cfg.straggler = 1.0;
+        cfg.b = 0;
+        cfg.attack = AttackKind::None;
+        cfg.rounds = 10;
+        let mut sim = Simulation::build(&cfg).unwrap();
+        let recs = sim.run();
+        for r in &recs {
+            assert_eq!(r.late, cfg.n);
+            assert_eq!(r.absent, 0, "stragglers keep their slots");
+            assert_eq!(r.echo_count + r.raw_count, 0);
+            assert_eq!(r.exposed_cum, 0, "slow is never Byzantine");
+            assert!(r.loss.is_finite());
+        }
+        assert_eq!(
+            recs.first().unwrap().loss.to_bits(),
+            recs.last().unwrap().loss.to_bits(),
+            "no delivered gradient ⇒ the zero update"
+        );
+        assert!(sim.server().exposed().is_empty());
+        assert_eq!(sim.membership_totals(), (0, (cfg.n * cfg.rounds) as u64));
+    }
+
+    #[test]
+    fn dirichlet_sharding_biases_gradients_but_stays_deterministic() {
+        let mut cfg = quick_cfg();
+        cfg.model = ModelKind::Logistic;
+        cfg.d = 10;
+        cfg.dataset_m = 200;
+        cfg.batch = 16;
+        cfg.lambda = 0.05;
+        cfg.r = Some(0.3);
+        cfg.eta = Some(0.05);
+        cfg.rounds = 20;
+        cfg.alpha = Some(0.5);
+        let mut a = Simulation::build(&cfg).unwrap();
+        let mut b = Simulation::build(&cfg).unwrap();
+        let ra = a.run();
+        let rb = b.run();
+        for (x, y) in ra.iter().zip(rb.iter()) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
+        assert!(ra.last().unwrap().loss.is_finite());
+        // The shards genuinely bias the per-worker batches: the IID run
+        // of the same config diverges from the sharded one.
+        let mut cfg_iid = cfg.clone();
+        cfg_iid.alpha = None;
+        let mut iid = Simulation::build(&cfg_iid).unwrap();
+        let ri = iid.run();
+        assert_ne!(
+            ra.last().unwrap().loss.to_bits(),
+            ri.last().unwrap().loss.to_bits(),
+            "alpha=0.5 must not be a no-op"
+        );
     }
 
     #[test]

@@ -124,7 +124,8 @@ pub fn auto_threads() -> usize {
 /// the base config's value; non-empty axes multiply into a cross-product
 /// enumerated in a fixed nesting order (outermost → innermost): `nfb`,
 /// `models`, `sigmas`, `dims`, `attacks`, `aggregators`, `echo`,
-/// `channels`, `recoveries`, `codecs`, `seeds`.
+/// `channels`, `recoveries`, `codecs`, `churns`, `stragglers`, `alphas`,
+/// `seeds`.
 #[derive(Clone, Debug)]
 pub struct SweepGrid {
     pub name: String,
@@ -151,6 +152,15 @@ pub struct SweepGrid {
     /// inside `recoveries` so each discipline compares codecs under
     /// identical channel draws.
     pub codecs: Vec<WireCodec>,
+    /// The membership-churn axis: per-round probability that a worker is
+    /// absent (epoch-keyed roster; `0.0` = the fixed-membership default).
+    pub churns: Vec<f64>,
+    /// The straggler axis: per-round probability that a present honest
+    /// worker misses the TDMA deadline (scored `Lost`, never exposed).
+    pub stragglers: Vec<f64>,
+    /// The heterogeneity axis: Dirichlet concentration for non-IID data
+    /// shards (`None` = the IID default; smaller α = more skew).
+    pub alphas: Vec<Option<f64>>,
     pub seeds: Vec<u64>,
 }
 
@@ -170,6 +180,9 @@ impl SweepGrid {
             channels: Vec::new(),
             recoveries: Vec::new(),
             codecs: Vec::new(),
+            churns: Vec::new(),
+            stragglers: Vec::new(),
+            alphas: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -193,6 +206,9 @@ impl SweepGrid {
         let channels = axis(&self.channels, self.base.channel);
         let recoveries = axis(&self.recoveries, self.base.recovery);
         let codecs = axis(&self.codecs, self.base.codec);
+        let churns = axis(&self.churns, self.base.churn);
+        let stragglers = axis(&self.stragglers, self.base.straggler);
+        let alphas = axis(&self.alphas, self.base.alpha);
         let seeds = axis(&self.seeds, self.base.seed);
         let mut out = Vec::new();
         for &(n, f, b) in &nfb {
@@ -205,22 +221,32 @@ impl SweepGrid {
                                     for &channel in &channels {
                                         for &recovery in &recoveries {
                                             for &codec in &codecs {
-                                                for &seed in &seeds {
-                                                    let mut cfg = self.base.clone();
-                                                    cfg.n = n;
-                                                    cfg.f = f;
-                                                    cfg.b = b;
-                                                    cfg.model = model;
-                                                    cfg.sigma = sigma;
-                                                    cfg.d = d;
-                                                    cfg.attack = attack;
-                                                    cfg.aggregator = agg;
-                                                    cfg.echo_enabled = echo;
-                                                    cfg.channel = channel;
-                                                    cfg.recovery = recovery;
-                                                    cfg.codec = codec;
-                                                    cfg.seed = seed;
-                                                    out.push(cfg);
+                                                for &churn in &churns {
+                                                    for &straggler in &stragglers {
+                                                        for &alpha in &alphas {
+                                                            for &seed in &seeds {
+                                                                let mut cfg =
+                                                                    self.base.clone();
+                                                                cfg.n = n;
+                                                                cfg.f = f;
+                                                                cfg.b = b;
+                                                                cfg.model = model;
+                                                                cfg.sigma = sigma;
+                                                                cfg.d = d;
+                                                                cfg.attack = attack;
+                                                                cfg.aggregator = agg;
+                                                                cfg.echo_enabled = echo;
+                                                                cfg.channel = channel;
+                                                                cfg.recovery = recovery;
+                                                                cfg.codec = codec;
+                                                                cfg.churn = churn;
+                                                                cfg.straggler = straggler;
+                                                                cfg.alpha = alpha;
+                                                                cfg.seed = seed;
+                                                                out.push(cfg);
+                                                            }
+                                                        }
+                                                    }
                                                 }
                                             }
                                         }
@@ -294,6 +320,21 @@ pub struct SweepCell {
     /// The gradient wire codec the cell ran under (the `codec` axis
     /// coordinate; serialized only when not the f64 identity default).
     pub codec: WireCodec,
+    /// Per-round absence probability the cell ran under (the `churn` axis
+    /// coordinate; serialized only when non-zero).
+    pub churn: f64,
+    /// Per-round straggler probability the cell ran under (serialized
+    /// only when non-zero).
+    pub straggler: f64,
+    /// Dirichlet concentration of the cell's non-IID shards (`None` =
+    /// IID; serialized only when set).
+    pub alpha: Option<f64>,
+    /// Cumulative worker-rounds absent from the roster (serialized only
+    /// for churned cells).
+    pub absent: u64,
+    /// Cumulative missed-deadline slots by present honest workers
+    /// (serialized only for straggler cells).
+    pub late: u64,
     pub echo_rate: f64,
     pub comm_savings: f64,
     pub final_loss: f64,
@@ -383,6 +424,20 @@ impl SweepCell {
         if self.codec != WireCodec::F64 {
             pairs.push(("codec", Json::Str(self.codec.name())));
         }
+        // Membership axes follow the same contract: a churn-free,
+        // straggler-free, IID cell serializes the exact pre-churn schema
+        // byte for byte.
+        if self.churn != 0.0 {
+            pairs.push(("churn", Json::Num(self.churn)));
+            pairs.push(("absent", Json::Num(self.absent as f64)));
+        }
+        if self.straggler != 0.0 {
+            pairs.push(("straggler", Json::Num(self.straggler)));
+            pairs.push(("late", Json::Num(self.late as f64)));
+        }
+        if let Some(a) = self.alpha {
+            pairs.push(("alpha", Json::Num(a)));
+        }
         if include_timings {
             pairs.push(("grad_ns", Json::Num(self.timings.grad_ns as f64)));
             pairs.push(("comm_ns", Json::Num(self.timings.comm_ns as f64)));
@@ -444,6 +499,9 @@ impl SweepReport {
     pub fn csv(&self) -> CsvTable {
         let with_recovery = self.cells.iter().any(|c| c.recovery != Recovery::Arq);
         let with_codec = self.cells.iter().any(|c| c.codec != WireCodec::F64);
+        let with_churn = self.cells.iter().any(|c| c.churn != 0.0);
+        let with_straggler = self.cells.iter().any(|c| c.straggler != 0.0);
+        let with_alpha = self.cells.iter().any(|c| c.alpha.is_some());
         let mut header = vec![
             "index",
             "label",
@@ -484,6 +542,21 @@ impl SweepReport {
             let i = header.iter().position(|&h| h == "empirical_rho").unwrap();
             header.splice(i..i, ["codec"]);
         }
+        // Membership columns splice before `empirical_rho` as well (after
+        // any codec column), so churn-free reports keep the pre-churn CSV
+        // bytes.
+        if with_churn {
+            let i = header.iter().position(|&h| h == "empirical_rho").unwrap();
+            header.splice(i..i, ["churn", "absent"]);
+        }
+        if with_straggler {
+            let i = header.iter().position(|&h| h == "empirical_rho").unwrap();
+            header.splice(i..i, ["straggler", "late"]);
+        }
+        if with_alpha {
+            let i = header.iter().position(|&h| h == "empirical_rho").unwrap();
+            header.splice(i..i, ["alpha"]);
+        }
         let mut t = CsvTable::new(&header);
         let opt = |v: Option<f64>| v.map(|x| format!("{x}")).unwrap_or_default();
         for c in &self.cells {
@@ -520,6 +593,17 @@ impl SweepReport {
             }
             if with_codec {
                 row.push(c.codec.name());
+            }
+            if with_churn {
+                row.push(format!("{}", c.churn));
+                row.push(format!("{}", c.absent));
+            }
+            if with_straggler {
+                row.push(format!("{}", c.straggler));
+                row.push(format!("{}", c.late));
+            }
+            if with_alpha {
+                row.push(c.alpha.map(|a| format!("{a}")).unwrap_or_default());
             }
             row.push(opt(c.empirical_rho));
             row.push(opt(c.theory_rho));
@@ -560,6 +644,12 @@ fn trace_json(events: &[RoundEvent]) -> Json {
         pairs.push(("retransmits", num(|e| e.retransmits as f64)));
         pairs.push(("fallbacks", num(|e| e.fallbacks as f64)));
     }
+    // Membership columns appear only when some round saw churn or a
+    // missed deadline — fixed-membership traces keep the prior schema.
+    if events.iter().any(|e| e.absent > 0 || e.late > 0) {
+        pairs.push(("absent", num(|e| e.absent as f64)));
+        pairs.push(("late", num(|e| e.late as f64)));
+    }
     Json::obj(pairs)
 }
 
@@ -570,7 +660,7 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
     // channel suffix appears only for lossy cells (label stability for
     // the pre-channel artifact names).
     let label = format!(
-        "{}_{}_sigma{}_d{}_seed{}{}{}{}{}",
+        "{}_{}_sigma{}_d{}_seed{}{}{}{}{}{}{}{}",
         cfg.run_tag(),
         cfg.aggregator.name(),
         cfg.sigma,
@@ -593,6 +683,17 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
             String::new()
         } else {
             format!("_{}", cfg.codec.name())
+        },
+        // Fixed-membership IID cells keep their pre-churn labels.
+        if cfg.churn == 0.0 { String::new() } else { format!("_churn{}", cfg.churn) },
+        if cfg.straggler == 0.0 {
+            String::new()
+        } else {
+            format!("_strag{}", cfg.straggler)
+        },
+        match cfg.alpha {
+            None => String::new(),
+            Some(a) => format!("_a{a}"),
         }
     );
     let mut cell = SweepCell {
@@ -612,6 +713,11 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
         channel: cfg.channel,
         recovery: cfg.recovery,
         codec: cfg.codec,
+        churn: cfg.churn,
+        straggler: cfg.straggler,
+        alpha: cfg.alpha,
+        absent: 0,
+        late: 0,
         echo_rate: f64::NAN,
         comm_savings: f64::NAN,
         final_loss: f64::NAN,
@@ -645,6 +751,9 @@ fn run_cell(cfg: &ExperimentConfig) -> SweepCell {
     cell.uplink_bits_total = sim.radio().meter.total_uplink();
     cell.exposed = sim.server().exposed().len();
     cell.channel_totals = sim.channel_totals();
+    let (absent, late) = sim.membership_totals();
+    cell.absent = absent;
+    cell.late = late;
     cell.empirical_rho = summary.fit.rho();
     cell.theory_rho = Some(sim.realized_theory().rho(sim.eta()));
     cell.trace = sim.trace().points();
@@ -842,6 +951,48 @@ pub mod presets {
         grid
     }
 
+    /// Membership churn × stragglers × non-IID Dirichlet shards on a
+    /// logistic-regression task (`echo-cgc figures --fig churn`,
+    /// `echo-cgc sweep --grid churn`): the heterogeneity bench. Every
+    /// membership draw is a pure hash of `(seed, round, worker)`, so the
+    /// grid stays byte-deterministic at any thread count; the all-zero
+    /// corner of the grid is the fixed-membership IID baseline and
+    /// serializes the exact pre-churn schema.
+    pub fn churn_sweep(profile: SweepProfile) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.n = 12;
+        base.f = 1;
+        base.b = 1;
+        base.d = 10;
+        base.model = ModelKind::Logistic;
+        base.dataset_m = 200;
+        base.batch = 32;
+        base.lambda = 0.05;
+        base.r = Some(0.3);
+        base.eta = Some(0.05);
+        base.threads = 1;
+        base.trace = TracePolicy::Summary;
+        base.rounds = match profile {
+            SweepProfile::Full => 120,
+            SweepProfile::Smoke => 40,
+        };
+        let mut grid = SweepGrid::new("churn", base);
+        grid.profile = profile;
+        grid.churns = match profile {
+            SweepProfile::Full => vec![0.0, 0.1, 0.2, 0.3],
+            SweepProfile::Smoke => vec![0.0, 0.2],
+        };
+        grid.stragglers = match profile {
+            SweepProfile::Full => vec![0.0, 0.15, 0.3],
+            SweepProfile::Smoke => vec![0.0, 0.2],
+        };
+        grid.alphas = match profile {
+            SweepProfile::Full => vec![None, Some(10.0), Some(1.0), Some(0.1)],
+            SweepProfile::Smoke => vec![None, Some(0.1)],
+        };
+        grid
+    }
+
     /// Tiny demonstration grid (`echo-cgc sweep --grid quick`).
     pub fn quick() -> SweepGrid {
         let mut base = ExperimentConfig::default();
@@ -869,6 +1020,7 @@ pub mod presets {
             "loss" | "loss-sweep" | "loss_sweep" => loss_sweep(profile),
             "loss-recovery" | "loss_recovery" => loss_recovery(profile),
             "codec" | "codecs" => codec_sweep(profile),
+            "churn" | "churn-sweep" | "churn_sweep" => churn_sweep(profile),
             "quick" => quick(),
             _ => return None,
         })
@@ -962,6 +1114,7 @@ mod tests {
             "loss",
             "loss-recovery",
             "codec",
+            "churn",
             "quick",
         ] {
             let grid = presets::by_name(name, SweepProfile::Smoke).unwrap();
@@ -1149,6 +1302,101 @@ mod tests {
     }
 
     #[test]
+    fn churn_free_cells_serialize_the_pre_churn_schema_byte_identically() {
+        // A grid that never sets the membership axes and one that pins
+        // them to their defaults (churn 0, straggler 0, IID) must render
+        // the same bytes — JSON and CSV — including across the lossy
+        // conditional fields.
+        let mut base = tiny_grid().base;
+        base.rounds = 6;
+        let mut implicit = SweepGrid::new("golden-churn", base.clone());
+        implicit.channels = vec![ChannelModel::Bernoulli { p: 0.3 }];
+        let mut explicit = implicit.clone();
+        explicit.churns = vec![0.0];
+        explicit.stragglers = vec![0.0];
+        explicit.alphas = vec![None];
+        let a = implicit.run(1);
+        let b = explicit.run(1);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.csv().to_string(), b.csv().to_string());
+        // And the pre-churn schema carries no membership vocabulary.
+        let json = a.to_json().to_string();
+        assert!(!json.contains("\"churn\""));
+        assert!(!json.contains("\"straggler\""));
+        assert!(!json.contains("\"alpha\""));
+        assert!(!json.contains("\"absent\""));
+        assert!(!json.contains("\"late\""));
+        let csv = a.csv().to_string();
+        assert!(!csv.contains("churn"));
+        assert!(!csv.contains("straggler"));
+        assert!(!csv.contains("alpha"));
+    }
+
+    #[test]
+    fn churned_cells_carry_the_fields_and_label_suffixes() {
+        let mut base = tiny_grid().base;
+        base.rounds = 6;
+        // Summary retention: the counts below pin the *cell-level*
+        // fields, not the per-round trace columns.
+        base.trace = TracePolicy::Summary;
+        let mut grid = SweepGrid::new("churny", base);
+        grid.churns = vec![0.0, 0.3];
+        grid.stragglers = vec![0.0, 0.5];
+        let report = grid.run(1);
+        assert_eq!(report.cells.len(), 4);
+        for c in &report.cells {
+            assert!(c.error.is_none(), "{:?}", c.error);
+            assert!(c.final_loss.is_finite());
+        }
+        let json = report.to_json().to_string();
+        // Exactly the two churned cells / two straggler cells carry the
+        // fields and counters.
+        assert_eq!(json.matches("\"churn\":").count(), 2);
+        assert_eq!(json.matches("\"straggler\":").count(), 2);
+        assert_eq!(json.matches("\"absent\":").count(), 2);
+        assert_eq!(json.matches("\"late\":").count(), 2);
+        assert!(!report.cells[0].label.contains("churn"));
+        assert!(report.cells[1].label.ends_with("_strag0.5"), "{}", report.cells[1].label);
+        assert!(report.cells[2].label.ends_with("_churn0.3"), "{}", report.cells[2].label);
+        assert!(
+            report.cells[3].label.ends_with("_churn0.3_strag0.5"),
+            "{}",
+            report.cells[3].label
+        );
+        // Churn at p = 0.3 over 6 rounds of 10 workers removes someone;
+        // straggling at p = 0.5 misses a deadline somewhere.
+        assert!(report.cells[2].absent > 0, "churn must remove a worker");
+        assert!(report.cells[1].late > 0, "stragglers must miss a deadline");
+        assert_eq!(report.cells[0].absent, 0);
+        assert_eq!(report.cells[0].late, 0);
+        // The CSV gains the membership columns, spliced before
+        // empirical_rho.
+        let csv = report.csv().to_string();
+        assert!(csv.contains(",churn,absent,straggler,late,empirical_rho,"));
+    }
+
+    #[test]
+    fn membership_axes_nest_between_codec_and_seed() {
+        let mut grid = tiny_grid();
+        grid.sigmas = vec![0.05];
+        grid.aggregators = vec![Aggregator::CgcSum];
+        grid.codecs = vec![WireCodec::F64, WireCodec::Sign];
+        grid.churns = vec![0.0, 0.2];
+        grid.stragglers = vec![0.0, 0.1];
+        grid.alphas = vec![None];
+        grid.seeds = vec![1, 2];
+        // 2 codecs × 2 churns × 2 stragglers × 1 alpha × 2 seeds.
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 16);
+        assert_eq!(cells[0].seed, 1);
+        assert_eq!(cells[1].seed, 2);
+        assert_eq!(cells[2].straggler, 0.1);
+        assert_eq!(cells[4].churn, 0.2);
+        assert_eq!(cells[8].codec, WireCodec::Sign);
+        assert!(cells.iter().all(|c| c.alpha.is_none()));
+    }
+
+    #[test]
     fn empirical_rho_windows_the_contracting_prefix() {
         // Synthetic geometric decay: rho recovered exactly.
         let recs: Vec<RoundEvent> = (0..20)
@@ -1165,6 +1413,8 @@ mod tests {
                 dropped_frames: 0,
                 retransmits: 0,
                 fallbacks: 0,
+                absent: 0,
+                late: 0,
             })
             .collect();
         let rho = empirical_rho(&recs).unwrap();

@@ -60,6 +60,14 @@ pub struct RoundEvent {
     /// Echo→raw fallbacks this round (the server missed, or could not
     /// reconstruct, an honest echo). 0 under the perfect channel.
     pub fallbacks: usize,
+    /// Workers absent from this round's churn roster (their slots were
+    /// removed from the TDMA schedule and the server zeroed them without
+    /// exposure). 0 without churn.
+    pub absent: usize,
+    /// Honest workers whose gradient missed the round deadline (slot kept
+    /// but elapsed without a frame; scored `Lost`, never exposed — slow is
+    /// not Byzantine). 0 without stragglers.
+    pub late: usize,
 }
 
 /// Anything that wants to see the round stream. Events arrive in round
@@ -413,6 +421,8 @@ mod tests {
             dropped_frames: 0,
             retransmits: 0,
             fallbacks: 0,
+            absent: 0,
+            late: 0,
         }
     }
 

@@ -187,3 +187,41 @@ fn parallel_server_aggregation_is_thread_invariant() {
     l.attack = AttackKind::LargeNorm;
     assert_identical(&l, "logistic+large-norm (parallel aggregation)");
 }
+
+#[test]
+fn membership_churn_is_thread_invariant() {
+    // Per-round join/leave draws are pure hashes of (seed, round, worker)
+    // — no RNG stream is consumed — so the roster, the re-derived TDMA
+    // schedule, and the per-round (n, f) filter are identical at any
+    // thread count.
+    let mut cfg = quadratic_cfg();
+    cfg.churn = 0.2;
+    assert_identical(&cfg, "quadratic+churn(0.2)");
+}
+
+#[test]
+fn stragglers_are_thread_invariant() {
+    // Late-draw hashing mirrors the churn draw; a late honest worker
+    // resolves through the Lost path in a fixed slot order.
+    let mut cfg = quadratic_cfg();
+    cfg.straggler = 0.2;
+    assert_identical(&cfg, "quadratic+straggler(0.2)");
+    // Churn and stragglers composed: absentees leave the schedule, late
+    // workers keep their slot but miss the deadline — both pure-hash.
+    cfg.churn = 0.2;
+    assert_identical(&cfg, "quadratic+churn(0.2)+straggler(0.2)");
+}
+
+#[test]
+fn dirichlet_shards_are_thread_invariant() {
+    // Non-IID shard assignment draws from a dedicated RNG keyed off
+    // (seed ^ SALT_SHARD) at wiring time, before any parallelism starts;
+    // per-round shard gradients then run under the same chunked scheme
+    // as the shared-dataset path.
+    let mut cfg = logistic_cfg();
+    cfg.alpha = Some(0.5);
+    assert_identical(&cfg, "logistic+dirichlet(0.5)");
+    cfg.churn = 0.2;
+    cfg.straggler = 0.2;
+    assert_identical(&cfg, "logistic+dirichlet(0.5)+churn(0.2)+straggler(0.2)");
+}

@@ -99,6 +99,8 @@ fn ev(round: usize, dist: f64) -> RoundEvent {
         dropped_frames: 0,
         retransmits: 0,
         fallbacks: 0,
+        absent: 0,
+        late: 0,
     }
 }
 
@@ -126,6 +128,11 @@ fn cell(seed: u64, attack: &'static str, trace: Vec<RoundEvent>) -> SweepCell {
         uplink_bits_total: 10,
         exposed: 0,
         channel_totals: echo_cgc::sim::ChannelTotals::default(),
+        churn: 0.0,
+        straggler: 0.0,
+        alpha: None,
+        absent: 0,
+        late: 0,
         empirical_rho: None,
         theory_rho: None,
         trace_policy: TracePolicy::Full,

@@ -1,0 +1,112 @@
+#!/usr/bin/env bash
+# Bench-trajectory gate for the sweep-backed JSON benches.
+#
+# Usage: bench_gate.sh BASELINE_DIR CURRENT_DIR [METRIC ...]
+#
+# Generalizes scripts/swarm_gate.sh (which still owns the swarm latency
+# CSV) to every results/BENCH_*.json sweep report: each report in
+# CURRENT_DIR is diffed per cell label against the same-named file in
+# BASELINE_DIR (restored from the actions cache by CI's bench-smoke
+# job). METRIC names select the headline fields to track; the default
+# is `echo_rate final_loss`.
+#
+# Policy (mirrors the swarm gate):
+#
+#   * hard-fail when CURRENT_DIR holds no BENCH_*.json, or a report
+#     yields no (label, metric) rows — a bench silently emitting
+#     nothing is a broken bench, not a slow one;
+#   * ::warning (plus a step-summary table) when a tracked metric moves
+#     by more than 25% in either direction against the previous run —
+#     sweep numbers are deterministic, but the cell set legitimately
+#     changes as grids grow, so the trajectory soft-gates;
+#   * a report with no baseline (first run, expired cache, or a brand
+#     new bench) seeds its trajectory and passes.
+set -euo pipefail
+
+BASE_DIR="${1:?usage: bench_gate.sh BASELINE_DIR CURRENT_DIR [METRIC ...]}"
+CUR_DIR="${2:?usage: bench_gate.sh BASELINE_DIR CURRENT_DIR [METRIC ...]}"
+shift 2
+METRICS=("$@")
+[ "${#METRICS[@]}" -gt 0 ] || METRICS=(echo_rate final_loss)
+SUMMARY="${GITHUB_STEP_SUMMARY:-/dev/null}"
+METRIC_RE="$(
+  IFS='|'
+  echo "${METRICS[*]}"
+)"
+
+# Flatten a sweep report into "label<TAB>metric<TAB>value" rows. The
+# reports come from our own JSON writer (BTreeMap: keys of each cell
+# object serialize in lexicographic order, no escapes in labels), so a
+# token scan is exact — a metric key sorting before "label" belongs to
+# the next "label" token seen, one sorting after it to the previous.
+extract() {
+  tr -d ' \n\t' <"$1" |
+    grep -oE "\"label\":\"[^\"]*\"|\"(${METRIC_RE})\":-?[0-9][^,}]*" |
+    awk -F'"' '
+      $2 == "label" {
+        lbl = $4
+        for (i = 1; i <= npend; i++) printf "%s\t%s\n", lbl, pend[i]
+        npend = 0
+        next
+      }
+      {
+        row = $2 "\t" substr($3, 2)
+        if ($2 < "label") pend[++npend] = row
+        else printf "%s\t%s\n", lbl, row
+      }'
+}
+
+shopt -s nullglob
+current=("$CUR_DIR"/BENCH_*.json)
+if [ "${#current[@]}" -eq 0 ]; then
+  echo "::error::bench gate: no BENCH_*.json under $CUR_DIR — the benches did not run"
+  exit 1
+fi
+
+status=0
+for cur in "${current[@]}"; do
+  name="$(basename "$cur")"
+  if [ -z "$(extract "$cur")" ]; then
+    echo "::error::bench gate: $name yields no (label, metric) rows for: ${METRICS[*]}"
+    status=1
+    continue
+  fi
+  base="$BASE_DIR/$name"
+  if [ ! -f "$base" ]; then
+    echo "bench gate: no baseline for $name — this run seeds its trajectory"
+    {
+      echo "## bench gate: $name"
+      echo ""
+      echo "No previous baseline (first run, expired cache, or new bench) — this run seeds the trajectory."
+    } >>"$SUMMARY"
+    continue
+  fi
+  out="$(awk -F'\t' -v name="$name" '
+    function pct(old, new) { return old != 0 ? (new - old) * 100.0 / old : (new == 0 ? 0 : 999) }
+    NR == FNR { prev[$1 SUBSEP $2] = $3; next }
+    {
+      k = $1 SUBSEP $2
+      if (k in prev) {
+        d = pct(prev[k], $3)
+        if (d > 25 || d < -25)
+          printf "::warning::%s: %s %s moved %+.1f%% (%s -> %s) vs previous run\n", name, $1, $2, d, prev[k], $3
+        rows = rows sprintf("| %s | %s | %s → %s | %+.1f%% |\n", $1, $2, prev[k], $3, d)
+      } else {
+        rows = rows sprintf("| %s | %s | (new) %s | — |\n", $1, $2, $3)
+      }
+    }
+    END {
+      print "| cell | metric | prev → now | Δ |"
+      print "|---|---|---|---|"
+      printf "%s", rows
+    }' <(extract "$base") <(extract "$cur"))"
+  echo "$out"
+  {
+    echo "## bench gate: $name (vs previous run)"
+    echo ""
+    echo "$out" | grep -v '^::warning' || true
+    echo ""
+    echo "Soft gate: >25% movement in a tracked metric warns; only a missing or empty bench fails the job."
+  } >>"$SUMMARY"
+done
+exit "$status"

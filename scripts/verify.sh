@@ -26,6 +26,12 @@
 #                     echo on vs off, emitting the FIG_codec_* bits +
 #                     error charts and report (also run by CI's
 #                     bench-smoke job)
+#     churn-smoke   — the heterogeneity bench (`sweep --grid churn` +
+#                     `figures --fig churn`): epoch-keyed membership
+#                     churn × stragglers × Dirichlet shards, emitting
+#                     results/BENCH_churn.json and the FIG_churn_*
+#                     charts and report (also run by CI's bench-smoke
+#                     job, which gates on the churn rows)
 #     trace-smoke   — a traced convergence sweep (`--trace`) plus the
 #                     faceted error-vs-round curves figure and the HTML
 #                     artifact index (results/FIG_curves.{svg,csv},
@@ -39,8 +45,8 @@
 #     all           — build-test + lint
 #
 #   --smoke-bench  — append the smoke-bench + figures-smoke + fec-smoke
-#                    + codec-smoke + trace-smoke + swarm-smoke stages to
-#                    `all`.
+#                    + codec-smoke + churn-smoke + trace-smoke +
+#                    swarm-smoke stages to `all`.
 set -euo pipefail
 cd "$(dirname "$0")/.." || exit 1
 
@@ -48,7 +54,7 @@ STAGE=""
 SMOKE=0
 for arg in "$@"; do
   case "$arg" in
-    build-test|lint|smoke-bench|figures-smoke|fec-smoke|codec-smoke|trace-smoke|swarm-smoke|all)
+    build-test|lint|smoke-bench|figures-smoke|fec-smoke|codec-smoke|churn-smoke|trace-smoke|swarm-smoke|all)
       if [ -n "$STAGE" ]; then
         echo "verify.sh: multiple stages given ('$STAGE' and '$arg') — pass one" >&2
         exit 2
@@ -155,6 +161,18 @@ run_codec_smoke() {
     results/FIG_codec_report.json
 }
 
+run_churn_smoke() {
+  echo "== churn-smoke: membership churn x stragglers x non-IID shards =="
+  cargo run --release --bin echo-cgc -- sweep --grid churn --profile smoke \
+    --threads auto --out results/BENCH_churn.json
+  cargo run --release --bin echo-cgc -- figures --fig churn --profile smoke --threads auto
+  echo "-- churn artifacts (listed explicitly so a missing chart fails the stage):"
+  ls -l results/BENCH_churn.json \
+    results/FIG_churn_echo_rate.svg results/FIG_churn_echo_rate.csv \
+    results/FIG_churn_error.svg results/FIG_churn_error.csv \
+    results/FIG_churn_report.json
+}
+
 case "$STAGE" in
   build-test) run_build_test ;;
   lint) run_lint ;;
@@ -162,6 +180,7 @@ case "$STAGE" in
   figures-smoke) run_figures_smoke ;;
   fec-smoke) run_fec_smoke ;;
   codec-smoke) run_codec_smoke ;;
+  churn-smoke) run_churn_smoke ;;
   trace-smoke) run_trace_smoke ;;
   swarm-smoke) run_swarm_smoke ;;
   all)
@@ -172,6 +191,7 @@ case "$STAGE" in
       run_figures_smoke
       run_fec_smoke
       run_codec_smoke
+      run_churn_smoke
       run_trace_smoke
       run_swarm_smoke
     fi
